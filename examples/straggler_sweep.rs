@@ -1,0 +1,54 @@
+//! Straggler sweep: the paper's core claim in one program. Runs all
+//! three strategies across straggler ratios on one dataset and prints a
+//! compact comparison (accuracy / EUR / time / cost), i.e. a single-
+//! dataset slice of Tables II-IV.
+//!
+//!   cargo run --release --example straggler_sweep -- [dataset] [rounds]
+
+use fedless::config::{ExperimentConfig, Scenario};
+use fedless::coordinator::Controller;
+use fedless::runtime::{Engine, ModelRuntime};
+use fedless::strategy::StrategyKind;
+
+fn main() -> fedless::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("speech").to_string();
+    let rounds: u32 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+
+    let engine = Engine::cpu()?;
+    let runtime = ModelRuntime::load(&engine, "artifacts".as_ref(), &dataset)?;
+
+    println!(
+        "straggler sweep on {dataset} ({rounds} rounds/cell)\n{:<12} {:<12} {:>9} {:>9} {:>11} {:>10} {:>6}",
+        "scenario", "strategy", "accuracy", "mean EUR", "time (min)", "cost ($)", "bias"
+    );
+    for pct in [0u8, 10, 30, 50, 70] {
+        let scenario = if pct == 0 {
+            Scenario::Standard
+        } else {
+            Scenario::Straggler(pct)
+        };
+        for strategy in StrategyKind::all() {
+            let mut cfg = ExperimentConfig::preset(&dataset);
+            cfg.strategy = strategy;
+            cfg.scenario = scenario;
+            cfg.rounds = rounds;
+            cfg.n_clients = (cfg.n_clients / 2).max(12);
+            cfg.clients_per_round = (cfg.clients_per_round / 2).max(4);
+            let n = cfg.n_clients;
+            let mut ctl = Controller::new(cfg, &runtime)?;
+            let r = ctl.run()?;
+            println!(
+                "{:<12} {:<12} {:>9.3} {:>9.3} {:>11.1} {:>10.4} {:>6}",
+                scenario.label(),
+                strategy.as_str(),
+                r.final_accuracy,
+                r.mean_eur(),
+                r.total_time_s / 60.0,
+                r.total_cost,
+                r.bias(n)
+            );
+        }
+    }
+    Ok(())
+}

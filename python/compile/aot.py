@@ -1,0 +1,168 @@
+"""AOT driver: lower the L2 compute graphs to HLO text artifacts.
+
+For every (model, scale) this emits into the artifacts directory:
+
+  <model>.train.hlo.txt        full local training round
+  <model>.train_prox.hlo.txt   FedProx variant
+  <model>.eval.hlo.txt         central evaluation
+  <model>.aggregate.hlo.txt    Pallas staleness-weighted aggregation
+  <model>.init.bin             seed-0 initial flat parameters (f32 LE)
+  <model>.manifest.json        shapes, dtypes, hyperparameters, file map
+  index.json                   list of built manifests
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: the
+``xla`` crate links xla_extension 0.5.1, which rejects the 64-bit
+instruction ids jax >= 0.5 writes into protos (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Python runs exactly once (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import ModelBundle, build_bundle
+from compile.scales import MODELS, SCALES
+
+# Input/output name lists per entrypoint; the Rust runtime relies on this
+# ordering (it matches the positional args of the lowered functions).
+ENTRYPOINT_IO = {
+    "train": (
+        ["params", "m", "v", "t", "x", "y", "seed", "num_steps"],
+        ["params", "m", "v", "t", "loss"],
+    ),
+    "train_prox": (
+        ["params", "m", "v", "t", "x", "y", "seed", "num_steps", "global"],
+        ["params", "m", "v", "t", "loss"],
+    ),
+    "eval": (["params", "x", "y"], ["loss_sum", "correct"]),
+    "aggregate": (["updates", "weights"], ["agg"]),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tuple_wrap(fn):
+    """Ensure the lowered root is a tuple even for multi-output fns."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def export_model(
+    name: str, scale: str, out_dir: Path, *, init_seed: int = 0, quiet: bool = False
+) -> dict:
+    """Lower one model's four entrypoints and write all artifacts."""
+    t0 = time.time()
+    bundle: ModelBundle = build_bundle(name, scale, init_seed=init_seed)
+    ms = bundle.ms
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    files = {}
+    for fn_name in ("train", "train_prox", "eval", "aggregate"):
+        fn = getattr(bundle, fn_name)
+        args = bundle.example_args(fn_name)
+        lowered = jax.jit(_tuple_wrap(fn)).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{fn_name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        inputs, outputs = ENTRYPOINT_IO[fn_name]
+        files[fn_name] = {"file": fname, "inputs": inputs, "outputs": outputs}
+        if not quiet:
+            print(f"  {fname}: {len(text) / 1024:.0f} KiB")
+
+    init_bytes = np.asarray(bundle.init_flat, dtype="<f4").tobytes()
+    init_file = f"{name}.init.bin"
+    (out_dir / init_file).write_bytes(init_bytes)
+
+    manifest = {
+        "name": name,
+        "scale": scale,
+        "param_count": bundle.param_count,
+        "num_classes": ms.num_classes,
+        "input_shape": list(ms.input_shape),
+        "input_dtype": ms.input_dtype,
+        "shard_size": ms.shard_size,
+        "batch_size": ms.batch_size,
+        "local_epochs": ms.local_epochs,
+        "steps_per_round": ms.steps_per_round,
+        "optimizer": ms.optimizer,
+        "lr": ms.lr,
+        "prox_mu": ms.prox_mu,
+        "eval_size": ms.eval_size,
+        "eval_batch": ms.eval_batch,
+        "k_max": ms.k_max,
+        "seq_len": ms.seq_len,
+        # rough fwd+bwd flop estimate per local round, for the cost model
+        "flops_per_round": 6 * bundle.param_count * ms.batch_size * ms.steps_per_round,
+        "entrypoints": files,
+        "init_file": init_file,
+        "init_sha256": hashlib.sha256(init_bytes).hexdigest(),
+        "init_seed": init_seed,
+    }
+    mf = out_dir / f"{name}.manifest.json"
+    mf.write_text(json.dumps(manifest, indent=2))
+    if not quiet:
+        print(
+            f"  {name}/{scale}: P={bundle.param_count} "
+            f"({time.time() - t0:.1f}s)"
+        )
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scale", default="default", choices=SCALES)
+    ap.add_argument(
+        "--models", default="all",
+        help=f"comma list from {MODELS} or 'all'",
+    )
+    ap.add_argument("--init-seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    names = list(MODELS) if args.models == "all" else args.models.split(",")
+    for n in names:
+        if n not in MODELS:
+            ap.error(f"unknown model {n!r}; have {MODELS}")
+    out_dir = Path(args.out_dir)
+    manifests = []
+    for n in names:
+        print(f"[aot] exporting {n} @ {args.scale} ...")
+        manifests.append(export_model(n, args.scale, out_dir, init_seed=args.init_seed,
+                                      quiet=args.quiet))
+    index = {
+        "scale": args.scale,
+        "models": [m["name"] for m in manifests],
+        "manifests": {m["name"]: f"{m['name']}.manifest.json" for m in manifests},
+    }
+    (out_dir / "index.json").write_text(json.dumps(index, indent=2))
+    print(f"[aot] wrote {len(manifests)} model(s) to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

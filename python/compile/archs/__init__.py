@@ -1,0 +1,23 @@
+"""L2 model zoo registry: the four paper architectures + the e2e transformer."""
+
+from __future__ import annotations
+
+from compile.archs import femnist, mnist, shakespeare, speech, transformer
+from compile.archs.common import Arch
+from compile.scales import ModelScale
+
+_BUILDERS = {
+    "mnist": mnist.build,
+    "femnist": femnist.build,
+    "shakespeare": shakespeare.build,
+    "speech": speech.build,
+    "transformer": transformer.build,
+}
+
+
+def build_arch(ms: ModelScale) -> Arch:
+    """Instantiate the architecture for a scale preset."""
+    return _BUILDERS[ms.name](ms)
+
+
+__all__ = ["Arch", "build_arch"]

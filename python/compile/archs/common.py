@@ -1,0 +1,110 @@
+"""Shared building blocks for the L2 model zoo.
+
+Every architecture is expressed as an ``Arch``: an ``init`` producing a
+parameter pytree and an ``apply`` mapping ``(params, x)`` to logits. Dense
+layers route through the L1 Pallas kernel (``kernels.dense``); convolutions
+and element-wise ops stay in XLA-native jnp/lax, which is where they fuse
+best.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.dense import dense
+
+
+@dataclass(frozen=True)
+class Arch:
+    """One model architecture bound to a concrete scale."""
+
+    name: str
+    num_classes: int
+    init: Callable  # (key) -> params pytree
+    apply: Callable  # (params, x, *, key, train) -> logits [B, C]
+
+
+# ---------------------------------------------------------------------------
+# parameter initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, n_in: int, n_out: int) -> dict:
+    """Glorot-uniform dense parameters (matches LEAF's TF defaults)."""
+    lim = jnp.sqrt(6.0 / (n_in + n_out))
+    w = jax.random.uniform(key, (n_in, n_out), jnp.float32, -lim, lim)
+    return {"w": w, "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+def conv_init(key, kh: int, kw: int, c_in: int, c_out: int) -> dict:
+    """Glorot-uniform conv parameters, HWIO layout."""
+    fan_in = kh * kw * c_in
+    fan_out = kh * kw * c_out
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    w = jax.random.uniform(key, (kh, kw, c_in, c_out), jnp.float32, -lim, lim)
+    return {"w": w, "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def embed_init(key, vocab: int, dim: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# layer applications
+# ---------------------------------------------------------------------------
+
+
+def apply_dense(p: dict, x: jax.Array) -> jax.Array:
+    """Dense layer via the Pallas matmul kernel (fwd *and* bwd)."""
+    return dense(x, p["w"], p["b"])
+
+
+def apply_conv(p: dict, x: jax.Array, *, padding: str = "SAME") -> jax.Array:
+    """NHWC conv with HWIO weights, stride 1."""
+    y = lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def max_pool(x: jax.Array, window: int = 2) -> jax.Array:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max,
+        (1, window, window, 1), (1, window, window, 1), "VALID",
+    )
+
+
+def avg_pool(x: jax.Array, window: int = 2) -> jax.Array:
+    summed = lax.reduce_window(
+        x, 0.0, lax.add,
+        (1, window, window, 1), (1, window, window, 1), "VALID",
+    )
+    return summed / float(window * window)
+
+
+def dropout(key, x: jax.Array, rate: float, train: bool) -> jax.Array:
+    """Inverted dropout; identity when not training (eval artifacts)."""
+    if not train or rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy over the batch; labels are int class ids."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, labels[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def accuracy_counts(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Number of correct argmax predictions in the batch (f32 scalar)."""
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((pred == labels.astype(jnp.int32)).astype(jnp.float32))

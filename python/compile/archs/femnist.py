@@ -1,0 +1,16 @@
+"""LEAF FEMNIST CNN (paper §VI-A2).
+
+Identical topology to the MNIST CNN but a 62-way output and a wider hidden
+layer (paper: 2048). The shared structure is deliberate — it mirrors LEAF.
+"""
+
+from __future__ import annotations
+
+from compile.archs import mnist
+from compile.archs.common import Arch
+from compile.scales import ModelScale
+
+
+def build(ms: ModelScale) -> Arch:
+    arch = mnist.build(ms)
+    return Arch(ms.name, ms.num_classes, arch.init, arch.apply)

@@ -1,0 +1,47 @@
+"""LEAF MNIST CNN (paper §VI-A2).
+
+2x [conv 5x5 -> 2x2 max-pool], fully-connected hidden layer, 10-way output.
+Channel/hidden widths come from the scale preset (paper: 32/64/512).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from compile.archs.common import (
+    Arch,
+    apply_conv,
+    apply_dense,
+    conv_init,
+    dense_init,
+    max_pool,
+)
+from compile.scales import ModelScale
+
+
+def build(ms: ModelScale) -> Arch:
+    c1, c2, fc = ms.arch["c1"], ms.arch["c2"], ms.arch["fc"]
+    h, w, cin = ms.input_shape
+    # Two SAME convs + two 2x2 pools: spatial /4.
+    flat_dim = (h // 4) * (w // 4) * c2
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "conv1": conv_init(k1, 5, 5, cin, c1),
+            "conv2": conv_init(k2, 5, 5, c1, c2),
+            "fc": dense_init(k3, flat_dim, fc),
+            "out": dense_init(k4, fc, ms.num_classes),
+        }
+
+    def apply(params, x, *, key=None, train=False):
+        del key, train  # no stochastic layers in this arch
+        y = jax.nn.relu(apply_conv(params["conv1"], x))
+        y = max_pool(y)
+        y = jax.nn.relu(apply_conv(params["conv2"], y))
+        y = max_pool(y)
+        y = y.reshape(y.shape[0], -1)
+        y = jax.nn.relu(apply_dense(params["fc"], y))
+        return apply_dense(params["out"], y)
+
+    return Arch(ms.name, ms.num_classes, init, apply)

@@ -1,0 +1,58 @@
+"""LEAF Shakespeare character LSTM (paper §VI-A2).
+
+Embedding (dim 8) -> stacked LSTM layers (paper: 2x256) -> 82-way output
+predicting the next character from the previous ``seq_len``. The LSTM gate
+matmuls go through the Pallas dense kernel: each step computes
+``[x_t, h] @ W_gates [I+H, 4H]`` — the model's compute hot-spot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.archs.common import Arch, apply_dense, dense_init, embed_init
+from compile.scales import ModelScale
+
+
+def _lstm_layer(p: dict, xs: jax.Array) -> jax.Array:
+    """Run one LSTM layer over ``xs [B, T, I]``; returns hidden seq [B, T, H]."""
+    batch = xs.shape[0]
+    hidden = p["w"].shape[1] // 4
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = apply_dense(p, jnp.concatenate([x_t, h], axis=-1))
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((batch, hidden), jnp.float32)
+    (_, _), hs = jax.lax.scan(step, (h0, h0), jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def build(ms: ModelScale) -> Arch:
+    embed, hidden, layers = ms.arch["embed"], ms.arch["hidden"], ms.arch["layers"]
+    vocab = ms.num_classes
+
+    def init(key):
+        keys = jax.random.split(key, layers + 2)
+        params = {"embed": embed_init(keys[0], vocab, embed)}
+        dim = embed
+        for li in range(layers):
+            # One fused gate matrix per layer: [I+H, 4H] (i, f, g, o).
+            params[f"lstm{li}"] = dense_init(keys[1 + li], dim + hidden, 4 * hidden)
+            dim = hidden
+        params["out"] = dense_init(keys[-1], hidden, vocab)
+        return params
+
+    def apply(params, x, *, key=None, train=False):
+        del key, train
+        y = params["embed"][x]  # [B, T, E]
+        for li in range(layers):
+            y = _lstm_layer(params[f"lstm{li}"], y)
+        return apply_dense(params["out"], y[:, -1, :])
+
+    return Arch(ms.name, ms.num_classes, init, apply)

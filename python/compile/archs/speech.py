@@ -1,0 +1,60 @@
+"""Google Speech Commands CNN (paper §VI-A2).
+
+Two identical blocks of [conv 3x3, conv 3x3, 2x2 max-pool, dropout 0.25],
+then average pooling and a 35-way output layer. Input is a fixed 32x32x1
+spectrogram-like map (DESIGN.md substitutions).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from compile.archs.common import (
+    Arch,
+    apply_conv,
+    apply_dense,
+    avg_pool,
+    conv_init,
+    dense_init,
+    dropout,
+    max_pool,
+)
+from compile.scales import ModelScale
+
+
+def build(ms: ModelScale) -> Arch:
+    c1, c2 = ms.arch["c1"], ms.arch["c2"]
+    rate = ms.arch["dropout"]
+    h, w, cin = ms.input_shape
+    # Two pool-2 blocks then one avg-pool-2: spatial /8.
+    flat_dim = (h // 8) * (w // 8) * c2
+
+    def init(key):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        return {
+            "b1c1": conv_init(k1, 3, 3, cin, c1),
+            "b1c2": conv_init(k2, 3, 3, c1, c1),
+            "b2c1": conv_init(k3, 3, 3, c1, c2),
+            "b2c2": conv_init(k4, 3, 3, c2, c2),
+            "out": dense_init(k5, flat_dim, ms.num_classes),
+        }
+
+    def apply(params, x, *, key=None, train=False):
+        if train and key is None:
+            raise ValueError("speech arch needs a dropout key when train=True")
+        k1 = k2 = None
+        if train:
+            k1, k2 = jax.random.split(key)
+        y = jax.nn.relu(apply_conv(params["b1c1"], x))
+        y = jax.nn.relu(apply_conv(params["b1c2"], y))
+        y = max_pool(y)
+        y = dropout(k1, y, rate, train)
+        y = jax.nn.relu(apply_conv(params["b2c1"], y))
+        y = jax.nn.relu(apply_conv(params["b2c2"], y))
+        y = max_pool(y)
+        y = dropout(k2, y, rate, train)
+        y = avg_pool(y)
+        y = y.reshape(y.shape[0], -1)
+        return apply_dense(params["out"], y)
+
+    return Arch(ms.name, ms.num_classes, init, apply)

@@ -1,0 +1,97 @@
+"""Decoder-only char transformer (the end-to-end driver model).
+
+Not a paper architecture — the system-prompt e2e requirement: prove the
+full stack composes on a modern training workload. Pre-LN decoder blocks;
+QKV/O/FFN projections route through the Pallas dense kernel (reshaped to
+2-D so the tiled matmul applies); attention score/value contractions stay
+in einsum where XLA fuses the softmax chain.
+
+Predicts the next character from the previous ``seq_len`` (same external
+interface as the Shakespeare LSTM, so the whole federated pipeline is
+architecture-agnostic).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.archs.common import Arch, apply_dense, dense_init, embed_init
+from compile.scales import ModelScale
+
+
+def _dense3(p: dict, x: jax.Array) -> jax.Array:
+    """Apply the Pallas dense layer to a [B, T, D] tensor."""
+    b, t, d = x.shape
+    return apply_dense(p, x.reshape(b * t, d)).reshape(b, t, -1)
+
+
+def _layer_norm(g: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + 1e-5) + b
+
+
+def build(ms: ModelScale) -> Arch:
+    d_model = ms.arch["d_model"]
+    n_layers = ms.arch["layers"]
+    n_heads = ms.arch["heads"]
+    d_ff = ms.arch["d_ff"]
+    vocab = ms.num_classes
+    seq = ms.seq_len
+    d_head = d_model // n_heads
+    if d_head * n_heads != d_model:
+        raise ValueError("heads must divide d_model")
+
+    def init(key):
+        keys = jax.random.split(key, 2 + n_layers)
+        params = {
+            "embed": embed_init(keys[0], vocab, d_model),
+            "pos": embed_init(keys[1], seq, d_model),
+        }
+        for li in range(n_layers):
+            ks = jax.random.split(keys[2 + li], 6)
+            params[f"blk{li}"] = {
+                "qkv": dense_init(ks[0], d_model, 3 * d_model),
+                "o": dense_init(ks[1], d_model, d_model),
+                "ff1": dense_init(ks[2], d_model, d_ff),
+                "ff2": dense_init(ks[3], d_ff, d_model),
+                "ln1g": jnp.ones((d_model,)), "ln1b": jnp.zeros((d_model,)),
+                "ln2g": jnp.ones((d_model,)), "ln2b": jnp.zeros((d_model,)),
+            }
+        params["lnfg"] = jnp.ones((d_model,))
+        params["lnfb"] = jnp.zeros((d_model,))
+        params["out"] = dense_init(jax.random.fold_in(keys[-1], 7), d_model, vocab)
+        return params
+
+    causal = jnp.tril(jnp.ones((seq, seq), bool))
+
+    def attention(blk, x):
+        b, t, _ = x.shape
+        qkv = _dense3(blk["qkv"], x)  # [B, T, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):  # [B, T, D] -> [B, H, T, dh]
+            return z.reshape(b, t, n_heads, d_head).transpose(0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(d_head))
+        scores = jnp.where(causal[:t, :t], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, t, d_model)
+        return _dense3(blk["o"], ctx)
+
+    def apply(params, x, *, key=None, train=False):
+        del key, train
+        b, t = x.shape
+        y = params["embed"][x] + params["pos"][:t]
+        for li in range(n_layers):
+            blk = params[f"blk{li}"]
+            y = y + attention(blk, _layer_norm(blk["ln1g"], blk["ln1b"], y))
+            h = _dense3(blk["ff1"], _layer_norm(blk["ln2g"], blk["ln2b"], y))
+            y = y + _dense3(blk["ff2"], jax.nn.gelu(h))
+        y = _layer_norm(params["lnfg"], params["lnfb"], y)
+        return apply_dense(params["out"], y[:, -1, :])
+
+    return Arch(ms.name, ms.num_classes, init, apply)

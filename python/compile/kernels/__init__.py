@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the FedLesScan reproduction.
+
+``dense``      — tiled matmul / fused dense layer used by all L2 models.
+``aggregate``  — staleness-weighted model aggregation (paper Eq. 3).
+``ref``        — pure-jnp correctness oracles for both.
+
+Import the submodules (``from compile.kernels import dense``) or the ops
+directly (``from compile.kernels.dense import dense``). The package itself
+deliberately re-exports nothing: a function re-export named like its own
+submodule would shadow it on ``import compile.kernels.dense``.
+"""

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: staleness-weighted model aggregation (paper Eq. 3).
+
+The FedLesScan aggregator combines K client updates into the next global
+model:
+
+    w_{t+1} = sum_k  (t_k / t) * (n_k / n) * w^k_{t_k}
+
+The Rust coordinator computes the scalar weight per update (staleness
+dampening * cardinality share, with the tau cutoff applied before the
+call) and invokes this kernel with the stacked updates ``[K, P]`` and the
+weight vector ``[K]``. K is fixed at AOT time to ``k_max`` (the configured
+clients-per-round plus the staleness buffer headroom); rounds with fewer
+updates pad with zero rows / zero weights, which is exact.
+
+Kernel structure (TPU mapping):
+  * grid over the parameter axis P in ``BP``-wide tiles (lane-aligned),
+  * each grid step loads a ``(K, BP)`` tile of updates plus the full
+    ``(K,)`` weight vector into VMEM and contracts over K on the MXU/VPU
+    (``w [1,K] @ u [K,BP]``),
+  * P is padded to a multiple of BP by the wrapper and sliced back.
+
+VMEM per step: K*BP*4 + K*4 + BP*4 bytes — for K=256, BP=2048 that is
+~2.1 MB, far under budget; BP can be raised to trade grid steps for
+bandwidth (see DESIGN.md §Perf).
+
+Runs interpret=True on this CPU image (see kernels.dense docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BP = 2048
+
+# Per-step VMEM budget used by auto tile sizing (half the ~16 MiB/core
+# budget, leaving headroom for the weights vector and the output tile).
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+INTERPRET = True
+
+
+def auto_bp(k: int, p: int) -> int:
+    """Pick the widest lane tile that keeps the double-buffered update
+    tile under the VMEM budget: fewer grid steps amortize per-step
+    overhead (a measured 4x end-to-end win on the CPU interpret path —
+    see EXPERIMENTS.md §Perf) and on TPU reduce DMA issue count.
+    """
+    cap = max(512, VMEM_BUDGET_BYTES // (8 * max(k, 1)))
+    # round down to a power of two for lane alignment
+    bp = 1 << (cap.bit_length() - 1)
+    return max(512, min(bp, max(p, 1)))
+
+
+def _agg_kernel(u_ref, w_ref, o_ref):
+    # (1, K) @ (K, BP) -> (1, BP): contraction over clients on the MXU.
+    w = w_ref[...].reshape(1, -1)
+    o_ref[...] = jnp.dot(
+        w, u_ref[...], preferred_element_type=jnp.float32
+    )[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bp",))
+def aggregate(
+    updates: jax.Array, weights: jax.Array, *, bp: int | None = None
+) -> jax.Array:
+    """Weighted sum of client updates: ``[K, P], [K] -> [P]``.
+
+    The caller owns the weight semantics (Eq. 3 staleness dampening and
+    cardinality shares, or plain FedAvg n_k/n weights). ``bp`` defaults
+    to the widest VMEM-safe lane tile (see ``auto_bp``).
+    """
+    if updates.ndim != 2:
+        raise ValueError(f"updates must be [K, P], got {updates.shape}")
+    if weights.shape != (updates.shape[0],):
+        raise ValueError(
+            f"weights {weights.shape} does not match K={updates.shape[0]}"
+        )
+    k, p = updates.shape
+    if bp is None:
+        bp = auto_bp(k, p)
+    bp = min(bp, max(p, 1))
+    rem = (-p) % bp
+    u = jnp.pad(updates, ((0, 0), (0, rem))) if rem else updates
+    pp = u.shape[1]
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((k, bp), lambda j: (0, j)),
+            pl.BlockSpec((k,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=INTERPRET,
+    )(u.astype(jnp.float32), weights.astype(jnp.float32))
+    return out[:p]
+
+
+def vmem_bytes(k: int, bp: int, itemsize: int = 4) -> int:
+    """Estimated per-step VMEM working set (double-buffered update tile)."""
+    return itemsize * (2 * k * bp + k + bp)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel must match its
+oracle to float tolerance across the hypothesis shape/dtype sweeps in
+``python/tests/test_kernels.py``. Keep these boring — no tiling, no
+padding, just the mathematical definition.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a [M, K] @ b [K, N] -> [M, N]`` with f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``x @ w + b``."""
+    return matmul_ref(x, w) + b
+
+
+def aggregate_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """Staleness-weighted aggregation oracle (paper Eq. 3 inner sum).
+
+    ``sum_k weights[k] * updates[k, :]`` in f32.
+    """
+    return jnp.einsum(
+        "k,kp->p",
+        weights.astype(jnp.float32),
+        updates.astype(jnp.float32),
+    )
+
+
+def staleness_weights_ref(
+    rounds: jax.Array, cards: jax.Array, current_round: int, tau: int
+) -> jax.Array:
+    """Reference for the Eq. 3 scalar weights (also implemented in Rust).
+
+    weight_k = (t_k / t) * (n_k / n) over the non-expired updates,
+    where updates with ``t - t_k >= tau`` are discarded and n sums the
+    cardinality of the *included* updates only.
+    """
+    t = jnp.asarray(current_round, jnp.float32)
+    keep = (t - rounds.astype(jnp.float32)) < tau
+    cards_f = jnp.where(keep, cards.astype(jnp.float32), 0.0)
+    n = jnp.maximum(cards_f.sum(), 1e-12)
+    damp = jnp.where(keep, rounds.astype(jnp.float32) / jnp.maximum(t, 1.0), 0.0)
+    return damp * cards_f / n

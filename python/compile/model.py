@@ -1,0 +1,178 @@
+"""L2: the federated client/aggregator compute graphs.
+
+For each model family+scale this module builds the four jittable functions
+that get AOT-lowered to HLO text (DESIGN.md §1 flat-parameter convention):
+
+  train       one *entire local round* (epochs x shard/batch optimizer
+              steps via ``lax.scan``) in a single call — the Rust hot loop
+              makes exactly one PJRT ``execute`` per client invocation.
+  train_prox  same, plus the FedProx proximal term mu/2 ||w - w_g||^2.
+              Both variants accept ``num_steps`` for FedProx's
+              partial-work toleration (§III-B): steps past the cutoff are
+              masked to no-ops.
+  eval        central federated evaluation over a fixed test set.
+  aggregate   the L1 Pallas staleness-weighted aggregation kernel.
+
+Everything is shape-static: shard size, batch size, epochs, eval size and
+k_max come from the scale preset, so one lowered module serves every
+client of a deployment.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile.archs import build_arch
+from compile.archs.common import Arch, accuracy_counts, softmax_xent
+from compile.kernels.aggregate import aggregate as pl_aggregate
+from compile.optim import make_step
+from compile.scales import ModelScale, get_scale
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    """Everything the AOT driver needs for one model variant."""
+
+    ms: ModelScale
+    arch: Arch
+    param_count: int
+    init_flat: jax.Array  # seed-0 initial flat parameters
+    unravel: Callable
+    train: Callable  # (params, m, v, t, x, y, seed, num_steps) -> 5-tuple
+    train_prox: Callable  # ... + global_params
+    eval: Callable  # (params, x, y) -> (loss_sum, correct)
+    aggregate: Callable  # (updates [K,P], weights [K]) -> (agg [P],)
+
+    def example_args(self, fn: str):
+        """Zero-filled example arguments with the exact lowering shapes."""
+        ms = self.ms
+        p = self.param_count
+        xdt = _DTYPES[ms.input_dtype]
+        fl = lambda *s: jnp.zeros(s, jnp.float32)
+        il = lambda *s: jnp.zeros(s, jnp.int32)
+        xs = (ms.shard_size, *ms.input_shape)
+        if fn == "train":
+            return (fl(p), fl(p), fl(p), fl(), jnp.zeros(xs, xdt),
+                    il(ms.shard_size), il(), il())
+        if fn == "train_prox":
+            return (fl(p), fl(p), fl(p), fl(), jnp.zeros(xs, xdt),
+                    il(ms.shard_size), il(), il(), fl(p))
+        if fn == "eval":
+            return (fl(p), jnp.zeros((ms.eval_size, *ms.input_shape), xdt),
+                    il(ms.eval_size))
+        if fn == "aggregate":
+            return (fl(ms.k_max, p), fl(ms.k_max))
+        raise KeyError(fn)
+
+
+def _build_train(ms: ModelScale, arch: Arch, unravel, prox: bool):
+    """The full-local-round function (Algorithm 1 Client_Update compute)."""
+    n, b = ms.shard_size, ms.batch_size
+    steps = ms.steps_per_epoch
+    total_steps = ms.steps_per_round
+    opt_step = make_step(ms.optimizer, ms.lr)
+    mu = ms.prox_mu
+
+    def loss_fn(flat, xb, yb, dkey):
+        logits = arch.apply(unravel(flat), xb, key=dkey, train=True)
+        return softmax_xent(logits, yb)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train(params, m, v, t, x, y, seed, num_steps, global_params=None):
+        key = jax.random.key(seed.astype(jnp.uint32))
+        kperm, kdrop = jax.random.split(key)
+
+        # Per-epoch shuffles, materialized as one [E*steps, B] index table.
+        def epoch_idx(k):
+            return jax.random.permutation(k, n)[: steps * b].reshape(steps, b)
+
+        idxs = jax.vmap(epoch_idx)(jax.random.split(kperm, ms.local_epochs))
+        idxs = idxs.reshape(total_steps, b)
+
+        def body(carry, sx):
+            flat, m, v, t, loss_acc = carry
+            idx, i = sx
+            active = i < num_steps
+            xb = jnp.take(x, idx, axis=0)
+            yb = jnp.take(y, idx, axis=0)
+            loss, g = grad_fn(flat, xb, yb, jax.random.fold_in(kdrop, i))
+            if prox:
+                g = g + mu * (flat - global_params)
+            nflat, nm, nv, nt = opt_step(flat, g, m, v, t)
+            sel = lambda a, old: jnp.where(active, a, old)
+            carry = (
+                sel(nflat, flat), sel(nm, m), sel(nv, v), sel(nt, t),
+                loss_acc + jnp.where(active, loss, 0.0),
+            )
+            return carry, None
+
+        init = (params, m, v, t, jnp.float32(0.0))
+        xs = (idxs, jnp.arange(total_steps, dtype=jnp.int32))
+        (params, m, v, t, loss_sum), _ = jax.lax.scan(body, init, xs)
+        denom = jnp.maximum(num_steps.astype(jnp.float32), 1.0)
+        denom = jnp.minimum(denom, float(total_steps))
+        return params, m, v, t, loss_sum / denom
+
+    if prox:
+        def train_prox(params, m, v, t, x, y, seed, num_steps, global_params):
+            return train(params, m, v, t, x, y, seed, num_steps, global_params)
+        return train_prox
+    return lambda params, m, v, t, x, y, seed, num_steps: train(
+        params, m, v, t, x, y, seed, num_steps
+    )
+
+
+def _build_eval(ms: ModelScale, arch: Arch, unravel):
+    """Central evaluation: scan over fixed-size eval batches."""
+    eb = ms.eval_batch
+    nb = ms.eval_size // eb
+
+    def eval_fn(params, x, y):
+        flatp = unravel(params)
+
+        def body(carry, i):
+            loss_sum, correct = carry
+            xb = jax.lax.dynamic_slice_in_dim(x, i * eb, eb, axis=0)
+            yb = jax.lax.dynamic_slice_in_dim(y, i * eb, eb, axis=0)
+            logits = arch.apply(flatp, xb, key=None, train=False)
+            loss_sum = loss_sum + softmax_xent(logits, yb) * eb
+            correct = correct + accuracy_counts(logits, yb)
+            return (loss_sum, correct), None
+
+        (loss_sum, correct), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.float32(0.0)),
+            jnp.arange(nb, dtype=jnp.int32),
+        )
+        return loss_sum, correct
+
+    return eval_fn
+
+
+def build_bundle(name: str, scale: str = "default", init_seed: int = 0) -> ModelBundle:
+    """Construct the four compute graphs for one (model, scale)."""
+    ms = get_scale(name, scale)
+    arch = build_arch(ms)
+    params0 = arch.init(jax.random.key(init_seed))
+    flat0, unravel = ravel_pytree(params0)
+    flat0 = flat0.astype(jnp.float32)
+    p = int(flat0.size)
+
+    train = _build_train(ms, arch, unravel, prox=False)
+    train_prox = _build_train(ms, arch, unravel, prox=True)
+    eval_fn = _build_eval(ms, arch, unravel)
+
+    def aggregate(updates, weights):
+        return (pl_aggregate(updates, weights),)
+
+    return ModelBundle(
+        ms=ms, arch=arch, param_count=p, init_flat=flat0, unravel=unravel,
+        train=train, train_prox=train_prox, eval=eval_fn, aggregate=aggregate,
+    )

@@ -1,0 +1,48 @@
+"""Flat-vector optimizers for the AOT training round.
+
+All optimizer state crosses the Rust<->HLO boundary as flat f32 vectors
+(DESIGN.md §1), so the optimizers operate directly on the raveled
+parameter vector. SGD carries the (m, v) slots untouched so every model
+family exposes the *same* train entrypoint signature regardless of
+optimizer — the Rust runtime stays generic.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+State = Tuple[Array, Array, Array, Array]  # (flat, m, v, t)
+
+
+def adam_step(
+    flat: Array, g: Array, m: Array, v: Array, t: Array,
+    lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+) -> State:
+    """One Adam step with bias correction; ``t`` is the f32 step counter."""
+    t = t + 1.0
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * (g * g)
+    mhat = m / (1.0 - jnp.power(b1, t))
+    vhat = v / (1.0 - jnp.power(b2, t))
+    flat = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return flat, m, v, t
+
+
+def sgd_step(
+    flat: Array, g: Array, m: Array, v: Array, t: Array, lr: float
+) -> State:
+    """Plain SGD (paper uses lr=0.8 for Shakespeare); m/v pass through."""
+    return flat - lr * g, m, v, t + 1.0
+
+
+def make_step(optimizer: str, lr: float):
+    """Return ``(flat, g, m, v, t) -> (flat, m, v, t)`` for the config."""
+    if optimizer == "adam":
+        return lambda flat, g, m, v, t: adam_step(flat, g, m, v, t, lr)
+    if optimizer == "sgd":
+        return lambda flat, g, m, v, t: sgd_step(flat, g, m, v, t, lr)
+    raise ValueError(f"unknown optimizer {optimizer!r}")

@@ -1,0 +1,76 @@
+"""AOT pipeline: HLO text emission, manifest schema, init binary."""
+
+import json
+import struct
+from pathlib import Path
+
+import pytest
+
+from compile import aot
+from compile.model import build_bundle
+
+MODEL = "mnist"
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export_model(MODEL, "smoke", out, quiet=True)
+    return out, manifest
+
+
+def test_hlo_files_are_text_modules(exported):
+    out, manifest = exported
+    for ep in manifest["entrypoints"].values():
+        text = (out / ep["file"]).read_text()
+        assert text.startswith("HloModule"), ep["file"]
+        assert "ENTRY" in text
+        # interchange must be text, never a serialized proto
+        assert "\x00" not in text
+
+
+def test_manifest_schema(exported):
+    _, m = exported
+    for key in (
+        "name", "scale", "param_count", "num_classes", "input_shape",
+        "input_dtype", "shard_size", "batch_size", "local_epochs",
+        "steps_per_round", "optimizer", "lr", "prox_mu", "eval_size",
+        "eval_batch", "k_max", "entrypoints", "init_file", "init_sha256",
+        "flops_per_round",
+    ):
+        assert key in m, key
+    assert m["steps_per_round"] == (
+        m["shard_size"] // m["batch_size"] * m["local_epochs"]
+    )
+    for name, io in aot.ENTRYPOINT_IO.items():
+        ep = m["entrypoints"][name]
+        assert ep["inputs"] == io[0]
+        assert ep["outputs"] == io[1]
+
+
+def test_init_bin_is_p_f32_le(exported):
+    out, m = exported
+    raw = (out / m["init_file"]).read_bytes()
+    assert len(raw) == 4 * m["param_count"]
+    # first element round-trips as little-endian f32 and matches the bundle
+    bundle = build_bundle(MODEL, "smoke", init_seed=m["init_seed"])
+    first = struct.unpack("<f", raw[:4])[0]
+    assert abs(first - float(bundle.init_flat[0])) < 1e-7
+
+
+def test_entry_parameter_count_matches_manifest(exported):
+    """The HLO entry computation must declare exactly the manifest inputs."""
+    out, m = exported
+    for name, ep in m["entrypoints"].items():
+        text = (out / ep["file"]).read_text()
+        entry = text.split("ENTRY")[1]
+        n_params = entry.count(" parameter(")
+        assert n_params == len(ep["inputs"]), name
+
+
+def test_index_written(tmp_path):
+    aot.main(["--out-dir", str(tmp_path), "--scale", "smoke",
+              "--models", "mnist", "--quiet"])
+    idx = json.loads((tmp_path / "index.json").read_text())
+    assert idx["models"] == ["mnist"]
+    assert (tmp_path / idx["manifests"]["mnist"]).exists()

@@ -1,0 +1,208 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in kernels.ref.
+
+This is the core correctness signal for the kernel layer: hypothesis
+sweeps shapes/dtypes/tile sizes and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile.kernels.aggregate as agg_mod
+import compile.kernels.dense as dense_mod
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# pl_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 48),
+    n=st.integers(1, 70),
+    bm=st.sampled_from([8, 16, 128]),
+    bn=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, bm, bn, seed):
+    a = _rand(seed, (m, k))
+    b = _rand(seed + 1, (k, n))
+    got = dense_mod.pl_matmul(a, b, bm=bm, bn=bn)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    a = _rand(0, (33, 17), dtype)
+    b = _rand(1, (17, 65), dtype)
+    got = dense_mod.pl_matmul(a, b, bm=16, bn=16)
+    want = ref.matmul_ref(a, b)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        dense_mod.pl_matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        dense_mod.pl_matmul(jnp.zeros((2, 3, 4)), jnp.zeros((4, 5)))
+
+
+def test_matmul_exact_tile_boundary():
+    # No padding path: m, n exact multiples of the tiles.
+    a = _rand(3, (32, 8))
+    b = _rand(4, (8, 48))
+    got = dense_mod.pl_matmul(a, b, bm=16, bn=16)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dense + custom VJP
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    bsz=st.integers(1, 16),
+    nin=st.integers(1, 32),
+    nout=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_forward_matches_ref(bsz, nin, nout, seed):
+    x = _rand(seed, (bsz, nin))
+    w = _rand(seed + 1, (nin, nout))
+    b = _rand(seed + 2, (nout,))
+    np.testing.assert_allclose(
+        dense_mod.dense(x, w, b), ref.dense_ref(x, w, b), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_dense_grads_match_jnp():
+    """The custom VJP (Pallas bwd matmuls) must equal autodiff of the oracle."""
+    x = _rand(10, (7, 13))
+    w = _rand(11, (13, 5))
+    b = _rand(12, (5,))
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(jnp.tanh(dense_mod.dense(x, w, b)) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(jnp.tanh(ref.dense_ref(x, w, b)) ** 2)
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(g1, g2):
+        np.testing.assert_allclose(a, e, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_grad_under_jit_and_scan():
+    """Same composition the AOT train round uses: grad inside scan inside jit."""
+    x = _rand(20, (4, 6))
+    w = _rand(21, (6, 3))
+    b = jnp.zeros((3,))
+
+    def step(carry, _):
+        w, b = carry
+        g_w, g_b = jax.grad(
+            lambda w, b: jnp.mean(dense_mod.dense(x, w, b) ** 2), argnums=(0, 1)
+        )(w, b)
+        return (w - 0.1 * g_w, b - 0.1 * g_b), jnp.mean(dense_mod.dense(x, w, b) ** 2)
+
+    (_, _), losses = jax.jit(
+        lambda w, b: jax.lax.scan(step, (w, b), None, length=5)
+    )(w, b)
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# aggregate
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    k=st.integers(1, 24),
+    p=st.integers(1, 5000),
+    bp=st.sampled_from([64, 1024, 2048]),
+    seed=st.integers(0, 2**16),
+)
+def test_aggregate_matches_ref(k, p, bp, seed):
+    u = _rand(seed, (k, p))
+    w = jax.random.uniform(jax.random.key(seed + 9), (k,))
+    got = agg_mod.aggregate(u, w, bp=bp)
+    want = ref.aggregate_ref(u, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_aggregate_zero_weight_rows_are_exact_padding():
+    """Rounds with fewer than k_max updates pad with zero weights: exact."""
+    u = _rand(1, (8, 257))
+    w = jnp.array([0.3, 0.7, 0, 0, 0, 0, 0, 0], jnp.float32)
+    got = agg_mod.aggregate(u, w)
+    want = ref.aggregate_ref(u[:2], w[:2])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_fedavg_weights_recover_mean():
+    """With t_k == t, Eq. 3 reduces to FedAvg: n_k/n weighted mean."""
+    u = _rand(2, (4, 100))
+    cards = jnp.array([10.0, 30.0, 40.0, 20.0])
+    w = cards / cards.sum()
+    got = agg_mod.aggregate(u, w)
+    want = jnp.einsum("k,kp->p", w, u)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_validates_shapes():
+    with pytest.raises(ValueError):
+        agg_mod.aggregate(jnp.zeros((3, 4)), jnp.zeros((5,)))
+    with pytest.raises(ValueError):
+        agg_mod.aggregate(jnp.zeros((3,)), jnp.zeros((3,)))
+
+
+# ---------------------------------------------------------------------------
+# staleness weights reference (cross-checked against the Rust impl too)
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_weights_tau_cutoff():
+    rounds = jnp.array([10.0, 9.0, 8.0, 7.0])
+    cards = jnp.array([100.0, 100.0, 100.0, 100.0])
+    w = ref.staleness_weights_ref(rounds, cards, current_round=10, tau=2)
+    # ages 0,1 kept; ages 2,3 discarded
+    assert w[2] == 0.0 and w[3] == 0.0
+    assert w[0] > w[1] > 0.0
+
+
+def test_staleness_weights_same_round_is_fedavg():
+    rounds = jnp.array([5.0, 5.0, 5.0])
+    cards = jnp.array([10.0, 20.0, 70.0])
+    w = ref.staleness_weights_ref(rounds, cards, current_round=5, tau=2)
+    np.testing.assert_allclose(w, cards / cards.sum(), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# VMEM estimators (perf bookkeeping)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_budgets():
+    # Paper-scale tiles must fit the ~16 MiB/core VMEM budget.
+    assert dense_mod.vmem_bytes(128, 128, 4096) <= 16 * 2**20
+    assert agg_mod.vmem_bytes(256, 2048) <= 16 * 2**20

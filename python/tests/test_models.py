@@ -1,0 +1,161 @@
+"""L2 correctness: model zoo shapes, training dynamics, FedProx semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import build_bundle
+from compile.scales import MODELS, get_scale
+
+SMOKE = {name: build_bundle(name, "smoke") for name in MODELS}
+
+
+def _learnable_batch(bundle, n, seed=0):
+    """Synthetic class-separable data matching the model's input spec."""
+    ms = bundle.ms
+    key = jax.random.key(seed)
+    ky, kx = jax.random.split(key)
+    y = jax.random.randint(ky, (n,), 0, ms.num_classes, jnp.int32)
+    if ms.input_dtype == "i32":
+        # token sequences whose last token leaks the label
+        x = jax.random.randint(kx, (n, *ms.input_shape), 0, ms.num_classes, jnp.int32)
+        x = x.at[:, -1].set(y)
+    else:
+        base = jax.random.normal(kx, (ms.num_classes, *ms.input_shape)) * 2.0
+        noise = jax.random.normal(jax.random.fold_in(kx, 1), (n, *ms.input_shape))
+        x = base[y] + 0.3 * noise
+    return x, y
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_param_count_matches_init_bin_len(name):
+    b = SMOKE[name]
+    assert b.init_flat.shape == (b.param_count,)
+    assert b.init_flat.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(b.init_flat)))
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_logits_shape(name):
+    b = SMOKE[name]
+    x, _ = _learnable_batch(b, 4)
+    logits = b.arch.apply(b.unravel(b.init_flat), x, key=jax.random.key(0), train=True)
+    assert logits.shape == (4, b.ms.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_train_round_decreases_loss(name):
+    """Two consecutive local rounds on separable data must reduce loss."""
+    b = SMOKE[name]
+    ms = b.ms
+    x, y = _learnable_batch(b, ms.shard_size, seed=3)
+    p = b.init_flat
+    m = v = jnp.zeros_like(p)
+    t = jnp.float32(0)
+    full = jnp.int32(ms.steps_per_round)
+    train = jax.jit(b.train)
+    p1, m1, v1, t1, loss1 = train(p, m, v, t, x, y, jnp.int32(1), full)
+    p2, _, _, t2, loss2 = train(p1, m1, v1, t1, x, y, jnp.int32(2), full)
+    assert float(loss2) < float(loss1)
+    assert float(t1) == ms.steps_per_round
+    assert float(t2) == 2 * ms.steps_per_round
+    assert not np.allclose(np.asarray(p1), np.asarray(p))
+
+
+@pytest.mark.parametrize("name", ["mnist", "shakespeare"])
+def test_num_steps_zero_is_identity(name):
+    """Partial-work mask: num_steps=0 must leave params/opt-state unchanged."""
+    b = SMOKE[name]
+    ms = b.ms
+    x, y = _learnable_batch(b, ms.shard_size)
+    p = b.init_flat
+    m = v = jnp.zeros_like(p)
+    p1, m1, v1, t1, loss = jax.jit(b.train)(
+        p, m, v, jnp.float32(0), x, y, jnp.int32(0), jnp.int32(0)
+    )
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(m1), 0)
+    assert float(t1) == 0.0
+
+
+def test_partial_work_fewer_steps_changes_less():
+    b = SMOKE["mnist"]
+    ms = b.ms
+    x, y = _learnable_batch(b, ms.shard_size)
+    p = b.init_flat
+    z = jnp.zeros_like(p)
+    run = lambda k: jax.jit(b.train)(
+        p, z, z, jnp.float32(0), x, y, jnp.int32(5), jnp.int32(k)
+    )
+    p_small, *_ = run(1)
+    p_full, *_, tfull, _ = run(ms.steps_per_round)
+    d_small = float(jnp.linalg.norm(p_small - p))
+    d_full = float(jnp.linalg.norm(p_full - p))
+    assert 0 < d_small < d_full
+
+
+def test_prox_pulls_toward_global():
+    """FedProx gradient includes mu(w - w_g): with a huge mu the drift from
+    the global point must be smaller than plain training's drift."""
+    b = build_bundle("mnist", "smoke")
+    ms = b.ms
+    x, y = _learnable_batch(b, ms.shard_size)
+    p = b.init_flat
+    z = jnp.zeros_like(p)
+    full = jnp.int32(ms.steps_per_round)
+    p_plain, *_ = jax.jit(b.train)(p, z, z, jnp.float32(0), x, y, jnp.int32(7), full)
+    p_prox, *_ = jax.jit(b.train_prox)(
+        p, z, z, jnp.float32(0), x, y, jnp.int32(7), full, p
+    )
+    drift_plain = float(jnp.linalg.norm(p_plain - p))
+    drift_prox = float(jnp.linalg.norm(p_prox - p))
+    assert drift_prox < drift_plain
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_eval_counts_are_bounded(name):
+    b = SMOKE[name]
+    x, y = _learnable_batch(b, b.ms.eval_size)
+    loss_sum, correct = jax.jit(b.eval)(b.init_flat, x, y)
+    assert 0.0 <= float(correct) <= b.ms.eval_size
+    assert float(loss_sum) > 0.0
+
+
+def test_eval_improves_after_training():
+    b = SMOKE["mnist"]
+    ms = b.ms
+    x, y = _learnable_batch(b, ms.shard_size, seed=5)
+    ex, ey = _learnable_batch(b, ms.eval_size, seed=6)
+    p = b.init_flat
+    z = jnp.zeros_like(p)
+    _, c0 = jax.jit(b.eval)(p, ex, ey)
+    train = jax.jit(b.train)
+    m = v = z
+    t = jnp.float32(0)
+    for r in range(4):
+        p, m, v, t, _ = train(p, m, v, t, x, y, jnp.int32(r), jnp.int32(ms.steps_per_round))
+    _, c1 = jax.jit(b.eval)(p, ex, ey)
+    assert float(c1) > float(c0)
+
+
+def test_train_deterministic_given_seed():
+    b = SMOKE["speech"]  # has dropout -> exercises the rng path
+    ms = b.ms
+    x, y = _learnable_batch(b, ms.shard_size)
+    p = b.init_flat
+    z = jnp.zeros_like(p)
+    args = (p, z, z, jnp.float32(0), x, y, jnp.int32(42), jnp.int32(ms.steps_per_round))
+    p1, *_ = jax.jit(b.train)(*args)
+    p2, *_ = jax.jit(b.train)(*args)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_scale_presets_are_consistent():
+    for name in MODELS:
+        for scale in ("smoke", "default", "paper"):
+            ms = get_scale(name, scale)
+            assert ms.steps_per_round >= 1
+            assert ms.eval_size % ms.eval_batch == 0
+            assert ms.k_max >= 2

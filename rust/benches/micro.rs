@@ -1,0 +1,136 @@
+//! Micro benchmarks for the L3 coordinator hot paths (DESIGN.md §4):
+//! client selection (clustering + ε grid search), behaviour features,
+//! staleness weights, dataset synthesis, JSON, and — when artifacts are
+//! present — the Pallas aggregation kernel across K and P.
+//!
+//!   cargo bench --bench micro
+//!
+//! Uses the built-in harness (util::bench); criterion is unavailable in
+//! this offline environment.
+
+use std::path::PathBuf;
+
+use fedless::clientdb::HistoryStore;
+use fedless::clustering::cluster_clients;
+use fedless::data::{Partition, SynthDataset};
+use fedless::paramsvr::{staleness_weights, WeightedUpdate};
+use fedless::runtime::{Engine, ModelRuntime};
+use fedless::strategy::{ema, FedLesScan, SelectionContext, Strategy};
+use fedless::util::bench::bench;
+use fedless::util::{Json, Rng};
+
+fn history_with(n: usize, rng: &mut Rng) -> HistoryStore {
+    let mut h = HistoryStore::new();
+    for c in 0..n {
+        for r in 0..10u32 {
+            h.record_invocation(c);
+            if rng.bernoulli(0.8) {
+                h.record_success(c, r, rng.range_f64(5.0, 90.0));
+            } else {
+                h.record_failure(c, r);
+            }
+        }
+    }
+    h
+}
+
+fn main() {
+    println!("== micro benches (L3 coordinator) ==");
+    let mut rng = Rng::seed_from_u64(1);
+
+    // --- FedLesScan selection at paper scale (TAB2 selection cost) -----
+    for &n in &[60usize, 200, 542] {
+        let hist = history_with(n, &mut rng);
+        let clients: Vec<usize> = (0..n).collect();
+        let mut strat = FedLesScan::default();
+        let k = (n / 3).max(4);
+        let mut r = Rng::seed_from_u64(2);
+        bench(&format!("select/fedlesscan n={n} k={k}"), 3, 30, || {
+            let ctx = SelectionContext {
+                round: 5,
+                max_rounds: 20,
+                clients_per_round: k,
+                all_clients: &clients,
+                history: &hist,
+            };
+            strat.select(&ctx, &mut r)
+        });
+    }
+
+    // --- DBSCAN + CH grid search alone ---------------------------------
+    for &n in &[50usize, 200, 500] {
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let c = (i % 3) as f64 * 30.0;
+                vec![c + rng.range_f64(0.0, 3.0), rng.range_f64(0.0, 3.0)]
+            })
+            .collect();
+        bench(&format!("cluster/grid-search n={n}"), 3, 20, || {
+            cluster_clients(&pts, 2)
+        });
+    }
+
+    // --- behaviour features --------------------------------------------
+    let times: Vec<f64> = (0..64).map(|i| 10.0 + (i % 7) as f64).collect();
+    bench("features/ema len=64", 10, 1000, || ema(&times, 0.5));
+
+    // --- Eq. 3 staleness weights ----------------------------------------
+    let updates: Vec<WeightedUpdate> = (0..256)
+        .map(|i| WeightedUpdate {
+            produced_round: 10 - (i % 3) as u32,
+            cardinality: 50 + i % 100,
+        })
+        .collect();
+    bench("aggregate/weights k=256", 10, 2000, || {
+        staleness_weights(&updates, 10, 2, true)
+    });
+
+    // --- dataset synthesis (per-client shard, mnist-shaped) -------------
+    let ds = SynthDataset::new(
+        64, 50, 512, 10, vec![28, 28, 1], false, 3, Partition::LabelShard,
+    )
+    .unwrap();
+    bench("data/synthesize shard 50x784", 3, 50, || ds.client_data(7));
+
+    // --- JSON (manifest-sized documents) --------------------------------
+    let doc = {
+        let entries: Vec<Json> = (0..50)
+            .map(|i| {
+                Json::obj(vec![
+                    ("round", Json::num(i as f64)),
+                    ("eur", Json::num(0.9)),
+                    ("cost", Json::num(0.0123)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("rounds", Json::Arr(entries))]).to_string_pretty()
+    };
+    bench("json/parse 50-round result", 10, 500, || {
+        Json::parse(&doc).unwrap()
+    });
+
+    // --- Pallas aggregation kernel (needs artifacts) ---------------------
+    let dir = PathBuf::from("artifacts");
+    if dir.join("mnist.manifest.json").exists() {
+        let engine = Engine::cpu().expect("pjrt");
+        for model in ["mnist", "femnist"] {
+            let rt = ModelRuntime::load(&engine, &dir, model).expect("artifacts");
+            let p = rt.manifest.param_count;
+            for k in [2usize, 8, 16] {
+                let updates: Vec<Vec<f32>> = (0..k)
+                    .map(|i| (0..p).map(|j| ((i + j) % 17) as f32 * 0.01).collect())
+                    .collect();
+                let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+                let w: Vec<f32> = (0..k).map(|_| 1.0 / k as f32).collect();
+                bench(
+                    &format!("aggregate/hlo {model} P={p} K={k}"),
+                    2,
+                    15,
+                    || rt.aggregate(&refs, &w).unwrap(),
+                );
+            }
+        }
+    } else {
+        println!("(skipping HLO aggregation benches: run `make artifacts`)");
+    }
+}

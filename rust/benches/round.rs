@@ -1,0 +1,90 @@
+//! End-to-end benchmarks: one full federated round per (dataset,
+//! strategy), plus the per-client local-training HLO execution — the
+//! numbers behind Tables II-IV's wall-clock feasibility and the §Perf
+//! log in EXPERIMENTS.md.
+//!
+//!   cargo bench --bench round
+//!
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use fedless::config::{ExperimentConfig, Scenario};
+use fedless::coordinator::Controller;
+use fedless::data::SynthDataset;
+use fedless::runtime::{Engine, ModelRuntime, TrainRequest};
+use fedless::strategy::StrategyKind;
+use fedless::util::bench::bench;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("mnist.manifest.json").exists() {
+        println!("no artifacts found — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu().expect("pjrt cpu");
+    println!("== end-to-end benches (PJRT platform: {}) ==", engine.platform_name());
+
+    for model in ["mnist", "femnist", "shakespeare", "speech", "transformer"] {
+        if !dir.join(format!("{model}.manifest.json")).exists() {
+            continue;
+        }
+        let rt = ModelRuntime::load(&engine, &dir, model).expect("load artifacts");
+        let mf = rt.manifest.clone();
+
+        // --- single client local round (the dominant compute) ----------
+        let data = SynthDataset::from_manifest(&mf, 4, 1, Default::default()).unwrap();
+        let shard = data.client_data(0);
+        let p0 = rt.init_params().unwrap();
+        let zeros = vec![0f32; p0.len()];
+        bench(
+            &format!("client-round/{model} P={} steps={}", mf.param_count, mf.steps_per_round),
+            2,
+            10,
+            || {
+                rt.train_round(&TrainRequest {
+                    params: &p0,
+                    m: &zeros,
+                    v: &zeros,
+                    t: 0.0,
+                    x: &shard.x,
+                    y: &shard.y,
+                    seed: 1,
+                    num_steps: mf.steps_per_round as i32,
+                    global: None,
+                })
+                .unwrap()
+            },
+        );
+
+        // --- central evaluation ----------------------------------------
+        let eval = data.eval_data();
+        bench(&format!("eval/{model} M={}", mf.eval_size), 2, 10, || {
+            rt.evaluate(&p0, &eval.x, &eval.y).unwrap()
+        });
+    }
+
+    // --- one full coordinator round per strategy (mnist) ---------------
+    let rt = ModelRuntime::load(&engine, &dir, "mnist").expect("mnist artifacts");
+    for strategy in [
+        StrategyKind::Fedavg,
+        StrategyKind::Fedprox,
+        StrategyKind::Fedlesscan,
+    ] {
+        bench(
+            &format!("full-round/mnist {} (8 clients)", strategy.as_str()),
+            1,
+            5,
+            || {
+                let mut cfg = ExperimentConfig::preset("mnist");
+                cfg.strategy = strategy;
+                cfg.scenario = Scenario::Straggler(30);
+                cfg.rounds = 1;
+                cfg.n_clients = 16;
+                cfg.clients_per_round = 8;
+                let mut ctl = Controller::new(cfg, &rt).unwrap();
+                ctl.run().unwrap()
+            },
+        );
+    }
+}

@@ -1,0 +1,264 @@
+//! Client-history database (the paper's MongoDB "client history
+//! collection", §IV-A) — behavioural data per client: training times,
+//! missed rounds and the cooldown counter of Eq. 1.
+//!
+//! Update semantics follow Algorithm 1 exactly:
+//!
+//! * controller, on success: cooldown := 0, record training time;
+//! * controller, on failure: append the round to `missed_rounds` and
+//!   apply Eq. 1 (`0 -> 1`, else `*2`);
+//! * client, on late completion (a "slow update" arriving after the
+//!   round): remove the round from `missed_rounds` and record the time —
+//!   distinguishing *slow* from *crashed* is done on the client side
+//!   (§V-B).
+//!
+//! The paper describes cooldown as "the number of rounds a client has to
+//! stay in the last tier" (§V-B); Algorithm 1 only shows the growth rule,
+//! so this implementation also ticks the counter down by one at the end
+//! of every round in which the client did not fail again — without the
+//! tick a client that is never re-invoked would remain a straggler
+//! forever, contradicting §V-A ("tier-3 clients can move to tier-2 and
+//! vice-versa").
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::Json;
+use crate::{ClientId, Result};
+
+/// Behavioural record for one client (§V-B).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClientHistory {
+    /// Completed local-training durations, in order (seconds, virtual).
+    pub training_times: Vec<f64>,
+    /// Rounds this client was invoked in but missed (slow or crashed).
+    pub missed_rounds: Vec<u32>,
+    /// Eq. 1 counter: > 0 means tier-3 (straggler).
+    pub cooldown: u32,
+    /// Total controller invocations.
+    pub invocations: u32,
+    /// On-time completions.
+    pub successes: u32,
+}
+
+impl ClientHistory {
+    /// A rookie has never been invoked (§V-A tier 1).
+    pub fn is_rookie(&self) -> bool {
+        self.invocations == 0
+    }
+
+    /// Tier-3 test (§V-A): any live cooldown marks a straggler.
+    pub fn is_straggler(&self) -> bool {
+        self.cooldown > 0
+    }
+}
+
+/// In-memory history store with JSON snapshot persistence.
+#[derive(Debug, Default, Clone)]
+pub struct HistoryStore {
+    map: HashMap<ClientId, ClientHistory>,
+}
+
+impl HistoryStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, id: ClientId) -> ClientHistory {
+        self.map.get(&id).cloned().unwrap_or_default()
+    }
+
+    pub fn get_ref(&self, id: ClientId) -> Option<&ClientHistory> {
+        self.map.get(&id)
+    }
+
+    fn entry(&mut self, id: ClientId) -> &mut ClientHistory {
+        self.map.entry(id).or_default()
+    }
+
+    /// Controller marked this client as invoked this round.
+    pub fn record_invocation(&mut self, id: ClientId) {
+        self.entry(id).invocations += 1;
+    }
+
+    /// On-time completion (Algorithm 1 lines 5-8 + client lines 22-27).
+    pub fn record_success(&mut self, id: ClientId, round: u32, training_time: f64) {
+        let h = self.entry(id);
+        h.cooldown = 0;
+        h.successes += 1;
+        h.training_times.push(training_time);
+        h.missed_rounds.retain(|&r| r != round);
+    }
+
+    /// Missed round (Algorithm 1 lines 9-13): Eq. 1 growth.
+    pub fn record_failure(&mut self, id: ClientId, round: u32) {
+        let h = self.entry(id);
+        if !h.missed_rounds.contains(&round) {
+            h.missed_rounds.push(round);
+        }
+        h.cooldown = if h.cooldown == 0 { 1 } else { h.cooldown * 2 };
+    }
+
+    /// Late ("slow") update arrived after its round finished — the client
+    /// corrects its own record (§V-B): un-miss the round, record the time.
+    pub fn record_late_completion(&mut self, id: ClientId, round: u32, training_time: f64) {
+        let h = self.entry(id);
+        h.missed_rounds.retain(|&r| r != round);
+        h.training_times.push(training_time);
+    }
+
+    /// End-of-round tick: cooldowns decay by one except for clients that
+    /// failed *this* round (their Eq. 1 value is fresh).
+    pub fn tick_cooldowns(&mut self, failed_this_round: &[ClientId]) {
+        for (id, h) in self.map.iter_mut() {
+            if h.cooldown > 0 && !failed_this_round.contains(id) {
+                h.cooldown -= 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&ClientId, &ClientHistory)> {
+        self.map.iter()
+    }
+
+    /// Snapshot to JSON (the paper's DB persistence stand-in).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let entries: Vec<Json> = self
+            .map
+            .iter()
+            .map(|(id, h)| {
+                Json::obj(vec![
+                    ("client", Json::num(*id as f64)),
+                    ("training_times", Json::from_f64_slice(&h.training_times)),
+                    (
+                        "missed_rounds",
+                        Json::Arr(h.missed_rounds.iter().map(|&r| Json::num(r as f64)).collect()),
+                    ),
+                    ("cooldown", Json::num(h.cooldown as f64)),
+                    ("invocations", Json::num(h.invocations as f64)),
+                    ("successes", Json::num(h.successes as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("clients", Json::Arr(entries))]).write_file(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let root = Json::parse_file(path)?;
+        let mut map = HashMap::new();
+        for e in root.get("clients")?.as_arr()? {
+            let id = e.get("client")?.as_usize()?;
+            let h = ClientHistory {
+                training_times: e
+                    .get("training_times")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<Result<_>>()?,
+                missed_rounds: e
+                    .get("missed_rounds")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_u64()? as u32))
+                    .collect::<Result<_>>()?,
+                cooldown: e.get("cooldown")?.as_u64()? as u32,
+                invocations: e.get("invocations")?.as_u64()? as u32,
+                successes: e.get("successes")?.as_u64()? as u32,
+            };
+            map.insert(id, h);
+        }
+        Ok(Self { map })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rookie_until_first_invocation() {
+        let mut db = HistoryStore::new();
+        assert!(db.get(1).is_rookie());
+        db.record_invocation(1);
+        assert!(!db.get(1).is_rookie());
+    }
+
+    #[test]
+    fn eq1_cooldown_progression() {
+        let mut db = HistoryStore::new();
+        db.record_failure(1, 2);
+        assert_eq!(db.get(1).cooldown, 1); // 0 -> 1
+        db.record_failure(1, 4);
+        assert_eq!(db.get(1).cooldown, 2); // *2
+        db.record_failure(1, 5);
+        assert_eq!(db.get(1).cooldown, 4); // *2
+        db.record_success(1, 6, 12.0);
+        assert_eq!(db.get(1).cooldown, 0); // completed in time
+    }
+
+    #[test]
+    fn missed_rounds_tracked_and_corrected() {
+        let mut db = HistoryStore::new();
+        db.record_failure(7, 3);
+        db.record_failure(7, 5);
+        assert_eq!(db.get(7).missed_rounds, vec![3, 5]);
+        // slow update for round 3 arrives later: client corrects itself
+        db.record_late_completion(7, 3, 40.0);
+        assert_eq!(db.get(7).missed_rounds, vec![5]);
+        assert_eq!(db.get(7).training_times, vec![40.0]);
+        // cooldown untouched by a late completion (only on-time resets)
+        assert_eq!(db.get(7).cooldown, 2);
+    }
+
+    #[test]
+    fn duplicate_failure_same_round_counted_once() {
+        let mut db = HistoryStore::new();
+        db.record_failure(1, 3);
+        db.record_failure(1, 3);
+        assert_eq!(db.get(1).missed_rounds, vec![3]);
+    }
+
+    #[test]
+    fn tick_decays_but_spares_fresh_failures() {
+        let mut db = HistoryStore::new();
+        db.record_failure(1, 1); // cooldown 1
+        db.record_failure(2, 1);
+        db.record_failure(2, 2); // cooldown 2, failed in round 2
+        db.tick_cooldowns(&[2]);
+        assert_eq!(db.get(1).cooldown, 0);
+        assert_eq!(db.get(2).cooldown, 2);
+        db.tick_cooldowns(&[]);
+        assert_eq!(db.get(2).cooldown, 1);
+    }
+
+    #[test]
+    fn straggler_flag_follows_cooldown() {
+        let mut db = HistoryStore::new();
+        db.record_failure(1, 1);
+        assert!(db.get(1).is_straggler());
+        db.tick_cooldowns(&[]);
+        assert!(!db.get(1).is_straggler());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut db = HistoryStore::new();
+        db.record_invocation(1);
+        db.record_success(1, 0, 5.0);
+        db.record_failure(2, 0);
+        let path = std::env::temp_dir().join(format!("fedless-hist-{}.json", std::process::id()));
+        db.save(&path).unwrap();
+        let db2 = HistoryStore::load(&path).unwrap();
+        assert_eq!(db.get(1), db2.get(1));
+        assert_eq!(db.get(2), db2.get(2));
+        std::fs::remove_file(&path).ok();
+    }
+}

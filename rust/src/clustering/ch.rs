@@ -1,0 +1,113 @@
+//! Calinski–Harabasz index (variance-ratio criterion, 1974).
+//!
+//! The paper picks DBSCAN's ε by grid search on this score (§V-C): the
+//! ratio of between-cluster to within-cluster dispersion, scaled by the
+//! degrees of freedom. Higher is better; undefined for k < 2 or k == n.
+
+use super::Point;
+
+/// Compute the CH index for a labelling with `k` clusters. Labels must be
+/// in `0..k`. Returns 0.0 when within-cluster dispersion is zero (the
+/// clustering is "perfect"; callers treat larger as better so a tiny
+/// positive epsilon denominator would also work — 0 keeps it total).
+pub fn calinski_harabasz(points: &[Point], labels: &[isize], k: usize) -> f64 {
+    let n = points.len();
+    assert_eq!(n, labels.len());
+    if k < 2 || k >= n {
+        return f64::NEG_INFINITY;
+    }
+    let dim = points[0].len();
+
+    // global centroid
+    let mut global = vec![0.0; dim];
+    for p in points {
+        for (g, v) in global.iter_mut().zip(p) {
+            *g += v;
+        }
+    }
+    global.iter_mut().for_each(|g| *g /= n as f64);
+
+    // per-cluster centroids + sizes
+    let mut centroids = vec![vec![0.0; dim]; k];
+    let mut sizes = vec![0usize; k];
+    for (p, &l) in points.iter().zip(labels) {
+        let l = l as usize;
+        sizes[l] += 1;
+        for (c, v) in centroids[l].iter_mut().zip(p) {
+            *c += v;
+        }
+    }
+    for (c, &s) in centroids.iter_mut().zip(&sizes) {
+        if s > 0 {
+            c.iter_mut().for_each(|v| *v /= s as f64);
+        }
+    }
+
+    // between-group and within-group sums of squares
+    let mut ssb = 0.0;
+    for (c, &s) in centroids.iter().zip(&sizes) {
+        let d2: f64 = c
+            .iter()
+            .zip(&global)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        ssb += s as f64 * d2;
+    }
+    let mut ssw = 0.0;
+    for (p, &l) in points.iter().zip(labels) {
+        let c = &centroids[l as usize];
+        ssw += p
+            .iter()
+            .zip(c)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>();
+    }
+    if ssw <= f64::EPSILON {
+        return if ssb > 0.0 { f64::INFINITY } else { 0.0 };
+    }
+    (ssb / (k as f64 - 1.0)) / (ssw / (n as f64 - k as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn good_split_beats_bad_split() {
+        let pts: Vec<Point> = vec![
+            vec![0.0],
+            vec![0.1],
+            vec![0.2],
+            vec![10.0],
+            vec![10.1],
+            vec![10.2],
+        ];
+        let good = vec![0, 0, 0, 1, 1, 1];
+        let bad = vec![0, 1, 0, 1, 0, 1];
+        assert!(
+            calinski_harabasz(&pts, &good, 2) > calinski_harabasz(&pts, &bad, 2)
+        );
+    }
+
+    #[test]
+    fn degenerate_k_is_neg_infinity() {
+        let pts: Vec<Point> = vec![vec![0.0], vec![1.0], vec![2.0]];
+        assert_eq!(
+            calinski_harabasz(&pts, &[0, 0, 0], 1),
+            f64::NEG_INFINITY
+        );
+        assert_eq!(
+            calinski_harabasz(&pts, &[0, 1, 2], 3),
+            f64::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn perfect_separation_is_infinite() {
+        let pts: Vec<Point> = vec![vec![0.0], vec![0.0], vec![5.0], vec![5.0]];
+        assert_eq!(
+            calinski_harabasz(&pts, &[0, 0, 1, 1], 2),
+            f64::INFINITY
+        );
+    }
+}

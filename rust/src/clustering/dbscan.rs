@@ -1,0 +1,119 @@
+//! DBSCAN (Ester et al., KDD'96) — density-based clustering with noise.
+//!
+//! FedLesScan clusters at most a few hundred clients per round on 2-D
+//! behaviour features, so the plain O(n²) neighbourhood scan is already
+//! far below the round budget (the paper makes the same argument for
+//! DBSCAN's cost, §V-C). No spatial index needed.
+
+use super::{dist2, Point, NOISE};
+
+#[derive(Debug, Clone, Copy)]
+pub struct DbscanParams {
+    /// Neighbourhood radius (Euclidean).
+    pub eps: f64,
+    /// Minimum neighbourhood size (including the point itself) to be a
+    /// core point.
+    pub min_pts: usize,
+}
+
+const UNVISITED: isize = -2;
+
+/// Run DBSCAN; returns one label per point, `NOISE` (-1) for outliers.
+pub fn dbscan(points: &[Point], params: &DbscanParams) -> Vec<isize> {
+    let n = points.len();
+    let eps2 = params.eps * params.eps;
+    let mut labels = vec![UNVISITED; n];
+    let mut cluster: isize = 0;
+
+    let neighbours = |i: usize| -> Vec<usize> {
+        (0..n)
+            .filter(|&j| dist2(&points[i], &points[j]) <= eps2)
+            .collect()
+    };
+
+    for i in 0..n {
+        if labels[i] != UNVISITED {
+            continue;
+        }
+        let nb = neighbours(i);
+        if nb.len() < params.min_pts {
+            labels[i] = NOISE;
+            continue;
+        }
+        // expand a new cluster from this core point
+        labels[i] = cluster;
+        let mut frontier: Vec<usize> = nb;
+        while let Some(j) = frontier.pop() {
+            if labels[j] == NOISE {
+                labels[j] = cluster; // border point adopted by the cluster
+            }
+            if labels[j] != UNVISITED {
+                continue;
+            }
+            labels[j] = cluster;
+            let nb_j = neighbours(j);
+            if nb_j.len() >= params.min_pts {
+                frontier.extend(nb_j);
+            }
+        }
+        cluster += 1;
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_well_separated_clusters() {
+        let pts: Vec<Point> = vec![
+            vec![0.0, 0.0],
+            vec![0.1, 0.0],
+            vec![0.0, 0.1],
+            vec![5.0, 5.0],
+            vec![5.1, 5.0],
+            vec![5.0, 5.1],
+        ];
+        let labels = dbscan(&pts, &DbscanParams { eps: 0.5, min_pts: 2 });
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[0], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[0], labels[3]);
+        assert!(labels.iter().all(|&l| l >= 0));
+    }
+
+    #[test]
+    fn isolated_point_is_noise() {
+        let pts: Vec<Point> = vec![
+            vec![0.0],
+            vec![0.1],
+            vec![0.2],
+            vec![100.0],
+        ];
+        let labels = dbscan(&pts, &DbscanParams { eps: 0.5, min_pts: 2 });
+        assert_eq!(labels[3], NOISE);
+        assert!(labels[..3].iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn chain_connectivity_merges() {
+        // points spaced 0.4 apart form one density-connected chain
+        let pts: Vec<Point> = (0..10).map(|i| vec![i as f64 * 0.4]).collect();
+        let labels = dbscan(&pts, &DbscanParams { eps: 0.5, min_pts: 2 });
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn min_pts_one_makes_every_point_core() {
+        let pts: Vec<Point> = vec![vec![0.0], vec![10.0]];
+        let labels = dbscan(&pts, &DbscanParams { eps: 0.5, min_pts: 1 });
+        assert_eq!(labels, vec![0, 1]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let labels = dbscan(&[], &DbscanParams { eps: 1.0, min_pts: 2 });
+        assert!(labels.is_empty());
+    }
+}

@@ -1,0 +1,153 @@
+//! Clustering substrate for FedLesScan's client selection (§V-C):
+//! DBSCAN over client behaviour features, cluster-quality scoring via the
+//! Calinski–Harabasz index, and the ε grid search the paper uses to pick
+//! DBSCAN's neighbourhood radius.
+
+mod ch;
+mod dbscan;
+
+pub use ch::calinski_harabasz;
+pub use dbscan::{dbscan, DbscanParams};
+
+/// Outlier label produced by DBSCAN before [`relabel_outliers`].
+pub const NOISE: isize = -1;
+
+/// A point in client-behaviour feature space (trainingEma,
+/// missedRoundEma) — kept generic over dimensionality for tests.
+pub type Point = Vec<f64>;
+
+/// Squared Euclidean distance.
+pub(crate) fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// The paper "treats outliers as a single cluster" (§V-C): remap all
+/// NOISE labels to one fresh cluster id. Returns the total cluster count.
+pub fn relabel_outliers(labels: &mut [isize]) -> usize {
+    let max = labels.iter().copied().max().unwrap_or(NOISE);
+    let noise_id = max + 1;
+    let mut any_noise = false;
+    for l in labels.iter_mut() {
+        if *l == NOISE {
+            *l = noise_id;
+            any_noise = true;
+        }
+    }
+    (max + 1) as usize + usize::from(any_noise)
+}
+
+/// ε grid search (§V-C): pick the ε whose DBSCAN clustering maximizes the
+/// Calinski–Harabasz index. Candidates are quantiles of the pairwise
+/// distance distribution, so the search adapts to the feature scale.
+/// Falls back to a single cluster when every ε yields one.
+pub fn cluster_clients(points: &[Point], min_pts: usize) -> (Vec<isize>, usize) {
+    let n = points.len();
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    if n == 1 {
+        return (vec![0], 1);
+    }
+
+    // Pairwise distances -> ε candidates at fixed quantiles.
+    let mut dists: Vec<f64> = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            dists.push(dist2(&points[i], &points[j]).sqrt());
+        }
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let quantile = |q: f64| -> f64 {
+        let idx = ((dists.len() - 1) as f64 * q).round() as usize;
+        dists[idx]
+    };
+    let mut candidates: Vec<f64> = [0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.75]
+        .iter()
+        .map(|&q| quantile(q))
+        .filter(|&e| e > 0.0)
+        .collect();
+    candidates.dedup();
+    if candidates.is_empty() {
+        // all points identical: one cluster
+        return (vec![0; n], 1);
+    }
+
+    let mut best: Option<(f64, Vec<isize>, usize)> = None;
+    for eps in candidates {
+        let mut labels = dbscan(points, &DbscanParams { eps, min_pts });
+        let k = relabel_outliers(&mut labels);
+        if k < 2 || k >= n {
+            continue; // CH undefined; also useless for selection
+        }
+        let score = calinski_harabasz(points, &labels, k);
+        if best.as_ref().map_or(true, |(s, _, _)| score > *s) {
+            best = Some((score, labels, k));
+        }
+    }
+    match best {
+        Some((_, labels, k)) => (labels, k),
+        None => (vec![0; n], 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(cx: f64, cy: f64, n: usize, spread: f64) -> Vec<Point> {
+        (0..n)
+            .map(|i| {
+                let a = i as f64 * 0.7;
+                vec![cx + spread * a.sin(), cy + spread * a.cos()]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn grid_search_separates_two_blobs() {
+        let mut pts = blob(0.0, 0.0, 10, 0.05);
+        pts.extend(blob(10.0, 10.0, 10, 0.05));
+        let (labels, k) = cluster_clients(&pts, 2);
+        assert_eq!(k, 2);
+        assert!(labels[..10].iter().all(|&l| l == labels[0]));
+        assert!(labels[10..].iter().all(|&l| l == labels[10]));
+        assert_ne!(labels[0], labels[10]);
+    }
+
+    #[test]
+    fn grid_search_three_blobs() {
+        let mut pts = blob(0.0, 0.0, 8, 0.05);
+        pts.extend(blob(5.0, 5.0, 8, 0.05));
+        pts.extend(blob(10.0, 0.0, 8, 0.05));
+        let (_, k) = cluster_clients(&pts, 2);
+        assert_eq!(k, 3);
+    }
+
+    #[test]
+    fn identical_points_become_one_cluster() {
+        let pts = vec![vec![1.0, 1.0]; 6];
+        let (labels, k) = cluster_clients(&pts, 2);
+        assert_eq!(k, 1);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn single_and_empty_inputs() {
+        assert_eq!(cluster_clients(&[], 2), (vec![], 0));
+        assert_eq!(cluster_clients(&[vec![3.0]], 2), (vec![0], 1));
+    }
+
+    #[test]
+    fn relabel_outliers_makes_fresh_cluster() {
+        let mut labels = vec![0, 1, NOISE, 0, NOISE];
+        let k = relabel_outliers(&mut labels);
+        assert_eq!(k, 3);
+        assert_eq!(labels, vec![0, 1, 2, 0, 2]);
+    }
+
+    #[test]
+    fn relabel_without_noise_keeps_count() {
+        let mut labels = vec![0, 1, 1, 0];
+        assert_eq!(relabel_outliers(&mut labels), 2);
+    }
+}

@@ -1,0 +1,388 @@
+//! Experiment configuration: per-dataset presets mirroring the paper's
+//! Table I / §VI-A3 setup (scaled to the simulator testbed), the two
+//! experiment scenarios of §VI-A4, and JSON load/save for custom runs.
+
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+use crate::data::Partition;
+use crate::faas::FaasConfig;
+use crate::strategy::StrategyKind;
+use crate::util::Json;
+use crate::Result;
+
+/// Experiment scenario (§VI-A4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scenario {
+    /// Unmodified deployment; round time fits every client.
+    Standard,
+    /// Forced straggler percentage (10/30/50/70 in the paper).
+    Straggler(u8),
+}
+
+impl Scenario {
+    pub fn label(&self) -> String {
+        match self {
+            Scenario::Standard => "standard".into(),
+            Scenario::Straggler(p) => format!("straggler{p}"),
+        }
+    }
+
+    pub fn straggler_fraction(&self) -> f64 {
+        match self {
+            Scenario::Standard => 0.0,
+            Scenario::Straggler(p) => *p as f64 / 100.0,
+        }
+    }
+}
+
+impl FromStr for Scenario {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        if s == "standard" {
+            return Ok(Scenario::Standard);
+        }
+        if let Some(p) = s.strip_prefix("straggler") {
+            return Ok(Scenario::Straggler(p.parse()?));
+        }
+        anyhow::bail!("unknown scenario {s:?}; expected standard|straggler<pct>")
+    }
+}
+
+/// Full configuration of one experiment run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Model family / dataset name (must match an artifacts manifest).
+    pub dataset: String,
+    pub strategy: StrategyKind,
+    pub scenario: Scenario,
+    /// Registered clients (the paper: 300 MNIST, 542 Speech, ...).
+    pub n_clients: usize,
+    /// Clients invoked per round (nClientsPerRound).
+    pub clients_per_round: usize,
+    pub rounds: u32,
+    pub seed: u64,
+    /// Evaluate centrally every N rounds (the final round always is).
+    pub eval_every: u32,
+    pub partition: Partition,
+    pub faas: FaasConfig,
+    /// Nominal local-training time of a speed-1.0 client (virtual s).
+    /// The paper's GCF clients train for tens of seconds per round; the
+    /// per-dataset presets encode that magnitude.
+    pub base_train_s: f64,
+    /// Round deadline in the standard scenario: generous, everyone fits.
+    pub round_timeout_standard_s: f64,
+    /// Round deadline in straggler scenarios: tight (§VI-A4 limits round
+    /// time so delayed clients miss it).
+    pub round_timeout_straggler_s: f64,
+    /// Among forced stragglers: fraction that are slow (push late
+    /// updates); the rest crash outright (§VI-A4's two effects).
+    pub straggler_slow_frac: f64,
+    pub artifacts_dir: PathBuf,
+    /// Optional JSON snapshot path for the client-history DB.
+    pub history_path: Option<PathBuf>,
+    /// Print per-round progress lines.
+    pub verbose: bool,
+    /// Extension (paper §VII future work): dynamically adapt the number
+    /// of clients selected each round to the observed EUR — when rounds
+    /// waste invocations on stragglers, the controller over-provisions
+    /// (up to 2x the configured k) so the *effective* update count stays
+    /// near the target; it shrinks back as reliability recovers.
+    pub adaptive_clients: bool,
+    /// Extension (paper §VII future work): "aggregate valuable updates
+    /// and discard the unnecessary ones" — drop stale updates whose L2
+    /// distance from the current global model exceeds
+    /// `stale_norm_clip x` the median distance of this round's fresh
+    /// updates. `None` disables the filter (paper behaviour).
+    pub stale_norm_clip: Option<f64>,
+}
+
+impl ExperimentConfig {
+    /// Per-dataset preset: Table I hyperparameters live in the AOT
+    /// manifest; this sets the deployment shape (§VI-A3) scaled ~1/5 for
+    /// the simulator plus the virtual-time model.
+    pub fn preset(dataset: &str) -> Self {
+        // (n_clients, per_round, rounds, base_train_s)
+        let (n, k, rounds, base) = match dataset {
+            // paper: 300 clients, 200/round, 60 rounds, ~40 s rounds
+            "mnist" => (60, 12, 20, 25.0),
+            // paper: 300 clients, 175/round, 40 rounds
+            "femnist" => (50, 10, 15, 45.0),
+            // paper: 100 clients, 50/round, 25 rounds, ~8.7 min rounds
+            "shakespeare" => (30, 8, 12, 90.0),
+            // paper: 542 clients, 200/round, 35/60 rounds
+            "speech" => (60, 15, 20, 28.0),
+            // e2e driver (not in the paper)
+            "transformer" => (40, 10, 30, 20.0),
+            other => panic!("no preset for dataset {other:?}"),
+        };
+        Self {
+            dataset: dataset.to_string(),
+            strategy: StrategyKind::Fedlesscan,
+            scenario: Scenario::Standard,
+            n_clients: n,
+            clients_per_round: k,
+            rounds,
+            seed: 42,
+            eval_every: 1,
+            partition: Partition::LabelShard,
+            faas: FaasConfig::default(),
+            base_train_s: base,
+            round_timeout_standard_s: base * 3.0 + 20.0,
+            round_timeout_straggler_s: base * 2.0 + 10.0,
+            straggler_slow_frac: 0.5,
+            artifacts_dir: PathBuf::from("artifacts"),
+            history_path: None,
+            verbose: false,
+            adaptive_clients: false,
+            stale_norm_clip: None,
+        }
+    }
+
+    /// All datasets with presets (the paper's four + the e2e driver).
+    pub fn preset_datasets() -> [&'static str; 4] {
+        ["mnist", "femnist", "shakespeare", "speech"]
+    }
+
+    /// The active round deadline for the configured scenario.
+    pub fn round_timeout_s(&self) -> f64 {
+        match self.scenario {
+            Scenario::Standard => self.round_timeout_standard_s,
+            Scenario::Straggler(_) => self.round_timeout_straggler_s,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n_clients > 0, "n_clients must be positive");
+        anyhow::ensure!(
+            self.clients_per_round > 0 && self.clients_per_round <= self.n_clients,
+            "clients_per_round must be in [1, n_clients]"
+        );
+        anyhow::ensure!(self.rounds > 0, "rounds must be positive");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.straggler_slow_frac),
+            "straggler_slow_frac must be a fraction"
+        );
+        anyhow::ensure!(self.base_train_s > 0.0, "base_train_s must be positive");
+        Ok(())
+    }
+
+    /// Serialize to JSON (the config file format; the FaaS platform block
+    /// is included in full so experiments are self-describing).
+    pub fn to_json(&self) -> Json {
+        let f = &self.faas;
+        let partition = match self.partition {
+            Partition::LabelShard => Json::str("label_shard"),
+            Partition::Iid => Json::str("iid"),
+            Partition::Dirichlet(a) => Json::obj(vec![("dirichlet", Json::num(a))]),
+        };
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("strategy", Json::str(self.strategy.as_str())),
+            ("scenario", Json::str(self.scenario.label())),
+            ("n_clients", Json::num(self.n_clients as f64)),
+            ("clients_per_round", Json::num(self.clients_per_round as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("partition", partition),
+            (
+                "faas",
+                Json::obj(vec![
+                    ("cold_start_median_s", Json::num(f.cold_start_median_s)),
+                    ("cold_start_sigma", Json::num(f.cold_start_sigma)),
+                    ("warm_overhead_s", Json::num(f.warm_overhead_s)),
+                    ("idle_timeout_s", Json::num(f.idle_timeout_s)),
+                    ("client_speed_sigma", Json::num(f.client_speed_sigma)),
+                    ("invocation_jitter_sigma", Json::num(f.invocation_jitter_sigma)),
+                    ("transient_failure_rate", Json::num(f.transient_failure_rate)),
+                    ("memory_mb", Json::num(f.memory_mb as f64)),
+                    ("network_mbps", Json::num(f.network_mbps)),
+                    ("function_timeout_s", Json::num(f.function_timeout_s)),
+                ]),
+            ),
+            ("base_train_s", Json::num(self.base_train_s)),
+            ("round_timeout_standard_s", Json::num(self.round_timeout_standard_s)),
+            ("round_timeout_straggler_s", Json::num(self.round_timeout_straggler_s)),
+            ("straggler_slow_frac", Json::num(self.straggler_slow_frac)),
+            (
+                "artifacts_dir",
+                Json::str(self.artifacts_dir.display().to_string()),
+            ),
+            (
+                "history_path",
+                self.history_path
+                    .as_ref()
+                    .map_or(Json::Null, |p| Json::str(p.display().to_string())),
+            ),
+            ("verbose", Json::Bool(self.verbose)),
+            ("adaptive_clients", Json::Bool(self.adaptive_clients)),
+            (
+                "stale_norm_clip",
+                self.stale_norm_clip.map_or(Json::Null, Json::Num),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        // Start from the dataset preset so configs may be sparse.
+        let dataset = j.get("dataset")?.as_str()?.to_string();
+        let mut cfg = ExperimentConfig::preset(&dataset);
+        if let Some(v) = j.get_opt("strategy") {
+            cfg.strategy = StrategyKind::from_str(v.as_str()?)?;
+        }
+        if let Some(v) = j.get_opt("scenario") {
+            cfg.scenario = Scenario::from_str(v.as_str()?)?;
+        }
+        if let Some(v) = j.get_opt("n_clients") {
+            cfg.n_clients = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("clients_per_round") {
+            cfg.clients_per_round = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("rounds") {
+            cfg.rounds = v.as_u64()? as u32;
+        }
+        if let Some(v) = j.get_opt("seed") {
+            cfg.seed = v.as_u64()?;
+        }
+        if let Some(v) = j.get_opt("eval_every") {
+            cfg.eval_every = (v.as_u64()? as u32).max(1);
+        }
+        if let Some(v) = j.get_opt("partition") {
+            cfg.partition = match v {
+                Json::Str(s) if s == "label_shard" => Partition::LabelShard,
+                Json::Str(s) if s == "iid" => Partition::Iid,
+                Json::Obj(_) => Partition::Dirichlet(v.get("dirichlet")?.as_f64()?),
+                other => anyhow::bail!("bad partition {other:?}"),
+            };
+        }
+        if let Some(v) = j.get_opt("faas") {
+            let g = |k: &str, d: f64| -> Result<f64> {
+                Ok(v.get_opt(k).map(|x| x.as_f64()).transpose()?.unwrap_or(d))
+            };
+            let dflt = FaasConfig::default();
+            cfg.faas = FaasConfig {
+                cold_start_median_s: g("cold_start_median_s", dflt.cold_start_median_s)?,
+                cold_start_sigma: g("cold_start_sigma", dflt.cold_start_sigma)?,
+                warm_overhead_s: g("warm_overhead_s", dflt.warm_overhead_s)?,
+                idle_timeout_s: g("idle_timeout_s", dflt.idle_timeout_s)?,
+                client_speed_sigma: g("client_speed_sigma", dflt.client_speed_sigma)?,
+                invocation_jitter_sigma: g(
+                    "invocation_jitter_sigma",
+                    dflt.invocation_jitter_sigma,
+                )?,
+                transient_failure_rate: g(
+                    "transient_failure_rate",
+                    dflt.transient_failure_rate,
+                )?,
+                memory_mb: g("memory_mb", dflt.memory_mb as f64)? as u32,
+                network_mbps: g("network_mbps", dflt.network_mbps)?,
+                function_timeout_s: g("function_timeout_s", dflt.function_timeout_s)?,
+            };
+        }
+        if let Some(v) = j.get_opt("base_train_s") {
+            cfg.base_train_s = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("round_timeout_standard_s") {
+            cfg.round_timeout_standard_s = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("round_timeout_straggler_s") {
+            cfg.round_timeout_straggler_s = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("straggler_slow_frac") {
+            cfg.straggler_slow_frac = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = j.get_opt("history_path") {
+            if !v.is_null() {
+                cfg.history_path = Some(PathBuf::from(v.as_str()?));
+            }
+        }
+        if let Some(v) = j.get_opt("verbose") {
+            cfg.verbose = v.as_bool()?;
+        }
+        if let Some(v) = j.get_opt("adaptive_clients") {
+            cfg.adaptive_clients = v.as_bool()?;
+        }
+        if let Some(v) = j.get_opt("stale_norm_clip") {
+            if !v.is_null() {
+                cfg.stale_norm_clip = Some(v.as_f64()?);
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for d in ExperimentConfig::preset_datasets() {
+            ExperimentConfig::preset(d).validate().unwrap();
+        }
+        ExperimentConfig::preset("transformer").validate().unwrap();
+    }
+
+    #[test]
+    fn scenario_labels() {
+        assert_eq!(Scenario::Standard.label(), "standard");
+        assert_eq!(Scenario::Straggler(30).label(), "straggler30");
+        assert_eq!(Scenario::Straggler(30).straggler_fraction(), 0.3);
+    }
+
+    #[test]
+    fn straggler_timeout_is_tighter() {
+        let mut cfg = ExperimentConfig::preset("mnist");
+        let std_t = cfg.round_timeout_s();
+        cfg.scenario = Scenario::Straggler(30);
+        assert!(cfg.round_timeout_s() < std_t);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::preset("speech");
+        cfg.scenario = Scenario::Straggler(30);
+        cfg.partition = Partition::Dirichlet(0.3);
+        cfg.rounds = 7;
+        let p = std::env::temp_dir().join(format!("fedless-cfg-{}.json", std::process::id()));
+        cfg.save(&p).unwrap();
+        let cfg2 = ExperimentConfig::load(&p).unwrap();
+        assert_eq!(cfg.dataset, cfg2.dataset);
+        assert_eq!(cfg.rounds, cfg2.rounds);
+        assert_eq!(cfg.scenario, cfg2.scenario);
+        assert_eq!(cfg.partition, cfg2.partition);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn scenario_from_str() {
+        use std::str::FromStr;
+        assert_eq!(Scenario::from_str("standard").unwrap(), Scenario::Standard);
+        assert_eq!(
+            Scenario::from_str("straggler30").unwrap(),
+            Scenario::Straggler(30)
+        );
+        assert!(Scenario::from_str("nope").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_preset_panics() {
+        ExperimentConfig::preset("imagenet");
+    }
+}

@@ -1,0 +1,144 @@
+//! Google Cloud Functions cost model (the paper's §VI-A5 / Table IV
+//! methodology, using the published 2022 unit prices [85]).
+//!
+//! GCF bills three meters per invocation:
+//!   * invocations:   $0.40 per million,
+//!   * memory time:   $0.0000025 per GB-second,
+//!   * compute time:  $0.0000100 per GHz-second,
+//! with duration rounded up to the 100 ms granularity. The CPU clock
+//! allocated to a function scales with its memory tier; the paper's
+//! clients use 2048 MB (-> 2.4 GHz on the GCF tier table).
+//!
+//! Straggler accounting follows §VI-C: a straggler (slow or crashed) is
+//! billed for the **entire round duration** — the worst case the authors
+//! assume, since its function instance keeps computing until timeout.
+
+/// 2022 GCF unit prices (no free tier — the paper's experiments are far
+/// beyond it and include it in neither direction).
+#[derive(Debug, Clone, Copy)]
+pub struct GcfPricing {
+    pub per_invocation: f64,
+    pub per_gb_second: f64,
+    pub per_ghz_second: f64,
+    /// Billing granularity in seconds (GCF rounds up to 100 ms).
+    pub granularity_s: f64,
+}
+
+impl Default for GcfPricing {
+    fn default() -> Self {
+        Self {
+            per_invocation: 0.40 / 1e6,
+            per_gb_second: 0.000_002_5,
+            per_ghz_second: 0.000_010_0,
+            granularity_s: 0.1,
+        }
+    }
+}
+
+/// Memory tier -> allocated CPU clock (GHz), per the GCF pricing table.
+pub fn ghz_for_memory_mb(memory_mb: u32) -> f64 {
+    match memory_mb {
+        0..=128 => 0.2,
+        129..=256 => 0.4,
+        257..=512 => 0.8,
+        513..=1024 => 1.4,
+        1025..=2048 => 2.4,
+        _ => 4.8,
+    }
+}
+
+impl GcfPricing {
+    /// Cost of one invocation of `duration_s` at `memory_mb`.
+    pub fn invocation_cost(&self, duration_s: f64, memory_mb: u32) -> f64 {
+        assert!(duration_s >= 0.0, "negative duration");
+        let billed = (duration_s / self.granularity_s).ceil() * self.granularity_s;
+        let gb = memory_mb as f64 / 1024.0;
+        self.per_invocation
+            + billed * gb * self.per_gb_second
+            + billed * ghz_for_memory_mb(memory_mb) * self.per_ghz_second
+    }
+}
+
+/// Running cost accumulator for one experiment.
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    pub pricing: GcfPricing,
+    pub total: f64,
+    pub invocations: u64,
+    pub billed_seconds: f64,
+}
+
+impl CostLedger {
+    pub fn new(pricing: GcfPricing) -> Self {
+        Self {
+            pricing,
+            total: 0.0,
+            invocations: 0,
+            billed_seconds: 0.0,
+        }
+    }
+
+    /// Bill one function invocation; returns its cost.
+    pub fn bill(&mut self, duration_s: f64, memory_mb: u32) -> f64 {
+        let c = self.pricing.invocation_cost(duration_s, memory_mb);
+        self.total += c;
+        self.invocations += 1;
+        self.billed_seconds += duration_s;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_duration_still_bills_invocation() {
+        let p = GcfPricing::default();
+        let c = p.invocation_cost(0.0, 2048);
+        assert!((c - p.per_invocation).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_monotone_in_duration() {
+        let p = GcfPricing::default();
+        let c1 = p.invocation_cost(1.0, 2048);
+        let c2 = p.invocation_cost(2.0, 2048);
+        let c60 = p.invocation_cost(60.0, 2048);
+        assert!(c1 < c2 && c2 < c60);
+    }
+
+    #[test]
+    fn granularity_rounds_up() {
+        let p = GcfPricing::default();
+        // 10 ms bills like 100 ms
+        assert_eq!(p.invocation_cost(0.01, 1024), p.invocation_cost(0.1, 1024));
+        assert!(p.invocation_cost(0.11, 1024) > p.invocation_cost(0.1, 1024));
+    }
+
+    #[test]
+    fn memory_tier_scales_clock() {
+        assert_eq!(ghz_for_memory_mb(2048), 2.4);
+        assert_eq!(ghz_for_memory_mb(128), 0.2);
+        assert!(ghz_for_memory_mb(4096) > ghz_for_memory_mb(2048));
+    }
+
+    #[test]
+    fn paper_magnitude_sanity() {
+        // 2048 MB client running 60 s: a few millicents — matches the
+        // paper's per-experiment dollars at hundreds of invocations.
+        let p = GcfPricing::default();
+        let c = p.invocation_cost(60.0, 2048);
+        assert!(c > 0.001 && c < 0.01, "cost {c}");
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = CostLedger::new(GcfPricing::default());
+        let a = l.bill(10.0, 2048);
+        let b = l.bill(20.0, 2048);
+        assert_eq!(l.invocations, 2);
+        assert!((l.total - (a + b)).abs() < 1e-12);
+        assert!((l.billed_seconds - 30.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,338 @@
+//! Simulated 2nd-generation Google Cloud Functions platform (substrate).
+//!
+//! The paper's straggler phenomenology (§II, §III-C) comes from four FaaS
+//! properties, all modelled here with a seeded RNG over a **virtual
+//! clock** (deterministic, repeatable experiments):
+//!
+//! * **cold starts** — first invocation, or invocation after the warm
+//!   instance was scaled to zero, pays a log-normal startup latency
+//!   (published GCF measurements for TF-sized client containers sit in
+//!   the ~2-10 s band);
+//! * **performance variation** — each client function lands on an
+//!   arbitrary provisioned VM ([29]): a static per-client speed factor
+//!   plus per-invocation log-normal jitter multiply the compute time;
+//! * **transient failures** — GCF's 99.95% SLO means requests get dropped
+//!   (§III-C); a Bernoulli failure makes the invocation crash;
+//! * **scale-to-zero** — warm instances idle out after
+//!   `idle_timeout_s`, re-exposing cold starts mid-experiment.
+//!
+//! The *actual* training compute happens in the PJRT runtime; the
+//! simulator turns a nominal compute time into a virtual invocation
+//! timeline (start, finish, billed duration) and a success/crash/slow
+//! outcome relative to the round deadline. Straggler-scenario forcing
+//! (§VI-A4) is layered on top by the coordinator via [`Forced`].
+
+use std::collections::HashMap;
+
+use crate::util::Rng;
+use crate::ClientId;
+
+/// Platform model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FaasConfig {
+    /// Median cold-start latency (s).
+    pub cold_start_median_s: f64,
+    /// Log-normal sigma of the cold-start latency.
+    pub cold_start_sigma: f64,
+    /// Fixed invocation overhead for warm instances (s).
+    pub warm_overhead_s: f64,
+    /// Scale-to-zero idle timeout (s).
+    pub idle_timeout_s: f64,
+    /// Sigma of the static per-client VM speed factor (log-normal, median 1).
+    pub client_speed_sigma: f64,
+    /// Sigma of the per-invocation jitter (log-normal, median 1).
+    pub invocation_jitter_sigma: f64,
+    /// Probability an invocation is dropped/crashed by the platform.
+    pub transient_failure_rate: f64,
+    /// Function memory limit (MB) — drives the cost model tier.
+    pub memory_mb: u32,
+    /// Model download/upload bandwidth (MB/s) between function and the
+    /// parameter store (nginx/DB in the paper's deployment).
+    pub network_mbps: f64,
+    /// Hard function timeout (s) — 540 s for the paper's clients.
+    pub function_timeout_s: f64,
+}
+
+impl Default for FaasConfig {
+    fn default() -> Self {
+        Self {
+            cold_start_median_s: 4.0,
+            cold_start_sigma: 0.5,
+            warm_overhead_s: 0.15,
+            idle_timeout_s: 300.0,
+            client_speed_sigma: 0.25,
+            invocation_jitter_sigma: 0.10,
+            transient_failure_rate: 0.02,
+            memory_mb: 2048,
+            network_mbps: 40.0,
+            function_timeout_s: 540.0,
+        }
+    }
+}
+
+/// Behaviour forced by the straggler-% scenario (§VI-A4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Forced {
+    /// Client completes but its update lands after the round deadline.
+    Slow,
+    /// Client crashes at round start (still billed the round, §VI-C).
+    Crash,
+}
+
+/// How an invocation ended, relative to the round deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Finished before the deadline: update aggregated this round.
+    OnTime,
+    /// Finished after the deadline but before the function timeout: the
+    /// update arrives late (staleness buffer candidate).
+    Late,
+    /// Crashed (platform drop, forced crash, or function timeout).
+    Crash,
+}
+
+/// Simulated invocation record (virtual-clock seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Invocation {
+    pub client: ClientId,
+    pub started_at: f64,
+    /// Virtual completion time (crash => time the instance died).
+    pub finished_at: f64,
+    /// Seconds billed by the provider for this invocation.
+    pub billed_s: f64,
+    /// Pure local-training duration the *client* would report (§V-B) —
+    /// excludes the platform cold start, includes model transfer.
+    pub training_time_s: f64,
+    pub cold: bool,
+    pub outcome: Outcome,
+}
+
+struct WarmInstance {
+    last_used_at: f64,
+}
+
+/// The simulated platform. One instance pool per experiment.
+pub struct SimulatedGcf {
+    pub cfg: FaasConfig,
+    rng: Rng,
+    warm: HashMap<ClientId, WarmInstance>,
+    speed: HashMap<ClientId, f64>,
+}
+
+impl SimulatedGcf {
+    pub fn new(cfg: FaasConfig, seed: u64) -> Self {
+        Self {
+            cfg,
+            rng: Rng::seed_from_u64(seed ^ 0xfaa5_0001),
+            warm: HashMap::new(),
+            speed: HashMap::new(),
+        }
+    }
+
+    /// Static per-client VM speed factor (median 1.0, log-normal).
+    pub fn client_speed(&mut self, client: ClientId) -> f64 {
+        let sigma = self.cfg.client_speed_sigma.max(1e-9);
+        let rng = &mut self.rng;
+        *self
+            .speed
+            .entry(client)
+            .or_insert_with(|| rng.lognormal(0.0, sigma))
+    }
+
+    /// Model payload transfer time (download global + upload update).
+    fn transfer_s(&self, payload_mb: f64) -> f64 {
+        2.0 * payload_mb / self.cfg.network_mbps.max(1e-9)
+    }
+
+    /// Simulate one invocation issued at virtual time `now_s`.
+    ///
+    /// `compute_s` is the nominal local-training compute time (derived
+    /// from the real PJRT execution), `payload_mb` the model transfer
+    /// size, `deadline_s` the round deadline (absolute virtual time), and
+    /// `forced` the scenario override.
+    pub fn invoke(
+        &mut self,
+        client: ClientId,
+        now_s: f64,
+        compute_s: f64,
+        payload_mb: f64,
+        deadline_s: f64,
+        forced: Option<Forced>,
+    ) -> Invocation {
+        // cold or warm?
+        let cold = match self.warm.get(&client) {
+            Some(w) => now_s - w.last_used_at > self.cfg.idle_timeout_s,
+            None => true,
+        };
+        let startup = if cold {
+            self.rng
+                .lognormal(self.cfg.cold_start_median_s.ln(), self.cfg.cold_start_sigma.max(1e-9))
+        } else {
+            self.cfg.warm_overhead_s
+        };
+
+        if forced == Some(Forced::Crash)
+            || self.rng.bernoulli(self.cfg.transient_failure_rate)
+        {
+            // §VI-C worst case: a crashed straggler is billed for the
+            // whole round.
+            let end = deadline_s.max(now_s);
+            self.warm.remove(&client);
+            return Invocation {
+                client,
+                started_at: now_s,
+                finished_at: end,
+                billed_s: end - now_s,
+                training_time_s: 0.0,
+                cold,
+                outcome: Outcome::Crash,
+            };
+        }
+
+        let speed = self.client_speed(client);
+        let jitter = self
+            .rng
+            .lognormal(0.0, self.cfg.invocation_jitter_sigma.max(1e-9));
+        let mut train_s = compute_s * speed * jitter + self.transfer_s(payload_mb);
+        if forced == Some(Forced::Slow) {
+            // Scenario forcing (§VI-A4): delays (cold start, bandwidth,
+            // ...) push completion past the round deadline.
+            let past_deadline = (deadline_s - now_s - startup).max(0.0) * 1.25 + 1.0;
+            train_s = train_s.max(past_deadline);
+        }
+        let total = startup + train_s;
+
+        if total > self.cfg.function_timeout_s {
+            // platform kills the function at its hard timeout
+            let end = now_s + self.cfg.function_timeout_s;
+            self.warm.remove(&client);
+            return Invocation {
+                client,
+                started_at: now_s,
+                finished_at: end,
+                billed_s: self.cfg.function_timeout_s,
+                training_time_s: 0.0,
+                cold,
+                outcome: Outcome::Crash,
+            };
+        }
+
+        let finished_at = now_s + total;
+        self.warm
+            .insert(client, WarmInstance { last_used_at: finished_at });
+        Invocation {
+            client,
+            started_at: now_s,
+            finished_at,
+            billed_s: total,
+            training_time_s: train_s,
+            cold,
+            outcome: if finished_at <= deadline_s {
+                Outcome::OnTime
+            } else {
+                Outcome::Late
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_no_noise() -> FaasConfig {
+        FaasConfig {
+            transient_failure_rate: 0.0,
+            client_speed_sigma: 1e-9,
+            invocation_jitter_sigma: 1e-9,
+            cold_start_sigma: 1e-9,
+            ..FaasConfig::default()
+        }
+    }
+
+    #[test]
+    fn first_invocation_is_cold_then_warm() {
+        let mut gcf = SimulatedGcf::new(cfg_no_noise(), 1);
+        let a = gcf.invoke(0, 0.0, 10.0, 1.0, 1e9, None);
+        assert!(a.cold);
+        let b = gcf.invoke(0, a.finished_at + 1.0, 10.0, 1.0, 1e9, None);
+        assert!(!b.cold);
+        // warm start is much cheaper
+        assert!(b.billed_s < a.billed_s);
+    }
+
+    #[test]
+    fn scale_to_zero_reexposes_cold_start() {
+        let mut gcf = SimulatedGcf::new(cfg_no_noise(), 1);
+        let a = gcf.invoke(0, 0.0, 5.0, 1.0, 1e9, None);
+        let b = gcf.invoke(0, a.finished_at + 1000.0, 5.0, 1.0, 1e9, None);
+        assert!(b.cold, "idle timeout must re-cold the instance");
+    }
+
+    #[test]
+    fn forced_crash_bills_round() {
+        let mut gcf = SimulatedGcf::new(cfg_no_noise(), 2);
+        let inv = gcf.invoke(3, 100.0, 5.0, 1.0, 160.0, Some(Forced::Crash));
+        assert_eq!(inv.outcome, Outcome::Crash);
+        assert!((inv.billed_s - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn forced_slow_finishes_after_deadline() {
+        let mut gcf = SimulatedGcf::new(cfg_no_noise(), 3);
+        let inv = gcf.invoke(4, 0.0, 1.0, 1.0, 30.0, Some(Forced::Slow));
+        assert_eq!(inv.outcome, Outcome::Late);
+        assert!(inv.finished_at > 30.0);
+        assert!(inv.finished_at < 540.0, "slow must not hit the hard timeout");
+    }
+
+    #[test]
+    fn fast_client_is_on_time() {
+        let mut gcf = SimulatedGcf::new(cfg_no_noise(), 4);
+        let inv = gcf.invoke(5, 0.0, 5.0, 1.0, 60.0, None);
+        assert_eq!(inv.outcome, Outcome::OnTime);
+        assert!(inv.training_time_s > 5.0); // includes transfer
+    }
+
+    #[test]
+    fn function_timeout_crashes() {
+        let mut gcf = SimulatedGcf::new(cfg_no_noise(), 5);
+        let inv = gcf.invoke(6, 0.0, 10_000.0, 1.0, 1e9, None);
+        assert_eq!(inv.outcome, Outcome::Crash);
+        assert!((inv.billed_s - 540.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn client_speed_is_stable_per_client() {
+        let mut gcf = SimulatedGcf::new(FaasConfig::default(), 6);
+        let s1 = gcf.client_speed(1);
+        let s2 = gcf.client_speed(1);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut gcf = SimulatedGcf::new(FaasConfig::default(), 42);
+            (0..20)
+                .map(|c| gcf.invoke(c, 0.0, 10.0, 1.0, 60.0, None).finished_at)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn transient_failures_occur_at_configured_rate() {
+        let cfg = FaasConfig {
+            transient_failure_rate: 0.3,
+            ..cfg_no_noise()
+        };
+        let mut gcf = SimulatedGcf::new(cfg, 7);
+        let crashes = (0..1000)
+            .filter(|&c| {
+                gcf.invoke(c, 0.0, 1.0, 0.1, 1e9, None).outcome == Outcome::Crash
+            })
+            .count();
+        assert!((200..400).contains(&crashes), "crashes={crashes}");
+    }
+}

@@ -1,0 +1,42 @@
+//! # fedless — FedLesScan reproduction
+//!
+//! A serverless federated-learning system reproducing *"FedLesScan:
+//! Mitigating Stragglers in Serverless Federated Learning"* (Elzohairy et
+//! al., IEEE BigData 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the FedLess controller: client selection
+//!   strategies (FedAvg, FedProx, FedLesScan, SAFA-lite), the simulated
+//!   FaaS platform, parameter server, client-history database, cost
+//!   model and metrics.
+//! * **L2 (python/compile, build time)** — JAX forward/backward local
+//!   training rounds for the paper's four model families plus a
+//!   char-transformer, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels, build time)** — Pallas kernels for the
+//!   dense-layer matmuls and the staleness-weighted aggregation (Eq. 3).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads
+//! the AOT artifacts through the PJRT C API (`xla` crate) and the whole
+//! federated training loop is native Rust.
+//!
+//! Entry points: [`coordinator::Controller`] drives one experiment;
+//! [`repro`] regenerates every table and figure of the paper's §VI.
+
+pub mod clientdb;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod faas;
+pub mod metrics;
+pub mod paramsvr;
+pub mod repro;
+pub mod runtime;
+pub mod strategy;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Stable client identifier: index into the experiment's client registry.
+pub type ClientId = usize;

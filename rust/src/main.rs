@@ -1,0 +1,202 @@
+//! fedless — CLI launcher for the FedLesScan reproduction.
+//!
+//! ```text
+//! fedless train   [--dataset D] [--strategy S] [--stragglers P] [...]
+//! fedless repro   <fig1|tables|fig3|ablations|all> [--profile quick|full] [...]
+//! fedless inspect
+//! ```
+//!
+//! The binary is self-contained once `make artifacts` has produced the
+//! AOT HLO artifacts; Python is never invoked at runtime.
+
+use std::path::PathBuf;
+use std::str::FromStr;
+
+use fedless::config::{ExperimentConfig, Scenario};
+use fedless::coordinator::Controller;
+use fedless::repro::{self, Options, Profile};
+use fedless::runtime::{ArtifactIndex, Engine, Manifest, ModelRuntime};
+use fedless::strategy::StrategyKind;
+use fedless::util::cli;
+use fedless::Result;
+
+const USAGE: &str = "\
+fedless — serverless federated learning with straggler mitigation (FedLesScan)
+
+USAGE:
+  fedless train [--dataset D] [--strategy fedavg|fedprox|fedlesscan|safalite]
+                [--stragglers PCT] [--rounds N] [--clients N] [--per-round K]
+                [--seed S] [--config FILE.json] [--out DIR] [--verbose]
+  fedless repro <fig1|tables|fig3|ablations|all>
+                [--datasets a,b,c] [--profile quick|full] [--out DIR]
+                [--seed S] [--repeats N] [--verbose]
+  fedless inspect
+
+GLOBAL:
+  --artifacts DIR   artifacts directory (default: artifacts)
+";
+
+fn main() -> Result<()> {
+    let args = cli::parse(std::env::args().skip(1), &["verbose", "help"])?;
+    if args.get_bool("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    match args.positional[0].as_str() {
+        "train" => cmd_train(&args, artifacts),
+        "repro" => cmd_repro(&args, artifacts),
+        "inspect" => cmd_inspect(artifacts),
+        other => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown command {other:?}");
+        }
+    }
+}
+
+fn cmd_train(args: &cli::Args, artifacts: PathBuf) -> Result<()> {
+    let dataset = args.get_str("dataset", "mnist");
+    let mut cfg = match args.get("config") {
+        Some(p) => ExperimentConfig::load(&PathBuf::from(p))?,
+        None => ExperimentConfig::preset(&dataset),
+    };
+    cfg.artifacts_dir = artifacts.clone();
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = StrategyKind::from_str(s)?;
+    }
+    let stragglers: u8 = args.get_parse("stragglers", 0)?;
+    cfg.scenario = if stragglers == 0 {
+        Scenario::Standard
+    } else {
+        Scenario::Straggler(stragglers)
+    };
+    if let Some(r) = args.get_parse_opt::<u32>("rounds")? {
+        cfg.rounds = r;
+    }
+    if let Some(n) = args.get_parse_opt::<usize>("clients")? {
+        cfg.n_clients = n;
+    }
+    if let Some(k) = args.get_parse_opt::<usize>("per-round")? {
+        cfg.clients_per_round = k;
+    }
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.verbose = args.get_bool("verbose");
+
+    let engine = Engine::cpu()?;
+    eprintln!("[fedless] PJRT platform: {}", engine.platform_name());
+    let runtime = ModelRuntime::load(&engine, &artifacts, &cfg.dataset)?;
+    eprintln!(
+        "[fedless] {}: P={} (compile {:.2?})",
+        runtime.manifest.name, runtime.manifest.param_count, runtime.compile_time
+    );
+    let n_clients = cfg.n_clients;
+    let mut ctl = Controller::new(cfg, &runtime)?;
+    let result = ctl.run()?;
+    println!(
+        "\n{} / {} / {}: final acc {:.3}, mean EUR {:.3}, time {:.1} min, cost ${:.4}, bias {}",
+        result.dataset,
+        result.strategy,
+        result.scenario,
+        result.final_accuracy,
+        result.mean_eur(),
+        result.total_time_s / 60.0,
+        result.total_cost,
+        result.bias(n_clients),
+    );
+    if let Some(out) = args.get("out") {
+        let out = PathBuf::from(out);
+        std::fs::create_dir_all(&out)?;
+        let base = format!("{}_{}_{}", result.dataset, result.strategy, result.scenario);
+        result.write_timeline_csv(&out.join(format!("{base}.csv")))?;
+        result.write_json(&out.join(format!("{base}.json")))?;
+        println!("wrote {}/{base}.{{csv,json}}", out.display());
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &cli::Args, artifacts: PathBuf) -> Result<()> {
+    let target = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let default_datasets: Vec<String> = match target {
+        "tables" | "all" => ExperimentConfig::preset_datasets()
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        _ => vec!["speech".to_string()],
+    };
+    let opts = Options {
+        artifacts_dir: artifacts,
+        out_dir: PathBuf::from(args.get_str("out", "results")),
+        datasets: args
+            .get("datasets")
+            .map(|d| d.split(',').map(str::to_string).collect())
+            .unwrap_or(default_datasets),
+        profile: Profile::from_str(&args.get_str("profile", "quick"))?,
+        seed: args.get_parse("seed", 42)?,
+        repeats: args.get_parse("repeats", 1)?,
+        verbose: args.get_bool("verbose"),
+    };
+    match target {
+        "fig1" => repro::fig1(&opts)?,
+        "tables" => {
+            let cells = repro::run_matrix(&opts)?;
+            repro::table2(&cells);
+            repro::table3(&cells);
+            repro::table4(&cells);
+        }
+        "fig3" => repro::fig3(&opts)?,
+        "ablations" => repro::ablations(&opts)?,
+        "all" => {
+            repro::fig1(&opts)?;
+            let cells = repro::run_matrix(&opts)?;
+            repro::table2(&cells);
+            repro::table3(&cells);
+            repro::table4(&cells);
+            repro::fig3(&opts)?;
+            repro::ablations(&opts)?;
+        }
+        other => anyhow::bail!("unknown repro target {other:?} (fig1|tables|fig3|ablations|all)"),
+    }
+    Ok(())
+}
+
+fn cmd_inspect(artifacts: PathBuf) -> Result<()> {
+    match ArtifactIndex::load(&artifacts) {
+        Ok(idx) => {
+            println!("artifacts @ {} (scale: {})", artifacts.display(), idx.scale);
+            for m in &idx.models {
+                let mf = Manifest::load(&artifacts, m)?;
+                println!(
+                    "  {:<14} P={:<9} shard={} batch={} epochs={} opt={} lr={} k_max={}",
+                    mf.name,
+                    mf.param_count,
+                    mf.shard_size,
+                    mf.batch_size,
+                    mf.local_epochs,
+                    mf.optimizer,
+                    mf.lr,
+                    mf.k_max
+                );
+            }
+        }
+        Err(e) => println!("no artifacts found ({e}); run `make artifacts`"),
+    }
+    println!("\nexperiment presets (deployment shape, §VI-A3 scaled):");
+    for d in ExperimentConfig::preset_datasets() {
+        let c = ExperimentConfig::preset(d);
+        println!(
+            "  {:<14} clients={:<4} per_round={:<4} rounds={:<4} base_train={}s timeouts={}s/{}s",
+            d,
+            c.n_clients,
+            c.clients_per_round,
+            c.rounds,
+            c.base_train_s,
+            c.round_timeout_standard_s,
+            c.round_timeout_straggler_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,265 @@
+//! Experiment metrics (§VI-A5): accuracy, Effective Update Ratio, bias,
+//! durations, cost — recorded per round and summarized per experiment,
+//! with CSV/JSON writers for the table/figure regeneration harness.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::Json;
+use crate::{ClientId, Result};
+
+/// Per-round record. Times are virtual-clock seconds.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u32,
+    pub selected: Vec<ClientId>,
+    /// On-time successes this round.
+    pub successes: usize,
+    /// Invoked but missed (slow or crashed).
+    pub failures: usize,
+    /// Stale updates folded into this round's aggregation (FedLesScan).
+    pub stale_applied: usize,
+    /// Round duration: slowest on-time client or the round timeout.
+    pub duration_s: f64,
+    /// Central accuracy after this round's aggregation (if evaluated).
+    pub accuracy: Option<f32>,
+    pub eval_loss: Option<f32>,
+    /// Mean client training loss over on-time updates.
+    pub train_loss: Option<f32>,
+    /// Cost incurred this round ($).
+    pub cost: f64,
+    /// Effective Update Ratio of this round (successes / selected).
+    pub eur: f64,
+}
+
+impl RoundRecord {
+    pub fn compute_eur(successes: usize, selected: usize) -> f64 {
+        if selected == 0 {
+            return 1.0;
+        }
+        successes as f64 / selected as f64
+    }
+}
+
+/// Full experiment result: the §VI metrics plus the raw timeline.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    /// Identification
+    pub dataset: String,
+    pub strategy: String,
+    pub scenario: String,
+    pub seed: u64,
+    /// Timeline
+    pub rounds: Vec<RoundRecord>,
+    /// client -> number of invocations across the experiment (Fig. 3c).
+    pub invocations: HashMap<ClientId, u32>,
+    /// Totals
+    pub total_time_s: f64,
+    pub total_cost: f64,
+    pub final_accuracy: f32,
+}
+
+impl ExperimentResult {
+    /// Mean EUR across rounds (Table II columns).
+    pub fn mean_eur(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 1.0;
+        }
+        self.rounds.iter().map(|r| r.eur).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    /// Bias (§VI-A5, from SAFA [26]): difference between the most- and
+    /// least-invoked client's invocation counts, over all registered
+    /// clients (clients never invoked count as 0).
+    pub fn bias(&self, n_clients: usize) -> u32 {
+        let max = self.invocations.values().copied().max().unwrap_or(0);
+        let min = if self.invocations.len() < n_clients {
+            0
+        } else {
+            self.invocations.values().copied().min().unwrap_or(0)
+        };
+        max - min
+    }
+
+    /// First round at which accuracy crossed `target`, if ever (Fig. 3a
+    /// convergence-speed comparisons).
+    pub fn rounds_to_accuracy(&self, target: f32) -> Option<u32> {
+        self.rounds
+            .iter()
+            .find(|r| r.accuracy.map_or(false, |a| a >= target))
+            .map(|r| r.round)
+    }
+
+    /// Invocation count distribution (the Fig. 3c violin input).
+    pub fn invocation_distribution(&self, n_clients: usize) -> Vec<u32> {
+        (0..n_clients)
+            .map(|c| self.invocations.get(&c).copied().unwrap_or(0))
+            .collect()
+    }
+
+    /// Write the per-round timeline as CSV (Fig. 3a/3b series).
+    pub fn write_timeline_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::from(
+            "round,selected,successes,failures,stale_applied,duration_s,accuracy,eval_loss,train_loss,cost,eur\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4}\n",
+                r.round,
+                r.selected.len(),
+                r.successes,
+                r.failures,
+                r.stale_applied,
+                r.duration_s,
+                r.accuracy.map_or(String::new(), |v| format!("{v:.4}")),
+                r.eval_loss.map_or(String::new(), |v| format!("{v:.4}")),
+                r.train_loss.map_or(String::new(), |v| format!("{v:.4}")),
+                r.cost,
+                r.eur,
+            ));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Serialize the full result (rounds + invocation counts) to JSON.
+    pub fn to_json(&self) -> Json {
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("round", Json::num(r.round as f64)),
+                    (
+                        "selected",
+                        Json::Arr(r.selected.iter().map(|&c| Json::num(c as f64)).collect()),
+                    ),
+                    ("successes", Json::num(r.successes as f64)),
+                    ("failures", Json::num(r.failures as f64)),
+                    ("stale_applied", Json::num(r.stale_applied as f64)),
+                    ("duration_s", Json::num(r.duration_s)),
+                    (
+                        "accuracy",
+                        r.accuracy.map_or(Json::Null, |v| Json::num(v as f64)),
+                    ),
+                    (
+                        "eval_loss",
+                        r.eval_loss.map_or(Json::Null, |v| Json::num(v as f64)),
+                    ),
+                    (
+                        "train_loss",
+                        r.train_loss.map_or(Json::Null, |v| Json::num(v as f64)),
+                    ),
+                    ("cost", Json::num(r.cost)),
+                    ("eur", Json::num(r.eur)),
+                ])
+            })
+            .collect();
+        let mut invocations: Vec<(ClientId, u32)> =
+            self.invocations.iter().map(|(&c, &n)| (c, n)).collect();
+        invocations.sort_unstable();
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("total_time_s", Json::num(self.total_time_s)),
+            ("total_cost", Json::num(self.total_cost)),
+            ("final_accuracy", Json::num(self.final_accuracy as f64)),
+            ("mean_eur", Json::num(self.mean_eur())),
+            ("rounds", Json::Arr(rounds)),
+            (
+                "invocations",
+                Json::Arr(
+                    invocations
+                        .iter()
+                        .map(|&(c, n)| {
+                            Json::arr(vec![Json::num(c as f64), Json::num(n as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: u32, succ: usize, sel: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            selected: (0..sel).collect(),
+            successes: succ,
+            failures: sel - succ,
+            stale_applied: 0,
+            duration_s: 10.0,
+            accuracy: Some(0.1 * round as f32),
+            eval_loss: None,
+            train_loss: None,
+            cost: 0.01,
+            eur: RoundRecord::compute_eur(succ, sel),
+        }
+    }
+
+    fn exp(rounds: Vec<RoundRecord>) -> ExperimentResult {
+        ExperimentResult {
+            dataset: "mnist".into(),
+            strategy: "fedavg".into(),
+            scenario: "standard".into(),
+            seed: 0,
+            rounds,
+            invocations: HashMap::new(),
+            total_time_s: 0.0,
+            total_cost: 0.0,
+            final_accuracy: 0.0,
+        }
+    }
+
+    #[test]
+    fn eur_bounds() {
+        assert_eq!(RoundRecord::compute_eur(0, 10), 0.0);
+        assert_eq!(RoundRecord::compute_eur(10, 10), 1.0);
+        assert_eq!(RoundRecord::compute_eur(0, 0), 1.0);
+    }
+
+    #[test]
+    fn mean_eur_averages() {
+        let e = exp(vec![rec(0, 5, 10), rec(1, 10, 10)]);
+        assert!((e.mean_eur() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bias_counts_uninvoked_clients_as_zero() {
+        let mut e = exp(vec![]);
+        e.invocations.insert(0, 5);
+        e.invocations.insert(1, 3);
+        // 4 registered clients, two never invoked -> min = 0
+        assert_eq!(e.bias(4), 5);
+        // only the two invoked registered -> min = 3
+        assert_eq!(e.bias(2), 2);
+    }
+
+    #[test]
+    fn rounds_to_accuracy_finds_crossing() {
+        let e = exp(vec![rec(0, 1, 1), rec(1, 1, 1), rec(2, 1, 1)]);
+        assert_eq!(e.rounds_to_accuracy(0.15), Some(2));
+        assert_eq!(e.rounds_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn timeline_csv_has_header_and_rows() {
+        let e = exp(vec![rec(0, 1, 2)]);
+        let p = std::env::temp_dir().join(format!("fedless-tl-{}.csv", std::process::id()));
+        e.write_timeline_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("round,"));
+        assert_eq!(s.lines().count(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,221 @@
+//! Parameter server: the global model blob plus the staleness buffer for
+//! late client updates (§V-D).
+//!
+//! Late ("slow") updates land here tagged with the round they were
+//! *produced for* (t_k) and their arrival time; the FedLesScan aggregator
+//! drains the buffer at the next aggregation, dampens each update by
+//! t_k / t (Eq. 3) and discards anything older than τ.
+
+use crate::ClientId;
+
+/// A late client update waiting in the staleness buffer.
+#[derive(Debug, Clone)]
+pub struct StaleUpdate {
+    pub client: ClientId,
+    /// Round the update was trained for (t_k in Eq. 3).
+    pub produced_round: u32,
+    /// Virtual time at which it reached the parameter server.
+    pub arrived_at_s: f64,
+    /// Client training time, for the client's own history correction.
+    pub training_time_s: f64,
+    pub params: Vec<f32>,
+    /// Local dataset cardinality n_k.
+    pub cardinality: usize,
+    /// Mean local training loss (metrics only).
+    pub loss: f32,
+}
+
+/// Eq. 3 weight components for one update (pre-normalization):
+/// `(t_k / t) * (n_k / n)` with the τ cutoff. `n` is the cardinality sum
+/// over the *included* updates, computed by [`staleness_weights`].
+#[derive(Debug, Clone, Copy)]
+pub struct WeightedUpdate {
+    pub produced_round: u32,
+    pub cardinality: usize,
+}
+
+/// Compute the Eq. 3 aggregation weights for a batch of updates at
+/// aggregation round `t`. Updates with `t - t_k >= tau` get weight 0
+/// (discarded). When `normalize` is set the weights are rescaled to sum
+/// to 1 (see DESIGN.md: verbatim Eq. 3 shrinks the global model whenever
+/// any update is stale; the normalized variant is the default and the
+/// difference is an ablation).
+pub fn staleness_weights(
+    updates: &[WeightedUpdate],
+    t: u32,
+    tau: u32,
+    normalize: bool,
+) -> Vec<f32> {
+    let t_f = t.max(1) as f64;
+    let included: Vec<bool> = updates
+        .iter()
+        .map(|u| t.saturating_sub(u.produced_round) < tau)
+        .collect();
+    let n: f64 = updates
+        .iter()
+        .zip(&included)
+        .filter(|(_, &inc)| inc)
+        .map(|(u, _)| u.cardinality as f64)
+        .sum();
+    if n == 0.0 {
+        return vec![0.0; updates.len()];
+    }
+    let mut w: Vec<f64> = updates
+        .iter()
+        .zip(&included)
+        .map(|(u, &inc)| {
+            if !inc {
+                return 0.0;
+            }
+            let damp = (u.produced_round as f64 / t_f).min(1.0);
+            damp * u.cardinality as f64 / n
+        })
+        .collect();
+    if normalize {
+        let s: f64 = w.iter().sum();
+        if s > 0.0 {
+            w.iter_mut().for_each(|v| *v /= s);
+        }
+    }
+    w.into_iter().map(|v| v as f32).collect()
+}
+
+/// The parameter server state.
+pub struct ParameterServer {
+    global: Vec<f32>,
+    /// Completed aggregation count == current round index for Eq. 3.
+    round: u32,
+    stale: Vec<StaleUpdate>,
+}
+
+impl ParameterServer {
+    pub fn new(init: Vec<f32>) -> Self {
+        Self {
+            global: init,
+            round: 0,
+            stale: Vec::new(),
+        }
+    }
+
+    pub fn global(&self) -> &[f32] {
+        &self.global
+    }
+
+    pub fn round(&self) -> u32 {
+        self.round
+    }
+
+    /// Install the freshly aggregated global model.
+    pub fn set_global(&mut self, params: Vec<f32>, round: u32) {
+        assert_eq!(params.len(), self.global.len(), "param length change");
+        self.global = params;
+        self.round = round;
+    }
+
+    /// Buffer a late update for a future aggregation.
+    pub fn push_stale(&mut self, u: StaleUpdate) {
+        self.stale.push(u);
+    }
+
+    pub fn stale_len(&self) -> usize {
+        self.stale.len()
+    }
+
+    /// Drain buffered updates that have *arrived* by `now_s` and are not
+    /// yet older than `tau` relative to aggregation round `t`. Expired
+    /// updates are dropped permanently (τ discard, §V-D); not-yet-arrived
+    /// updates stay buffered.
+    pub fn drain_stale(&mut self, now_s: f64, t: u32, tau: u32) -> Vec<StaleUpdate> {
+        let mut ready = Vec::new();
+        let mut keep = Vec::new();
+        for u in self.stale.drain(..) {
+            let age = t.saturating_sub(u.produced_round);
+            if age >= tau {
+                continue; // expired: discard
+            }
+            if u.arrived_at_s <= now_s {
+                ready.push(u);
+            } else {
+                keep.push(u);
+            }
+        }
+        self.stale = keep;
+        ready
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wu(round: u32, card: usize) -> WeightedUpdate {
+        WeightedUpdate {
+            produced_round: round,
+            cardinality: card,
+        }
+    }
+
+    #[test]
+    fn same_round_weights_are_fedavg() {
+        let w = staleness_weights(&[wu(5, 10), wu(5, 30)], 5, 2, false);
+        assert!((w[0] - 0.25).abs() < 1e-6);
+        assert!((w[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stale_updates_are_dampened() {
+        let w = staleness_weights(&[wu(10, 100), wu(9, 100)], 10, 3, false);
+        assert!(w[1] < w[0]);
+        assert!((w[1] / w[0] - 0.9).abs() < 1e-5); // t_k/t = 9/10
+    }
+
+    #[test]
+    fn tau_cutoff_discards() {
+        let w = staleness_weights(&[wu(10, 100), wu(8, 100)], 10, 2, false);
+        assert_eq!(w[1], 0.0);
+        // and the cardinality sum excludes the discarded update
+        assert!((w[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalized_weights_sum_to_one() {
+        let w = staleness_weights(&[wu(10, 50), wu(9, 50), wu(8, 50)], 10, 5, true);
+        let s: f32 = w.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn all_expired_gives_zeros() {
+        let w = staleness_weights(&[wu(1, 10)], 10, 2, true);
+        assert_eq!(w, vec![0.0]);
+    }
+
+    #[test]
+    fn drain_respects_arrival_and_tau() {
+        let mk = |round, arrive| StaleUpdate {
+            client: 0,
+            produced_round: round,
+            arrived_at_s: arrive,
+            training_time_s: 1.0,
+            params: vec![0.0],
+            cardinality: 1,
+            loss: 0.0,
+        };
+        let mut ps = ParameterServer::new(vec![0.0]);
+        ps.push_stale(mk(9, 10.0)); // ready
+        ps.push_stale(mk(9, 99.0)); // not yet arrived
+        ps.push_stale(mk(2, 5.0)); // expired at t=10, tau=2
+        let ready = ps.drain_stale(50.0, 10, 2);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].produced_round, 9);
+        assert_eq!(ps.stale_len(), 1); // the future one stays
+    }
+
+    #[test]
+    fn set_global_updates_round() {
+        let mut ps = ParameterServer::new(vec![1.0, 2.0]);
+        ps.set_global(vec![3.0, 4.0], 7);
+        assert_eq!(ps.global(), &[3.0, 4.0]);
+        assert_eq!(ps.round(), 7);
+    }
+}

@@ -1,0 +1,513 @@
+//! Reproduction harness: regenerates every table and figure of the
+//! paper's evaluation (§VI) — see DESIGN.md §4 for the experiment index.
+//!
+//! | id    | paper artifact | regenerator            |
+//! |-------|----------------|------------------------|
+//! | FIG1  | Fig. 1         | [`fig1`]               |
+//! | TAB2  | Table II       | [`table2`]             |
+//! | TAB3  | Table III      | [`table3`]             |
+//! | TAB4  | Table IV       | [`table4`]             |
+//! | FIG3a | Fig. 3a        | [`fig3`] (accuracy)    |
+//! | FIG3b | Fig. 3b        | [`fig3`] (EUR)         |
+//! | FIG3c | Fig. 3c        | [`fig3`] (bias/violin) |
+//! | ABL   | (ours)         | [`ablations`]          |
+//!
+//! Absolute numbers differ from the paper (simulated GCF testbed,
+//! synthetic data, scaled deployment — DESIGN.md §2); the harness is
+//! judged on the *shape*: who wins, by roughly what factor, where the
+//! crossovers fall. Results land as CSV/JSON under the output directory
+//! and as aligned text tables on stdout.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::config::{ExperimentConfig, Scenario};
+use crate::coordinator::Controller;
+use crate::metrics::ExperimentResult;
+use crate::runtime::{Engine, ModelRuntime};
+use crate::strategy::StrategyKind;
+use crate::util::Json;
+use crate::Result;
+
+/// Effort profile for a harness invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// Minutes-fast: fewer rounds/clients, single repeat. The profile
+    /// used for the checked-in EXPERIMENTS.md runs.
+    Quick,
+    /// The full default-scale matrix (hours on CPU).
+    Full,
+}
+
+impl std::str::FromStr for Profile {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "quick" => Ok(Profile::Quick),
+            "full" => Ok(Profile::Full),
+            other => anyhow::bail!("unknown profile {other:?}; expected quick|full"),
+        }
+    }
+}
+
+/// Shared harness options.
+#[derive(Debug, Clone)]
+pub struct Options {
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub datasets: Vec<String>,
+    pub profile: Profile,
+    pub seed: u64,
+    /// Repeats per cell; the paper uses 3 (§VI, [68]).
+    pub repeats: usize,
+    pub verbose: bool,
+}
+
+impl Options {
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        match self.profile {
+            Profile::Quick => vec![
+                Scenario::Standard,
+                Scenario::Straggler(30),
+                Scenario::Straggler(70),
+            ],
+            Profile::Full => vec![
+                Scenario::Standard,
+                Scenario::Straggler(10),
+                Scenario::Straggler(30),
+                Scenario::Straggler(50),
+                Scenario::Straggler(70),
+            ],
+        }
+    }
+
+    fn shrink(&self, cfg: &mut ExperimentConfig) {
+        if self.profile == Profile::Quick {
+            // This testbed is a single CPU core; the quick profile keeps
+            // the full matrix *shape* at ~1/4 the paper-preset volume.
+            cfg.rounds = (cfg.rounds / 4).max(5);
+            cfg.n_clients = (cfg.n_clients / 3).max(10);
+            cfg.clients_per_round = (cfg.clients_per_round / 3).max(3);
+            cfg.eval_every = 2;
+        }
+    }
+}
+
+/// Cache of loaded model runtimes (compile once per dataset).
+pub struct Runtimes {
+    engine: Engine,
+    map: BTreeMap<String, ModelRuntime>,
+    dir: PathBuf,
+}
+
+impl Runtimes {
+    pub fn new(artifacts_dir: PathBuf) -> Result<Self> {
+        Ok(Self {
+            engine: Engine::cpu()?,
+            map: BTreeMap::new(),
+            dir: artifacts_dir,
+        })
+    }
+
+    pub fn get(&mut self, dataset: &str) -> Result<&ModelRuntime> {
+        if !self.map.contains_key(dataset) {
+            let rt = ModelRuntime::load(&self.engine, &self.dir, dataset)?;
+            self.map.insert(dataset.to_string(), rt);
+        }
+        Ok(&self.map[dataset])
+    }
+}
+
+/// Run one experiment cell (dataset x strategy x scenario), averaging
+/// `repeats` seeds. Returns all repeat results.
+pub fn run_cell(
+    runtimes: &mut Runtimes,
+    opts: &Options,
+    dataset: &str,
+    strategy: StrategyKind,
+    scenario: Scenario,
+) -> Result<Vec<ExperimentResult>> {
+    let mut results = Vec::with_capacity(opts.repeats);
+    for rep in 0..opts.repeats {
+        let mut cfg = ExperimentConfig::preset(dataset);
+        cfg.artifacts_dir = opts.artifacts_dir.clone();
+        cfg.strategy = strategy;
+        cfg.scenario = scenario;
+        cfg.seed = opts.seed + rep as u64 * 1000;
+        cfg.verbose = opts.verbose;
+        opts.shrink(&mut cfg);
+        // paper Table I: speech trains longer under straggler scenarios
+        if dataset == "speech" && scenario != Scenario::Standard {
+            cfg.rounds = cfg.rounds * 5 / 3;
+        }
+        let runtime = runtimes.get(dataset)?;
+        let mut ctl = Controller::new(cfg, runtime)?;
+        results.push(ctl.run()?);
+    }
+    Ok(results)
+}
+
+fn mean<T: Copy + Into<f64>>(xs: impl Iterator<Item = T>) -> f64 {
+    let v: Vec<f64> = xs.map(Into::into).collect();
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Aggregated cell statistics used by the table printers.
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    pub dataset: String,
+    pub strategy: String,
+    pub scenario: String,
+    pub accuracy: f64,
+    pub eur: f64,
+    pub time_s: f64,
+    pub cost: f64,
+    pub bias: f64,
+    pub repeats: usize,
+}
+
+impl CellStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
+            ("accuracy", Json::num(self.accuracy)),
+            ("eur", Json::num(self.eur)),
+            ("time_s", Json::num(self.time_s)),
+            ("cost", Json::num(self.cost)),
+            ("bias", Json::num(self.bias)),
+            ("repeats", Json::num(self.repeats as f64)),
+        ])
+    }
+}
+
+pub fn cell_stats(results: &[ExperimentResult], n_clients: usize) -> CellStats {
+    CellStats {
+        dataset: results[0].dataset.clone(),
+        strategy: results[0].strategy.clone(),
+        scenario: results[0].scenario.clone(),
+        accuracy: mean(results.iter().map(|r| r.final_accuracy)),
+        eur: mean(results.iter().map(|r| r.mean_eur())),
+        time_s: mean(results.iter().map(|r| r.total_time_s)),
+        cost: mean(results.iter().map(|r| r.total_cost)),
+        bias: mean(results.iter().map(|r| r.bias(n_clients) as f64)),
+        repeats: results.len(),
+    }
+}
+
+/// Run the full (datasets x strategies x scenarios) matrix once and
+/// reuse it for Tables II-IV (they share the same underlying runs, as in
+/// the paper).
+pub fn run_matrix(opts: &Options) -> Result<Vec<CellStats>> {
+    let mut runtimes = Runtimes::new(opts.artifacts_dir.clone())?;
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let mut cells = Vec::new();
+    for dataset in &opts.datasets {
+        for strategy in StrategyKind::all() {
+            for scenario in opts.scenarios() {
+                eprintln!(
+                    "[matrix] {dataset} / {} / {} ...",
+                    strategy.as_str(),
+                    scenario.label()
+                );
+                let results = run_cell(&mut runtimes, opts, dataset, strategy, scenario)?;
+                // persist per-run timelines for the figure harness
+                for (i, r) in results.iter().enumerate() {
+                    let base = format!(
+                        "{}_{}_{}_{i}",
+                        dataset,
+                        strategy.as_str(),
+                        scenario.label()
+                    );
+                    r.write_timeline_csv(&opts.out_dir.join(format!("{base}.csv")))?;
+                    r.write_json(&opts.out_dir.join(format!("{base}.json")))?;
+                }
+                let n_clients = effective_n_clients(opts, dataset);
+                cells.push(cell_stats(&results, n_clients));
+            }
+        }
+    }
+    let path = opts.out_dir.join("matrix.json");
+    Json::Arr(cells.iter().map(|c| c.to_json()).collect()).write_file(&path)?;
+    eprintln!("[matrix] wrote {}", path.display());
+    Ok(cells)
+}
+
+fn effective_n_clients(opts: &Options, dataset: &str) -> usize {
+    let mut cfg = ExperimentConfig::preset(dataset);
+    opts.shrink(&mut cfg);
+    cfg.n_clients
+}
+
+// ---------------------------------------------------------------------------
+// FIG1 — motivation: FedAvg accuracy + round duration vs straggler %
+// ---------------------------------------------------------------------------
+
+pub fn fig1(opts: &Options) -> Result<()> {
+    let mut runtimes = Runtimes::new(opts.artifacts_dir.clone())?;
+    std::fs::create_dir_all(&opts.out_dir)?;
+    // Fig. 1 / Fig. 3 are speech-dataset deep dives in the paper.
+    let dataset = opts
+        .datasets
+        .iter()
+        .find(|d| d.as_str() == "speech")
+        .or_else(|| opts.datasets.first())
+        .cloned()
+        .unwrap_or_else(|| "speech".to_string());
+    println!("FIG 1 — {dataset} with FedAvg, varying straggler % (paper Fig. 1)");
+    println!("{:<12} {:>10} {:>18}", "stragglers", "accuracy", "avg round (s)");
+    let mut rows = Vec::new();
+    let mut scenarios = vec![Scenario::Standard];
+    scenarios.extend(opts.scenarios().into_iter().skip(1));
+    for scenario in scenarios {
+        let results = run_cell(&mut runtimes, opts, &dataset, StrategyKind::Fedavg, scenario)?;
+        let acc = mean(results.iter().map(|r| r.final_accuracy));
+        let avg_round = mean(results.iter().map(|r| {
+            r.total_time_s / r.rounds.len().max(1) as f64
+        }));
+        println!("{:<12} {:>10.3} {:>18.1}", scenario.label(), acc, avg_round);
+        rows.push((scenario.label(), acc, avg_round));
+    }
+    let csv: String = std::iter::once("scenario,accuracy,avg_round_s".to_string())
+        .chain(rows.iter().map(|(s, a, d)| format!("{s},{a:.4},{d:.2}")))
+        .collect::<Vec<_>>()
+        .join("\n");
+    std::fs::write(opts.out_dir.join("fig1.csv"), csv)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// TAB2/3/4 — shared matrix, three views
+// ---------------------------------------------------------------------------
+
+fn print_table(
+    cells: &[CellStats],
+    title: &str,
+    header: &str,
+    value: impl Fn(&CellStats) -> String,
+) {
+    println!("\n{title}");
+    let mut scenarios: Vec<String> = cells.iter().map(|c| c.scenario.clone()).collect();
+    scenarios.sort();
+    scenarios.dedup();
+    print!("{:<14}{:<12}", "dataset", "strategy");
+    for s in &scenarios {
+        print!("{s:>14}");
+    }
+    println!("   ({header})");
+    let mut datasets: Vec<String> = cells.iter().map(|c| c.dataset.clone()).collect();
+    datasets.dedup();
+    let mut strategies: Vec<String> = cells.iter().map(|c| c.strategy.clone()).collect();
+    strategies.sort();
+    strategies.dedup();
+    for d in &datasets {
+        for st in &strategies {
+            print!("{d:<14}{st:<12}");
+            for sc in &scenarios {
+                let cell = cells
+                    .iter()
+                    .find(|c| &c.dataset == d && &c.strategy == st && &c.scenario == sc);
+                match cell {
+                    Some(c) => print!("{:>14}", value(c)),
+                    None => print!("{:>14}", "-"),
+                }
+            }
+            println!();
+        }
+    }
+}
+
+pub fn table2(cells: &[CellStats]) {
+    print_table(
+        cells,
+        "TABLE II — accuracy and EUR (paper Table II)",
+        "acc / eur",
+        |c| format!("{:.3}/{:.2}", c.accuracy, c.eur),
+    );
+}
+
+pub fn table3(cells: &[CellStats]) {
+    print_table(
+        cells,
+        "TABLE III — total experiment time, minutes (paper Table III)",
+        "minutes",
+        |c| format!("{:.1}", c.time_s / 60.0),
+    );
+}
+
+pub fn table4(cells: &[CellStats]) {
+    print_table(
+        cells,
+        "TABLE IV — total experiment cost, $ (paper Table IV)",
+        "$",
+        |c| format!("{:.4}", c.cost),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// FIG3 — speech deep-dive: accuracy / EUR timelines + bias distribution
+// ---------------------------------------------------------------------------
+
+pub fn fig3(opts: &Options) -> Result<()> {
+    let mut runtimes = Runtimes::new(opts.artifacts_dir.clone())?;
+    std::fs::create_dir_all(&opts.out_dir)?;
+    // Fig. 1 / Fig. 3 are speech-dataset deep dives in the paper.
+    let dataset = opts
+        .datasets
+        .iter()
+        .find(|d| d.as_str() == "speech")
+        .or_else(|| opts.datasets.first())
+        .cloned()
+        .unwrap_or_else(|| "speech".to_string());
+    let n_clients = effective_n_clients(opts, &dataset);
+    println!("FIG 3 — {dataset}: per-round accuracy (3a), EUR (3b), bias (3c)");
+    for scenario in opts.scenarios() {
+        println!("\n== scenario {} ==", scenario.label());
+        println!(
+            "{:<12} {:>9} {:>9} {:>7} {:>22}",
+            "strategy", "final acc", "mean EUR", "bias", "invocations (min/med/max)"
+        );
+        for strategy in StrategyKind::all() {
+            let results = run_cell(&mut runtimes, opts, &dataset, strategy, scenario)?;
+            let r = &results[0];
+            // fig3a/b: write the full timeline of the first repeat
+            let base = format!("fig3_{}_{}_{}", dataset, strategy.as_str(), scenario.label());
+            r.write_timeline_csv(&opts.out_dir.join(format!("{base}.csv")))?;
+            // fig3c: invocation distribution (violin input)
+            let mut dist = r.invocation_distribution(n_clients);
+            dist.sort_unstable();
+            let dist_csv: String = std::iter::once("client_rank,invocations".to_string())
+                .chain(dist.iter().enumerate().map(|(i, v)| format!("{i},{v}")))
+                .collect::<Vec<_>>()
+                .join("\n");
+            std::fs::write(
+                opts.out_dir.join(format!("{base}_invocations.csv")),
+                dist_csv,
+            )?;
+            let acc = mean(results.iter().map(|x| x.final_accuracy));
+            let eur = mean(results.iter().map(|x| x.mean_eur()));
+            let bias = mean(results.iter().map(|x| x.bias(n_clients) as f64));
+            let med = dist[dist.len() / 2];
+            println!(
+                "{:<12} {:>9.3} {:>9.3} {:>7.1} {:>10}/{}/{}",
+                strategy.as_str(),
+                acc,
+                eur,
+                bias,
+                dist.first().copied().unwrap_or(0),
+                med,
+                dist.last().copied().unwrap_or(0),
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Ablations (ours): design-choice sensitivity of FedLesScan
+// ---------------------------------------------------------------------------
+
+pub fn ablations(opts: &Options) -> Result<()> {
+    use crate::strategy::{FedLesScan, FedLesScanParams};
+
+    let mut runtimes = Runtimes::new(opts.artifacts_dir.clone())?;
+    std::fs::create_dir_all(&opts.out_dir)?;
+    // Fig. 1 / Fig. 3 are speech-dataset deep dives in the paper.
+    let dataset = opts
+        .datasets
+        .iter()
+        .find(|d| d.as_str() == "speech")
+        .or_else(|| opts.datasets.first())
+        .cloned()
+        .unwrap_or_else(|| "speech".to_string());
+    let scenario = Scenario::Straggler(30);
+    println!("ABLATIONS — FedLesScan design choices on {dataset} @ {}", scenario.label());
+    println!(
+        "{:<22} {:>9} {:>9} {:>11} {:>9}",
+        "variant", "final acc", "mean EUR", "time (min)", "cost ($)"
+    );
+
+    let variants: Vec<(&str, FedLesScanParams)> = vec![
+        ("default", FedLesScanParams::default()),
+        (
+            "tau=1 (no stale)",
+            FedLesScanParams { tau: 1, ..Default::default() },
+        ),
+        (
+            "tau=4",
+            FedLesScanParams { tau: 4, ..Default::default() },
+        ),
+        (
+            "no-normalize (Eq.3)",
+            FedLesScanParams { normalize: false, ..Default::default() },
+        ),
+        (
+            "alpha=0.1",
+            FedLesScanParams { ema_alpha: 0.1, ..Default::default() },
+        ),
+        (
+            "alpha=0.9",
+            FedLesScanParams { ema_alpha: 0.9, ..Default::default() },
+        ),
+    ];
+
+    // config-level extension variants (paper §VII future work)
+    type CfgMut = fn(&mut ExperimentConfig);
+    let cfg_variants: Vec<(&str, CfgMut)> = vec![
+        ("ext: adaptive-k", |c| c.adaptive_clients = true),
+        ("ext: norm-clip 3x", |c| c.stale_norm_clip = Some(3.0)),
+    ];
+
+    let mut rows = Vec::new();
+    let runs = variants
+        .into_iter()
+        .map(|(l, p)| (l, Some(p), None::<CfgMut>))
+        .chain(cfg_variants.into_iter().map(|(l, m)| (l, None, Some(m))));
+    for (label, params, cfg_mut) in runs {
+        let mut cfg = ExperimentConfig::preset(&dataset);
+        cfg.artifacts_dir = opts.artifacts_dir.clone();
+        cfg.scenario = scenario;
+        cfg.seed = opts.seed;
+        cfg.verbose = opts.verbose;
+        opts.shrink(&mut cfg);
+        if let Some(m) = cfg_mut {
+            m(&mut cfg);
+        }
+        let runtime = runtimes.get(&dataset)?;
+        let mut ctl = Controller::new(cfg, runtime)?;
+        if let Some(params) = params {
+            ctl.set_strategy(Box::new(FedLesScan::new(params)));
+        }
+        let r = ctl.run()?;
+        println!(
+            "{:<22} {:>9.3} {:>9.3} {:>11.1} {:>9.4}",
+            label,
+            r.final_accuracy,
+            r.mean_eur(),
+            r.total_time_s / 60.0,
+            r.total_cost
+        );
+        rows.push((label.to_string(), r));
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|(l, r)| {
+                Json::obj(vec![
+                    ("variant", Json::str(l.clone())),
+                    ("final_accuracy", Json::num(r.final_accuracy as f64)),
+                    ("mean_eur", Json::num(r.mean_eur())),
+                    ("total_time_s", Json::num(r.total_time_s)),
+                    ("total_cost", Json::num(r.total_cost)),
+                ])
+            })
+            .collect(),
+    );
+    json.write_file(&opts.out_dir.join("ablations.json"))?;
+    Ok(())
+}

@@ -1,0 +1,163 @@
+//! Thin PJRT wrapper: load AOT HLO-text artifacts, compile once, execute
+//! many times. Adapted from /opt/xla-example/load_hlo — HLO *text* is the
+//! interchange format (serialized protos from jax >= 0.5 carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects).
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::Result;
+
+/// A PJRT client. One per process is plenty; cloning the underlying
+/// client handle is cheap (ref-counted on the C side).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it for this client.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable {
+            exe,
+            path: path.to_path_buf(),
+            compile_time: t0.elapsed(),
+        })
+    }
+}
+
+/// A compiled HLO module ready to execute. The lowered functions all
+/// return a tuple root (`return_tuple=True` at lowering), so `run`
+/// decomposes the single output literal into tuple elements.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+    /// Time spent in XLA compilation (reported once in metrics).
+    pub compile_time: Duration,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the output tuple elements and
+    /// the device wall time of this call.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<(Vec<xla::Literal>, Duration)> {
+        let t0 = Instant::now();
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.path.display()))?;
+        let root = bufs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: empty execution result", self.path.display()))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.path.display()))?;
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing tuple of {}: {e}", self.path.display()))?;
+        Ok((parts, t0.elapsed()))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal with the given dimensions.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("lit_f32: {} elems vs dims {:?}", data.len(), dims));
+    }
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+}
+
+/// Build an i32 literal with the given dimensions.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("lit_i32: {} elems vs dims {:?}", data.len(), dims));
+    }
+    if dims.len() == 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+}
+
+/// Scalar literals.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a flat f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e}"))
+}
+
+/// Extract the single f32 element of a scalar literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("literal to f32 scalar: {e}"))
+}
+
+/// Copy a literal's f32 contents into an existing buffer (no realloc).
+pub fn copy_f32_into(lit: &xla::Literal, dst: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to::<f32>(dst)
+        .map_err(|e| anyhow!("literal raw copy: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_checks_element_count() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn lit_i32_checks_element_count() {
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+        assert!(lit_i32(&[1, 2, 3, 4, 5, 6], &[2, 3]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_f32(3.5);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 3.5);
+    }
+}

@@ -1,0 +1,294 @@
+//! AOT artifact manifests — the contract between `python/compile/aot.py`
+//! and the Rust runtime. One manifest per model variant describes the HLO
+//! entrypoints, tensor shapes and the Table-I hyperparameters baked into
+//! the lowered module.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::Json;
+use crate::Result;
+
+/// One lowered HLO entrypoint (train / train_prox / eval / aggregate).
+#[derive(Debug, Clone)]
+pub struct Entrypoint {
+    /// HLO text file name, relative to the artifacts directory.
+    pub file: String,
+    /// Positional input names, in lowering order.
+    pub inputs: Vec<String>,
+    /// Output tuple element names, in order.
+    pub outputs: Vec<String>,
+}
+
+/// Manifest for one (model family, scale) artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub scale: String,
+    /// Flat parameter vector length P.
+    pub param_count: usize,
+    pub num_classes: usize,
+    /// Per-sample feature shape (e.g. `[28, 28, 1]` or `[seq_len]`).
+    pub input_shape: Vec<usize>,
+    /// `"f32"` for image models, `"i32"` for token models.
+    pub input_dtype: String,
+    /// Fixed per-client local dataset cardinality N.
+    pub shard_size: usize,
+    pub batch_size: usize,
+    pub local_epochs: usize,
+    /// `local_epochs * shard_size / batch_size` — optimizer steps per round.
+    pub steps_per_round: usize,
+    pub optimizer: String,
+    pub lr: f64,
+    pub prox_mu: f64,
+    pub eval_size: usize,
+    pub eval_batch: usize,
+    /// Max stacked updates per aggregate call (zero-padded below).
+    pub k_max: usize,
+    pub seq_len: Option<usize>,
+    /// Rough fwd+bwd flop estimate per local round (cost model input).
+    pub flops_per_round: u64,
+    pub entrypoints: HashMap<String, Entrypoint>,
+    pub init_file: String,
+    pub init_sha256: String,
+    pub init_seed: u64,
+}
+
+impl Manifest {
+    /// Load `<dir>/<model>.manifest.json`.
+    pub fn load(dir: &Path, model: &str) -> Result<Self> {
+        let path = dir.join(format!("{model}.manifest.json"));
+        let j = Json::parse_file(&path)?;
+        let m = Self::from_json(&j)
+            .with_context(|| format!("decoding manifest {}", path.display()))?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let str_vec = |v: &Json| -> Result<Vec<String>> {
+            v.as_arr()?.iter().map(|s| Ok(s.as_str()?.to_string())).collect()
+        };
+        let mut entrypoints = HashMap::new();
+        for (name, ep) in j.get("entrypoints")?.as_obj()? {
+            entrypoints.insert(
+                name.clone(),
+                Entrypoint {
+                    file: ep.get("file")?.as_str()?.to_string(),
+                    inputs: str_vec(ep.get("inputs")?)?,
+                    outputs: str_vec(ep.get("outputs")?)?,
+                },
+            );
+        }
+        Ok(Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            scale: j.get("scale")?.as_str()?.to_string(),
+            param_count: j.get("param_count")?.as_usize()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            input_shape: j
+                .get("input_shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            input_dtype: j.get("input_dtype")?.as_str()?.to_string(),
+            shard_size: j.get("shard_size")?.as_usize()?,
+            batch_size: j.get("batch_size")?.as_usize()?,
+            local_epochs: j.get("local_epochs")?.as_usize()?,
+            steps_per_round: j.get("steps_per_round")?.as_usize()?,
+            optimizer: j.get("optimizer")?.as_str()?.to_string(),
+            lr: j.get("lr")?.as_f64()?,
+            prox_mu: j.get("prox_mu")?.as_f64()?,
+            eval_size: j.get("eval_size")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            k_max: j.get("k_max")?.as_usize()?,
+            seq_len: match j.get("seq_len")? {
+                Json::Null => None,
+                v => Some(v.as_usize()?),
+            },
+            flops_per_round: j.get("flops_per_round")?.as_u64()?,
+            init_file: j.get("init_file")?.as_str()?.to_string(),
+            init_sha256: j.get("init_sha256")?.as_str()?.to_string(),
+            init_seed: j.get("init_seed")?.as_u64()?,
+            entrypoints,
+        })
+    }
+
+    /// Internal consistency checks (cheap; run on every load).
+    pub fn validate(&self) -> Result<()> {
+        if self.param_count == 0 {
+            bail!("{}: param_count == 0", self.name);
+        }
+        if self.shard_size % self.batch_size != 0 {
+            bail!("{}: batch_size must divide shard_size", self.name);
+        }
+        if self.eval_size % self.eval_batch != 0 {
+            bail!("{}: eval_batch must divide eval_size", self.name);
+        }
+        if self.steps_per_round != self.shard_size / self.batch_size * self.local_epochs {
+            bail!("{}: steps_per_round inconsistent", self.name);
+        }
+        for ep in ["train", "train_prox", "eval", "aggregate"] {
+            if !self.entrypoints.contains_key(ep) {
+                bail!("{}: missing entrypoint {ep}", self.name);
+            }
+        }
+        match self.input_dtype.as_str() {
+            "f32" | "i32" => {}
+            d => bail!("{}: unsupported input dtype {d}", self.name),
+        }
+        Ok(())
+    }
+
+    /// Flat feature element count per sample.
+    pub fn sample_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Path of an entrypoint's HLO file.
+    pub fn hlo_path(&self, dir: &Path, ep: &str) -> Result<PathBuf> {
+        let e = self
+            .entrypoints
+            .get(ep)
+            .ok_or_else(|| anyhow!("{}: no entrypoint {ep}", self.name))?;
+        Ok(dir.join(&e.file))
+    }
+
+    /// Load the seed-0 initial flat parameter vector (little-endian f32).
+    pub fn load_init(&self, dir: &Path) -> Result<Vec<f32>> {
+        let path = dir.join(&self.init_file);
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("reading init params {}", path.display()))?;
+        if raw.len() != 4 * self.param_count {
+            bail!(
+                "{}: init file has {} bytes, expected {}",
+                self.name,
+                raw.len(),
+                4 * self.param_count
+            );
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Uncompressed model payload size in MB (network-transfer model input).
+    pub fn payload_mb(&self) -> f64 {
+        (self.param_count * 4) as f64 / 1e6
+    }
+}
+
+/// `index.json` written alongside the manifests.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub scale: String,
+    pub models: Vec<String>,
+    pub manifests: HashMap<String, String>,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = Json::parse_file(&dir.join("index.json"))?;
+        Ok(Self {
+            scale: j.get("scale")?.as_str()?.to_string(),
+            models: j
+                .get("models")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            manifests: j
+                .get("manifests")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy() -> Manifest {
+        let ep = |f: &str| Entrypoint {
+            file: f.into(),
+            inputs: vec!["params".into()],
+            outputs: vec!["params".into()],
+        };
+        Manifest {
+            name: "m".into(),
+            scale: "smoke".into(),
+            param_count: 10,
+            num_classes: 2,
+            input_shape: vec![4, 4, 1],
+            input_dtype: "f32".into(),
+            shard_size: 20,
+            batch_size: 10,
+            local_epochs: 5,
+            steps_per_round: 10,
+            optimizer: "adam".into(),
+            lr: 1e-3,
+            prox_mu: 0.01,
+            eval_size: 128,
+            eval_batch: 128,
+            k_max: 8,
+            seq_len: None,
+            flops_per_round: 1000,
+            entrypoints: ["train", "train_prox", "eval", "aggregate"]
+                .iter()
+                .map(|n| (n.to_string(), ep(&format!("m.{n}.hlo.txt"))))
+                .collect(),
+            init_file: "m.init.bin".into(),
+            init_sha256: "x".into(),
+            init_seed: 0,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_consistent_manifest() {
+        dummy().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_steps() {
+        let mut m = dummy();
+        m.steps_per_round = 7;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_missing_entrypoint() {
+        let mut m = dummy();
+        m.entrypoints.remove("eval");
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_dtype() {
+        let mut m = dummy();
+        m.input_dtype = "f64".into();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn sample_elems_products_shape() {
+        assert_eq!(dummy().sample_elems(), 16);
+    }
+
+    #[test]
+    fn init_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fedless-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = dummy();
+        let vals: Vec<f32> = (0..10).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join(&m.init_file), bytes).unwrap();
+        assert_eq!(m.load_init(&dir).unwrap(), vals);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: loads the AOT-compiled HLO artifacts (built once by
+//! `make artifacts`) and executes them through the PJRT C API. This is
+//! the only boundary between the Rust coordinator and the JAX/Pallas
+//! compute; Python is never on the request path.
+
+pub mod engine;
+pub mod manifest;
+pub mod model;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactIndex, Manifest};
+pub use model::{EvalResult, ModelRuntime, TrainRequest, TrainResult};

@@ -1,0 +1,256 @@
+//! `ModelRuntime` — one model family's four compiled entrypoints plus the
+//! typed argument marshalling between Rust buffers and XLA literals.
+//!
+//! This is the only place where the flat-parameter convention (DESIGN.md
+//! §1) is materialized: params / Adam moments / updates are plain
+//! `Vec<f32>`, features are [`Features`], and each call maps to exactly
+//! one PJRT execution.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail};
+
+use super::engine::{
+    lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, to_vec_f32, Engine, Executable,
+};
+use super::manifest::Manifest;
+use crate::data::Features;
+use crate::Result;
+
+/// Inputs of one local training round (Algorithm 1, Client_Update).
+pub struct TrainRequest<'a> {
+    pub params: &'a [f32],
+    /// Adam first/second moments; zeroed by stateless FaaS clients.
+    pub m: &'a [f32],
+    pub v: &'a [f32],
+    /// Optimizer step counter (f32 in the lowered module).
+    pub t: f32,
+    pub x: &'a Features,
+    pub y: &'a [i32],
+    /// Shuffling / dropout seed for this invocation.
+    pub seed: i32,
+    /// Partial-work cutoff (FedProx toleration); pass
+    /// `manifest.steps_per_round` for full work.
+    pub num_steps: i32,
+    /// FedProx anchor; `Some` routes to the `train_prox` entrypoint.
+    pub global: Option<&'a [f32]>,
+}
+
+/// Outputs of one local training round.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    /// Mean training loss over the executed steps.
+    pub loss: f32,
+}
+
+/// Central evaluation result.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+/// One model family's compiled artifact set.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    train: Executable,
+    train_prox: Executable,
+    eval_exe: Executable,
+    aggregate_exe: Executable,
+    /// Total XLA compile time across the four entrypoints.
+    pub compile_time: Duration,
+}
+
+impl ModelRuntime {
+    /// Load and compile all four entrypoints of `<dir>/<model>.*`.
+    pub fn load(engine: &Engine, dir: &Path, model: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir, model)?;
+        let load = |ep: &str| -> Result<Executable> {
+            engine.load_hlo(&manifest.hlo_path(dir, ep)?)
+        };
+        let train = load("train")?;
+        let train_prox = load("train_prox")?;
+        let eval_exe = load("eval")?;
+        let aggregate_exe = load("aggregate")?;
+        let compile_time = train.compile_time
+            + train_prox.compile_time
+            + eval_exe.compile_time
+            + aggregate_exe.compile_time;
+        Ok(Self {
+            manifest,
+            dir: dir.to_path_buf(),
+            train,
+            train_prox,
+            eval_exe,
+            aggregate_exe,
+            compile_time,
+        })
+    }
+
+    /// The seed-0 initial global model.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        self.manifest.load_init(&self.dir)
+    }
+
+    fn check_params(&self, what: &str, p: &[f32]) -> Result<()> {
+        if p.len() != self.manifest.param_count {
+            bail!(
+                "{}: {what} has {} elements, expected P={}",
+                self.manifest.name,
+                p.len(),
+                self.manifest.param_count
+            );
+        }
+        Ok(())
+    }
+
+    fn features_literal(&self, x: &Features, n: usize) -> Result<xla::Literal> {
+        let mut dims: Vec<i64> = vec![n as i64];
+        dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
+        match (x, self.manifest.input_dtype.as_str()) {
+            (Features::F32(v), "f32") => lit_f32(v, &dims),
+            (Features::I32(v), "i32") => lit_i32(v, &dims),
+            (got, want) => Err(anyhow!(
+                "{}: features dtype {} but manifest wants {want}",
+                self.manifest.name,
+                got.dtype()
+            )),
+        }
+    }
+
+    /// Execute one full local training round (a single PJRT call).
+    /// Returns the result and the device wall time (the FaaS simulator's
+    /// compute-time input).
+    pub fn train_round(&self, req: &TrainRequest) -> Result<(TrainResult, Duration)> {
+        let mf = &self.manifest;
+        self.check_params("params", req.params)?;
+        self.check_params("m", req.m)?;
+        self.check_params("v", req.v)?;
+        if req.y.len() != mf.shard_size {
+            bail!("{}: y has {} labels, want {}", mf.name, req.y.len(), mf.shard_size);
+        }
+        let expect = mf.shard_size * mf.sample_elems();
+        if req.x.len() != expect {
+            bail!("{}: x has {} elements, want {}", mf.name, req.x.len(), expect);
+        }
+        if req.num_steps < 0 || req.num_steps as usize > mf.steps_per_round {
+            bail!(
+                "{}: num_steps {} outside [0, {}]",
+                mf.name,
+                req.num_steps,
+                mf.steps_per_round
+            );
+        }
+
+        let p = mf.param_count as i64;
+        let mut args: Vec<xla::Literal> = vec![
+            lit_f32(req.params, &[p])?,
+            lit_f32(req.m, &[p])?,
+            lit_f32(req.v, &[p])?,
+            scalar_f32(req.t),
+            self.features_literal(req.x, mf.shard_size)?,
+            lit_i32(req.y, &[mf.shard_size as i64])?,
+            scalar_i32(req.seed),
+            scalar_i32(req.num_steps),
+        ];
+        let exe = if let Some(g) = req.global {
+            self.check_params("global", g)?;
+            args.push(lit_f32(g, &[p])?);
+            &self.train_prox
+        } else {
+            &self.train
+        };
+        let (out, wall) = exe.run(&args)?;
+        if out.len() != 5 {
+            bail!("{}: train returned {} outputs, want 5", mf.name, out.len());
+        }
+        Ok((
+            TrainResult {
+                params: to_vec_f32(&out[0])?,
+                m: to_vec_f32(&out[1])?,
+                v: to_vec_f32(&out[2])?,
+                t: to_scalar_f32(&out[3])?,
+                loss: to_scalar_f32(&out[4])?,
+            },
+            wall,
+        ))
+    }
+
+    /// Central federated evaluation on the fixed-size test set.
+    pub fn evaluate(&self, params: &[f32], x: &Features, y: &[i32]) -> Result<EvalResult> {
+        let mf = &self.manifest;
+        self.check_params("params", params)?;
+        if y.len() != mf.eval_size {
+            bail!("{}: eval y has {} labels, want {}", mf.name, y.len(), mf.eval_size);
+        }
+        let args = vec![
+            lit_f32(params, &[mf.param_count as i64])?,
+            self.features_literal(x, mf.eval_size)?,
+            lit_i32(y, &[mf.eval_size as i64])?,
+        ];
+        let (out, _) = self.eval_exe.run(&args)?;
+        if out.len() != 2 {
+            bail!("{}: eval returned {} outputs, want 2", mf.name, out.len());
+        }
+        let loss_sum = to_scalar_f32(&out[0])?;
+        let correct = to_scalar_f32(&out[1])?;
+        Ok(EvalResult {
+            loss: loss_sum / mf.eval_size as f32,
+            accuracy: correct / mf.eval_size as f32,
+        })
+    }
+
+    /// Weighted aggregation through the Pallas kernel. `updates.len()`
+    /// must be <= `k_max`; missing rows are zero-padded (exact, see the
+    /// kernel tests). Weight semantics (Eq. 3 / FedAvg) belong to the
+    /// caller.
+    pub fn aggregate(
+        &self,
+        updates: &[&[f32]],
+        weights: &[f32],
+    ) -> Result<(Vec<f32>, Duration)> {
+        let mf = &self.manifest;
+        if updates.len() != weights.len() {
+            bail!(
+                "{}: {} updates vs {} weights",
+                mf.name,
+                updates.len(),
+                weights.len()
+            );
+        }
+        if updates.is_empty() {
+            bail!("{}: aggregate called with no updates", mf.name);
+        }
+        if updates.len() > mf.k_max {
+            bail!(
+                "{}: {} updates exceed k_max={}",
+                mf.name,
+                updates.len(),
+                mf.k_max
+            );
+        }
+        let p = mf.param_count;
+        let mut stacked = vec![0f32; mf.k_max * p];
+        for (i, u) in updates.iter().enumerate() {
+            self.check_params("update", u)?;
+            stacked[i * p..(i + 1) * p].copy_from_slice(u);
+        }
+        let mut w = vec![0f32; mf.k_max];
+        w[..weights.len()].copy_from_slice(weights);
+        let args = vec![
+            lit_f32(&stacked, &[mf.k_max as i64, p as i64])?,
+            lit_f32(&w, &[mf.k_max as i64])?,
+        ];
+        let (out, wall) = self.aggregate_exe.run(&args)?;
+        if out.len() != 1 {
+            bail!("{}: aggregate returned {} outputs, want 1", mf.name, out.len());
+        }
+        Ok((to_vec_f32(&out[0])?, wall))
+    }
+}

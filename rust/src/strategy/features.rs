@@ -1,0 +1,81 @@
+//! Behavioural feature extraction for FedLesScan's clustering (§V-C):
+//! exponential moving averages over training times and missed-round
+//! ratios.
+
+/// Exponential moving average with smoothing factor `alpha` in (0, 1]:
+/// recent observations get higher weight (the paper's rationale for EMA
+/// over a plain mean, §V-C). Returns 0.0 for an empty series.
+pub fn ema(values: &[f64], alpha: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&alpha));
+    let mut it = values.iter();
+    let Some(&first) = it.next() else {
+        return 0.0;
+    };
+    it.fold(first, |acc, &x| alpha * x + (1.0 - alpha) * acc)
+}
+
+/// The missed-round penalty feature (§V-C): divide each missed round
+/// number by the current round to get ratios, then take their EMA. As
+/// training progresses the ratio of an old miss shrinks, so the penalty
+/// decays exactly as the paper requires; recent misses (ratio near 1)
+/// dominate through the EMA recency weighting.
+pub fn missed_round_ema(missed_rounds: &[u32], current_round: u32, alpha: f64) -> f64 {
+    if current_round == 0 {
+        return 0.0;
+    }
+    let ratios: Vec<f64> = missed_rounds
+        .iter()
+        .map(|&r| r as f64 / current_round as f64)
+        .collect();
+    ema(&ratios, alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_empty_is_zero() {
+        assert_eq!(ema(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn ema_single_value_is_value() {
+        assert_eq!(ema(&[3.5], 0.5), 3.5);
+    }
+
+    #[test]
+    fn ema_weights_recent_higher() {
+        // rising series: EMA must sit above the plain mean's distance to
+        // the last value, i.e. closer to the recent observations
+        let rising = [1.0, 2.0, 3.0, 10.0];
+        let mean = rising.iter().sum::<f64>() / 4.0;
+        assert!(ema(&rising, 0.5) > mean);
+    }
+
+    #[test]
+    fn ema_alpha_one_is_last_value() {
+        assert_eq!(ema(&[1.0, 2.0, 9.0], 1.0), 9.0);
+    }
+
+    #[test]
+    fn missed_round_penalty_decays_with_progress() {
+        let missed = [2u32, 4];
+        let early = missed_round_ema(&missed, 5, 0.5);
+        let late = missed_round_ema(&missed, 50, 0.5);
+        assert!(late < early);
+        assert!(late > 0.0);
+    }
+
+    #[test]
+    fn recent_miss_penalized_more_than_old() {
+        let old_miss = missed_round_ema(&[1], 10, 0.5);
+        let new_miss = missed_round_ema(&[9], 10, 0.5);
+        assert!(new_miss > old_miss);
+    }
+
+    #[test]
+    fn no_misses_no_penalty() {
+        assert_eq!(missed_round_ema(&[], 10, 0.5), 0.0);
+    }
+}

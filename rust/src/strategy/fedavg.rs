@@ -1,0 +1,50 @@
+//! FedAvg (McMahan et al., 2017): uniform random client selection and
+//! synchronous cardinality-weighted averaging. The paper's first
+//! baseline.
+
+use super::{random_sample, Aggregation, SelectionContext, Strategy};
+use crate::util::Rng;
+use crate::ClientId;
+
+pub struct FedAvg;
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        random_sample(ctx.all_clients, ctx.clients_per_round, rng)
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Synchronous
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clientdb::HistoryStore;
+    
+    #[test]
+    fn selects_k_distinct_clients() {
+        let clients: Vec<ClientId> = (0..20).collect();
+        let hist = HistoryStore::new();
+        let ctx = SelectionContext {
+            round: 0,
+            max_rounds: 10,
+            clients_per_round: 5,
+            all_clients: &clients,
+            history: &hist,
+        };
+        let mut s = FedAvg;
+        let mut rng = Rng::seed_from_u64(0);
+        let sel = s.select(&ctx, &mut rng);
+        assert_eq!(sel.len(), 5);
+        let mut d = sel.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 5);
+    }
+}

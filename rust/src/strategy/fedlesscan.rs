@@ -1,0 +1,319 @@
+//! FedLesScan (the paper's contribution, §V): clustering-based
+//! semi-asynchronous client selection + staleness-aware aggregation.
+//!
+//! Selection (Algorithm 2):
+//! 1. partition clients into **rookies** (never invoked), **stragglers**
+//!    (cooldown > 0, Eq. 1) and **participants** (the rest);
+//! 2. rookies first — everyone gets a chance to contribute and to
+//!    produce behavioural data;
+//! 3. participants are clustered with DBSCAN over
+//!    `(trainingEma, missedRoundEma · maxTrainingTime)` — both axes in
+//!    seconds so the Euclidean ε is meaningful; ε is grid-searched by
+//!    Calinski–Harabasz score (§V-C); outliers form one extra cluster;
+//! 4. clusters are sorted by ascending mean `totalEma` (Eq. 2) and
+//!    sampled starting from the cluster matching the training progress
+//!    (`round / maxRounds`), rotating onward; within a cluster the
+//!    least-invoked clients go first (fair selection);
+//! 5. stragglers back-fill only if tiers 1+2 cannot cover the round.
+//!
+//! Aggregation: staleness-aware Eq. 3 with the τ cutoff (§V-D).
+
+use super::{ema, missed_round_ema, random_sample, Aggregation, SelectionContext, Strategy};
+use crate::clustering::cluster_clients;
+use crate::util::Rng;
+use crate::ClientId;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FedLesScanParams {
+    /// EMA smoothing factor for both behaviour features.
+    pub ema_alpha: f64,
+    /// DBSCAN minimum neighbourhood size.
+    pub min_pts: usize,
+    /// Maximum accepted update age (Eq. 3 cutoff); the paper uses 2.
+    pub tau: u32,
+    /// Normalize Eq. 3 weights to sum to one (see paramsvr docs).
+    pub normalize: bool,
+}
+
+impl Default for FedLesScanParams {
+    fn default() -> Self {
+        Self {
+            ema_alpha: 0.5,
+            min_pts: 2,
+            tau: 2,
+            normalize: true,
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct FedLesScan {
+    pub params: FedLesScanParams,
+}
+
+impl FedLesScan {
+    pub fn new(params: FedLesScanParams) -> Self {
+        Self { params }
+    }
+}
+
+impl Strategy for FedLesScan {
+    fn name(&self) -> &'static str {
+        "fedlesscan"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        let k = ctx.clients_per_round;
+        let a = self.params.ema_alpha;
+
+        // ---- tier partitioning (§V-A) --------------------------------
+        let mut rookies = Vec::new();
+        let mut participants = Vec::new();
+        let mut stragglers = Vec::new();
+        for &c in ctx.all_clients {
+            let h = ctx.history.get(c);
+            if h.is_rookie() {
+                rookies.push(c);
+            } else if h.is_straggler() {
+                stragglers.push(c);
+            } else {
+                participants.push(c);
+            }
+        }
+
+        // ---- Algorithm 2, lines 3-5: rookies cover the round ---------
+        if rookies.len() >= k {
+            return random_sample(&rookies, k, rng);
+        }
+        let mut selected = rookies;
+        let need = k - selected.len();
+        let n_cluster = need.min(participants.len());
+        let n_straggler = (need - n_cluster).min(stragglers.len());
+
+        // ---- lines 6-8: straggler back-fill ---------------------------
+        let straggler_picks = random_sample(&stragglers, n_straggler, rng);
+
+        // ---- lines 9-17: cluster the participants ---------------------
+        if n_cluster > 0 {
+            // behaviour features
+            let feats: Vec<(f64, f64)> = participants
+                .iter()
+                .map(|&c| {
+                    let h = ctx.history.get(c);
+                    let t_ema = ema(&h.training_times, a);
+                    let m_ema = missed_round_ema(&h.missed_rounds, ctx.round.max(1), a);
+                    (t_ema, m_ema)
+                })
+                .collect();
+            let max_t = feats
+                .iter()
+                .map(|f| f.0)
+                .fold(0.0f64, f64::max)
+                .max(1e-9);
+            let points: Vec<Vec<f64>> = feats
+                .iter()
+                .map(|&(t, m)| vec![t, m * max_t])
+                .collect();
+            let (labels, n_clusters) = cluster_clients(&points, self.params.min_pts);
+
+            // Eq. 2 totalEma per participant; cluster order = ascending
+            // mean totalEma (fast clusters first).
+            let total_ema: Vec<f64> = feats.iter().map(|&(t, m)| t + m * max_t).collect();
+            let mut cluster_sum = vec![0.0f64; n_clusters];
+            let mut cluster_cnt = vec![0usize; n_clusters];
+            for (i, &l) in labels.iter().enumerate() {
+                cluster_sum[l as usize] += total_ema[i];
+                cluster_cnt[l as usize] += 1;
+            }
+            let mut order: Vec<usize> = (0..n_clusters).collect();
+            order.sort_by(|&x, &y| {
+                let mx = cluster_sum[x] / cluster_cnt[x].max(1) as f64;
+                let my = cluster_sum[y] / cluster_cnt[y].max(1) as f64;
+                mx.partial_cmp(&my).unwrap()
+            });
+
+            // members per cluster, least-invoked first (fairness)
+            let mut members: Vec<Vec<ClientId>> = vec![Vec::new(); n_clusters];
+            for (i, &l) in labels.iter().enumerate() {
+                members[l as usize].push(participants[i]);
+            }
+            for m in members.iter_mut() {
+                m.sort_by_key(|&c| (ctx.history.get(c).invocations, c));
+            }
+
+            // rotation start from training progress (§V-C)
+            let progress = if ctx.max_rounds == 0 {
+                0.0
+            } else {
+                ctx.round as f64 / ctx.max_rounds as f64
+            };
+            let start = ((progress * n_clusters as f64) as usize).min(n_clusters - 1);
+
+            let mut taken = 0usize;
+            'outer: for step in 0..n_clusters {
+                let cl = order[(start + step) % n_clusters];
+                for &c in &members[cl] {
+                    selected.push(c);
+                    taken += 1;
+                    if taken == n_cluster {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+
+        selected.extend(straggler_picks);
+        selected.truncate(k);
+        selected
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::StalenessAware {
+            tau: self.params.tau,
+            normalize: self.params.normalize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clientdb::HistoryStore;
+    
+    fn ctx<'a>(
+        clients: &'a [ClientId],
+        history: &'a HistoryStore,
+        round: u32,
+        k: usize,
+    ) -> SelectionContext<'a> {
+        SelectionContext {
+            round,
+            max_rounds: 20,
+            clients_per_round: k,
+            all_clients: clients,
+            history,
+        }
+    }
+
+    #[test]
+    fn all_rookies_random_sample() {
+        let clients: Vec<ClientId> = (0..30).collect();
+        let hist = HistoryStore::new();
+        let mut s = FedLesScan::default();
+        let mut rng = Rng::seed_from_u64(0);
+        let sel = s.select(&ctx(&clients, &hist, 0, 10), &mut rng);
+        assert_eq!(sel.len(), 10);
+    }
+
+    #[test]
+    fn rookies_prioritized_before_participants() {
+        let clients: Vec<ClientId> = (0..10).collect();
+        let mut hist = HistoryStore::new();
+        // clients 0..7 have history; 8, 9 are rookies
+        for c in 0..8 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 10.0 + c as f64);
+        }
+        let mut s = FedLesScan::default();
+        let mut rng = Rng::seed_from_u64(1);
+        let sel = s.select(&ctx(&clients, &hist, 1, 4), &mut rng);
+        assert!(sel.contains(&8));
+        assert!(sel.contains(&9));
+        assert_eq!(sel.len(), 4);
+    }
+
+    #[test]
+    fn stragglers_only_backfill() {
+        let clients: Vec<ClientId> = (0..6).collect();
+        let mut hist = HistoryStore::new();
+        // 0..4 reliable participants, 4 and 5 stragglers
+        for c in 0..4 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 10.0);
+        }
+        for c in 4..6 {
+            hist.record_invocation(c);
+            hist.record_failure(c, 0);
+        }
+        let mut s = FedLesScan::default();
+        let mut rng = Rng::seed_from_u64(2);
+        // k=4 covered entirely by participants -> no stragglers
+        let sel = s.select(&ctx(&clients, &hist, 1, 4), &mut rng);
+        assert!(!sel.contains(&4) && !sel.contains(&5), "{sel:?}");
+        // k=6 forces straggler back-fill
+        let sel = s.select(&ctx(&clients, &hist, 1, 6), &mut rng);
+        assert!(sel.contains(&4) && sel.contains(&5));
+    }
+
+    #[test]
+    fn fast_cluster_preferred_early() {
+        let clients: Vec<ClientId> = (0..8).collect();
+        let mut hist = HistoryStore::new();
+        // two clear behaviour clusters: fast (~5 s) and slow (~50 s)
+        for c in 0..4 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 5.0 + 0.01 * c as f64);
+        }
+        for c in 4..8 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 50.0 + 0.01 * c as f64);
+        }
+        let mut s = FedLesScan::default();
+        let mut rng = Rng::seed_from_u64(3);
+        // round 0 of 20: progress 0 -> start from the fastest cluster
+        let sel = s.select(&ctx(&clients, &hist, 0, 4), &mut rng);
+        let fast: usize = sel.iter().filter(|&&c| c < 4).count();
+        assert_eq!(fast, 4, "expected the fast cluster, got {sel:?}");
+    }
+
+    #[test]
+    fn selection_size_and_uniqueness_invariants() {
+        let clients: Vec<ClientId> = (0..25).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..15 {
+            hist.record_invocation(c);
+            if c % 4 == 0 {
+                hist.record_failure(c, 1);
+            } else {
+                hist.record_success(c, 1, 5.0 + c as f64);
+            }
+        }
+        let mut s = FedLesScan::default();
+        let mut rng = Rng::seed_from_u64(4);
+        for round in 0..10 {
+            let sel = s.select(&ctx(&clients, &hist, round, 12), &mut rng);
+            assert!(sel.len() <= 12);
+            let mut d = sel.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), sel.len(), "duplicates in {sel:?}");
+            assert!(sel.iter().all(|c| clients.contains(c)));
+        }
+    }
+
+    #[test]
+    fn least_invoked_first_within_cluster() {
+        let clients: Vec<ClientId> = (0..4).collect();
+        let mut hist = HistoryStore::new();
+        // identical behaviour -> one cluster; invocation counts differ
+        for c in 0..4 {
+            for _ in 0..(c + 1) {
+                hist.record_invocation(c);
+            }
+            hist.record_success(c, 0, 10.0);
+        }
+        let mut s = FedLesScan::default();
+        let mut rng = Rng::seed_from_u64(5);
+        let sel = s.select(&ctx(&clients, &hist, 0, 2), &mut rng);
+        assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn staleness_aware_aggregation_configured() {
+        let s = FedLesScan::default();
+        assert_eq!(
+            s.aggregation(),
+            Aggregation::StalenessAware { tau: 2, normalize: true }
+        );
+    }
+}

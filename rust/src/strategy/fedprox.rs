@@ -1,0 +1,73 @@
+//! FedProx (Li et al., 2018): FedAvg-style random selection plus
+//! (i) a proximal term mu/2 ||w - w_global||^2 in the client objective
+//! (lowered into the `train_prox` HLO entrypoint) and (ii) partial-work
+//! toleration — clients may perform a variable fraction of the local
+//! workload (§III-B). The paper's second baseline.
+
+use super::{random_sample, Aggregation, SelectionContext, Strategy};
+use crate::util::Rng;
+use crate::ClientId;
+
+pub struct FedProx {
+    /// Minimum fraction of the local workload a client may be asked to
+    /// run (gamma-inexactness knob; 1.0 disables partial work).
+    pub min_work: f64,
+}
+
+impl Default for FedProx {
+    fn default() -> Self {
+        Self { min_work: 0.5 }
+    }
+}
+
+impl Strategy for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        random_sample(ctx.all_clients, ctx.clients_per_round, rng)
+    }
+
+    fn uses_prox(&self) -> bool {
+        true
+    }
+
+    fn work_fraction(&self, _client: ClientId, rng: &mut Rng) -> f64 {
+        if self.min_work >= 1.0 {
+            return 1.0;
+        }
+        rng.range_f64(self.min_work, 1.0)
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Synchronous
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    
+    #[test]
+    fn work_fraction_in_range() {
+        let s = FedProx::default();
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..100 {
+            let f = s.work_fraction(0, &mut rng);
+            assert!((0.5..=1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn full_work_when_disabled() {
+        let s = FedProx { min_work: 1.0 };
+        let mut rng = Rng::seed_from_u64(3);
+        assert_eq!(s.work_fraction(0, &mut rng), 1.0);
+    }
+
+    #[test]
+    fn uses_prox_entrypoint() {
+        assert!(FedProx::default().uses_prox());
+    }
+}

@@ -1,0 +1,159 @@
+//! Training strategies: the paper's contribution (FedLesScan) and the
+//! baselines it is evaluated against (FedAvg, FedProx), plus a SAFA-like
+//! greedy-fast selector used in the bias ablation.
+//!
+//! A strategy owns two decisions (§IV Strategy Manager):
+//! * **client selection** for each round, and
+//! * the **aggregation scheme** (synchronous FedAvg weights vs the
+//!   staleness-aware Eq. 3 scheme).
+
+mod features;
+mod fedavg;
+mod fedlesscan;
+mod fedprox;
+mod safa;
+
+pub use features::{ema, missed_round_ema};
+pub use fedavg::FedAvg;
+pub use fedlesscan::{FedLesScan, FedLesScanParams};
+pub use fedprox::FedProx;
+pub use safa::SafaLite;
+
+use crate::clientdb::HistoryStore;
+use crate::util::Rng;
+use crate::ClientId;
+
+/// Everything a strategy may look at when selecting clients.
+pub struct SelectionContext<'a> {
+    /// Current round (0-based).
+    pub round: u32,
+    pub max_rounds: u32,
+    /// Number of clients to select (nClientsPerRound).
+    pub clients_per_round: usize,
+    pub all_clients: &'a [ClientId],
+    pub history: &'a HistoryStore,
+}
+
+/// Aggregation scheme selected by the strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Aggregation {
+    /// Wait for on-time updates only; weights are n_k/n (FedAvg).
+    Synchronous,
+    /// Eq. 3: fold in late updates dampened by t_k/t, discard age >= tau.
+    StalenessAware { tau: u32, normalize: bool },
+}
+
+/// A federated training strategy.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Pick the clients to invoke this round.
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId>;
+
+    /// Route client training through the FedProx proximal entrypoint?
+    fn uses_prox(&self) -> bool {
+        false
+    }
+
+    /// FedProx partial-work toleration (§III-B): fraction of the full
+    /// local workload a client is asked to perform this round.
+    fn work_fraction(&self, _client: ClientId, _rng: &mut Rng) -> f64 {
+        1.0
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Synchronous
+    }
+}
+
+/// CLI-facing strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Fedavg,
+    Fedprox,
+    Fedlesscan,
+    Safalite,
+}
+
+impl StrategyKind {
+    pub fn build(self) -> Box<dyn Strategy> {
+        match self {
+            StrategyKind::Fedavg => Box::new(FedAvg),
+            StrategyKind::Fedprox => Box::new(FedProx::default()),
+            StrategyKind::Fedlesscan => Box::new(FedLesScan::default()),
+            StrategyKind::Safalite => Box::new(SafaLite),
+        }
+    }
+
+    pub fn all() -> [StrategyKind; 3] {
+        // the paper's evaluated trio (SAFA-lite is ablation-only)
+        [
+            StrategyKind::Fedavg,
+            StrategyKind::Fedprox,
+            StrategyKind::Fedlesscan,
+        ]
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StrategyKind::Fedavg => "fedavg",
+            StrategyKind::Fedprox => "fedprox",
+            StrategyKind::Fedlesscan => "fedlesscan",
+            StrategyKind::Safalite => "safalite",
+        }
+    }
+}
+
+impl std::str::FromStr for StrategyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Ok(StrategyKind::Fedavg),
+            "fedprox" => Ok(StrategyKind::Fedprox),
+            "fedlesscan" => Ok(StrategyKind::Fedlesscan),
+            "safalite" | "safa" => Ok(StrategyKind::Safalite),
+            other => anyhow::bail!(
+                "unknown strategy {other:?}; expected fedavg|fedprox|fedlesscan|safalite"
+            ),
+        }
+    }
+}
+
+/// Shared helper: uniform random sample of `k` distinct clients.
+pub(crate) fn random_sample(clients: &[ClientId], k: usize, rng: &mut Rng) -> Vec<ClientId> {
+    rng.sample(clients, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_sample_is_distinct_and_bounded() {
+        let clients: Vec<ClientId> = (0..10).collect();
+        let mut rng = Rng::seed_from_u64(1);
+        let s = random_sample(&clients, 4, &mut rng);
+        assert_eq!(s.len(), 4);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 4);
+        // k larger than the pool: everything
+        let s = random_sample(&clients, 99, &mut rng);
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn strategy_kind_builds() {
+        for k in [
+            StrategyKind::Fedavg,
+            StrategyKind::Fedprox,
+            StrategyKind::Fedlesscan,
+            StrategyKind::Safalite,
+        ] {
+            let s = k.build();
+            assert_eq!(s.name(), k.as_str());
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! SAFA-lite: a greedy fastest-first selector in the spirit of SAFA
+//! (Wu et al. [26]) used for the bias ablation (§VI-A5 takes both the
+//! EUR and Bias metrics from SAFA).
+//!
+//! Full SAFA invokes *all* clients every round and keeps the fastest
+//! responses — prohibitive in a pay-per-invocation FaaS setting (§III-B).
+//! This lite variant keeps the "prefer the fastest known clients"
+//! behaviour at a fixed invocation budget: rookies first (to learn their
+//! speed), then ascending EMA training time. It deliberately has *no*
+//! fairness mechanism, so its Bias is high — the contrast FedLesScan's
+//! violin plots are judged against.
+
+use super::{ema, random_sample, Aggregation, SelectionContext, Strategy};
+use crate::util::Rng;
+use crate::ClientId;
+
+pub struct SafaLite;
+
+impl Strategy for SafaLite {
+    fn name(&self) -> &'static str {
+        "safalite"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        let k = ctx.clients_per_round;
+        let mut rookies = Vec::new();
+        let mut known: Vec<(f64, ClientId)> = Vec::new();
+        for &c in ctx.all_clients {
+            let h = ctx.history.get(c);
+            if h.is_rookie() {
+                rookies.push(c);
+            } else {
+                known.push((ema(&h.training_times, 0.5), c));
+            }
+        }
+        if rookies.len() >= k {
+            return random_sample(&rookies, k, rng);
+        }
+        let mut selected = rookies;
+        known.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        for (_, c) in known {
+            if selected.len() == k {
+                break;
+            }
+            selected.push(c);
+        }
+        selected
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::StalenessAware { tau: 2, normalize: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clientdb::HistoryStore;
+    
+    #[test]
+    fn picks_fastest_known_clients() {
+        let clients: Vec<ClientId> = (0..6).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..6 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, (6 - c) as f64 * 10.0); // 5 is fastest
+        }
+        let ctx = SelectionContext {
+            round: 1,
+            max_rounds: 10,
+            clients_per_round: 2,
+            all_clients: &clients,
+            history: &hist,
+        };
+        let mut s = SafaLite;
+        let mut rng = Rng::seed_from_u64(0);
+        let sel = s.select(&ctx, &mut rng);
+        assert_eq!(sel, vec![5, 4]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Micro-benchmark harness (offline substrate for `criterion`).
+//!
+//! Warm-up + fixed-iteration-count timing with mean / p50 / p95 / p99
+//! reporting and a stable text output format that the perf logs in
+//! EXPERIMENTS.md §Perf reference.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warm-up runs. The
+/// closure should return something observable to keep the optimizer
+/// honest; we black-box it via `std::hint::black_box`.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: pick(0.50),
+        p95: pick(0.95),
+        p99: pick(0.99),
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    };
+    stats.print();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench("noop-spin", 2, 50, || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.iters, 50);
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny command-line argument parser (offline substrate for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and an auto-generated usage dump.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+/// Parse raw args. `bool_flags` lists option names that take no value.
+pub fn parse(raw: impl Iterator<Item = String>, bool_flags: &[&str]) -> Result<Args> {
+    let mut out = Args::default();
+    let mut raw = raw.peekable();
+    while let Some(a) = raw.next() {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if bool_flags.contains(&stripped) {
+                out.flags.insert(stripped.to_string(), "true".to_string());
+            } else {
+                let v = raw
+                    .next()
+                    .ok_or_else(|| anyhow!("--{stripped} expects a value"))?;
+                out.flags.insert(stripped.to_string(), v);
+            }
+        } else if a == "-v" {
+            out.flags.insert("verbose".to_string(), "true".to_string());
+        } else if a.starts_with('-') && a.len() > 1 {
+            bail!("unknown short option {a}");
+        } else {
+            out.positional.push(a);
+        }
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().with_context(|| format!("parsing --{key}={v}")),
+        }
+    }
+
+    pub fn get_parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(
+                v.parse::<T>().with_context(|| format!("parsing --{key}={v}"))?,
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        parse(v.iter().map(|s| s.to_string()), &["verbose", "quick"]).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = args(&["train", "--rounds", "10", "--seed=7", "--verbose", "extra"]);
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get_parse::<u32>("rounds", 0).unwrap(), 10);
+        assert_eq!(a.get_parse::<u64>("seed", 0).unwrap(), 7);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quick"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.get_str("dataset", "mnist"), "mnist");
+        assert_eq!(a.get_parse::<u32>("rounds", 20).unwrap(), 20);
+        assert_eq!(a.get_parse_opt::<u32>("rounds").unwrap(), None);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(["--rounds".to_string()].into_iter(), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = args(&["--rounds", "ten"]);
+        assert!(a.get_parse::<u32>("rounds", 0).is_err());
+    }
+}

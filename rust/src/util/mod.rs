@@ -1,0 +1,13 @@
+//! Offline substrates for the usual ecosystem crates (this build
+//! environment has no network access to crates.io): deterministic RNG
+//! (`rand`), JSON (`serde_json`), CLI parsing (`clap`) and a bench
+//! harness (`criterion`). Each is a small, tested, self-contained module
+//! implementing exactly what this crate needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

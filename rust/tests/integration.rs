@@ -1,0 +1,395 @@
+//! Full-stack integration tests: real AOT artifacts through the PJRT
+//! runtime, the FaaS simulator and the strategies.
+//!
+//! These need `make artifacts` to have produced the default-scale
+//! artifact set. If `artifacts/` is missing the tests are skipped with a
+//! clear message rather than failing (CI runs `make test`, which builds
+//! artifacts first).
+
+use std::path::PathBuf;
+
+use fedless::config::{ExperimentConfig, Scenario};
+use fedless::coordinator::Controller;
+use fedless::data::{Features, SynthDataset};
+use fedless::runtime::{Engine, ModelRuntime, TrainRequest};
+use fedless::strategy::StrategyKind;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("mnist.manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+/// Engine + compiled mnist runtime. PJRT handles are not Send/Sync, so
+/// each test compiles its own copy (a few seconds; tests run in
+/// parallel threads).
+fn mnist_runtime() -> Option<ModelRuntime> {
+    let dir = artifacts_dir()?;
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    Some(ModelRuntime::load(&engine, &dir, "mnist").expect("load mnist artifacts"))
+}
+
+fn quick_cfg(strategy: StrategyKind, scenario: Scenario) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset("mnist");
+    cfg.strategy = strategy;
+    cfg.scenario = scenario;
+    cfg.rounds = 5;
+    cfg.n_clients = 16;
+    cfg.clients_per_round = 6;
+    cfg.seed = 7;
+    cfg
+}
+
+#[test]
+fn train_round_decreases_loss_and_changes_params() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mf = &rt.manifest;
+    let data = SynthDataset::from_manifest(mf, 4, 3, Default::default()).unwrap();
+    let shard = data.client_data(0);
+    let p0 = rt.init_params().unwrap();
+    let zeros = vec![0f32; p0.len()];
+
+    let run = |params: &[f32], seed: i32| {
+        let req = TrainRequest {
+            params,
+            m: &zeros,
+            v: &zeros,
+            t: 0.0,
+            x: &shard.x,
+            y: &shard.y,
+            seed,
+            num_steps: mf.steps_per_round as i32,
+            global: None,
+        };
+        rt.train_round(&req).unwrap().0
+    };
+    let r1 = run(&p0, 1);
+    assert!(r1.loss.is_finite() && r1.loss > 0.0);
+    assert_ne!(r1.params, p0);
+    assert_eq!(r1.t, mf.steps_per_round as f32);
+    let r2 = run(&r1.params, 2);
+    assert!(
+        r2.loss < r1.loss,
+        "second round loss {} !< first {}",
+        r2.loss,
+        r1.loss
+    );
+}
+
+#[test]
+fn prox_entrypoint_stays_closer_to_global() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mf = &rt.manifest;
+    let data = SynthDataset::from_manifest(mf, 4, 5, Default::default()).unwrap();
+    let shard = data.client_data(1);
+    let p0 = rt.init_params().unwrap();
+    let zeros = vec![0f32; p0.len()];
+    let anchor = p0.clone();
+    fn req<'a>(
+        p0: &'a [f32],
+        zeros: &'a [f32],
+        shard: &'a fedless::data::ClientData,
+        steps: i32,
+        global: Option<&'a [f32]>,
+    ) -> TrainRequest<'a> {
+        TrainRequest {
+            params: p0,
+            m: zeros,
+            v: zeros,
+            t: 0.0,
+            x: &shard.x,
+            y: &shard.y,
+            seed: 11,
+            num_steps: steps,
+            global,
+        }
+    }
+    let steps = mf.steps_per_round as i32;
+    let plain = rt
+        .train_round(&req(&p0, &zeros, &shard, steps, None))
+        .unwrap()
+        .0;
+    let prox = rt
+        .train_round(&req(&p0, &zeros, &shard, steps, Some(anchor.as_slice())))
+        .unwrap()
+        .0;
+    let drift = |p: &[f32]| -> f64 {
+        p.iter()
+            .zip(&p0)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    assert!(drift(&prox.params) < drift(&plain.params));
+}
+
+#[test]
+fn partial_work_masks_steps() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mf = &rt.manifest;
+    let data = SynthDataset::from_manifest(mf, 4, 9, Default::default()).unwrap();
+    let shard = data.client_data(2);
+    let p0 = rt.init_params().unwrap();
+    let zeros = vec![0f32; p0.len()];
+    let run = |steps: i32| {
+        rt.train_round(&TrainRequest {
+            params: &p0,
+            m: &zeros,
+            v: &zeros,
+            t: 0.0,
+            x: &shard.x,
+            y: &shard.y,
+            seed: 4,
+            num_steps: steps,
+            global: None,
+        })
+    };
+    let half = run((mf.steps_per_round / 2) as i32).unwrap().0;
+    assert_eq!(half.t, (mf.steps_per_round / 2) as f32);
+    // out-of-range num_steps rejected
+    assert!(run((mf.steps_per_round + 1) as i32).is_err());
+}
+
+#[test]
+fn aggregate_kernel_matches_cpu_reference() {
+    let Some(rt) = mnist_runtime() else { return };
+    let p = rt.manifest.param_count;
+    let u1: Vec<f32> = (0..p).map(|i| (i % 13) as f32 * 0.01).collect();
+    let u2: Vec<f32> = (0..p).map(|i| (i % 7) as f32 * -0.02).collect();
+    let w = [0.3f32, 0.7];
+    let (agg, _) = rt.aggregate(&[&u1, &u2], &w).unwrap();
+    for i in (0..p).step_by(997) {
+        let want = 0.3 * u1[i] + 0.7 * u2[i];
+        assert!(
+            (agg[i] - want).abs() < 1e-5,
+            "elem {i}: {} vs {}",
+            agg[i],
+            want
+        );
+    }
+    // k_max overflow rejected
+    let too_many: Vec<&[f32]> = (0..rt.manifest.k_max + 1).map(|_| &u1[..]).collect();
+    let w_bad = vec![0.0f32; rt.manifest.k_max + 1];
+    assert!(rt.aggregate(&too_many, &w_bad).is_err());
+}
+
+#[test]
+fn evaluate_bounds_and_shape_checks() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mf = &rt.manifest;
+    let data = SynthDataset::from_manifest(mf, 4, 1, Default::default()).unwrap();
+    let eval = data.eval_data();
+    let p0 = rt.init_params().unwrap();
+    let r = rt.evaluate(&p0, &eval.x, &eval.y).unwrap();
+    assert!((0.0..=1.0).contains(&r.accuracy));
+    assert!(r.loss > 0.0);
+    // wrong eval length rejected
+    let bad_y = vec![0i32; 3];
+    assert!(rt.evaluate(&p0, &eval.x, &bad_y).is_err());
+    // wrong dtype rejected
+    let bad_x = Features::I32(vec![0; mf.eval_size * mf.sample_elems()]);
+    assert!(rt.evaluate(&p0, &bad_x, &eval.y).is_err());
+}
+
+#[test]
+fn full_experiment_standard_has_high_eur_and_learns() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Standard);
+    cfg.rounds = 6;
+    let mut ctl = Controller::new(cfg, &rt).unwrap();
+    let res = ctl.run().unwrap();
+    assert_eq!(res.rounds.len(), 6);
+    assert!(res.mean_eur() > 0.85, "standard EUR {}", res.mean_eur());
+    assert!(
+        res.final_accuracy > 0.25,
+        "no learning: acc {}",
+        res.final_accuracy
+    );
+    assert!(res.total_cost > 0.0);
+    assert!(res.total_time_s > 0.0);
+}
+
+#[test]
+fn straggler_scenario_reduces_fedavg_eur() {
+    let Some(rt) = mnist_runtime() else { return };
+    let run = |scenario| {
+        let mut ctl = Controller::new(quick_cfg(StrategyKind::Fedavg, scenario), &rt).unwrap();
+        ctl.run().unwrap()
+    };
+    let std = run(Scenario::Standard);
+    let strag = run(Scenario::Straggler(50));
+    assert!(
+        strag.mean_eur() < std.mean_eur() - 0.2,
+        "straggler EUR {} vs standard {}",
+        strag.mean_eur(),
+        std.mean_eur()
+    );
+}
+
+#[test]
+fn fedlesscan_beats_fedavg_eur_under_stragglers() {
+    let Some(rt) = mnist_runtime() else { return };
+    let run = |strategy| {
+        let mut cfg = quick_cfg(strategy, Scenario::Straggler(50));
+        cfg.rounds = 8;
+        let mut ctl = Controller::new(cfg, &rt).unwrap();
+        ctl.run().unwrap()
+    };
+    let avg = run(StrategyKind::Fedavg);
+    let scan = run(StrategyKind::Fedlesscan);
+    assert!(
+        scan.mean_eur() > avg.mean_eur(),
+        "fedlesscan EUR {} !> fedavg {}",
+        scan.mean_eur(),
+        avg.mean_eur()
+    );
+}
+
+#[test]
+fn stale_updates_are_applied_by_fedlesscan() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(50));
+    cfg.straggler_slow_frac = 1.0; // all forced stragglers are slow
+    cfg.rounds = 8;
+    let mut ctl = Controller::new(cfg, &rt).unwrap();
+    let res = ctl.run().unwrap();
+    let stale_total: usize = res.rounds.iter().map(|r| r.stale_applied).sum();
+    assert!(stale_total > 0, "no stale updates were ever folded in");
+}
+
+#[test]
+fn experiment_is_deterministic_in_seed() {
+    let Some(rt) = mnist_runtime() else { return };
+    let run = || {
+        let mut ctl =
+            Controller::new(quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(30)), &rt)
+                .unwrap();
+        ctl.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.total_cost, b.total_cost);
+    assert_eq!(a.total_time_s, b.total_time_s);
+    let sel_a: Vec<_> = a.rounds.iter().map(|r| r.selected.clone()).collect();
+    let sel_b: Vec<_> = b.rounds.iter().map(|r| r.selected.clone()).collect();
+    assert_eq!(sel_a, sel_b);
+}
+
+#[test]
+fn history_reflects_algorithm_one() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mut cfg = quick_cfg(StrategyKind::Fedavg, Scenario::Straggler(70));
+    cfg.rounds = 6;
+    let mut ctl = Controller::new(cfg, &rt).unwrap();
+    let res = ctl.run().unwrap();
+    let hist = ctl.history();
+    // every selected client is recorded as invoked
+    let mut invoked: Vec<usize> = res.invocations.keys().copied().collect();
+    invoked.sort_unstable();
+    for c in invoked {
+        assert!(hist.get_ref(c).is_some());
+        assert!(hist.get(c).invocations >= 1);
+    }
+    // with 70% stragglers someone must have missed rounds
+    let missed_any = hist.iter().any(|(_, h)| !h.missed_rounds.is_empty());
+    assert!(missed_any);
+}
+
+#[test]
+fn result_files_round_trip() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mut ctl =
+        Controller::new(quick_cfg(StrategyKind::Fedprox, Scenario::Standard), &rt).unwrap();
+    let res = ctl.run().unwrap();
+    let dir = std::env::temp_dir().join(format!("fedless-int-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("t.csv");
+    let json = dir.join("t.json");
+    res.write_timeline_csv(&csv).unwrap();
+    res.write_json(&json).unwrap();
+    let csv_text = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(csv_text.lines().count(), 1 + res.rounds.len());
+    let parsed = fedless::util::Json::parse_file(&json).unwrap();
+    assert_eq!(parsed.get("dataset").unwrap().as_str().unwrap(), "mnist");
+    assert_eq!(
+        parsed.get("rounds").unwrap().as_arr().unwrap().len(),
+        res.rounds.len()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn token_model_runtime_works() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !dir.join("shakespeare.manifest.json").exists() {
+        eprintln!("SKIP: no shakespeare artifacts");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&engine, &dir, "shakespeare").unwrap();
+    let mf = &rt.manifest;
+    assert_eq!(mf.input_dtype, "i32");
+    let data = SynthDataset::from_manifest(mf, 4, 2, Default::default()).unwrap();
+    let shard = data.client_data(0);
+    let p0 = rt.init_params().unwrap();
+    let zeros = vec![0f32; p0.len()];
+    let (res, _) = rt
+        .train_round(&TrainRequest {
+            params: &p0,
+            m: &zeros,
+            v: &zeros,
+            t: 0.0,
+            x: &shard.x,
+            y: &shard.y,
+            seed: 3,
+            num_steps: mf.steps_per_round as i32,
+            global: None,
+        })
+        .unwrap();
+    assert!(res.loss.is_finite());
+    assert_ne!(res.params, p0);
+}
+
+#[test]
+fn adaptive_clients_overprovisions_under_stragglers() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mut cfg = quick_cfg(StrategyKind::Fedavg, Scenario::Straggler(50));
+    cfg.adaptive_clients = true;
+    cfg.rounds = 6;
+    let mut ctl = Controller::new(cfg.clone(), &rt).unwrap();
+    let res = ctl.run().unwrap();
+    // under 50% stragglers with random selection, later rounds must select
+    // more than the configured k at least once
+    let max_sel = res.rounds.iter().map(|r| r.selected.len()).max().unwrap();
+    assert!(
+        max_sel > cfg.clients_per_round,
+        "adaptive k never grew: max {max_sel} vs k {}",
+        cfg.clients_per_round
+    );
+    // and never beyond the 2x clamp
+    assert!(max_sel <= cfg.clients_per_round * 2);
+}
+
+#[test]
+fn stale_norm_clip_discards_outlier_stale_updates() {
+    let Some(rt) = mnist_runtime() else { return };
+    let mk = |clip: Option<f64>| {
+        let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(50));
+        cfg.straggler_slow_frac = 1.0;
+        cfg.rounds = 8;
+        cfg.stale_norm_clip = clip;
+        let mut ctl = Controller::new(cfg, &rt).unwrap();
+        ctl.run().unwrap()
+    };
+    let unclipped = mk(None);
+    let clipped = mk(Some(0.0)); // pathological clip: discard everything
+    let stale_un: usize = unclipped.rounds.iter().map(|r| r.stale_applied).sum();
+    let stale_cl: usize = clipped.rounds.iter().map(|r| r.stale_applied).sum();
+    assert!(stale_un > 0);
+    assert_eq!(stale_cl, 0, "clip=0 must discard all stale updates");
+}

@@ -1,0 +1,385 @@
+//! Property-based tests over randomized inputs (offline substrate for
+//! `proptest`): each property runs against a few hundred seeded random
+//! cases drawn via `fedless::util::Rng`. Failures print the case seed so
+//! the exact input can be replayed.
+
+use fedless::clientdb::HistoryStore;
+use fedless::clustering::{cluster_clients, dbscan, relabel_outliers, DbscanParams};
+use fedless::config::Scenario;
+use fedless::cost::GcfPricing;
+use fedless::data::{Partition, SynthDataset};
+use fedless::metrics::RoundRecord;
+use fedless::paramsvr::{staleness_weights, WeightedUpdate};
+use fedless::strategy::{
+    ema, missed_round_ema, FedAvg, FedLesScan, FedProx, SafaLite, SelectionContext, Strategy,
+    StrategyKind,
+};
+use fedless::util::{Json, Rng};
+
+const CASES: u64 = 200;
+
+/// Build a random history store reflecting a plausible training past.
+fn random_history(rng: &mut Rng, n_clients: usize, rounds: u32) -> HistoryStore {
+    let mut h = HistoryStore::new();
+    for c in 0..n_clients {
+        if rng.bernoulli(0.2) {
+            continue; // rookie
+        }
+        for r in 0..rounds {
+            if !rng.bernoulli(0.5) {
+                continue; // not selected that round
+            }
+            h.record_invocation(c);
+            if rng.bernoulli(0.75) {
+                h.record_success(c, r, rng.range_f64(1.0, 120.0));
+            } else {
+                h.record_failure(c, r);
+            }
+        }
+    }
+    h
+}
+
+#[test]
+fn prop_selection_invariants_all_strategies() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case);
+        let n_clients = 2 + rng.below(40);
+        let k = 1 + rng.below(n_clients);
+        let rounds = 1 + rng.below(30) as u32;
+        let round = rng.below(rounds as usize) as u32;
+        let history = random_history(&mut rng, n_clients, rounds);
+        let clients: Vec<usize> = (0..n_clients).collect();
+        let ctx = SelectionContext {
+            round,
+            max_rounds: rounds,
+            clients_per_round: k,
+            all_clients: &clients,
+            history: &history,
+        };
+        let strategies: Vec<Box<dyn Strategy>> = vec![
+            Box::new(FedAvg),
+            Box::new(FedProx::default()),
+            Box::new(FedLesScan::default()),
+            Box::new(SafaLite),
+        ];
+        for mut s in strategies {
+            let sel = s.select(&ctx, &mut rng);
+            assert!(
+                sel.len() <= k,
+                "case {case} {}: selected {} > k {k}",
+                s.name(),
+                sel.len()
+            );
+            let mut d = sel.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), sel.len(), "case {case} {}: duplicates", s.name());
+            assert!(
+                sel.iter().all(|&c| c < n_clients),
+                "case {case} {}: out-of-range client",
+                s.name()
+            );
+            // there are always >= k candidates, so selection must fill k
+            assert_eq!(sel.len(), k, "case {case} {}: under-filled", s.name());
+        }
+    }
+}
+
+#[test]
+fn prop_work_fraction_bounds() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x11);
+        let s = FedProx::default();
+        let f = s.work_fraction(case as usize, &mut rng);
+        assert!((0.5..=1.0).contains(&f), "case {case}: fraction {f}");
+    }
+}
+
+#[test]
+fn prop_cooldown_follows_eq1() {
+    // Whatever the event sequence, cooldown always obeys:
+    // success -> 0; failure -> 1 if previously 0 else doubles; tick
+    // decays by at most 1.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x22);
+        let mut db = HistoryStore::new();
+        let mut model: u32 = 0; // our own mirror of Eq. 1
+        for r in 0..60u32 {
+            match rng.below(3) {
+                0 => {
+                    db.record_success(0, r, 1.0);
+                    model = 0;
+                }
+                1 => {
+                    db.record_failure(0, r);
+                    model = if model == 0 { 1 } else { model * 2 };
+                    // failed this round: tick spares it
+                    db.tick_cooldowns(&[0]);
+                }
+                _ => {
+                    db.tick_cooldowns(&[]);
+                    model = model.saturating_sub(1);
+                }
+            }
+            assert_eq!(db.get(0).cooldown, model, "case {case} round {r}");
+        }
+    }
+}
+
+#[test]
+fn prop_staleness_weights_invariants() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x33);
+        let t = 1 + rng.below(50) as u32;
+        let tau = 1 + rng.below(5) as u32;
+        let n = 1 + rng.below(16);
+        let updates: Vec<WeightedUpdate> = (0..n)
+            .map(|_| WeightedUpdate {
+                produced_round: 1 + rng.below(t as usize) as u32,
+                cardinality: 1 + rng.below(500),
+            })
+            .collect();
+        let w = staleness_weights(&updates, t, tau, true);
+        assert_eq!(w.len(), n);
+        assert!(w.iter().all(|&x| (0.0..=1.0 + 1e-6).contains(&x)), "case {case}");
+        // expired updates have zero weight
+        for (u, &wi) in updates.iter().zip(&w) {
+            if t - u.produced_round >= tau {
+                assert_eq!(wi, 0.0, "case {case}: expired update has weight");
+            }
+        }
+        // normalized: weights sum to 1 when anything survives
+        let s: f32 = w.iter().sum();
+        if w.iter().any(|&x| x > 0.0) {
+            assert!((s - 1.0).abs() < 1e-4, "case {case}: sum {s}");
+        }
+        // fresher update with same cardinality never weighs less
+        let un = staleness_weights(&updates, t, tau, false);
+        for i in 0..n {
+            for j in 0..n {
+                if updates[i].cardinality == updates[j].cardinality
+                    && updates[i].produced_round >= updates[j].produced_round
+                {
+                    assert!(
+                        un[i] >= un[j] - 1e-7,
+                        "case {case}: monotonicity violated"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dbscan_labels_valid() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x44);
+        let n = 1 + rng.below(60);
+        let dim = 1 + rng.below(3);
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.range_f64(-10.0, 10.0)).collect())
+            .collect();
+        let eps = rng.range_f64(0.1, 5.0);
+        let min_pts = 1 + rng.below(4);
+        let mut labels = dbscan(&pts, &DbscanParams { eps, min_pts });
+        assert_eq!(labels.len(), n);
+        assert!(labels.iter().all(|&l| l >= -1), "case {case}");
+        let k = relabel_outliers(&mut labels);
+        // after relabel: labels are a contiguous 0..k cover
+        assert!(labels.iter().all(|&l| (l as usize) < k), "case {case}");
+        for c in 0..k {
+            assert!(
+                labels.iter().any(|&l| l as usize == c),
+                "case {case}: empty cluster {c} of {k}"
+            );
+        }
+        // grid search wrapper invariants
+        let (glabels, gk) = cluster_clients(&pts, 2);
+        assert_eq!(glabels.len(), n);
+        if n > 0 {
+            assert!(gk >= 1 && gk <= n, "case {case}: gk {gk}");
+        }
+    }
+}
+
+#[test]
+fn prop_partitioner_covers_every_sample_exactly_once() {
+    for case in 0..60 {
+        let mut rng = Rng::seed_from_u64(case ^ 0x55);
+        let n_clients = 2 + rng.below(12);
+        let shard = 2 * (1 + rng.below(20)); // even
+        let classes = 2 + rng.below(20);
+        let ds = SynthDataset::new(
+            n_clients,
+            shard,
+            64,
+            classes,
+            vec![3],
+            false,
+            case,
+            Partition::LabelShard,
+        )
+        .unwrap();
+        let mut all: Vec<i32> = (0..n_clients)
+            .flat_map(|c| ds.client_data(c).y)
+            .collect();
+        all.sort_unstable();
+        let mut expect: Vec<i32> = (0..n_clients * shard)
+            .map(|i| (i % classes) as i32)
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(all, expect, "case {case}");
+    }
+}
+
+#[test]
+fn prop_synthesis_deterministic_and_shaped() {
+    for case in 0..60 {
+        let mut rng = Rng::seed_from_u64(case ^ 0x66);
+        let n_clients = 1 + rng.below(8);
+        let shard = 1 + rng.below(30);
+        let classes = 2 + rng.below(30);
+        let tokens = rng.bernoulli(0.5);
+        let dims = if tokens {
+            vec![1 + rng.below(12)]
+        } else {
+            vec![1 + rng.below(6), 1 + rng.below(6)]
+        };
+        let partition = match rng.below(3) {
+            0 => Partition::LabelShard,
+            1 => Partition::Iid,
+            _ => Partition::Dirichlet(rng.range_f64(0.05, 5.0)),
+        };
+        let mk = || {
+            SynthDataset::new(
+                n_clients, shard, 32, classes, dims.clone(), tokens, case, partition,
+            )
+            .unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        for c in 0..n_clients {
+            let ca = a.client_data(c);
+            let cb = b.client_data(c);
+            assert_eq!(ca.y, cb.y, "case {case}");
+            assert_eq!(ca.x, cb.x, "case {case}");
+            assert_eq!(ca.y.len(), shard);
+            assert_eq!(ca.x.len(), shard * a.sample_elems());
+            assert!(ca.y.iter().all(|&y| (y as usize) < classes));
+        }
+    }
+}
+
+#[test]
+fn prop_cost_monotone_and_nonnegative() {
+    let pricing = GcfPricing::default();
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x77);
+        let d1 = rng.range_f64(0.0, 600.0);
+        let d2 = d1 + rng.range_f64(0.0, 600.0);
+        let mem = [128u32, 256, 512, 1024, 2048, 4096][rng.below(6)];
+        let c1 = pricing.invocation_cost(d1, mem);
+        let c2 = pricing.invocation_cost(d2, mem);
+        assert!(c1 >= 0.0 && c2 >= c1 - 1e-15, "case {case}");
+    }
+}
+
+#[test]
+fn prop_eur_bounds() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x88);
+        let sel = rng.below(50);
+        let succ = if sel == 0 { 0 } else { rng.below(sel + 1) };
+        let eur = RoundRecord::compute_eur(succ, sel);
+        assert!((0.0..=1.0).contains(&eur), "case {case}: {eur}");
+    }
+}
+
+#[test]
+fn prop_ema_bounded_by_series_range() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x99);
+        let n = 1 + rng.below(30);
+        let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 100.0)).collect();
+        let alpha = rng.range_f64(0.01, 1.0);
+        let e = ema(&xs, alpha);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(e >= lo - 1e-9 && e <= hi + 1e-9, "case {case}: {e} not in [{lo},{hi}]");
+    }
+}
+
+#[test]
+fn prop_missed_round_ema_decays_with_round() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xaa);
+        let n = 1 + rng.below(8);
+        let r1 = 1 + rng.below(40) as u32;
+        let missed: Vec<u32> = (0..n).map(|_| rng.below(r1 as usize) as u32).collect();
+        let e1 = missed_round_ema(&missed, r1, 0.5);
+        let e2 = missed_round_ema(&missed, r1 * 2, 0.5);
+        assert!(e2 <= e1 + 1e-12, "case {case}: {e2} > {e1}");
+        assert!(e1 >= 0.0);
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect::<Vec<_>>()
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xbb);
+        let v = random_json(&mut rng, 3);
+        let re = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(v, re, "case {case} (pretty)");
+        let re2 = Json::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(v, re2, "case {case} (compact)");
+    }
+}
+
+#[test]
+fn prop_scenario_label_roundtrip() {
+    use std::str::FromStr;
+    for p in [0u8, 10, 30, 50, 70, 99] {
+        let s = if p == 0 {
+            Scenario::Standard
+        } else {
+            Scenario::Straggler(p)
+        };
+        assert_eq!(Scenario::from_str(&s.label()).unwrap(), s);
+    }
+    for k in [
+        StrategyKind::Fedavg,
+        StrategyKind::Fedprox,
+        StrategyKind::Fedlesscan,
+        StrategyKind::Safalite,
+    ] {
+        assert_eq!(StrategyKind::from_str(k.as_str()).unwrap(), k);
+    }
+}
