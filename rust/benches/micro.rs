@@ -1,20 +1,18 @@
 //! Micro benchmarks for the L3 coordinator hot paths (DESIGN.md §4):
 //! client selection (clustering + ε grid search), behaviour features,
-//! staleness weights, dataset synthesis, JSON, and — when artifacts are
-//! present — the Pallas aggregation kernel across K and P.
+//! staleness weights, dataset synthesis, JSON, and the native-backend
+//! aggregation kernel across K and P.
 //!
 //!   cargo bench --bench micro
 //!
 //! Uses the built-in harness (util::bench); criterion is unavailable in
 //! this offline environment.
 
-use std::path::PathBuf;
-
 use fedless::clientdb::HistoryStore;
 use fedless::clustering::cluster_clients;
 use fedless::data::{Partition, SynthDataset};
 use fedless::paramsvr::{staleness_weights, WeightedUpdate};
-use fedless::runtime::{Engine, ModelRuntime};
+use fedless::runtime::{Backend, NativeBackend};
 use fedless::strategy::{ema, FedLesScan, SelectionContext, Strategy};
 use fedless::util::bench::bench;
 use fedless::util::{Json, Rng};
@@ -109,28 +107,49 @@ fn main() {
         Json::parse(&doc).unwrap()
     });
 
-    // --- Pallas aggregation kernel (needs artifacts) ---------------------
-    let dir = PathBuf::from("artifacts");
-    if dir.join("mnist.manifest.json").exists() {
-        let engine = Engine::cpu().expect("pjrt");
-        for model in ["mnist", "femnist"] {
-            let rt = ModelRuntime::load(&engine, &dir, model).expect("artifacts");
-            let p = rt.manifest.param_count;
-            for k in [2usize, 8, 16] {
-                let updates: Vec<Vec<f32>> = (0..k)
-                    .map(|i| (0..p).map(|j| ((i + j) % 17) as f32 * 0.01).collect())
-                    .collect();
-                let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
-                let w: Vec<f32> = (0..k).map(|_| 1.0 / k as f32).collect();
-                bench(
-                    &format!("aggregate/hlo {model} P={p} K={k}"),
-                    2,
-                    15,
-                    || rt.aggregate(&refs, &w).unwrap(),
-                );
-            }
+    // --- native aggregation kernel across K and P ------------------------
+    for model in ["mnist", "femnist"] {
+        let rt = NativeBackend::for_dataset(model).expect("native backend");
+        let p = rt.manifest().param_count;
+        for k in [2usize, 8, 16] {
+            let updates: Vec<Vec<f32>> = (0..k)
+                .map(|i| (0..p).map(|j| ((i + j) % 17) as f32 * 0.01).collect())
+                .collect();
+            let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+            let w: Vec<f32> = (0..k).map(|_| 1.0 / k as f32).collect();
+            bench(
+                &format!("aggregate/native {model} P={p} K={k}"),
+                2,
+                15,
+                || rt.aggregate(&refs, &w).unwrap(),
+            );
         }
-    } else {
-        println!("(skipping HLO aggregation benches: run `make artifacts`)");
     }
+
+    // --- native client round (P-scale training cost) ---------------------
+    let rt = NativeBackend::for_dataset("mnist").expect("native backend");
+    let mf = rt.manifest().clone();
+    let ds = SynthDataset::from_manifest(&mf, 4, 1, Partition::LabelShard).unwrap();
+    let shard = ds.client_data(0);
+    let p0 = rt.init_params().unwrap();
+    let zeros = vec![0f32; p0.len()];
+    bench(
+        &format!("train/native mnist P={} steps={}", mf.param_count, mf.steps_per_round),
+        2,
+        15,
+        || {
+            rt.train_round(&fedless::runtime::TrainRequest {
+                params: &p0,
+                m: &zeros,
+                v: &zeros,
+                t: 0.0,
+                x: &shard.x,
+                y: &shard.y,
+                seed: 1,
+                num_steps: mf.steps_per_round as i32,
+                global: None,
+            })
+            .unwrap()
+        },
+    );
 }

@@ -1,36 +1,26 @@
 //! End-to-end benchmarks: one full federated round per (dataset,
-//! strategy), plus the per-client local-training HLO execution — the
-//! numbers behind Tables II-IV's wall-clock feasibility and the §Perf
-//! log in EXPERIMENTS.md.
+//! strategy), plus the per-client local-training execution — the numbers
+//! behind Tables II-IV's wall-clock feasibility and the §Perf log in
+//! EXPERIMENTS.md.
 //!
-//!   cargo bench --bench round
+//!   cargo bench --bench round            # native backend, no artifacts
 //!
-//! Requires `make artifacts`.
-
-use std::path::PathBuf;
+//! With a `--features pjrt` build and `make artifacts`, the same shapes
+//! run through the PJRT backend via `fedless train --backend pjrt`.
 
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
 use fedless::data::SynthDataset;
-use fedless::runtime::{Engine, ModelRuntime, TrainRequest};
+use fedless::runtime::{Backend, NativeBackend, TrainRequest};
 use fedless::strategy::StrategyKind;
 use fedless::util::bench::bench;
 
 fn main() {
-    let dir = PathBuf::from("artifacts");
-    if !dir.join("mnist.manifest.json").exists() {
-        println!("no artifacts found — run `make artifacts` first");
-        return;
-    }
-    let engine = Engine::cpu().expect("pjrt cpu");
-    println!("== end-to-end benches (PJRT platform: {}) ==", engine.platform_name());
+    println!("== end-to-end benches (native backend) ==");
 
     for model in ["mnist", "femnist", "shakespeare", "speech", "transformer"] {
-        if !dir.join(format!("{model}.manifest.json")).exists() {
-            continue;
-        }
-        let rt = ModelRuntime::load(&engine, &dir, model).expect("load artifacts");
-        let mf = rt.manifest.clone();
+        let rt = NativeBackend::for_dataset(model).expect("native backend");
+        let mf = rt.manifest().clone();
 
         // --- single client local round (the dominant compute) ----------
         let data = SynthDataset::from_manifest(&mf, 4, 1, Default::default()).unwrap();
@@ -65,7 +55,7 @@ fn main() {
     }
 
     // --- one full coordinator round per strategy (mnist) ---------------
-    let rt = ModelRuntime::load(&engine, &dir, "mnist").expect("mnist artifacts");
+    let rt = NativeBackend::for_dataset("mnist").expect("native backend");
     for strategy in [
         StrategyKind::Fedavg,
         StrategyKind::Fedprox,

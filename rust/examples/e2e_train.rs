@@ -1,11 +1,11 @@
 //! End-to-end driver (DESIGN.md §4 E2E): federated training of the
-//! char-transformer through the *full* stack — Pallas dense kernels
-//! inside the AOT-lowered JAX fwd/bwd, executed per client by the Rust
-//! coordinator over the simulated serverless platform, with FedLesScan
-//! selection and staleness-aware aggregation — for a few hundred rounds,
-//! logging the loss curve.
+//! char-level token model through the full stack — per-client local
+//! rounds on the execution backend, driven by the Rust coordinator over
+//! the simulated serverless platform, with FedLesScan selection and
+//! staleness-aware aggregation — for a few hundred rounds, logging the
+//! loss curve.
 //!
-//!   make artifacts && cargo run --release --example e2e_train -- \
+//!   cargo run --release --example e2e_train -- \
 //!       [--rounds 120] [--clients 24] [--per-round 8] [--stragglers 30] \
 //!       [--out results/e2e]
 //!
@@ -16,7 +16,7 @@ use std::path::PathBuf;
 
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
-use fedless::runtime::{Engine, ModelRuntime};
+use fedless::runtime::{load_backend, BackendKind};
 use fedless::strategy::StrategyKind;
 use fedless::util::cli;
 
@@ -26,9 +26,8 @@ fn main() -> fedless::Result<()> {
     let stragglers: u8 = args.get_parse("stragglers", 30)?;
     let out = PathBuf::from(args.get_str("out", "results/e2e"));
 
-    let engine = Engine::cpu()?;
-    let runtime = ModelRuntime::load(&engine, "artifacts".as_ref(), "transformer")?;
-    let mf = &runtime.manifest;
+    let backend = load_backend(BackendKind::Native, "artifacts".as_ref(), "transformer")?;
+    let mf = backend.manifest();
     println!(
         "e2e: char-transformer P={} (seq={}, vocab={}), {} rounds, {}% stragglers",
         mf.param_count,
@@ -58,7 +57,7 @@ fn main() -> fedless::Result<()> {
     );
 
     let t0 = std::time::Instant::now();
-    let mut ctl = Controller::new(cfg, &runtime)?;
+    let mut ctl = Controller::new(cfg, backend.as_ref())?;
     let result = ctl.run()?;
     let wall = t0.elapsed();
 

@@ -7,12 +7,11 @@
 
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
-use fedless::runtime::{Engine, ModelRuntime};
+use fedless::runtime::{load_backend, BackendKind};
 use fedless::strategy::StrategyKind;
 
 fn main() -> fedless::Result<()> {
-    let engine = Engine::cpu()?;
-    let runtime = ModelRuntime::load(&engine, "artifacts".as_ref(), "mnist")?;
+    let backend = load_backend(BackendKind::Native, "artifacts".as_ref(), "mnist")?;
 
     let mut cfg = ExperimentConfig::preset("mnist");
     cfg.strategy = StrategyKind::Fedlesscan;
@@ -28,7 +27,7 @@ fn main() -> fedless::Result<()> {
     cfg.history_path = Some("results/failure_injection_history.json".into());
     std::fs::create_dir_all("results")?;
 
-    let mut ctl = Controller::new(cfg, &runtime)?;
+    let mut ctl = Controller::new(cfg, backend.as_ref())?;
     let result = ctl.run()?;
 
     println!("== per-round failures under a hostile platform ==");

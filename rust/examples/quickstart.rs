@@ -1,38 +1,42 @@
 //! Quickstart: train a federated MNIST-style model with FedLesScan on the
 //! simulated serverless platform, then print the §VI metrics.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 //!
-//! This is the smallest end-to-end use of the public API: load an AOT
-//! artifact set, build a config from a preset, run the controller.
+//! This is the smallest end-to-end use of the public API: build the
+//! native execution backend, build a config from a preset, run the
+//! controller. No artifacts or external libraries needed; a
+//! `--features pjrt` build can swap in `BackendKind::Pjrt` for the AOT
+//! HLO path.
 
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
-use fedless::runtime::{Engine, ModelRuntime};
+use fedless::runtime::{load_backend, BackendKind};
 use fedless::strategy::StrategyKind;
 
 fn main() -> fedless::Result<()> {
-    // 1. PJRT CPU engine + the compiled artifact set for one model family.
-    let engine = Engine::cpu()?;
-    let runtime = ModelRuntime::load(&engine, "artifacts".as_ref(), "mnist")?;
+    // 1. The execution backend for one model family.
+    let backend = load_backend(BackendKind::Native, "artifacts".as_ref(), "mnist")?;
     println!(
-        "loaded {} (P={} params, compiled in {:.2?})",
-        runtime.manifest.name, runtime.manifest.param_count, runtime.compile_time
+        "loaded {} backend: {} (P={} params)",
+        backend.backend_name(),
+        backend.manifest().name,
+        backend.manifest().param_count
     );
 
     // 2. Experiment config: the paper-preset deployment shape, shrunk a
-    //    bit so the quickstart finishes in ~1 minute.
+    //    bit so the quickstart finishes in seconds.
     let mut cfg = ExperimentConfig::preset("mnist");
     cfg.strategy = StrategyKind::Fedlesscan;
     cfg.scenario = Scenario::Straggler(30); // 30% forced stragglers
     cfg.rounds = 8;
     cfg.n_clients = 24;
     cfg.clients_per_round = 8;
-    cfg.verbose = true;
+    cfg.verbose = true; // per-round metrics on stderr
 
     // 3. Run the federated experiment.
     let n_clients = cfg.n_clients;
-    let mut controller = Controller::new(cfg, &runtime)?;
+    let mut controller = Controller::new(cfg, backend.as_ref())?;
     let result = controller.run()?;
 
     // 4. Report the paper's metrics (§VI-A5).

@@ -7,7 +7,7 @@
 
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
-use fedless::runtime::{Engine, ModelRuntime};
+use fedless::runtime::{load_backend, BackendKind};
 use fedless::strategy::StrategyKind;
 
 fn main() -> fedless::Result<()> {
@@ -15,8 +15,7 @@ fn main() -> fedless::Result<()> {
     let dataset = args.first().map(String::as_str).unwrap_or("speech").to_string();
     let rounds: u32 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
 
-    let engine = Engine::cpu()?;
-    let runtime = ModelRuntime::load(&engine, "artifacts".as_ref(), &dataset)?;
+    let backend = load_backend(BackendKind::Native, "artifacts".as_ref(), &dataset)?;
 
     println!(
         "straggler sweep on {dataset} ({rounds} rounds/cell)\n{:<12} {:<12} {:>9} {:>9} {:>11} {:>10} {:>6}",
@@ -36,7 +35,7 @@ fn main() -> fedless::Result<()> {
             cfg.n_clients = (cfg.n_clients / 2).max(12);
             cfg.clients_per_round = (cfg.clients_per_round / 2).max(4);
             let n = cfg.n_clients;
-            let mut ctl = Controller::new(cfg, &runtime)?;
+            let mut ctl = Controller::new(cfg, backend.as_ref())?;
             let r = ctl.run()?;
             println!(
                 "{:<12} {:<12} {:>9.3} {:>9.3} {:>11.1} {:>10.4} {:>6}",

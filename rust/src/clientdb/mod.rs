@@ -20,7 +20,7 @@
 //! forever, contradicting §V-A ("tier-3 clients can move to tier-2 and
 //! vice-versa").
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
 
 use crate::util::Json;
@@ -108,10 +108,13 @@ impl HistoryStore {
     }
 
     /// End-of-round tick: cooldowns decay by one except for clients that
-    /// failed *this* round (their Eq. 1 value is fresh).
+    /// failed *this* round (their Eq. 1 value is fresh). The failed list
+    /// is hashed once up front so the tick is O(clients + failed) rather
+    /// than O(clients * failed); duplicate ids in the list are harmless.
     pub fn tick_cooldowns(&mut self, failed_this_round: &[ClientId]) {
+        let failed: HashSet<ClientId> = failed_this_round.iter().copied().collect();
         for (id, h) in self.map.iter_mut() {
-            if h.cooldown > 0 && !failed_this_round.contains(id) {
+            if h.cooldown > 0 && !failed.contains(id) {
                 h.cooldown -= 1;
             }
         }
@@ -233,6 +236,20 @@ mod tests {
         db.record_failure(2, 1);
         db.record_failure(2, 2); // cooldown 2, failed in round 2
         db.tick_cooldowns(&[2]);
+        assert_eq!(db.get(1).cooldown, 0);
+        assert_eq!(db.get(2).cooldown, 2);
+        db.tick_cooldowns(&[]);
+        assert_eq!(db.get(2).cooldown, 1);
+    }
+
+    #[test]
+    fn tick_handles_duplicate_failed_ids() {
+        let mut db = HistoryStore::new();
+        db.record_failure(1, 0); // cooldown 1
+        db.record_failure(2, 0);
+        db.record_failure(2, 1); // cooldown 2, fresh failure
+        // duplicate ids in the failed list must behave like a single entry
+        db.tick_cooldowns(&[2, 2, 2]);
         assert_eq!(db.get(1).cooldown, 0);
         assert_eq!(db.get(2).cooldown, 2);
         db.tick_cooldowns(&[]);

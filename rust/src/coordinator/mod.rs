@@ -4,13 +4,13 @@
 //! Per round:
 //! 1. the strategy selects clients;
 //! 2. each selected client is "invoked": its local training round runs
-//!    for real through the PJRT runtime (one HLO call), while the
-//!    simulated GCF platform turns the nominal compute time into a
-//!    virtual invocation timeline (cold starts, VM heterogeneity,
-//!    failures, deadline) — see DESIGN.md §2;
+//!    for real through the execution [`Backend`] (native MLP or one PJRT
+//!    HLO call), while the simulated GCF platform turns the nominal
+//!    compute time into a virtual invocation timeline (cold starts, VM
+//!    heterogeneity, failures, deadline) — see DESIGN.md §2;
 //! 3. on-time updates (plus, for staleness-aware strategies, late
-//!    updates that have arrived since) are aggregated through the Pallas
-//!    kernel with Eq. 3 weights;
+//!    updates that have arrived since) are aggregated through the
+//!    backend's Eq. 3 kernel;
 //! 4. the client-history DB is updated exactly as Algorithm 1 does,
 //!    including the client-side correction of missed rounds when a slow
 //!    update finally lands;
@@ -27,7 +27,7 @@ use crate::data::{ClientData, SynthDataset};
 use crate::faas::{Forced, Outcome, SimulatedGcf};
 use crate::metrics::{ExperimentResult, RoundRecord};
 use crate::paramsvr::{staleness_weights, ParameterServer, StaleUpdate, WeightedUpdate};
-use crate::runtime::{ModelRuntime, TrainRequest};
+use crate::runtime::{Backend, TrainRequest};
 use crate::strategy::{Aggregation, SelectionContext, Strategy};
 use crate::util::Rng;
 use crate::{ClientId, Result};
@@ -44,7 +44,7 @@ struct FreshUpdate {
 /// The experiment controller.
 pub struct Controller<'rt> {
     cfg: ExperimentConfig,
-    runtime: &'rt ModelRuntime,
+    backend: &'rt dyn Backend,
     data: SynthDataset,
     eval_set: ClientData,
     faas: SimulatedGcf,
@@ -69,16 +69,16 @@ pub struct Controller<'rt> {
 }
 
 impl<'rt> Controller<'rt> {
-    pub fn new(cfg: ExperimentConfig, runtime: &'rt ModelRuntime) -> Result<Self> {
+    pub fn new(cfg: ExperimentConfig, backend: &'rt dyn Backend) -> Result<Self> {
         cfg.validate()?;
         anyhow::ensure!(
-            cfg.dataset == runtime.manifest.name,
-            "config dataset {} vs runtime model {}",
+            cfg.dataset == backend.manifest().name,
+            "config dataset {} vs backend model {}",
             cfg.dataset,
-            runtime.manifest.name
+            backend.manifest().name
         );
         let data = SynthDataset::from_manifest(
-            &runtime.manifest,
+            backend.manifest(),
             cfg.n_clients,
             cfg.seed,
             cfg.partition,
@@ -104,13 +104,13 @@ impl<'rt> Controller<'rt> {
             }
         }
 
-        let init = runtime.init_params()?;
+        let init = backend.init_params()?;
         let zeros = vec![0f32; init.len()];
         let strategy = cfg.strategy.build();
         let cfg_k = cfg.clients_per_round;
         Ok(Self {
             cfg,
-            runtime,
+            backend,
             data,
             eval_set,
             faas,
@@ -188,7 +188,7 @@ impl<'rt> Controller<'rt> {
         let round_start = self.clock_s;
         let deadline = round_start + self.cfg.round_timeout_s();
         let cost_before = self.ledger.total;
-        let mf = &self.runtime.manifest;
+        let mf = self.backend.manifest();
 
         // 1. selection (clients_per_round may be adapted — extension)
         let k_now = if self.cfg.adaptive_clients {
@@ -250,7 +250,7 @@ impl<'rt> Controller<'rt> {
                     num_steps,
                     global,
                 };
-                let (result, _wall) = self.runtime.train_round(&req)?;
+                let (result, _wall) = self.backend.train_round(&req)?;
                 Some(result)
             };
 
@@ -374,7 +374,7 @@ impl<'rt> Controller<'rt> {
             if !params_refs.is_empty() {
                 let weights = staleness_weights(&winfo, t_1b, tau, normalize);
                 if weights.iter().any(|&w| w > 0.0) {
-                    let (agg, _) = self.runtime.aggregate(&params_refs, &weights)?;
+                    let (agg, _) = self.backend.aggregate(&params_refs, &weights)?;
                     self.server.set_global(agg, t_1b);
                 }
             }
@@ -392,7 +392,7 @@ impl<'rt> Controller<'rt> {
             round % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds;
         let (accuracy, eval_loss) = if do_eval {
             let ev = self
-                .runtime
+                .backend
                 .evaluate(self.server.global(), &self.eval_set.x, &self.eval_set.y)?;
             (Some(ev.accuracy), Some(ev.loss))
         } else {

@@ -14,9 +14,17 @@
 //! * **L1 (python/compile/kernels, build time)** — Pallas kernels for the
 //!   dense-layer matmuls and the staleness-weighted aggregation (Eq. 3).
 //!
-//! Python never runs on the request path: the [`runtime`] module loads
-//! the AOT artifacts through the PJRT C API (`xla` crate) and the whole
-//! federated training loop is native Rust.
+//! Python never runs on the request path. All compute flows through the
+//! pluggable [`runtime::Backend`] trait (`train_round` / `evaluate` /
+//! `init_params` / `aggregate`):
+//!
+//! * [`runtime::NativeBackend`] (default) — pure-Rust dense-MLP
+//!   forward/backward with the SGD/Adam steps and Eq. 3 aggregation of
+//!   `python/compile/kernels/ref.py`; zero external dependencies, so
+//!   `cargo test` exercises the full federated loop out of the box;
+//! * `runtime::ModelRuntime` (`pjrt` cargo feature) — the AOT HLO
+//!   artifacts executed through the PJRT C API (`xla` crate), with
+//!   model architectures structurally identical to the paper's.
 //!
 //! Entry points: [`coordinator::Controller`] drives one experiment;
 //! [`repro`] regenerates every table and figure of the paper's §VI.

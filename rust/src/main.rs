@@ -6,8 +6,9 @@
 //! fedless inspect
 //! ```
 //!
-//! The binary is self-contained once `make artifacts` has produced the
-//! AOT HLO artifacts; Python is never invoked at runtime.
+//! The default (native) backend is self-contained: no artifacts, no
+//! Python, no external libraries. `--backend pjrt` switches to the AOT
+//! HLO path (requires a `--features pjrt` build and `make artifacts`).
 
 use std::path::PathBuf;
 use std::str::FromStr;
@@ -15,7 +16,7 @@ use std::str::FromStr;
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
 use fedless::repro::{self, Options, Profile};
-use fedless::runtime::{ArtifactIndex, Engine, Manifest, ModelRuntime};
+use fedless::runtime::{load_backend, ArtifactIndex, BackendKind, Manifest};
 use fedless::strategy::StrategyKind;
 use fedless::util::cli;
 use fedless::Result;
@@ -33,7 +34,8 @@ USAGE:
   fedless inspect
 
 GLOBAL:
-  --artifacts DIR   artifacts directory (default: artifacts)
+  --backend KIND    execution backend: native (default) | pjrt
+  --artifacts DIR   artifacts directory, pjrt backend only (default: artifacts)
 ";
 
 fn main() -> Result<()> {
@@ -43,9 +45,10 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let backend = BackendKind::from_str(&args.get_str("backend", "native"))?;
     match args.positional[0].as_str() {
-        "train" => cmd_train(&args, artifacts),
-        "repro" => cmd_repro(&args, artifacts),
+        "train" => cmd_train(&args, backend, artifacts),
+        "repro" => cmd_repro(&args, backend, artifacts),
         "inspect" => cmd_inspect(artifacts),
         other => {
             print!("{USAGE}");
@@ -54,7 +57,7 @@ fn main() -> Result<()> {
     }
 }
 
-fn cmd_train(args: &cli::Args, artifacts: PathBuf) -> Result<()> {
+fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) -> Result<()> {
     let dataset = args.get_str("dataset", "mnist");
     let mut cfg = match args.get("config") {
         Some(p) => ExperimentConfig::load(&PathBuf::from(p))?,
@@ -82,15 +85,15 @@ fn cmd_train(args: &cli::Args, artifacts: PathBuf) -> Result<()> {
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.verbose = args.get_bool("verbose");
 
-    let engine = Engine::cpu()?;
-    eprintln!("[fedless] PJRT platform: {}", engine.platform_name());
-    let runtime = ModelRuntime::load(&engine, &artifacts, &cfg.dataset)?;
+    let backend = load_backend(backend_kind, &artifacts, &cfg.dataset)?;
     eprintln!(
-        "[fedless] {}: P={} (compile {:.2?})",
-        runtime.manifest.name, runtime.manifest.param_count, runtime.compile_time
+        "[fedless] backend {}: {} P={}",
+        backend.backend_name(),
+        backend.manifest().name,
+        backend.manifest().param_count
     );
     let n_clients = cfg.n_clients;
-    let mut ctl = Controller::new(cfg, &runtime)?;
+    let mut ctl = Controller::new(cfg, backend.as_ref())?;
     let result = ctl.run()?;
     println!(
         "\n{} / {} / {}: final acc {:.3}, mean EUR {:.3}, time {:.1} min, cost ${:.4}, bias {}",
@@ -114,7 +117,7 @@ fn cmd_train(args: &cli::Args, artifacts: PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_repro(args: &cli::Args, artifacts: PathBuf) -> Result<()> {
+fn cmd_repro(args: &cli::Args, backend: BackendKind, artifacts: PathBuf) -> Result<()> {
     let target = args
         .positional
         .get(1)
@@ -138,6 +141,7 @@ fn cmd_repro(args: &cli::Args, artifacts: PathBuf) -> Result<()> {
         seed: args.get_parse("seed", 42)?,
         repeats: args.get_parse("repeats", 1)?,
         verbose: args.get_bool("verbose"),
+        backend,
     };
     match target {
         "fig1" => repro::fig1(&opts)?,
@@ -164,9 +168,25 @@ fn cmd_repro(args: &cli::Args, artifacts: PathBuf) -> Result<()> {
 }
 
 fn cmd_inspect(artifacts: PathBuf) -> Result<()> {
+    println!("native backend models (always available):");
+    for d in ExperimentConfig::preset_datasets() {
+        let b = load_backend(BackendKind::Native, &artifacts, d)?;
+        let mf = b.manifest();
+        println!(
+            "  {:<14} P={:<9} shard={} batch={} epochs={} opt={} lr={} k_max={}",
+            mf.name,
+            mf.param_count,
+            mf.shard_size,
+            mf.batch_size,
+            mf.local_epochs,
+            mf.optimizer,
+            mf.lr,
+            mf.k_max
+        );
+    }
     match ArtifactIndex::load(&artifacts) {
         Ok(idx) => {
-            println!("artifacts @ {} (scale: {})", artifacts.display(), idx.scale);
+            println!("\npjrt artifacts @ {} (scale: {})", artifacts.display(), idx.scale);
             for m in &idx.models {
                 let mf = Manifest::load(&artifacts, m)?;
                 println!(
@@ -182,7 +202,7 @@ fn cmd_inspect(artifacts: PathBuf) -> Result<()> {
                 );
             }
         }
-        Err(e) => println!("no artifacts found ({e}); run `make artifacts`"),
+        Err(e) => println!("\nno pjrt artifacts found ({e}); run `make artifacts`"),
     }
     println!("\nexperiment presets (deployment shape, §VI-A3 scaled):");
     for d in ExperimentConfig::preset_datasets() {

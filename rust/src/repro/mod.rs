@@ -24,7 +24,7 @@ use std::path::PathBuf;
 use crate::config::{ExperimentConfig, Scenario};
 use crate::coordinator::Controller;
 use crate::metrics::ExperimentResult;
-use crate::runtime::{Engine, ModelRuntime};
+use crate::runtime::{load_backend, Backend, BackendKind};
 use crate::strategy::StrategyKind;
 use crate::util::Json;
 use crate::Result;
@@ -62,6 +62,8 @@ pub struct Options {
     /// Repeats per cell; the paper uses 3 (§VI, [68]).
     pub repeats: usize,
     pub verbose: bool,
+    /// Execution backend for every cell (native unless overridden).
+    pub backend: BackendKind,
 }
 
 impl Options {
@@ -94,35 +96,35 @@ impl Options {
     }
 }
 
-/// Cache of loaded model runtimes (compile once per dataset).
-pub struct Runtimes {
-    engine: Engine,
-    map: BTreeMap<String, ModelRuntime>,
+/// Cache of loaded execution backends (built / compiled once per dataset).
+pub struct Backends {
+    kind: BackendKind,
+    map: BTreeMap<String, Box<dyn Backend>>,
     dir: PathBuf,
 }
 
-impl Runtimes {
-    pub fn new(artifacts_dir: PathBuf) -> Result<Self> {
+impl Backends {
+    pub fn new(kind: BackendKind, artifacts_dir: PathBuf) -> Result<Self> {
         Ok(Self {
-            engine: Engine::cpu()?,
+            kind,
             map: BTreeMap::new(),
             dir: artifacts_dir,
         })
     }
 
-    pub fn get(&mut self, dataset: &str) -> Result<&ModelRuntime> {
+    pub fn get(&mut self, dataset: &str) -> Result<&dyn Backend> {
         if !self.map.contains_key(dataset) {
-            let rt = ModelRuntime::load(&self.engine, &self.dir, dataset)?;
-            self.map.insert(dataset.to_string(), rt);
+            let b = load_backend(self.kind, &self.dir, dataset)?;
+            self.map.insert(dataset.to_string(), b);
         }
-        Ok(&self.map[dataset])
+        Ok(self.map[dataset].as_ref())
     }
 }
 
 /// Run one experiment cell (dataset x strategy x scenario), averaging
 /// `repeats` seeds. Returns all repeat results.
 pub fn run_cell(
-    runtimes: &mut Runtimes,
+    backends: &mut Backends,
     opts: &Options,
     dataset: &str,
     strategy: StrategyKind,
@@ -141,8 +143,8 @@ pub fn run_cell(
         if dataset == "speech" && scenario != Scenario::Standard {
             cfg.rounds = cfg.rounds * 5 / 3;
         }
-        let runtime = runtimes.get(dataset)?;
-        let mut ctl = Controller::new(cfg, runtime)?;
+        let backend = backends.get(dataset)?;
+        let mut ctl = Controller::new(cfg, backend)?;
         results.push(ctl.run()?);
     }
     Ok(results)
@@ -205,7 +207,7 @@ pub fn cell_stats(results: &[ExperimentResult], n_clients: usize) -> CellStats {
 /// reuse it for Tables II-IV (they share the same underlying runs, as in
 /// the paper).
 pub fn run_matrix(opts: &Options) -> Result<Vec<CellStats>> {
-    let mut runtimes = Runtimes::new(opts.artifacts_dir.clone())?;
+    let mut backends = Backends::new(opts.backend, opts.artifacts_dir.clone())?;
     std::fs::create_dir_all(&opts.out_dir)?;
     let mut cells = Vec::new();
     for dataset in &opts.datasets {
@@ -216,7 +218,7 @@ pub fn run_matrix(opts: &Options) -> Result<Vec<CellStats>> {
                     strategy.as_str(),
                     scenario.label()
                 );
-                let results = run_cell(&mut runtimes, opts, dataset, strategy, scenario)?;
+                let results = run_cell(&mut backends, opts, dataset, strategy, scenario)?;
                 // persist per-run timelines for the figure harness
                 for (i, r) in results.iter().enumerate() {
                     let base = format!(
@@ -250,7 +252,7 @@ fn effective_n_clients(opts: &Options, dataset: &str) -> usize {
 // ---------------------------------------------------------------------------
 
 pub fn fig1(opts: &Options) -> Result<()> {
-    let mut runtimes = Runtimes::new(opts.artifacts_dir.clone())?;
+    let mut backends = Backends::new(opts.backend, opts.artifacts_dir.clone())?;
     std::fs::create_dir_all(&opts.out_dir)?;
     // Fig. 1 / Fig. 3 are speech-dataset deep dives in the paper.
     let dataset = opts
@@ -266,7 +268,7 @@ pub fn fig1(opts: &Options) -> Result<()> {
     let mut scenarios = vec![Scenario::Standard];
     scenarios.extend(opts.scenarios().into_iter().skip(1));
     for scenario in scenarios {
-        let results = run_cell(&mut runtimes, opts, &dataset, StrategyKind::Fedavg, scenario)?;
+        let results = run_cell(&mut backends, opts, &dataset, StrategyKind::Fedavg, scenario)?;
         let acc = mean(results.iter().map(|r| r.final_accuracy));
         let avg_round = mean(results.iter().map(|r| {
             r.total_time_s / r.rounds.len().max(1) as f64
@@ -355,7 +357,7 @@ pub fn table4(cells: &[CellStats]) {
 // ---------------------------------------------------------------------------
 
 pub fn fig3(opts: &Options) -> Result<()> {
-    let mut runtimes = Runtimes::new(opts.artifacts_dir.clone())?;
+    let mut backends = Backends::new(opts.backend, opts.artifacts_dir.clone())?;
     std::fs::create_dir_all(&opts.out_dir)?;
     // Fig. 1 / Fig. 3 are speech-dataset deep dives in the paper.
     let dataset = opts
@@ -374,7 +376,7 @@ pub fn fig3(opts: &Options) -> Result<()> {
             "strategy", "final acc", "mean EUR", "bias", "invocations (min/med/max)"
         );
         for strategy in StrategyKind::all() {
-            let results = run_cell(&mut runtimes, opts, &dataset, strategy, scenario)?;
+            let results = run_cell(&mut backends, opts, &dataset, strategy, scenario)?;
             let r = &results[0];
             // fig3a/b: write the full timeline of the first repeat
             let base = format!("fig3_{}_{}_{}", dataset, strategy.as_str(), scenario.label());
@@ -416,7 +418,7 @@ pub fn fig3(opts: &Options) -> Result<()> {
 pub fn ablations(opts: &Options) -> Result<()> {
     use crate::strategy::{FedLesScan, FedLesScanParams};
 
-    let mut runtimes = Runtimes::new(opts.artifacts_dir.clone())?;
+    let mut backends = Backends::new(opts.backend, opts.artifacts_dir.clone())?;
     std::fs::create_dir_all(&opts.out_dir)?;
     // Fig. 1 / Fig. 3 are speech-dataset deep dives in the paper.
     let dataset = opts
@@ -479,8 +481,8 @@ pub fn ablations(opts: &Options) -> Result<()> {
         if let Some(m) = cfg_mut {
             m(&mut cfg);
         }
-        let runtime = runtimes.get(&dataset)?;
-        let mut ctl = Controller::new(cfg, runtime)?;
+        let backend = backends.get(&dataset)?;
+        let mut ctl = Controller::new(cfg, backend)?;
         if let Some(params) = params {
             ctl.set_strategy(Box::new(FedLesScan::new(params)));
         }

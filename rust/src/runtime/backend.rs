@@ -1,0 +1,295 @@
+//! The pluggable execution backend seam: everything the coordinator needs
+//! from "the thing that computes" — local training rounds, central
+//! evaluation, weighted aggregation and the initial global model — behind
+//! one object-safe trait.
+//!
+//! Two implementations exist:
+//!
+//! * [`NativeBackend`](super::NativeBackend) (default build): pure-Rust
+//!   dense-MLP forward/backward with the SGD/Adam steps and the
+//!   staleness-weighted aggregation of `python/compile/kernels/ref.py`.
+//!   Zero external dependencies; this is what CI and the tier-1 tests run.
+//! * `ModelRuntime` (behind the `pjrt` cargo feature): the AOT HLO
+//!   artifact path through the PJRT C API, structurally identical models
+//!   to the paper's (§VI-A2).
+//!
+//! Both share the argument-validation helpers below, so shape/dtype
+//! errors are identical across backends.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::bail;
+
+use super::manifest::Manifest;
+use crate::data::Features;
+use crate::Result;
+
+/// Inputs of one local training round (Algorithm 1, Client_Update).
+pub struct TrainRequest<'a> {
+    pub params: &'a [f32],
+    /// Adam first/second moments; zeroed by stateless FaaS clients.
+    pub m: &'a [f32],
+    pub v: &'a [f32],
+    /// Optimizer step counter (f32 across the backend boundary).
+    pub t: f32,
+    pub x: &'a Features,
+    pub y: &'a [i32],
+    /// Shuffling / dropout seed for this invocation.
+    pub seed: i32,
+    /// Partial-work cutoff (FedProx toleration); pass
+    /// `manifest.steps_per_round` for full work.
+    pub num_steps: i32,
+    /// FedProx anchor; `Some` routes to the proximal training variant.
+    pub global: Option<&'a [f32]>,
+}
+
+/// Outputs of one local training round.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    /// Mean training loss over the executed steps.
+    pub loss: f32,
+}
+
+/// Central evaluation result.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+/// One model family's execution engine. Object-safe: the coordinator and
+/// the repro harness hold `&dyn Backend` / `Box<dyn Backend>`.
+pub trait Backend {
+    /// Backend implementation name ("native" / "pjrt").
+    fn backend_name(&self) -> &'static str;
+
+    /// The model description this backend executes.
+    fn manifest(&self) -> &Manifest;
+
+    /// The seed-0 initial global model.
+    fn init_params(&self) -> Result<Vec<f32>>;
+
+    /// Execute one full local training round. Returns the result and the
+    /// compute wall time (the FaaS simulator's nominal-compute input).
+    fn train_round(&self, req: &TrainRequest) -> Result<(TrainResult, Duration)>;
+
+    /// Central federated evaluation on the fixed-size test set.
+    fn evaluate(&self, params: &[f32], x: &Features, y: &[i32]) -> Result<EvalResult>;
+
+    /// Weighted aggregation: `out = sum_k weights[k] * updates[k]` in f32
+    /// (paper Eq. 3 inner sum; weight semantics belong to the caller).
+    /// `updates.len()` must be in `[1, k_max]`.
+    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)>;
+}
+
+// ---------------------------------------------------------------------------
+// shared argument validation
+// ---------------------------------------------------------------------------
+
+pub(crate) fn check_params(mf: &Manifest, what: &str, p: &[f32]) -> Result<()> {
+    if p.len() != mf.param_count {
+        bail!(
+            "{}: {what} has {} elements, expected P={}",
+            mf.name,
+            p.len(),
+            mf.param_count
+        );
+    }
+    Ok(())
+}
+
+pub(crate) fn check_labels(mf: &Manifest, what: &str, y: &[i32]) -> Result<()> {
+    if let Some(&bad) = y
+        .iter()
+        .find(|&&v| v < 0 || v as usize >= mf.num_classes)
+    {
+        bail!(
+            "{}: {what} label {bad} outside [0, {})",
+            mf.name,
+            mf.num_classes
+        );
+    }
+    Ok(())
+}
+
+pub(crate) fn check_features(mf: &Manifest, x: &Features, n: usize) -> Result<()> {
+    if x.dtype() != mf.input_dtype {
+        bail!(
+            "{}: features dtype {} but manifest wants {}",
+            mf.name,
+            x.dtype(),
+            mf.input_dtype
+        );
+    }
+    let expect = n * mf.sample_elems();
+    if x.len() != expect {
+        bail!("{}: x has {} elements, want {}", mf.name, x.len(), expect);
+    }
+    Ok(())
+}
+
+pub(crate) fn check_train_request(mf: &Manifest, req: &TrainRequest) -> Result<()> {
+    check_params(mf, "params", req.params)?;
+    check_params(mf, "m", req.m)?;
+    check_params(mf, "v", req.v)?;
+    if let Some(g) = req.global {
+        check_params(mf, "global", g)?;
+    }
+    if req.y.len() != mf.shard_size {
+        bail!(
+            "{}: y has {} labels, want {}",
+            mf.name,
+            req.y.len(),
+            mf.shard_size
+        );
+    }
+    check_labels(mf, "y", req.y)?;
+    check_features(mf, req.x, mf.shard_size)?;
+    if req.num_steps < 0 || req.num_steps as usize > mf.steps_per_round {
+        bail!(
+            "{}: num_steps {} outside [0, {}]",
+            mf.name,
+            req.num_steps,
+            mf.steps_per_round
+        );
+    }
+    Ok(())
+}
+
+pub(crate) fn check_eval_args(
+    mf: &Manifest,
+    params: &[f32],
+    x: &Features,
+    y: &[i32],
+) -> Result<()> {
+    check_params(mf, "params", params)?;
+    if y.len() != mf.eval_size {
+        bail!(
+            "{}: eval y has {} labels, want {}",
+            mf.name,
+            y.len(),
+            mf.eval_size
+        );
+    }
+    check_labels(mf, "eval y", y)?;
+    check_features(mf, x, mf.eval_size)
+}
+
+pub(crate) fn check_aggregate_args(
+    mf: &Manifest,
+    updates: &[&[f32]],
+    weights: &[f32],
+) -> Result<()> {
+    if updates.len() != weights.len() {
+        bail!(
+            "{}: {} updates vs {} weights",
+            mf.name,
+            updates.len(),
+            weights.len()
+        );
+    }
+    if updates.is_empty() {
+        bail!("{}: aggregate called with no updates", mf.name);
+    }
+    if updates.len() > mf.k_max {
+        bail!(
+            "{}: {} updates exceed k_max={}",
+            mf.name,
+            updates.len(),
+            mf.k_max
+        );
+    }
+    for u in updates {
+        check_params(mf, "update", u)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// backend selection
+// ---------------------------------------------------------------------------
+
+/// Which execution backend to load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust dense-MLP backend; always available.
+    Native,
+    /// AOT HLO artifacts via PJRT; requires the `pjrt` cargo feature and
+    /// a `make artifacts` run.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?}; expected native|pjrt"),
+        }
+    }
+}
+
+/// Load an execution backend for one model family. `artifacts_dir` is
+/// only consulted by the PJRT backend; the native backend synthesizes its
+/// model from the built-in per-family presets.
+pub fn load_backend(
+    kind: BackendKind,
+    artifacts_dir: &Path,
+    dataset: &str,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => {
+            let _ = artifacts_dir;
+            Ok(Box::new(super::NativeBackend::for_dataset(dataset)?))
+        }
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(super::model::PjrtBackend::load(
+            artifacts_dir,
+            dataset,
+        )?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => bail!(
+            "backend pjrt requested but this binary was built without the \
+             `pjrt` feature; rebuild with `cargo build --features pjrt`"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::from_str("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::from_str("PJRT").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::from_str("tpu").is_err());
+    }
+
+    #[test]
+    fn native_backend_loads_for_every_preset() {
+        for d in ["mnist", "femnist", "shakespeare", "speech", "transformer"] {
+            let b = load_backend(BackendKind::Native, Path::new("unused"), d).unwrap();
+            assert_eq!(b.backend_name(), "native");
+            assert_eq!(b.manifest().name, d);
+        }
+        assert!(load_backend(BackendKind::Native, Path::new("unused"), "nope").is_err());
+    }
+}

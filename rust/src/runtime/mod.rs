@@ -1,12 +1,27 @@
-//! Runtime layer: loads the AOT-compiled HLO artifacts (built once by
-//! `make artifacts`) and executes them through the PJRT C API. This is
-//! the only boundary between the Rust coordinator and the JAX/Pallas
-//! compute; Python is never on the request path.
+//! Runtime layer: the pluggable execution [`Backend`] behind the Rust
+//! coordinator. The default build ships the dependency-free
+//! [`NativeBackend`] (pure-Rust dense MLP, SGD/Adam, staleness-weighted
+//! aggregation); the `pjrt` cargo feature adds `ModelRuntime`, which
+//! loads the AOT-compiled HLO artifacts (built once by `make artifacts`)
+//! and executes them through the PJRT C API. Either way Python is never
+//! on the request path.
 
-pub mod engine;
+pub mod backend;
 pub mod manifest;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod model;
 
-pub use engine::{Engine, Executable};
+pub use backend::{
+    load_backend, Backend, BackendKind, EvalResult, TrainRequest, TrainResult,
+};
 pub use manifest::{ArtifactIndex, Manifest};
-pub use model::{EvalResult, ModelRuntime, TrainRequest, TrainResult};
+pub use native::NativeBackend;
+
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, Executable};
+#[cfg(feature = "pjrt")]
+pub use model::{ModelRuntime, PjrtBackend};

@@ -1,59 +1,28 @@
-//! `ModelRuntime` — one model family's four compiled entrypoints plus the
-//! typed argument marshalling between Rust buffers and XLA literals.
+//! `ModelRuntime` — the PJRT execution backend (`pjrt` cargo feature):
+//! one model family's four compiled entrypoints plus the typed argument
+//! marshalling between Rust buffers and XLA literals.
 //!
 //! This is the only place where the flat-parameter convention (DESIGN.md
-//! §1) is materialized: params / Adam moments / updates are plain
+//! §1) crosses into XLA: params / Adam moments / updates are plain
 //! `Vec<f32>`, features are [`Features`], and each call maps to exactly
-//! one PJRT execution.
+//! one PJRT execution. Shape/dtype validation is shared with the native
+//! backend (see [`super::backend`]).
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use anyhow::{anyhow, bail};
+use anyhow::bail;
 
+use super::backend::{
+    check_aggregate_args, check_eval_args, check_train_request, Backend, EvalResult,
+    TrainRequest, TrainResult,
+};
 use super::engine::{
     lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, to_vec_f32, Engine, Executable,
 };
 use super::manifest::Manifest;
 use crate::data::Features;
 use crate::Result;
-
-/// Inputs of one local training round (Algorithm 1, Client_Update).
-pub struct TrainRequest<'a> {
-    pub params: &'a [f32],
-    /// Adam first/second moments; zeroed by stateless FaaS clients.
-    pub m: &'a [f32],
-    pub v: &'a [f32],
-    /// Optimizer step counter (f32 in the lowered module).
-    pub t: f32,
-    pub x: &'a Features,
-    pub y: &'a [i32],
-    /// Shuffling / dropout seed for this invocation.
-    pub seed: i32,
-    /// Partial-work cutoff (FedProx toleration); pass
-    /// `manifest.steps_per_round` for full work.
-    pub num_steps: i32,
-    /// FedProx anchor; `Some` routes to the `train_prox` entrypoint.
-    pub global: Option<&'a [f32]>,
-}
-
-/// Outputs of one local training round.
-#[derive(Debug, Clone)]
-pub struct TrainResult {
-    pub params: Vec<f32>,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
-    pub t: f32,
-    /// Mean training loss over the executed steps.
-    pub loss: f32,
-}
-
-/// Central evaluation result.
-#[derive(Debug, Clone, Copy)]
-pub struct EvalResult {
-    pub loss: f32,
-    pub accuracy: f32,
-}
 
 /// One model family's compiled artifact set.
 pub struct ModelRuntime {
@@ -98,29 +67,12 @@ impl ModelRuntime {
         self.manifest.load_init(&self.dir)
     }
 
-    fn check_params(&self, what: &str, p: &[f32]) -> Result<()> {
-        if p.len() != self.manifest.param_count {
-            bail!(
-                "{}: {what} has {} elements, expected P={}",
-                self.manifest.name,
-                p.len(),
-                self.manifest.param_count
-            );
-        }
-        Ok(())
-    }
-
     fn features_literal(&self, x: &Features, n: usize) -> Result<xla::Literal> {
         let mut dims: Vec<i64> = vec![n as i64];
         dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
-        match (x, self.manifest.input_dtype.as_str()) {
-            (Features::F32(v), "f32") => lit_f32(v, &dims),
-            (Features::I32(v), "i32") => lit_i32(v, &dims),
-            (got, want) => Err(anyhow!(
-                "{}: features dtype {} but manifest wants {want}",
-                self.manifest.name,
-                got.dtype()
-            )),
+        match x {
+            Features::F32(v) => lit_f32(v, &dims),
+            Features::I32(v) => lit_i32(v, &dims),
         }
     }
 
@@ -129,24 +81,7 @@ impl ModelRuntime {
     /// compute-time input).
     pub fn train_round(&self, req: &TrainRequest) -> Result<(TrainResult, Duration)> {
         let mf = &self.manifest;
-        self.check_params("params", req.params)?;
-        self.check_params("m", req.m)?;
-        self.check_params("v", req.v)?;
-        if req.y.len() != mf.shard_size {
-            bail!("{}: y has {} labels, want {}", mf.name, req.y.len(), mf.shard_size);
-        }
-        let expect = mf.shard_size * mf.sample_elems();
-        if req.x.len() != expect {
-            bail!("{}: x has {} elements, want {}", mf.name, req.x.len(), expect);
-        }
-        if req.num_steps < 0 || req.num_steps as usize > mf.steps_per_round {
-            bail!(
-                "{}: num_steps {} outside [0, {}]",
-                mf.name,
-                req.num_steps,
-                mf.steps_per_round
-            );
-        }
+        check_train_request(mf, req)?;
 
         let p = mf.param_count as i64;
         let mut args: Vec<xla::Literal> = vec![
@@ -160,7 +95,6 @@ impl ModelRuntime {
             scalar_i32(req.num_steps),
         ];
         let exe = if let Some(g) = req.global {
-            self.check_params("global", g)?;
             args.push(lit_f32(g, &[p])?);
             &self.train_prox
         } else {
@@ -185,10 +119,7 @@ impl ModelRuntime {
     /// Central federated evaluation on the fixed-size test set.
     pub fn evaluate(&self, params: &[f32], x: &Features, y: &[i32]) -> Result<EvalResult> {
         let mf = &self.manifest;
-        self.check_params("params", params)?;
-        if y.len() != mf.eval_size {
-            bail!("{}: eval y has {} labels, want {}", mf.name, y.len(), mf.eval_size);
-        }
+        check_eval_args(mf, params, x, y)?;
         let args = vec![
             lit_f32(params, &[mf.param_count as i64])?,
             self.features_literal(x, mf.eval_size)?,
@@ -216,29 +147,10 @@ impl ModelRuntime {
         weights: &[f32],
     ) -> Result<(Vec<f32>, Duration)> {
         let mf = &self.manifest;
-        if updates.len() != weights.len() {
-            bail!(
-                "{}: {} updates vs {} weights",
-                mf.name,
-                updates.len(),
-                weights.len()
-            );
-        }
-        if updates.is_empty() {
-            bail!("{}: aggregate called with no updates", mf.name);
-        }
-        if updates.len() > mf.k_max {
-            bail!(
-                "{}: {} updates exceed k_max={}",
-                mf.name,
-                updates.len(),
-                mf.k_max
-            );
-        }
+        check_aggregate_args(mf, updates, weights)?;
         let p = mf.param_count;
         let mut stacked = vec![0f32; mf.k_max * p];
         for (i, u) in updates.iter().enumerate() {
-            self.check_params("update", u)?;
             stacked[i * p..(i + 1) * p].copy_from_slice(u);
         }
         let mut w = vec![0f32; mf.k_max];
@@ -252,5 +164,73 @@ impl ModelRuntime {
             bail!("{}: aggregate returned {} outputs, want 1", mf.name, out.len());
         }
         Ok((to_vec_f32(&out[0])?, wall))
+    }
+}
+
+/// The PJRT path packaged as a [`Backend`]: holds a handle on the shared
+/// per-thread engine so the boxed backend is self-contained.
+pub struct PjrtBackend {
+    _engine: std::rc::Rc<Engine>,
+    runtime: ModelRuntime,
+}
+
+thread_local! {
+    /// One PJRT client per thread (handles are not Send/Sync): loading
+    /// several model families — e.g. the 4-dataset repro matrix — reuses
+    /// a single client instead of instantiating one per dataset.
+    static SHARED_ENGINE: std::cell::RefCell<std::rc::Weak<Engine>> =
+        std::cell::RefCell::new(std::rc::Weak::new());
+}
+
+fn shared_engine() -> Result<std::rc::Rc<Engine>> {
+    SHARED_ENGINE.with(|slot| {
+        if let Some(engine) = slot.borrow().upgrade() {
+            return Ok(engine);
+        }
+        let engine = std::rc::Rc::new(Engine::cpu()?);
+        *slot.borrow_mut() = std::rc::Rc::downgrade(&engine);
+        Ok(engine)
+    })
+}
+
+impl PjrtBackend {
+    /// Compile the artifact set for `model` on the shared CPU PJRT client.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
+        let engine = shared_engine()?;
+        let runtime = ModelRuntime::load(&engine, artifacts_dir, model)?;
+        Ok(Self {
+            _engine: engine,
+            runtime,
+        })
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.runtime
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.runtime.manifest
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        self.runtime.init_params()
+    }
+
+    fn train_round(&self, req: &TrainRequest) -> Result<(TrainResult, Duration)> {
+        self.runtime.train_round(req)
+    }
+
+    fn evaluate(&self, params: &[f32], x: &Features, y: &[i32]) -> Result<EvalResult> {
+        self.runtime.evaluate(params, x, y)
+    }
+
+    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)> {
+        self.runtime.aggregate(updates, weights)
     }
 }

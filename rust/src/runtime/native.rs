@@ -1,0 +1,769 @@
+//! `NativeBackend` — the default, dependency-free execution backend: a
+//! dense MLP (input → ReLU hidden → softmax logits) with full-batch-exact
+//! forward/backward, the flat-vector SGD/Adam steps of
+//! `python/compile/optim.py`, and the staleness-weighted aggregation of
+//! `python/compile/kernels/ref.py` (`aggregate_ref`: f32 accumulation of
+//! `sum_k w_k * u_k`).
+//!
+//! The paper's strategies never inspect model internals — only losses,
+//! training times and update vectors — so a compact MLP substrate keeps
+//! every L3 behaviour (selection, tiering, staleness handling, cost)
+//! faithful while making the whole stack runnable with `cargo test` alone.
+//! The structurally-paper-exact CNN/LSTM path lives behind the `pjrt`
+//! feature (see [`super::backend`]).
+//!
+//! Token-family inputs (`i32`) are embedded by scaling each token to
+//! `t / num_classes` — the synthetic token datasets encode the label in
+//! the final token (see `crate::data`), which stays linearly recoverable.
+
+use std::time::{Duration, Instant};
+
+use anyhow::bail;
+
+use super::backend::{
+    check_aggregate_args, check_eval_args, check_train_request, Backend, EvalResult,
+    TrainRequest, TrainResult,
+};
+use super::manifest::{Entrypoint, Manifest};
+use crate::data::Features;
+use crate::util::Rng;
+use crate::Result;
+
+/// Seed-mixing constants: keep the init / shuffle RNG streams disjoint
+/// from the dataset and platform streams derived from related seeds.
+const INIT_SEED_MIX: u64 = 0x9d1e_5eed;
+const SHUFFLE_SEED_MIX: u64 = 0x7ea1_7a1e;
+
+/// Adam hyperparameters (fixed across the stack, `optim.py`).
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// The pure-Rust execution backend for one model family.
+pub struct NativeBackend {
+    manifest: Manifest,
+    /// Hidden-layer width H of the MLP.
+    hidden: usize,
+}
+
+/// Per-family MLP preset for the native backend: smoke-scale shapes
+/// (fast enough for CI sweeps) with the Table-I optimizer settings.
+struct Preset {
+    input_shape: &'static [usize],
+    input_dtype: &'static str,
+    num_classes: usize,
+    shard_size: usize,
+    batch_size: usize,
+    local_epochs: usize,
+    optimizer: &'static str,
+    lr: f64,
+    hidden: usize,
+}
+
+fn preset(name: &str) -> Option<Preset> {
+    let p = match name {
+        "mnist" => Preset {
+            input_shape: &[28, 28, 1],
+            input_dtype: "f32",
+            num_classes: 10,
+            shard_size: 20,
+            batch_size: 10,
+            local_epochs: 5,
+            optimizer: "adam",
+            lr: 1e-3,
+            hidden: 32,
+        },
+        "femnist" => Preset {
+            input_shape: &[28, 28, 1],
+            input_dtype: "f32",
+            num_classes: 62,
+            shard_size: 20,
+            batch_size: 10,
+            local_epochs: 5,
+            optimizer: "adam",
+            lr: 1e-3,
+            hidden: 32,
+        },
+        "shakespeare" => Preset {
+            input_shape: &[10],
+            input_dtype: "i32",
+            num_classes: 82,
+            shard_size: 32,
+            batch_size: 32,
+            local_epochs: 1,
+            optimizer: "sgd",
+            lr: 0.8,
+            hidden: 32,
+        },
+        "speech" => Preset {
+            input_shape: &[32, 32, 1],
+            input_dtype: "f32",
+            num_classes: 35,
+            shard_size: 20,
+            batch_size: 5,
+            local_epochs: 5,
+            optimizer: "adam",
+            lr: 1e-3,
+            hidden: 32,
+        },
+        "transformer" => Preset {
+            input_shape: &[16],
+            input_dtype: "i32",
+            num_classes: 96,
+            shard_size: 32,
+            batch_size: 16,
+            local_epochs: 1,
+            optimizer: "adam",
+            lr: 3e-4,
+            hidden: 64,
+        },
+        _ => return None,
+    };
+    Some(p)
+}
+
+/// Flat parameter count of a `d → h → c` MLP.
+fn mlp_param_count(d: usize, h: usize, c: usize) -> usize {
+    d * h + h + h * c + c
+}
+
+impl NativeBackend {
+    /// Build the native backend for one of the built-in model families.
+    pub fn for_dataset(name: &str) -> Result<Self> {
+        let Some(p) = preset(name) else {
+            bail!("no native-backend preset for dataset {name:?}");
+        };
+        let d: usize = p.input_shape.iter().product();
+        let param_count = mlp_param_count(d, p.hidden, p.num_classes);
+        let steps_per_round = p.shard_size / p.batch_size * p.local_epochs;
+        let flops =
+            6 * steps_per_round * p.batch_size * (d * p.hidden + p.hidden * p.num_classes);
+        let builtin = |ep: &str| Entrypoint {
+            file: format!("<native:{ep}>"),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        };
+        let manifest = Manifest {
+            name: name.to_string(),
+            scale: "native".to_string(),
+            param_count,
+            num_classes: p.num_classes,
+            input_shape: p.input_shape.to_vec(),
+            input_dtype: p.input_dtype.to_string(),
+            shard_size: p.shard_size,
+            batch_size: p.batch_size,
+            local_epochs: p.local_epochs,
+            steps_per_round,
+            optimizer: p.optimizer.to_string(),
+            lr: p.lr,
+            // Native smoke scale: a larger proximal pull than the paper's
+            // CNN setting so FedProx's anchor effect is measurable within
+            // a handful of MLP steps.
+            prox_mu: 0.1,
+            eval_size: 128,
+            eval_batch: 128,
+            k_max: 64,
+            seq_len: match p.input_dtype {
+                "i32" => Some(d),
+                _ => None,
+            },
+            flops_per_round: flops as u64,
+            entrypoints: ["train", "train_prox", "eval", "aggregate"]
+                .iter()
+                .map(|ep| (ep.to_string(), builtin(ep)))
+                .collect(),
+            init_file: "<builtin>".to_string(),
+            init_sha256: "<builtin>".to_string(),
+            init_seed: 0,
+        };
+        Self::from_manifest(manifest, p.hidden)
+    }
+
+    /// Build the backend from an explicit manifest (tests / custom
+    /// models). `manifest.param_count` must equal the MLP layout size.
+    pub fn from_manifest(manifest: Manifest, hidden: usize) -> Result<Self> {
+        manifest.validate()?;
+        if hidden == 0 {
+            bail!("{}: hidden width must be positive", manifest.name);
+        }
+        let d = manifest.sample_elems();
+        let want = mlp_param_count(d, hidden, manifest.num_classes);
+        if manifest.param_count != want {
+            bail!(
+                "{}: param_count {} but a {d}x{hidden}x{} MLP has {want}",
+                manifest.name,
+                manifest.param_count,
+                manifest.num_classes
+            );
+        }
+        Ok(Self { manifest, hidden })
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn dims(&self) -> (usize, usize, usize) {
+        (
+            self.manifest.sample_elems(),
+            self.hidden,
+            self.manifest.num_classes,
+        )
+    }
+
+    /// Features as f32 rows; `i32` tokens are scaled into [0, 1).
+    fn features_f32<'a>(&self, x: &'a Features, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        match x {
+            Features::F32(v) => v,
+            Features::I32(v) => {
+                let scale = 1.0 / self.manifest.num_classes as f32;
+                scratch.clear();
+                scratch.extend(v.iter().map(|&t| t as f32 * scale));
+                scratch
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense math (mirrors kernels/ref.py: plain definitions, f32 accumulate)
+// ---------------------------------------------------------------------------
+
+/// `out[m,n] = a[m,k] @ b[k,n]`.
+fn matmul(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for (ar, or) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        for (aik, br) in ar.iter().zip(b.chunks_exact(n)) {
+            for (o, bkj) in or.iter_mut().zip(br) {
+                *o += aik * bkj;
+            }
+        }
+    }
+}
+
+/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (gradient wrt a dense weight).
+fn matmul_at_b(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for (ar, br) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
+        for (aik, or) in ar.iter().zip(out.chunks_exact_mut(n)) {
+            for (o, bij) in or.iter_mut().zip(br) {
+                *o += aik * bij;
+            }
+        }
+    }
+}
+
+/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (back-propagated activation gradient).
+fn matmul_a_bt(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    for (ar, or) in a.chunks_exact(n).zip(out.chunks_exact_mut(k)) {
+        for (o, br) in or.iter_mut().zip(b.chunks_exact(n)) {
+            *o = ar.iter().zip(br).map(|(x, y)| x * y).sum();
+        }
+    }
+}
+
+/// Flat-layout views of `[w1 | b1 | w2 | b2]`.
+fn split_params(flat: &[f32], d: usize, h: usize, c: usize) -> (&[f32], &[f32], &[f32], &[f32]) {
+    let (w1, rest) = flat.split_at(d * h);
+    let (b1, rest) = rest.split_at(h);
+    let (w2, b2) = rest.split_at(h * c);
+    (w1, b1, w2, b2)
+}
+
+fn split_params_mut(
+    flat: &mut [f32],
+    d: usize,
+    h: usize,
+    c: usize,
+) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+    let (w1, rest) = flat.split_at_mut(d * h);
+    let (b1, rest) = rest.split_at_mut(h);
+    let (w2, b2) = rest.split_at_mut(h * c);
+    (w1, b1, w2, b2)
+}
+
+/// Reusable per-batch scratch buffers.
+struct Scratch {
+    xb: Vec<f32>,
+    z1: Vec<f32>,
+    a1: Vec<f32>,
+    z2: Vec<f32>,
+    dz2: Vec<f32>,
+    da1: Vec<f32>,
+    dz1: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(bs: usize, d: usize, h: usize, c: usize) -> Self {
+        Self {
+            xb: vec![0.0; bs * d],
+            z1: vec![0.0; bs * h],
+            a1: vec![0.0; bs * h],
+            z2: vec![0.0; bs * c],
+            dz2: vec![0.0; bs * c],
+            da1: vec![0.0; bs * h],
+            dz1: vec![0.0; bs * h],
+        }
+    }
+}
+
+/// Forward the MLP over `xb`, writing `z1`, `a1` (ReLU) and `z2` (logits).
+fn forward(flat: &[f32], d: usize, h: usize, c: usize, s: &mut Scratch) {
+    let (w1, b1, w2, b2) = split_params(flat, d, h, c);
+    matmul(&s.xb, w1, d, h, &mut s.z1);
+    for (zr, a) in s.z1.chunks_exact_mut(h).zip(s.a1.chunks_exact_mut(h)) {
+        for ((z, bias), av) in zr.iter_mut().zip(b1).zip(a) {
+            *z += bias;
+            *av = z.max(0.0);
+        }
+    }
+    matmul(&s.a1, w2, h, c, &mut s.z2);
+    for zr in s.z2.chunks_exact_mut(c) {
+        for (z, bias) in zr.iter_mut().zip(b2) {
+            *z += bias;
+        }
+    }
+}
+
+/// Mean softmax cross-entropy of the already-forwarded logits, plus the
+/// logit gradient `dz2 = (softmax - onehot) / B` left in scratch.
+fn softmax_xent_backward(yb: &[i32], c: usize, s: &mut Scratch) -> f32 {
+    let bs = yb.len();
+    let inv_b = 1.0 / bs as f32;
+    let mut loss = 0.0f32;
+    for ((zr, dr), &y) in s
+        .z2
+        .chunks_exact(c)
+        .zip(s.dz2.chunks_exact_mut(c))
+        .zip(yb)
+    {
+        let zmax = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for z in zr {
+            denom += (z - zmax).exp();
+        }
+        let log_denom = denom.ln();
+        loss += -(zr[y as usize] - zmax - log_denom);
+        for (j, (dz, z)) in dr.iter_mut().zip(zr).enumerate() {
+            let sm = (z - zmax).exp() / denom;
+            let onehot = if j == y as usize { 1.0 } else { 0.0 };
+            *dz = (sm - onehot) * inv_b;
+        }
+    }
+    loss * inv_b
+}
+
+/// Back-propagate `dz2` into the flat gradient vector `g`.
+fn backward(flat: &[f32], d: usize, h: usize, c: usize, s: &mut Scratch, g: &mut [f32]) {
+    let (_w1, _b1, w2, _b2) = split_params(flat, d, h, c);
+    let (gw1, gb1, gw2, gb2) = split_params_mut(g, d, h, c);
+    // dW2 = a1ᵀ dz2 ; db2 = Σ_rows dz2
+    matmul_at_b(&s.a1, &s.dz2, h, c, gw2);
+    gb2.fill(0.0);
+    for dr in s.dz2.chunks_exact(c) {
+        for (gb, dz) in gb2.iter_mut().zip(dr) {
+            *gb += dz;
+        }
+    }
+    // da1 = dz2 @ W2ᵀ ; dz1 = da1 ⊙ (z1 > 0)
+    matmul_a_bt(&s.dz2, w2, c, h, &mut s.da1);
+    for ((da, z), dz) in s.da1.iter().zip(&s.z1).zip(s.dz1.iter_mut()) {
+        *dz = if *z > 0.0 { *da } else { 0.0 };
+    }
+    // dW1 = xbᵀ dz1 ; db1 = Σ_rows dz1
+    matmul_at_b(&s.xb, &s.dz1, d, h, gw1);
+    gb1.fill(0.0);
+    for dr in s.dz1.chunks_exact(h) {
+        for (gb, dz) in gb1.iter_mut().zip(dr) {
+            *gb += dz;
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Glorot-uniform dense init (matches `archs/common.py::dense_init`),
+    /// deterministic in the manifest's `init_seed`.
+    fn init_params(&self) -> Result<Vec<f32>> {
+        let (d, h, c) = self.dims();
+        let mut rng = Rng::seed_from_u64(INIT_SEED_MIX ^ self.manifest.init_seed);
+        let mut flat = vec![0.0f32; self.manifest.param_count];
+        {
+            let (w1, _b1, w2, _b2) = split_params_mut(&mut flat, d, h, c);
+            let lim1 = (6.0 / (d + h) as f64).sqrt();
+            for w in w1.iter_mut() {
+                *w = rng.range_f64(-lim1, lim1) as f32;
+            }
+            let lim2 = (6.0 / (h + c) as f64).sqrt();
+            for w in w2.iter_mut() {
+                *w = rng.range_f64(-lim2, lim2) as f32;
+            }
+        }
+        Ok(flat)
+    }
+
+    fn train_round(&self, req: &TrainRequest) -> Result<(TrainResult, Duration)> {
+        let mf = &self.manifest;
+        check_train_request(mf, req)?;
+        let t0 = Instant::now();
+        let (d, h, c) = self.dims();
+        let n = mf.shard_size;
+        let bs = mf.batch_size;
+        let steps_per_epoch = n / bs;
+        let num_steps = req.num_steps as usize;
+
+        let mut token_scratch = Vec::new();
+        let x = self.features_f32(req.x, &mut token_scratch);
+
+        // Per-epoch shuffles, concatenated into one index table — the
+        // native analogue of `model.py`'s permutation scan input.
+        let mut rng = Rng::seed_from_u64(u64::from(req.seed as u32) ^ SHUFFLE_SEED_MIX);
+        let mut idx_table: Vec<usize> = Vec::with_capacity(mf.steps_per_round * bs);
+        for _ in 0..mf.local_epochs {
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            idx_table.extend_from_slice(&perm[..steps_per_epoch * bs]);
+        }
+
+        let mut flat = req.params.to_vec();
+        let mut m = req.m.to_vec();
+        let mut v = req.v.to_vec();
+        let mut t = req.t;
+        let lr = mf.lr as f32;
+        let mu = mf.prox_mu as f32;
+        let is_adam = mf.optimizer == "adam";
+
+        let mut s = Scratch::new(bs, d, h, c);
+        let mut g = vec![0.0f32; flat.len()];
+        let mut yb = vec![0i32; bs];
+        let mut loss_sum = 0.0f32;
+
+        for idx in idx_table.chunks_exact(bs).take(num_steps) {
+            for (row, (&i, y)) in idx.iter().zip(yb.iter_mut()).enumerate() {
+                s.xb[row * d..(row + 1) * d].copy_from_slice(&x[i * d..(i + 1) * d]);
+                *y = req.y[i];
+            }
+            forward(&flat, d, h, c, &mut s);
+            loss_sum += softmax_xent_backward(&yb, c, &mut s);
+            backward(&flat, d, h, c, &mut s, &mut g);
+            if let Some(anchor) = req.global {
+                // FedProx: g += mu * (w - w_global)
+                for ((gi, w), a) in g.iter_mut().zip(&flat).zip(anchor) {
+                    *gi += mu * (w - a);
+                }
+            }
+            t += 1.0;
+            if is_adam {
+                let bc1 = 1.0 - ADAM_B1.powf(t);
+                let bc2 = 1.0 - ADAM_B2.powf(t);
+                for (((w, gi), mi), vi) in
+                    flat.iter_mut().zip(&g).zip(m.iter_mut()).zip(v.iter_mut())
+                {
+                    *mi = ADAM_B1 * *mi + (1.0 - ADAM_B1) * gi;
+                    *vi = ADAM_B2 * *vi + (1.0 - ADAM_B2) * gi * gi;
+                    let mhat = *mi / bc1;
+                    let vhat = *vi / bc2;
+                    *w -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+                }
+            } else {
+                for (w, gi) in flat.iter_mut().zip(&g) {
+                    *w -= lr * gi;
+                }
+            }
+        }
+
+        let denom = (num_steps.max(1) as f32).min(mf.steps_per_round as f32);
+        Ok((
+            TrainResult {
+                params: flat,
+                m,
+                v,
+                t,
+                loss: loss_sum / denom,
+            },
+            t0.elapsed(),
+        ))
+    }
+
+    fn evaluate(&self, params: &[f32], x: &Features, y: &[i32]) -> Result<EvalResult> {
+        let mf = &self.manifest;
+        check_eval_args(mf, params, x, y)?;
+        let (d, h, c) = self.dims();
+        let mut token_scratch = Vec::new();
+        let xf = self.features_f32(x, &mut token_scratch);
+
+        let eb = mf.eval_batch;
+        let mut s = Scratch::new(eb, d, h, c);
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        for (xb, yb) in xf.chunks_exact(eb * d).zip(y.chunks_exact(eb)) {
+            s.xb.copy_from_slice(xb);
+            forward(params, d, h, c, &mut s);
+            for (zr, &yi) in s.z2.chunks_exact(c).zip(yb) {
+                let zmax = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let denom: f32 = zr.iter().map(|z| (z - zmax).exp()).sum();
+                loss_sum += -(zr[yi as usize] - zmax - denom.ln());
+                // first maximal index (jnp.argmax tie-breaking)
+                let mut best = 0usize;
+                for (i, z) in zr.iter().enumerate() {
+                    if *z > zr[best] {
+                        best = i;
+                    }
+                }
+                if best == yi as usize {
+                    correct += 1.0;
+                }
+            }
+        }
+        Ok(EvalResult {
+            loss: loss_sum / mf.eval_size as f32,
+            accuracy: correct / mf.eval_size as f32,
+        })
+    }
+
+    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)> {
+        let mf = &self.manifest;
+        check_aggregate_args(mf, updates, weights)?;
+        let t0 = Instant::now();
+        let mut out = vec![0.0f32; mf.param_count];
+        for (u, &w) in updates.iter().zip(weights) {
+            if w == 0.0 {
+                continue;
+            }
+            for (o, x) in out.iter_mut().zip(*u) {
+                *o += w * x;
+            }
+        }
+        Ok((out, t0.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mnist() -> NativeBackend {
+        NativeBackend::for_dataset("mnist").unwrap()
+    }
+
+    #[test]
+    fn preset_param_counts_are_consistent() {
+        for name in ["mnist", "femnist", "shakespeare", "speech", "transformer"] {
+            let b = NativeBackend::for_dataset(name).unwrap();
+            let mf = b.manifest();
+            assert_eq!(
+                mf.param_count,
+                mlp_param_count(mf.sample_elems(), b.hidden(), mf.num_classes),
+                "{name}"
+            );
+            mf.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let b = mnist();
+        let p1 = b.init_params().unwrap();
+        let p2 = b.init_params().unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(p1.len(), b.manifest().param_count);
+        let (d, h, c) = (784usize, 32usize, 10usize);
+        let lim1 = (6.0f32 / (d + h) as f32).sqrt();
+        assert!(p1[..d * h].iter().all(|w| w.abs() <= lim1));
+        // biases zero
+        assert!(p1[d * h..d * h + h].iter().all(|&w| w == 0.0));
+        assert!(p1[d * h + h + h * c..].iter().all(|&w| w == 0.0));
+        // weights actually vary
+        assert!(p1[..d * h].iter().any(|&w| w != 0.0));
+    }
+
+    #[test]
+    fn unknown_dataset_is_rejected() {
+        assert!(NativeBackend::for_dataset("imagenet").is_err());
+    }
+
+    #[test]
+    fn from_manifest_checks_param_count() {
+        let mut mf = mnist().manifest.clone();
+        mf.param_count += 1;
+        assert!(NativeBackend::from_manifest(mf, 32).is_err());
+    }
+
+    #[test]
+    fn aggregate_matches_scalar_reference() {
+        let b = mnist();
+        let p = b.manifest().param_count;
+        let u1: Vec<f32> = (0..p).map(|i| (i % 13) as f32 * 0.01).collect();
+        let u2: Vec<f32> = (0..p).map(|i| (i % 7) as f32 * -0.02).collect();
+        let (agg, _) = b.aggregate(&[&u1, &u2], &[0.3, 0.7]).unwrap();
+        for i in (0..p).step_by(199) {
+            let want = 0.3 * u1[i] + 0.7 * u2[i];
+            assert!((agg[i] - want).abs() < 1e-6, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn aggregate_rejects_bad_shapes() {
+        let b = mnist();
+        let p = b.manifest().param_count;
+        let u = vec![0.1f32; p];
+        assert!(b.aggregate(&[], &[]).is_err());
+        assert!(b.aggregate(&[&u], &[0.5, 0.5]).is_err());
+        let short = vec![0.1f32; p - 1];
+        assert!(b.aggregate(&[&short], &[1.0]).is_err());
+        let too_many: Vec<&[f32]> = (0..b.manifest().k_max + 1).map(|_| &u[..]).collect();
+        let w = vec![0.0f32; b.manifest().k_max + 1];
+        assert!(b.aggregate(&too_many, &w).is_err());
+    }
+
+    #[test]
+    fn evaluate_rejects_wrong_dtype_and_len() {
+        let b = mnist();
+        let mf = b.manifest();
+        let p0 = b.init_params().unwrap();
+        let x_bad = Features::I32(vec![0; mf.eval_size * mf.sample_elems()]);
+        let y = vec![0i32; mf.eval_size];
+        assert!(b.evaluate(&p0, &x_bad, &y).is_err());
+        let x = Features::F32(vec![0.0; mf.eval_size * mf.sample_elems()]);
+        assert!(b.evaluate(&p0, &x, &y[..3]).is_err());
+        assert!(b.evaluate(&p0, &x, &y).is_ok());
+    }
+
+    #[test]
+    fn train_round_validates_inputs() {
+        let b = mnist();
+        let mf = b.manifest();
+        let p0 = b.init_params().unwrap();
+        let zeros = vec![0.0f32; p0.len()];
+        let x = Features::F32(vec![0.1; mf.shard_size * mf.sample_elems()]);
+        let y = vec![0i32; mf.shard_size];
+        let mk = |num_steps: i32| TrainRequest {
+            params: &p0,
+            m: &zeros,
+            v: &zeros,
+            t: 0.0,
+            x: &x,
+            y: &y,
+            seed: 1,
+            num_steps,
+            global: None,
+        };
+        assert!(b.train_round(&mk(mf.steps_per_round as i32)).is_ok());
+        assert!(b.train_round(&mk(mf.steps_per_round as i32 + 1)).is_err());
+        assert!(b.train_round(&mk(-1)).is_err());
+    }
+
+    #[test]
+    fn out_of_range_labels_are_rejected_not_panicking() {
+        let b = mnist();
+        let mf = b.manifest();
+        let p0 = b.init_params().unwrap();
+        let zeros = vec![0.0f32; p0.len()];
+        let x = Features::F32(vec![0.1; mf.shard_size * mf.sample_elems()]);
+        for bad in [-1i32, mf.num_classes as i32] {
+            let y = vec![bad; mf.shard_size];
+            let req = TrainRequest {
+                params: &p0,
+                m: &zeros,
+                v: &zeros,
+                t: 0.0,
+                x: &x,
+                y: &y,
+                seed: 1,
+                num_steps: 1,
+                global: None,
+            };
+            assert!(b.train_round(&req).is_err(), "label {bad} must be rejected");
+        }
+        let ex = Features::F32(vec![0.1; mf.eval_size * mf.sample_elems()]);
+        let ey = vec![mf.num_classes as i32; mf.eval_size];
+        assert!(b.evaluate(&p0, &ex, &ey).is_err());
+    }
+
+    #[test]
+    fn partial_work_advances_t_by_num_steps() {
+        let b = mnist();
+        let mf = b.manifest();
+        let p0 = b.init_params().unwrap();
+        let zeros = vec![0.0f32; p0.len()];
+        let x = Features::F32(vec![0.1; mf.shard_size * mf.sample_elems()]);
+        let y: Vec<i32> = (0..mf.shard_size as i32).map(|i| i % 10).collect();
+        let half = (mf.steps_per_round / 2) as i32;
+        let req = TrainRequest {
+            params: &p0,
+            m: &zeros,
+            v: &zeros,
+            t: 0.0,
+            x: &x,
+            y: &y,
+            seed: 2,
+            num_steps: half,
+            global: None,
+        };
+        let (r, _) = b.train_round(&req).unwrap();
+        assert_eq!(r.t, half as f32);
+        assert!(r.loss.is_finite());
+    }
+
+    #[test]
+    fn zero_steps_is_a_noop_round() {
+        let b = mnist();
+        let mf = b.manifest();
+        let p0 = b.init_params().unwrap();
+        let zeros = vec![0.0f32; p0.len()];
+        let x = Features::F32(vec![0.1; mf.shard_size * mf.sample_elems()]);
+        let y = vec![0i32; mf.shard_size];
+        let req = TrainRequest {
+            params: &p0,
+            m: &zeros,
+            v: &zeros,
+            t: 0.0,
+            x: &x,
+            y: &y,
+            seed: 3,
+            num_steps: 0,
+            global: None,
+        };
+        let (r, _) = b.train_round(&req).unwrap();
+        assert_eq!(r.params, p0);
+        assert_eq!(r.t, 0.0);
+        assert_eq!(r.loss, 0.0);
+    }
+
+    #[test]
+    fn train_round_is_deterministic_in_seed() {
+        let b = mnist();
+        let mf = b.manifest();
+        let p0 = b.init_params().unwrap();
+        let zeros = vec![0.0f32; p0.len()];
+        let x = Features::F32((0..mf.shard_size * mf.sample_elems()).map(|i| (i % 17) as f32 * 0.1).collect());
+        let y: Vec<i32> = (0..mf.shard_size as i32).map(|i| i % 10).collect();
+        let run = |seed: i32| {
+            let req = TrainRequest {
+                params: &p0,
+                m: &zeros,
+                v: &zeros,
+                t: 0.0,
+                x: &x,
+                y: &y,
+                seed,
+                num_steps: mf.steps_per_round as i32,
+                global: None,
+            };
+            b.train_round(&req).unwrap().0
+        };
+        let a = run(5);
+        let b2 = run(5);
+        assert_eq!(a.params, b2.params);
+        assert_eq!(a.loss, b2.loss);
+        let c = run(6);
+        assert_ne!(a.params, c.params, "different seed must shuffle differently");
+    }
+}

@@ -119,47 +119,15 @@ impl Strategy for FedLesScan {
             // Eq. 2 totalEma per participant; cluster order = ascending
             // mean totalEma (fast clusters first).
             let total_ema: Vec<f64> = feats.iter().map(|&(t, m)| t + m * max_t).collect();
-            let mut cluster_sum = vec![0.0f64; n_clusters];
-            let mut cluster_cnt = vec![0usize; n_clusters];
-            for (i, &l) in labels.iter().enumerate() {
-                cluster_sum[l as usize] += total_ema[i];
-                cluster_cnt[l as usize] += 1;
-            }
-            let mut order: Vec<usize> = (0..n_clusters).collect();
-            order.sort_by(|&x, &y| {
-                let mx = cluster_sum[x] / cluster_cnt[x].max(1) as f64;
-                let my = cluster_sum[y] / cluster_cnt[y].max(1) as f64;
-                mx.partial_cmp(&my).unwrap()
-            });
-
-            // members per cluster, least-invoked first (fairness)
-            let mut members: Vec<Vec<ClientId>> = vec![Vec::new(); n_clusters];
-            for (i, &l) in labels.iter().enumerate() {
-                members[l as usize].push(participants[i]);
-            }
-            for m in members.iter_mut() {
-                m.sort_by_key(|&c| (ctx.history.get(c).invocations, c));
-            }
-
-            // rotation start from training progress (§V-C)
-            let progress = if ctx.max_rounds == 0 {
-                0.0
-            } else {
-                ctx.round as f64 / ctx.max_rounds as f64
-            };
-            let start = ((progress * n_clusters as f64) as usize).min(n_clusters - 1);
-
-            let mut taken = 0usize;
-            'outer: for step in 0..n_clusters {
-                let cl = order[(start + step) % n_clusters];
-                for &c in &members[cl] {
-                    selected.push(c);
-                    taken += 1;
-                    if taken == n_cluster {
-                        break 'outer;
-                    }
-                }
-            }
+            selected.extend(sample_clustered(
+                &participants,
+                &total_ema,
+                &labels,
+                n_clusters,
+                n_cluster,
+                ctx,
+                rng,
+            ));
         }
 
         selected.extend(straggler_picks);
@@ -173,6 +141,69 @@ impl Strategy for FedLesScan {
             normalize: self.params.normalize,
         }
     }
+}
+
+/// Algorithm 2 lines 9-17: walk the behaviour clusters (ascending mean
+/// totalEma, rotation start from training progress) and take `take`
+/// participants, least-invoked first within each cluster.
+///
+/// Degenerate clusterings are handled here rather than by the caller: a
+/// zero-cluster result for a non-empty participant set (every point
+/// rejected by the ε grid search) falls back to a uniform sample instead
+/// of underflowing `n_clusters - 1` in the rotation-start computation.
+fn sample_clustered(
+    participants: &[ClientId],
+    total_ema: &[f64],
+    labels: &[isize],
+    n_clusters: usize,
+    take: usize,
+    ctx: &SelectionContext,
+    rng: &mut Rng,
+) -> Vec<ClientId> {
+    if n_clusters == 0 {
+        return random_sample(participants, take, rng);
+    }
+    let mut cluster_sum = vec![0.0f64; n_clusters];
+    let mut cluster_cnt = vec![0usize; n_clusters];
+    for (i, &l) in labels.iter().enumerate() {
+        cluster_sum[l as usize] += total_ema[i];
+        cluster_cnt[l as usize] += 1;
+    }
+    let mut order: Vec<usize> = (0..n_clusters).collect();
+    order.sort_by(|&x, &y| {
+        let mx = cluster_sum[x] / cluster_cnt[x].max(1) as f64;
+        let my = cluster_sum[y] / cluster_cnt[y].max(1) as f64;
+        mx.partial_cmp(&my).unwrap()
+    });
+
+    // members per cluster, least-invoked first (fairness)
+    let mut members: Vec<Vec<ClientId>> = vec![Vec::new(); n_clusters];
+    for (i, &l) in labels.iter().enumerate() {
+        members[l as usize].push(participants[i]);
+    }
+    for m in members.iter_mut() {
+        m.sort_by_key(|&c| (ctx.history.get(c).invocations, c));
+    }
+
+    // rotation start from training progress (§V-C)
+    let progress = if ctx.max_rounds == 0 {
+        0.0
+    } else {
+        ctx.round as f64 / ctx.max_rounds as f64
+    };
+    let start = ((progress * n_clusters as f64) as usize).min(n_clusters - 1);
+
+    let mut picked = Vec::with_capacity(take);
+    'outer: for step in 0..n_clusters {
+        let cl = order[(start + step) % n_clusters];
+        for &c in &members[cl] {
+            picked.push(c);
+            if picked.len() == take {
+                break 'outer;
+            }
+        }
+    }
+    picked
 }
 
 #[cfg(test)]
@@ -306,6 +337,44 @@ mod tests {
         let mut rng = Rng::seed_from_u64(5);
         let sel = s.select(&ctx(&clients, &hist, 0, 2), &mut rng);
         assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_clusters_falls_back_instead_of_underflowing() {
+        // Regression: a zero-cluster result for a non-empty participant
+        // set used to underflow `n_clusters - 1` (usize) when computing
+        // the rotation start. The fallback must sample uniformly.
+        let participants: Vec<ClientId> = vec![3, 5, 9];
+        let total_ema = vec![1.0, 2.0, 3.0];
+        let hist = HistoryStore::new();
+        let c = ctx(&participants, &hist, 4, 2);
+        let mut rng = Rng::seed_from_u64(11);
+        let picked = sample_clustered(&participants, &total_ema, &[], 0, 2, &c, &mut rng);
+        assert_eq!(picked.len(), 2);
+        assert!(picked.iter().all(|p| participants.contains(p)));
+        let mut d = picked.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 2, "duplicates in fallback sample {picked:?}");
+    }
+
+    #[test]
+    fn sample_clustered_respects_rotation_and_fairness() {
+        // One cluster, distinct invocation counts: least-invoked first.
+        let participants: Vec<ClientId> = vec![0, 1, 2];
+        let total_ema = vec![5.0, 5.0, 5.0];
+        let mut hist = HistoryStore::new();
+        for c in 0..3 {
+            for _ in 0..(3 - c) {
+                hist.record_invocation(c);
+            }
+            hist.record_success(c, 0, 10.0);
+        }
+        let c = ctx(&participants, &hist, 0, 2);
+        let mut rng = Rng::seed_from_u64(12);
+        let picked =
+            sample_clustered(&participants, &total_ema, &[0, 0, 0], 1, 2, &c, &mut rng);
+        assert_eq!(picked, vec![2, 1]);
     }
 
     #[test]

@@ -1,36 +1,20 @@
-//! Full-stack integration tests: real AOT artifacts through the PJRT
-//! runtime, the FaaS simulator and the strategies.
+//! Full-stack integration tests: the native execution backend through
+//! the FaaS simulator, strategies and controller. No artifacts, no
+//! external libraries — these run on every `cargo test`.
 //!
-//! These need `make artifacts` to have produced the default-scale
-//! artifact set. If `artifacts/` is missing the tests are skipped with a
-//! clear message rather than failing (CI runs `make test`, which builds
-//! artifacts first).
-
-use std::path::PathBuf;
+//! The PJRT backend is only compile-checked by CI (`--features pjrt`
+//! against the in-tree xla stub); it has no end-to-end coverage here.
+//! Porting this suite to run against `PjrtBackend` behind the feature
+//! flag is future work once a real `xla_extension` environment exists.
 
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
 use fedless::data::{Features, SynthDataset};
-use fedless::runtime::{Engine, ModelRuntime, TrainRequest};
+use fedless::runtime::{Backend, NativeBackend, TrainRequest};
 use fedless::strategy::StrategyKind;
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("mnist.manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
-        None
-    }
-}
-
-/// Engine + compiled mnist runtime. PJRT handles are not Send/Sync, so
-/// each test compiles its own copy (a few seconds; tests run in
-/// parallel threads).
-fn mnist_runtime() -> Option<ModelRuntime> {
-    let dir = artifacts_dir()?;
-    let engine = Engine::cpu().expect("pjrt cpu client");
-    Some(ModelRuntime::load(&engine, &dir, "mnist").expect("load mnist artifacts"))
+fn mnist_backend() -> NativeBackend {
+    NativeBackend::for_dataset("mnist").expect("native mnist backend")
 }
 
 fn quick_cfg(strategy: StrategyKind, scenario: Scenario) -> ExperimentConfig {
@@ -46,8 +30,8 @@ fn quick_cfg(strategy: StrategyKind, scenario: Scenario) -> ExperimentConfig {
 
 #[test]
 fn train_round_decreases_loss_and_changes_params() {
-    let Some(rt) = mnist_runtime() else { return };
-    let mf = &rt.manifest;
+    let rt = mnist_backend();
+    let mf = rt.manifest();
     let data = SynthDataset::from_manifest(mf, 4, 3, Default::default()).unwrap();
     let shard = data.client_data(0);
     let p0 = rt.init_params().unwrap();
@@ -82,8 +66,8 @@ fn train_round_decreases_loss_and_changes_params() {
 
 #[test]
 fn prox_entrypoint_stays_closer_to_global() {
-    let Some(rt) = mnist_runtime() else { return };
-    let mf = &rt.manifest;
+    let rt = mnist_backend();
+    let mf = rt.manifest();
     let data = SynthDataset::from_manifest(mf, 4, 5, Default::default()).unwrap();
     let shard = data.client_data(1);
     let p0 = rt.init_params().unwrap();
@@ -129,8 +113,8 @@ fn prox_entrypoint_stays_closer_to_global() {
 
 #[test]
 fn partial_work_masks_steps() {
-    let Some(rt) = mnist_runtime() else { return };
-    let mf = &rt.manifest;
+    let rt = mnist_backend();
+    let mf = rt.manifest();
     let data = SynthDataset::from_manifest(mf, 4, 9, Default::default()).unwrap();
     let shard = data.client_data(2);
     let p0 = rt.init_params().unwrap();
@@ -156,8 +140,8 @@ fn partial_work_masks_steps() {
 
 #[test]
 fn aggregate_kernel_matches_cpu_reference() {
-    let Some(rt) = mnist_runtime() else { return };
-    let p = rt.manifest.param_count;
+    let rt = mnist_backend();
+    let p = rt.manifest().param_count;
     let u1: Vec<f32> = (0..p).map(|i| (i % 13) as f32 * 0.01).collect();
     let u2: Vec<f32> = (0..p).map(|i| (i % 7) as f32 * -0.02).collect();
     let w = [0.3f32, 0.7];
@@ -172,15 +156,15 @@ fn aggregate_kernel_matches_cpu_reference() {
         );
     }
     // k_max overflow rejected
-    let too_many: Vec<&[f32]> = (0..rt.manifest.k_max + 1).map(|_| &u1[..]).collect();
-    let w_bad = vec![0.0f32; rt.manifest.k_max + 1];
+    let too_many: Vec<&[f32]> = (0..rt.manifest().k_max + 1).map(|_| &u1[..]).collect();
+    let w_bad = vec![0.0f32; rt.manifest().k_max + 1];
     assert!(rt.aggregate(&too_many, &w_bad).is_err());
 }
 
 #[test]
 fn evaluate_bounds_and_shape_checks() {
-    let Some(rt) = mnist_runtime() else { return };
-    let mf = &rt.manifest;
+    let rt = mnist_backend();
+    let mf = rt.manifest();
     let data = SynthDataset::from_manifest(mf, 4, 1, Default::default()).unwrap();
     let eval = data.eval_data();
     let p0 = rt.init_params().unwrap();
@@ -197,7 +181,7 @@ fn evaluate_bounds_and_shape_checks() {
 
 #[test]
 fn full_experiment_standard_has_high_eur_and_learns() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Standard);
     cfg.rounds = 6;
     let mut ctl = Controller::new(cfg, &rt).unwrap();
@@ -215,7 +199,7 @@ fn full_experiment_standard_has_high_eur_and_learns() {
 
 #[test]
 fn straggler_scenario_reduces_fedavg_eur() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let run = |scenario| {
         let mut ctl = Controller::new(quick_cfg(StrategyKind::Fedavg, scenario), &rt).unwrap();
         ctl.run().unwrap()
@@ -232,7 +216,7 @@ fn straggler_scenario_reduces_fedavg_eur() {
 
 #[test]
 fn fedlesscan_beats_fedavg_eur_under_stragglers() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let run = |strategy| {
         let mut cfg = quick_cfg(strategy, Scenario::Straggler(50));
         cfg.rounds = 8;
@@ -251,7 +235,7 @@ fn fedlesscan_beats_fedavg_eur_under_stragglers() {
 
 #[test]
 fn stale_updates_are_applied_by_fedlesscan() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(50));
     cfg.straggler_slow_frac = 1.0; // all forced stragglers are slow
     cfg.rounds = 8;
@@ -263,7 +247,7 @@ fn stale_updates_are_applied_by_fedlesscan() {
 
 #[test]
 fn experiment_is_deterministic_in_seed() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let run = || {
         let mut ctl =
             Controller::new(quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(30)), &rt)
@@ -282,7 +266,7 @@ fn experiment_is_deterministic_in_seed() {
 
 #[test]
 fn history_reflects_algorithm_one() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let mut cfg = quick_cfg(StrategyKind::Fedavg, Scenario::Straggler(70));
     cfg.rounds = 6;
     let mut ctl = Controller::new(cfg, &rt).unwrap();
@@ -302,7 +286,7 @@ fn history_reflects_algorithm_one() {
 
 #[test]
 fn result_files_round_trip() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let mut ctl =
         Controller::new(quick_cfg(StrategyKind::Fedprox, Scenario::Standard), &rt).unwrap();
     let res = ctl.run().unwrap();
@@ -324,15 +308,9 @@ fn result_files_round_trip() {
 }
 
 #[test]
-fn token_model_runtime_works() {
-    let Some(dir) = artifacts_dir() else { return };
-    if !dir.join("shakespeare.manifest.json").exists() {
-        eprintln!("SKIP: no shakespeare artifacts");
-        return;
-    }
-    let engine = Engine::cpu().unwrap();
-    let rt = ModelRuntime::load(&engine, &dir, "shakespeare").unwrap();
-    let mf = &rt.manifest;
+fn token_model_backend_works() {
+    let rt = NativeBackend::for_dataset("shakespeare").unwrap();
+    let mf = rt.manifest();
     assert_eq!(mf.input_dtype, "i32");
     let data = SynthDataset::from_manifest(mf, 4, 2, Default::default()).unwrap();
     let shard = data.client_data(0);
@@ -356,8 +334,25 @@ fn token_model_runtime_works() {
 }
 
 #[test]
+fn every_preset_dataset_runs_a_round_natively() {
+    // The backend seam must hold for all five families end to end.
+    for dataset in ["mnist", "femnist", "shakespeare", "speech", "transformer"] {
+        let rt = NativeBackend::for_dataset(dataset).unwrap();
+        let mut cfg = ExperimentConfig::preset(dataset);
+        cfg.rounds = 2;
+        cfg.n_clients = 8;
+        cfg.clients_per_round = 3;
+        cfg.seed = 13;
+        let mut ctl = Controller::new(cfg, &rt).unwrap();
+        let res = ctl.run().unwrap();
+        assert_eq!(res.rounds.len(), 2, "{dataset}");
+        assert!(res.rounds[0].successes > 0, "{dataset}: nobody succeeded");
+    }
+}
+
+#[test]
 fn adaptive_clients_overprovisions_under_stragglers() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let mut cfg = quick_cfg(StrategyKind::Fedavg, Scenario::Straggler(50));
     cfg.adaptive_clients = true;
     cfg.rounds = 6;
@@ -377,7 +372,7 @@ fn adaptive_clients_overprovisions_under_stragglers() {
 
 #[test]
 fn stale_norm_clip_discards_outlier_stale_updates() {
-    let Some(rt) = mnist_runtime() else { return };
+    let rt = mnist_backend();
     let mk = |clip: Option<f64>| {
         let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(50));
         cfg.straggler_slow_frac = 1.0;

@@ -1,0 +1,237 @@
+//! Golden-value tests pinning the `NativeBackend` to the hand-written
+//! reference semantics of `python/compile/kernels/ref.py`:
+//!
+//! * `aggregate_ref` — `sum_k w_k * u_k` in f32, checked against an
+//!   independent f64 scalar loop and against the zero-weight/pad rules;
+//! * `staleness_weights_ref` — the Eq. 3 weights feeding the kernel,
+//!   checked end to end (weights * backend aggregation == the reference
+//!   convex combination);
+//! * the training round — gradient correctness is verified against
+//!   central finite differences of the loss (backend-independent ground
+//!   truth), and loss must decrease over 3 sequential rounds on a
+//!   fixed-seed synthetic dataset.
+
+use fedless::data::{Features, SynthDataset};
+use fedless::paramsvr::{staleness_weights, WeightedUpdate};
+use fedless::runtime::manifest::{Entrypoint, Manifest};
+use fedless::runtime::{Backend, NativeBackend, TrainRequest};
+
+/// A tiny fully-specified SGD model (d=10, h=16, c=7) so finite
+/// differences are cheap and exact-seed reproducible.
+fn tiny_sgd_backend() -> NativeBackend {
+    let (d, h, c) = (10usize, 16usize, 7usize);
+    let ep = |name: &str| Entrypoint {
+        file: format!("<native:{name}>"),
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+    };
+    let manifest = Manifest {
+        name: "tiny".into(),
+        scale: "test".into(),
+        param_count: d * h + h + h * c + c,
+        num_classes: c,
+        input_shape: vec![d],
+        input_dtype: "f32".into(),
+        shard_size: 8,
+        batch_size: 8,
+        local_epochs: 1,
+        steps_per_round: 1,
+        optimizer: "sgd".into(),
+        lr: 0.5,
+        prox_mu: 0.1,
+        eval_size: 16,
+        eval_batch: 16,
+        k_max: 8,
+        seq_len: None,
+        flops_per_round: 1000,
+        entrypoints: ["train", "train_prox", "eval", "aggregate"]
+            .iter()
+            .map(|n| (n.to_string(), ep(n)))
+            .collect(),
+        init_file: "<builtin>".into(),
+        init_sha256: "<builtin>".into(),
+        init_seed: 0,
+    };
+    NativeBackend::from_manifest(manifest, h).unwrap()
+}
+
+fn tiny_shard(d: usize, n: usize, c: usize) -> (Features, Vec<i32>) {
+    // deterministic, label-correlated features
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = (i * 3 + 1) % c;
+        y.push(label as i32);
+        for j in 0..d {
+            let v = ((i * 31 + j * 17) % 23) as f32 / 23.0 + 0.3 * label as f32 / c as f32;
+            x.push(v);
+        }
+    }
+    (Features::F32(x), y)
+}
+
+/// One SGD step with the shard-sized batch: the parameter delta divided
+/// by the learning rate *is* the gradient the backend computed.
+fn analytic_grad(rt: &NativeBackend, params: &[f32], x: &Features, y: &[i32]) -> (Vec<f32>, f32) {
+    let zeros = vec![0f32; params.len()];
+    let (res, _) = rt
+        .train_round(&TrainRequest {
+            params,
+            m: &zeros,
+            v: &zeros,
+            t: 0.0,
+            x,
+            y,
+            seed: 5,
+            num_steps: 1,
+            global: None,
+        })
+        .unwrap();
+    let lr = rt.manifest().lr as f32;
+    let g = params
+        .iter()
+        .zip(&res.params)
+        .map(|(p0, p1)| (p0 - p1) / lr)
+        .collect();
+    // num_steps=1: the reported loss is the pre-step loss of this batch
+    (g, res.loss)
+}
+
+#[test]
+fn backward_matches_finite_differences() {
+    let rt = tiny_sgd_backend();
+    let mf = rt.manifest();
+    let (x, y) = tiny_shard(10, mf.shard_size, mf.num_classes);
+    let p0 = rt.init_params().unwrap();
+    let (g, _) = analytic_grad(&rt, &p0, &x, &y);
+
+    let loss_at = |params: &[f32]| -> f32 { analytic_grad(&rt, params, &x, &y).1 };
+    let eps = 1e-2f32;
+    // probe every layer: w1 head, w1 interior, b1, w2, b2 tail
+    let probes = [0usize, 37, 10 * 16 + 3, 10 * 16 + 16 + 5, p0.len() - 1];
+    for &i in &probes {
+        let mut pp = p0.clone();
+        pp[i] += eps;
+        let mut pm = p0.clone();
+        pm[i] -= eps;
+        let numeric = (loss_at(&pp) - loss_at(&pm)) / (2.0 * eps);
+        let diff = (numeric - g[i]).abs();
+        assert!(
+            diff < 1e-3 + 0.05 * numeric.abs(),
+            "coordinate {i}: analytic {} vs numeric {numeric} (diff {diff})",
+            g[i]
+        );
+    }
+}
+
+#[test]
+fn loss_decreases_over_three_rounds_fixed_seed() {
+    let rt = NativeBackend::for_dataset("mnist").unwrap();
+    let mf = rt.manifest();
+    let data = SynthDataset::from_manifest(mf, 4, 3, Default::default()).unwrap();
+    let shard = data.client_data(0);
+    let mut params = rt.init_params().unwrap();
+    let zeros = vec![0f32; params.len()];
+    let mut losses = Vec::new();
+    for seed in 1..=3 {
+        let (res, _) = rt
+            .train_round(&TrainRequest {
+                params: &params,
+                m: &zeros,
+                v: &zeros,
+                t: 0.0,
+                x: &shard.x,
+                y: &shard.y,
+                seed,
+                num_steps: mf.steps_per_round as i32,
+                global: None,
+            })
+            .unwrap();
+        losses.push(res.loss);
+        params = res.params;
+    }
+    assert!(
+        losses.windows(2).all(|w| w[1] < w[0]),
+        "losses must strictly decrease over 3 rounds: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite() && *l >= 0.0));
+}
+
+#[test]
+fn aggregation_matches_f64_reference() {
+    let rt = NativeBackend::for_dataset("mnist").unwrap();
+    let p = rt.manifest().param_count;
+    let updates: Vec<Vec<f32>> = (0..4)
+        .map(|k| (0..p).map(|i| ((i + k * 7) % 11) as f32 * 0.03 - 0.15).collect())
+        .collect();
+    let refs: Vec<&[f32]> = updates.iter().map(Vec::as_slice).collect();
+    let weights = [0.1f32, 0.4, 0.2, 0.3];
+    let (agg, _) = rt.aggregate(&refs, &weights).unwrap();
+    for i in (0..p).step_by(313) {
+        let want: f64 = updates
+            .iter()
+            .zip(&weights)
+            .map(|(u, &w)| f64::from(w) * f64::from(u[i]))
+            .sum();
+        assert!(
+            (f64::from(agg[i]) - want).abs() < 1e-5,
+            "elem {i}: {} vs {want}",
+            agg[i]
+        );
+    }
+}
+
+#[test]
+fn aggregation_weights_match_staleness_reference() {
+    // End-to-end Eq. 3: weights from `staleness_weights` (the Rust twin
+    // of `staleness_weights_ref`) drive the backend aggregation; the
+    // result must be the reference convex combination.
+    let rt = NativeBackend::for_dataset("mnist").unwrap();
+    let p = rt.manifest().param_count;
+    let fresh: Vec<f32> = (0..p).map(|i| (i % 5) as f32 * 0.1).collect();
+    let stale: Vec<f32> = (0..p).map(|i| (i % 3) as f32 * -0.2).collect();
+    let expired: Vec<f32> = vec![9.9; p]; // must contribute nothing
+
+    let t = 10u32;
+    let tau = 2u32;
+    let winfo = [
+        WeightedUpdate { produced_round: 10, cardinality: 20 },
+        WeightedUpdate { produced_round: 9, cardinality: 20 },
+        WeightedUpdate { produced_round: 7, cardinality: 20 }, // age 3 >= tau
+    ];
+    let weights = staleness_weights(&winfo, t, tau, true);
+    assert_eq!(weights[2], 0.0, "expired update must get weight 0");
+    let wsum: f32 = weights.iter().sum();
+    assert!((wsum - 1.0).abs() < 1e-5, "normalized weights sum {wsum}");
+    // reference semantics: damp_k = t_k/t, scaled by n_k/n, renormalized
+    let (w0, w1) = (weights[0], weights[1]);
+    assert!((w1 / w0 - 0.9).abs() < 1e-4, "damping ratio {} != t_k/t", w1 / w0);
+
+    let (agg, _) = rt
+        .aggregate(&[&fresh, &stale, &expired], &weights)
+        .unwrap();
+    for i in (0..p).step_by(611) {
+        let want = w0 * fresh[i] + w1 * stale[i];
+        assert!(
+            (agg[i] - want).abs() < 1e-5,
+            "elem {i}: {} vs {want}",
+            agg[i]
+        );
+    }
+}
+
+#[test]
+fn init_params_match_glorot_reference_stats() {
+    // ref semantics (archs/common.py dense_init): uniform in ±sqrt(6/(fan_in+fan_out)),
+    // biases zero. Check bounds and that the empirical mean is near zero.
+    let rt = NativeBackend::for_dataset("femnist").unwrap();
+    let mf = rt.manifest();
+    let p0 = rt.init_params().unwrap();
+    let d = mf.sample_elems();
+    let h = rt.hidden();
+    let lim1 = (6.0 / (d + h) as f64).sqrt();
+    let w1 = &p0[..d * h];
+    assert!(w1.iter().all(|w| (f64::from(*w)).abs() <= lim1));
+    let mean: f64 = w1.iter().map(|w| f64::from(*w)).sum::<f64>() / w1.len() as f64;
+    assert!(mean.abs() < 0.01 * lim1 + 1e-3, "w1 mean {mean} vs lim {lim1}");
+}

@@ -1,0 +1,236 @@
+//! Stub for the `xla` PJRT crate so `--features pjrt` compiles in offline
+//! environments without an `xla_extension` install. Host-side literals are
+//! fully functional (the `fedless` runtime's marshalling unit tests run
+//! against them); everything that would touch the PJRT C API — client
+//! creation, compilation, execution — returns an error at runtime.
+//!
+//! Deployments with the real toolchain swap this out via a Cargo patch:
+//!
+//! ```toml
+//! [patch."<workspace>"]
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+//! ```
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's surface (`Display` is all the
+/// callers use).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: built against the offline xla stub; install xla_extension and \
+         patch in the real `xla` crate to use the pjrt backend"
+    ))
+}
+
+/// Element types supported by the host-literal subset.
+pub trait NativeType: Copy + Default + 'static {
+    fn write(lit: &mut Literal, data: Vec<Self>);
+    fn read(lit: &Literal) -> Option<&[Self]>;
+}
+
+/// Host-side literal: flat element storage plus dimensions, or a tuple.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+#[derive(Debug, Clone)]
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn write(lit: &mut Literal, data: Vec<Self>) {
+        lit.data = LiteralData::F32(data);
+    }
+    fn read(lit: &Literal) -> Option<&[Self]> {
+        match &lit.data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn write(lit: &mut Literal, data: Vec<Self>) {
+        lit.data = LiteralData::I32(data);
+    }
+    fn read(lit: &Literal) -> Option<&[Self]> {
+        match &lit.data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut lit = Literal {
+            data: LiteralData::F32(Vec::new()),
+            dims: vec![data.len() as i64],
+        };
+        T::write(&mut lit, data.to_vec());
+        lit
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut lit = Literal {
+            data: LiteralData::F32(Vec::new()),
+            dims: Vec::new(),
+        };
+        T::write(&mut lit, vec![v]);
+        lit
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape: {} elements vs dims {dims:?}",
+                self.len()
+            )));
+        }
+        let mut out = self.clone();
+        out.dims = dims.to_vec();
+        Ok(out)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(self)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::read(self)
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| Error("empty or mistyped literal".into()))
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        let src = T::read(self).ok_or_else(|| Error("literal element type mismatch".into()))?;
+        if src.len() != dst.len() {
+            return Err(Error(format!(
+                "copy_raw_to: {} vs {} elements",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<Self> {
+        std::fs::read_to_string(path).map_err(|e| Error(format!("{}: {e}", path.display())))?;
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle (stub: construction fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (stub: execution fails).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
