@@ -152,4 +152,31 @@ fn main() {
             .unwrap()
         },
     );
+
+    // --- scheduler event queue (virtual-clock replay cost) ---------------
+    use fedless::faas::Outcome;
+    use fedless::sched::{CompletionEvent, EventQueue};
+    for &n in &[100usize, 10_000] {
+        let mut r = Rng::seed_from_u64(7);
+        let events: Vec<CompletionEvent> = (0..n)
+            .map(|seq| CompletionEvent {
+                at_s: r.range_f64(0.0, 1e6),
+                seq,
+                client: seq,
+                outcome: Outcome::OnTime,
+            })
+            .collect();
+        bench(&format!("sched/event-queue push+drain n={n}"), 3, 30, || {
+            let mut q = EventQueue::new();
+            for &ev in &events {
+                q.push(ev);
+            }
+            let mut last = f64::NEG_INFINITY;
+            while let Some(ev) = q.pop() {
+                debug_assert!(ev.at_s >= last);
+                last = ev.at_s;
+            }
+            last
+        });
+    }
 }

@@ -12,11 +12,61 @@ use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
 use fedless::data::SynthDataset;
 use fedless::runtime::{Backend, NativeBackend, TrainRequest};
+use fedless::sched;
 use fedless::strategy::StrategyKind;
 use fedless::util::bench::bench;
 
 fn main() {
     println!("== end-to-end benches (native backend) ==");
+
+    // --- parallel vs serial client execution (the sched speedup) -------
+    // An 8-client round of real local training: 1 worker reproduces the
+    // serial seed path; the parallel pool must beat it wall-clock on any
+    // multi-core host.
+    {
+        let rt = NativeBackend::for_dataset("mnist").expect("native backend");
+        let mf = rt.manifest().clone();
+        let n_clients = 8usize;
+        let data = SynthDataset::from_manifest(&mf, n_clients, 1, Default::default()).unwrap();
+        let shards: Vec<_> = (0..n_clients).map(|c| data.client_data(c)).collect();
+        let p0 = rt.init_params().unwrap();
+        let zeros = vec![0f32; p0.len()];
+        let jobs: Vec<Option<TrainRequest>> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                Some(TrainRequest {
+                    params: &p0,
+                    m: &zeros,
+                    v: &zeros,
+                    t: 0.0,
+                    x: &shard.x,
+                    y: &shard.y,
+                    seed: i as i32,
+                    num_steps: mf.steps_per_round as i32,
+                    global: None,
+                })
+            })
+            .collect();
+        let workers = sched::default_workers();
+        let serial = bench(
+            &format!("sched/train {n_clients} clients serial (1 worker)"),
+            1,
+            8,
+            || sched::train_parallel_with(&rt, &jobs, 1).unwrap(),
+        );
+        let parallel = bench(
+            &format!("sched/train {n_clients} clients parallel ({workers} workers)"),
+            1,
+            8,
+            || sched::train_parallel(&rt, &jobs).unwrap(),
+        );
+        println!(
+            "   -> parallel speedup: {:.2}x over serial ({} workers)",
+            serial.mean.as_secs_f64() / parallel.mean.as_secs_f64().max(1e-12),
+            workers
+        );
+    }
 
     for model in ["mnist", "femnist", "shakespeare", "speech", "transformer"] {
         let rt = NativeBackend::for_dataset(model).expect("native backend");

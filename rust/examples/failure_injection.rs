@@ -32,17 +32,18 @@ fn main() -> fedless::Result<()> {
 
     println!("== per-round failures under a hostile platform ==");
     println!(
-        "{:>5} {:>9} {:>9} {:>7} {:>8}",
-        "round", "selected", "failures", "EUR", "stale"
+        "{:>5} {:>9} {:>9} {:>7} {:>8} {:>9}",
+        "round", "selected", "failures", "EUR", "stale", "in-flight"
     );
     for r in &result.rounds {
         println!(
-            "{:>5} {:>9} {:>9} {:>7.2} {:>8}",
+            "{:>5} {:>9} {:>9} {:>7.2} {:>8} {:>9}",
             r.round,
             r.selected.len(),
             r.failures,
             r.eur,
-            r.stale_applied
+            r.stale_applied,
+            r.in_flight_skipped
         );
     }
 

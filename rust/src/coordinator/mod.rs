@@ -1,22 +1,31 @@
 //! The FedLess controller (§IV, Algorithm 1 Train_Global_Model): the L3
 //! event loop that drives one federated experiment end to end.
 //!
-//! Per round:
-//! 1. the strategy selects clients;
-//! 2. each selected client is "invoked": its local training round runs
-//!    for real through the execution [`Backend`] (native MLP or one PJRT
-//!    HLO call), while the simulated GCF platform turns the nominal
-//!    compute time into a virtual invocation timeline (cold starts, VM
-//!    heterogeneity, failures, deadline) — see DESIGN.md §2;
-//! 3. on-time updates (plus, for staleness-aware strategies, late
+//! Per round (event-driven since the [`crate::sched`] refactor):
+//! 1. the strategy selects clients; clients whose previous invocation is
+//!    still in flight are skipped, never re-invoked mid-flight;
+//! 2. the simulated GCF platform *plans* every invocation up front —
+//!    full virtual timeline plus the crash/late/on-time outcome — so
+//!    doomed invocations skip real compute entirely;
+//! 3. local training for the surviving invocations runs for real
+//!    through the execution [`Backend`] (native MLP or one PJRT HLO
+//!    call each), in parallel across scoped worker threads;
+//! 4. completions are replayed through the virtual-clock event queue in
+//!    true arrival order: on-time updates aggregate in arrival order,
+//!    late updates enter the staleness buffer the same way;
+//! 5. on-time updates (plus, for staleness-aware strategies, late
 //!    updates that have arrived since) are aggregated through the
-//!    backend's Eq. 3 kernel;
-//! 4. the client-history DB is updated exactly as Algorithm 1 does,
+//!    backend's Eq. 3 kernel, capped at the kernel's `k_max` with
+//!    fresh-first / newest-stale-next priority;
+//! 6. the client-history DB is updated exactly as Algorithm 1 does,
 //!    including the client-side correction of missed rounds when a slow
 //!    update finally lands;
-//! 5. the model is centrally evaluated and the §VI metrics recorded.
+//! 7. the model is centrally evaluated and the §VI metrics recorded.
 //!
-//! Everything is deterministic in the experiment seed.
+//! Everything is deterministic in the experiment seed: the platform RNG
+//! is consumed in selection order (identical to the serial seed loop),
+//! worker threads write disjoint result slots, and the event queue
+//! tie-breaks on issue order.
 
 use std::collections::HashMap;
 
@@ -28,6 +37,7 @@ use crate::faas::{Forced, Outcome, SimulatedGcf};
 use crate::metrics::{ExperimentResult, RoundRecord};
 use crate::paramsvr::{staleness_weights, ParameterServer, StaleUpdate, WeightedUpdate};
 use crate::runtime::{Backend, TrainRequest};
+use crate::sched;
 use crate::strategy::{Aggregation, SelectionContext, Strategy};
 use crate::util::Rng;
 use crate::{ClientId, Result};
@@ -66,6 +76,10 @@ pub struct Controller<'rt> {
     /// Adaptive clients-per-round (extension, config.adaptive_clients):
     /// starts at the configured k and tracks recent EUR.
     effective_k: usize,
+    /// Clients whose latest invocation is still running on the virtual
+    /// clock (late completion or hard-timeout kill): the scheduler never
+    /// re-invokes them mid-flight.
+    in_flight: sched::InFlight,
 }
 
 impl<'rt> Controller<'rt> {
@@ -125,6 +139,7 @@ impl<'rt> Controller<'rt> {
             zeros,
             shard_cache: HashMap::new(),
             effective_k: cfg_k,
+            in_flight: sched::InFlight::new(),
         })
     }
 
@@ -207,54 +222,26 @@ impl<'rt> Controller<'rt> {
             self.strategy.select(&ctx, &mut self.rng)
         };
 
-        // 2. invoke
-        let mut fresh: Vec<FreshUpdate> = Vec::new();
-        let mut failed_now: Vec<ClientId> = Vec::new();
-        let mut latest_ontime = round_start;
-        let mut any_missed = false;
-        for &client in &selected {
+        // 2. in-flight filter: a client whose previous invocation is
+        //    still running on the virtual clock is never re-invoked
+        //    mid-flight (the seed double-invoked it, corrupting the warm
+        //    pool and double-billing the client).
+        self.in_flight.expire(round_start);
+        let (invoked, skipped) = sched::split_in_flight(&selected, &self.in_flight);
+        let in_flight_skipped = skipped.len();
+
+        // 3. plan every invocation up front: the platform decides each
+        //    outcome and timeline before any real compute runs. The
+        //    platform RNG stream is consumed in selection order, exactly
+        //    as the serial seed loop drew it.
+        let mut plans: Vec<sched::ClientPlan> = Vec::with_capacity(invoked.len());
+        for &client in &invoked {
             self.history.record_invocation(client);
             *self.invocations.entry(client).or_insert(0) += 1;
             let forced = self.forced.get(&client).copied();
-
             // FedProx partial-work toleration
             let frac = self.strategy.work_fraction(client, &mut self.rng);
-            let num_steps =
-                ((mf.steps_per_round as f64 * frac).round() as i32).max(1);
-
-            // Real compute (skipped for crashed clients — their work is
-            // lost; the platform still bills them below).
-            let trained = if forced == Some(Forced::Crash) {
-                None
-            } else {
-                let data = &self.data;
-                let shard = self
-                    .shard_cache
-                    .entry(client)
-                    .or_insert_with(|| data.client_data(client));
-                let global_ref;
-                let global = if self.strategy.uses_prox() {
-                    global_ref = self.server.global().to_vec();
-                    Some(&global_ref[..])
-                } else {
-                    None
-                };
-                let req = TrainRequest {
-                    params: self.server.global(),
-                    m: &self.zeros,
-                    v: &self.zeros,
-                    t: 0.0,
-                    x: &shard.x,
-                    y: &shard.y,
-                    seed: (round as i32) * 100_003 + client as i32,
-                    num_steps,
-                    global,
-                };
-                let (result, _wall) = self.backend.train_round(&req)?;
-                Some(result)
-            };
-
-            // Virtual timeline
+            let num_steps = ((mf.steps_per_round as f64 * frac).round() as i32).max(1);
             let compute_s = self.cfg.base_train_s * frac;
             let inv = self.faas.invoke(
                 client,
@@ -265,61 +252,120 @@ impl<'rt> Controller<'rt> {
                 forced,
             );
             self.ledger.bill(inv.billed_s, self.cfg.faas.memory_mb);
+            plans.push(sched::ClientPlan { client, inv, num_steps });
+        }
 
-            match (inv.outcome, trained) {
-                (Outcome::OnTime, Some(result)) => {
-                    latest_ontime = latest_ontime.max(inv.finished_at);
+        // 4. real compute, in parallel across worker threads, only for
+        //    invocations that will deliver an update — crashed
+        //    invocations skip training entirely (their work would be
+        //    thrown away; the platform still billed them above).
+        for p in &plans {
+            if p.inv.outcome != Outcome::Crash && !self.shard_cache.contains_key(&p.client) {
+                self.shard_cache
+                    .insert(p.client, self.data.client_data(p.client));
+            }
+        }
+        let global_anchor: Option<Vec<f32>> = if self.strategy.uses_prox() {
+            Some(self.server.global().to_vec())
+        } else {
+            None
+        };
+        let jobs: Vec<Option<TrainRequest>> = plans
+            .iter()
+            .map(|p| {
+                if p.inv.outcome == Outcome::Crash {
+                    return None;
+                }
+                let shard = &self.shard_cache[&p.client];
+                Some(TrainRequest {
+                    params: self.server.global(),
+                    m: &self.zeros,
+                    v: &self.zeros,
+                    t: 0.0,
+                    x: &shard.x,
+                    y: &shard.y,
+                    seed: (round as i32) * 100_003 + p.client as i32,
+                    num_steps: p.num_steps,
+                    global: global_anchor.as_deref(),
+                })
+            })
+            .collect();
+        let mut results = sched::train_parallel(self.backend, &jobs)?;
+        drop(jobs);
+
+        // 5. replay completions on the virtual clock, in true arrival
+        //    order: fresh updates aggregate (and stale updates enter the
+        //    buffer) in the order they reached the parameter server.
+        let mut queue = sched::EventQueue::schedule(&plans);
+        let mut fresh: Vec<FreshUpdate> = Vec::new();
+        let mut failed_now: Vec<ClientId> = Vec::new();
+        let mut latest_ontime = round_start;
+        let mut any_missed = false;
+        while let Some(ev) = queue.pop() {
+            let plan = &plans[ev.seq];
+            match ev.outcome {
+                Outcome::OnTime => {
+                    let result = results[ev.seq]
+                        .take()
+                        .expect("on-time invocation must have trained");
+                    latest_ontime = latest_ontime.max(ev.at_s);
                     fresh.push(FreshUpdate {
-                        client,
+                        client: ev.client,
                         params: result.params,
-                        cardinality: self.data.cardinality(client),
-                        training_time_s: inv.training_time_s,
+                        cardinality: self.data.cardinality(ev.client),
+                        training_time_s: plan.inv.training_time_s,
                         loss: result.loss,
                     });
                 }
-                (Outcome::Late, Some(result)) => {
+                Outcome::Late => {
+                    let result = results[ev.seq]
+                        .take()
+                        .expect("late invocation must have trained");
                     any_missed = true;
                     // Controller assumes the client failed (Alg. 1 L9-12);
                     // the slow update itself lands in the staleness buffer
                     // and the client corrects its history on arrival.
-                    self.history.record_failure(client, round);
-                    failed_now.push(client);
+                    self.history.record_failure(ev.client, round);
+                    failed_now.push(ev.client);
+                    self.in_flight.track(ev.client, ev.at_s);
                     self.server.push_stale(StaleUpdate {
-                        client,
+                        client: ev.client,
                         produced_round: round + 1, // 1-based t_k for Eq. 3
-                        arrived_at_s: inv.finished_at,
-                        training_time_s: inv.training_time_s,
+                        arrived_at_s: ev.at_s,
+                        training_time_s: plan.inv.training_time_s,
                         params: result.params,
-                        cardinality: self.data.cardinality(client),
+                        cardinality: self.data.cardinality(ev.client),
                         loss: result.loss,
                     });
                 }
-                (_, _) => {
+                Outcome::Crash => {
                     any_missed = true;
-                    self.history.record_failure(client, round);
-                    failed_now.push(client);
+                    self.history.record_failure(ev.client, round);
+                    failed_now.push(ev.client);
+                    if ev.at_s > deadline {
+                        // hard-timeout kill: the doomed instance occupies
+                        // the platform into future rounds
+                        self.in_flight.track(ev.client, ev.at_s);
+                    }
                 }
             }
         }
 
-        // Round end: everyone on time -> slowest client; otherwise the
+        // Round end: everyone on time -> slowest client; any miss -> the
         // controller waited for the timeout (Alg. 1 "finish or timeout").
-        let round_end = if any_missed { deadline } else { latest_ontime };
+        // A round whose entire selection was still in flight also waits
+        // out the deadline (the controller is blocked on stragglers).
+        let round_end = if any_missed || (invoked.is_empty() && in_flight_skipped > 0) {
+            deadline
+        } else {
+            latest_ontime
+        };
 
-        // 3. aggregation
+        // 6. aggregation
         let t_1b = round + 1; // 1-based aggregation round for Eq. 3
         let mut stale_applied = 0usize;
         let successes = fresh.len();
         if !fresh.is_empty() || self.server.stale_len() > 0 {
-            let mut params_refs: Vec<&[f32]> = Vec::new();
-            let mut winfo: Vec<WeightedUpdate> = Vec::new();
-            for u in &fresh {
-                params_refs.push(&u.params);
-                winfo.push(WeightedUpdate {
-                    produced_round: t_1b,
-                    cardinality: u.cardinality,
-                });
-            }
             let (tau, normalize) = match self.strategy.aggregation() {
                 Aggregation::Synchronous => (1, true),
                 Aggregation::StalenessAware { tau, normalize } => (tau, normalize),
@@ -335,7 +381,9 @@ impl<'rt> Controller<'rt> {
             // Extension (config.stale_norm_clip): discard stale updates
             // that drifted too far from the current global relative to
             // this round's fresh updates — "aggregate valuable updates
-            // and discard the unnecessary ones" (paper §VII).
+            // and discard the unnecessary ones" (paper §VII). With no
+            // fresh updates there is no reference distance and the
+            // filter is a no-op.
             if let (Some(clip), false) = (self.cfg.stale_norm_clip, fresh.is_empty()) {
                 let dist = |p: &[f32]| -> f64 {
                     p.iter()
@@ -346,9 +394,14 @@ impl<'rt> Controller<'rt> {
                 };
                 let mut fresh_d: Vec<f64> = fresh.iter().map(|u| dist(&u.params)).collect();
                 fresh_d.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                let median = fresh_d[fresh_d.len() / 2].max(1e-12);
+                let median = sched::median_sorted(&fresh_d).max(1e-12);
                 drained.retain(|u| dist(&u.params) <= clip * median);
             }
+            // k_max cap: fresh first, newest stale next. Only stale
+            // updates that actually enter the aggregation receive history
+            // credit and `stale_applied` accounting — the seed credited
+            // and counted updates it then truncated away.
+            let drained = sched::cap_stale(fresh.len(), drained, mf.k_max);
             for u in &drained {
                 // client-side history correction (§V-B): round numbers in
                 // the DB are 0-based
@@ -359,17 +412,24 @@ impl<'rt> Controller<'rt> {
                 );
             }
             stale_applied = drained.len();
+            let mut params_refs: Vec<&[f32]> = Vec::new();
+            let mut winfo: Vec<WeightedUpdate> = Vec::new();
+            // fresh updates beyond k_max (unreachable with the presets)
+            // still count as successes; they just cannot enter this
+            // aggregate call
+            for u in fresh.iter().take(mf.k_max) {
+                params_refs.push(&u.params);
+                winfo.push(WeightedUpdate {
+                    produced_round: t_1b,
+                    cardinality: u.cardinality,
+                });
+            }
             for u in &drained {
                 params_refs.push(&u.params);
                 winfo.push(WeightedUpdate {
                     produced_round: u.produced_round,
                     cardinality: u.cardinality,
                 });
-            }
-            // k_max cap: fresh first, newest stale next
-            if params_refs.len() > mf.k_max {
-                params_refs.truncate(mf.k_max);
-                winfo.truncate(mf.k_max);
             }
             if !params_refs.is_empty() {
                 let weights = staleness_weights(&winfo, t_1b, tau, normalize);
@@ -380,14 +440,14 @@ impl<'rt> Controller<'rt> {
             }
         }
 
-        // 4. history bookkeeping for on-time clients + cooldown decay
+        // 7. history bookkeeping for on-time clients + cooldown decay
         for u in &fresh {
             self.history
                 .record_success(u.client, round, u.training_time_s);
         }
         self.history.tick_cooldowns(&failed_now);
 
-        // 5. central evaluation
+        // 8. central evaluation
         let do_eval =
             round % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds;
         let (accuracy, eval_loss) = if do_eval {
@@ -400,9 +460,12 @@ impl<'rt> Controller<'rt> {
         };
 
         // Extension: adapt k to the observed EUR so the next round's
-        // *effective* (on-time) update count tracks the configured k.
-        if self.cfg.adaptive_clients {
-            let eur = RoundRecord::compute_eur(successes, selected.len());
+        // *effective* (on-time) update count tracks the configured k. A
+        // round that invoked nobody (all selected were in flight)
+        // produced no evidence, so it leaves k untouched rather than
+        // over-provisioning off the vacuous EUR of 0.
+        if self.cfg.adaptive_clients && !invoked.is_empty() {
+            let eur = RoundRecord::compute_eur(successes, invoked.len());
             let target = self.cfg.clients_per_round as f64;
             let want = (target / eur.max(0.25)).round() as usize;
             self.effective_k = want
@@ -420,11 +483,12 @@ impl<'rt> Controller<'rt> {
         };
         Ok(RoundRecord {
             round,
-            eur: RoundRecord::compute_eur(successes, selected.len()),
+            eur: RoundRecord::compute_eur(successes, invoked.len()),
             selected,
             successes,
             failures: failed_now.len(),
             stale_applied,
+            in_flight_skipped,
             duration_s: round_end - round_start,
             accuracy,
             eval_loss,

@@ -111,6 +111,37 @@ struct WarmInstance {
     last_used_at: f64,
 }
 
+/// Seed-mix for the platform RNG stream (public so tests can mirror the
+/// stream draw-for-draw; see `rng_stream_contract`).
+pub const FAAS_SEED_MIX: u64 = 0xfaa5_0001;
+
+/// Platform-side decision for one invocation. **Every RNG draw happens
+/// here**, in the documented order; timeline materialization below is
+/// pure arithmetic. The per-invocation draw order is a compatibility
+/// contract (seeded goldens depend on it):
+///
+/// 1. one log-normal **startup** draw — only when the instance is cold;
+/// 2. one Bernoulli **transient-crash** draw — skipped entirely when the
+///    scenario already forces a crash (`||` short-circuit);
+/// 3. one log-normal **VM speed** draw — skipped if step 2 crashed;
+///    otherwise drawn on the client's first such invocation and cached;
+/// 4. one log-normal **jitter** draw — skipped if step 2 crashed.
+///
+/// Note the asymmetry between the two crash kinds: a forced/transient
+/// crash kills the function *before* it does any work, so steps 3-4 are
+/// never drawn; a hard-timeout kill (decided later, in materialization)
+/// happens *after* the work was attempted, so its invocation consumed
+/// both draws (and cached the client speed) even though its outcome is
+/// also `Crash`.
+struct Decision {
+    cold: bool,
+    startup: f64,
+    /// `None` when the invocation crashed before doing any work
+    /// (forced/transient); the speed/jitter draws were *not* consumed.
+    /// A later hard-timeout kill still carries `Some` here.
+    perf: Option<(f64, f64)>,
+}
+
 /// The simulated platform. One instance pool per experiment.
 pub struct SimulatedGcf {
     pub cfg: FaasConfig,
@@ -123,7 +154,7 @@ impl SimulatedGcf {
     pub fn new(cfg: FaasConfig, seed: u64) -> Self {
         Self {
             cfg,
-            rng: Rng::seed_from_u64(seed ^ 0xfaa5_0001),
+            rng: Rng::seed_from_u64(seed ^ FAAS_SEED_MIX),
             warm: HashMap::new(),
             speed: HashMap::new(),
         }
@@ -144,24 +175,17 @@ impl SimulatedGcf {
         2.0 * payload_mb / self.cfg.network_mbps.max(1e-9)
     }
 
-    /// Simulate one invocation issued at virtual time `now_s`.
-    ///
-    /// `compute_s` is the nominal local-training compute time (derived
-    /// from the real PJRT execution), `payload_mb` the model transfer
-    /// size, `deadline_s` the round deadline (absolute virtual time), and
-    /// `forced` the scenario override.
-    pub fn invoke(
-        &mut self,
-        client: ClientId,
-        now_s: f64,
-        compute_s: f64,
-        payload_mb: f64,
-        deadline_s: f64,
-        forced: Option<Forced>,
-    ) -> Invocation {
-        // cold or warm?
+    /// Phase 1 — platform outcome decision: consume the RNG stream in
+    /// the contract order documented on [`Decision`] and decide whether
+    /// the invocation crashes before doing any work.
+    fn decide(&mut self, client: ClientId, now_s: f64, forced: Option<Forced>) -> Decision {
+        // cold or warm? A *negative* idle gap means the previously
+        // recorded instance is still running at `now_s` (a late client
+        // re-invoked mid-flight): the platform then fans out a second,
+        // cold instance rather than reusing the busy one — without the
+        // clamp the instance looked spuriously warm.
         let cold = match self.warm.get(&client) {
-            Some(w) => now_s - w.last_used_at > self.cfg.idle_timeout_s,
+            Some(w) => !(0.0..=self.cfg.idle_timeout_s).contains(&(now_s - w.last_used_at)),
             None => true,
         };
         let startup = if cold {
@@ -170,37 +194,60 @@ impl SimulatedGcf {
         } else {
             self.cfg.warm_overhead_s
         };
+        let crashed = forced == Some(Forced::Crash)
+            || self.rng.bernoulli(self.cfg.transient_failure_rate);
+        let perf = if crashed {
+            None
+        } else {
+            let speed = self.client_speed(client);
+            let jitter = self
+                .rng
+                .lognormal(0.0, self.cfg.invocation_jitter_sigma.max(1e-9));
+            Some((speed, jitter))
+        };
+        Decision { cold, startup, perf }
+    }
 
-        if forced == Some(Forced::Crash)
-            || self.rng.bernoulli(self.cfg.transient_failure_rate)
-        {
-            // §VI-C worst case: a crashed straggler is billed for the
-            // whole round.
-            let end = deadline_s.max(now_s);
-            self.warm.remove(&client);
-            return Invocation {
-                client,
-                started_at: now_s,
-                finished_at: end,
-                billed_s: end - now_s,
-                training_time_s: 0.0,
-                cold,
-                outcome: Outcome::Crash,
-            };
-        }
+    /// Phase 2 — pure timeline materialization: no RNG, just the warm
+    /// pool bookkeeping and the virtual start/finish/billing arithmetic.
+    #[allow(clippy::too_many_arguments)]
+    fn materialize(
+        &mut self,
+        d: Decision,
+        client: ClientId,
+        now_s: f64,
+        compute_s: f64,
+        payload_mb: f64,
+        deadline_s: f64,
+        forced: Option<Forced>,
+    ) -> Invocation {
+        let (speed, jitter) = match d.perf {
+            None => {
+                // §VI-C worst case: a crashed straggler is billed for the
+                // whole round.
+                let end = deadline_s.max(now_s);
+                self.warm.remove(&client);
+                return Invocation {
+                    client,
+                    started_at: now_s,
+                    finished_at: end,
+                    billed_s: end - now_s,
+                    training_time_s: 0.0,
+                    cold: d.cold,
+                    outcome: Outcome::Crash,
+                };
+            }
+            Some(p) => p,
+        };
 
-        let speed = self.client_speed(client);
-        let jitter = self
-            .rng
-            .lognormal(0.0, self.cfg.invocation_jitter_sigma.max(1e-9));
         let mut train_s = compute_s * speed * jitter + self.transfer_s(payload_mb);
         if forced == Some(Forced::Slow) {
             // Scenario forcing (§VI-A4): delays (cold start, bandwidth,
             // ...) push completion past the round deadline.
-            let past_deadline = (deadline_s - now_s - startup).max(0.0) * 1.25 + 1.0;
+            let past_deadline = (deadline_s - now_s - d.startup).max(0.0) * 1.25 + 1.0;
             train_s = train_s.max(past_deadline);
         }
-        let total = startup + train_s;
+        let total = d.startup + train_s;
 
         if total > self.cfg.function_timeout_s {
             // platform kills the function at its hard timeout
@@ -212,27 +259,56 @@ impl SimulatedGcf {
                 finished_at: end,
                 billed_s: self.cfg.function_timeout_s,
                 training_time_s: 0.0,
-                cold,
+                cold: d.cold,
                 outcome: Outcome::Crash,
             };
         }
 
         let finished_at = now_s + total;
-        self.warm
-            .insert(client, WarmInstance { last_used_at: finished_at });
+        // Monotonic warm timestamp: never move the pool's "last alive"
+        // time backwards — a still-running (in-flight) instance keeps the
+        // pool warm past a shorter overlapping invocation.
+        let last_used_at = self
+            .warm
+            .get(&client)
+            .map_or(finished_at, |w| w.last_used_at.max(finished_at));
+        self.warm.insert(client, WarmInstance { last_used_at });
         Invocation {
             client,
             started_at: now_s,
             finished_at,
             billed_s: total,
             training_time_s: train_s,
-            cold,
+            cold: d.cold,
             outcome: if finished_at <= deadline_s {
                 Outcome::OnTime
             } else {
                 Outcome::Late
             },
         }
+    }
+
+    /// Simulate one invocation issued at virtual time `now_s`: the
+    /// outcome decision ([`Decision`], all RNG) followed by the pure
+    /// timeline materialization.
+    ///
+    /// `compute_s` is the nominal local-training compute time,
+    /// `payload_mb` the model transfer size, `deadline_s` the round
+    /// deadline (absolute virtual time), and `forced` the scenario
+    /// override. The full timeline — including the crash/late/on-time
+    /// outcome — is decided *before* any real training runs, so the
+    /// scheduler can skip compute for doomed invocations.
+    pub fn invoke(
+        &mut self,
+        client: ClientId,
+        now_s: f64,
+        compute_s: f64,
+        payload_mb: f64,
+        deadline_s: f64,
+        forced: Option<Forced>,
+    ) -> Invocation {
+        let d = self.decide(client, now_s, forced);
+        self.materialize(d, client, now_s, compute_s, payload_mb, deadline_s, forced)
     }
 }
 
@@ -319,6 +395,103 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn busy_instance_is_not_spuriously_warm() {
+        // A late client is still running past the round deadline; its
+        // recorded `last_used_at` (= finished_at) exceeds the next
+        // invocation's `now_s`. The negative idle gap must read as COLD
+        // (a second instance spins up), not spuriously warm.
+        let mut gcf = SimulatedGcf::new(cfg_no_noise(), 9);
+        let late = gcf.invoke(0, 0.0, 1.0, 1.0, 30.0, Some(Forced::Slow));
+        assert_eq!(late.outcome, Outcome::Late);
+        let mid_flight_at = late.finished_at - 1.0;
+        assert!(mid_flight_at > 30.0);
+        let second = gcf.invoke(0, mid_flight_at, 1.0, 1.0, 1e9, None);
+        assert!(second.cold, "re-invocation mid-flight must cold-start");
+        // the warm timestamp stays monotonic: after both instances are
+        // done, the pool is warm from the *latest* finish time
+        let after = late.finished_at.max(second.finished_at) + 1.0;
+        let third = gcf.invoke(0, after, 1.0, 1.0, 1e9, None);
+        assert!(!third.cold);
+    }
+
+    #[test]
+    fn rng_stream_contract() {
+        // Golden for the documented per-invocation draw order ([cold
+        // startup] -> transient bernoulli -> [first-time speed] ->
+        // jitter): a raw mirror of the platform RNG stream predicts
+        // every invocation exactly. Splitting decide/materialize (or any
+        // future refactor) must not reorder these draws — all seeded
+        // experiment goldens depend on them.
+        let cfg = FaasConfig {
+            transient_failure_rate: 0.3,
+            ..FaasConfig::default()
+        };
+        let seed = 2024u64;
+        let mut gcf = SimulatedGcf::new(cfg, seed);
+        let mut mirror = crate::util::Rng::seed_from_u64(seed ^ FAAS_SEED_MIX);
+        let (compute_s, payload_mb, deadline) = (10.0, 1.0, 1e9);
+        for client in 0..32usize {
+            // each client invoked once at t=0: always a cold start
+            let inv = gcf.invoke(client, 0.0, compute_s, payload_mb, deadline, None);
+            let startup =
+                mirror.lognormal(cfg.cold_start_median_s.ln(), cfg.cold_start_sigma);
+            let crashed = mirror.bernoulli(cfg.transient_failure_rate);
+            if crashed {
+                assert_eq!(inv.outcome, Outcome::Crash, "client {client}");
+                continue; // crash consumed neither speed nor jitter
+            }
+            let speed = mirror.lognormal(0.0, cfg.client_speed_sigma);
+            let jitter = mirror.lognormal(0.0, cfg.invocation_jitter_sigma);
+            let train = compute_s * speed * jitter + 2.0 * payload_mb / cfg.network_mbps;
+            assert!(
+                (inv.finished_at - (startup + train)).abs() < 1e-9,
+                "client {client}: {} vs {}",
+                inv.finished_at,
+                startup + train
+            );
+        }
+        // A *forced* crash short-circuits the bernoulli draw: only the
+        // cold-start draw is consumed before the next invocation.
+        let mut gcf = SimulatedGcf::new(cfg, seed);
+        let mut mirror = crate::util::Rng::seed_from_u64(seed ^ FAAS_SEED_MIX);
+        let crash = gcf.invoke(0, 0.0, compute_s, payload_mb, 60.0, Some(Forced::Crash));
+        assert_eq!(crash.outcome, Outcome::Crash);
+        let _startup0 = mirror.lognormal(cfg.cold_start_median_s.ln(), cfg.cold_start_sigma);
+        let inv1 = gcf.invoke(1, 0.0, compute_s, payload_mb, deadline, None);
+        let startup1 = mirror.lognormal(cfg.cold_start_median_s.ln(), cfg.cold_start_sigma);
+        if !mirror.bernoulli(cfg.transient_failure_rate) {
+            let speed = mirror.lognormal(0.0, cfg.client_speed_sigma);
+            let jitter = mirror.lognormal(0.0, cfg.invocation_jitter_sigma);
+            let train = compute_s * speed * jitter + 2.0 * payload_mb / cfg.network_mbps;
+            assert!((inv1.finished_at - (startup1 + train)).abs() < 1e-9);
+        } else {
+            assert_eq!(inv1.outcome, Outcome::Crash);
+        }
+        // A hard-timeout kill is also Outcome::Crash but is decided
+        // *after* the work ran: it consumes the speed and jitter draws
+        // (unlike the forced/transient crashes above).
+        let cfg0 = FaasConfig {
+            transient_failure_rate: 0.0,
+            ..FaasConfig::default()
+        };
+        let mut gcf = SimulatedGcf::new(cfg0, seed);
+        let mut mirror = crate::util::Rng::seed_from_u64(seed ^ FAAS_SEED_MIX);
+        let killed = gcf.invoke(0, 0.0, 10_000.0, payload_mb, 1e9, None);
+        assert_eq!(killed.outcome, Outcome::Crash);
+        let _startup = mirror.lognormal(cfg0.cold_start_median_s.ln(), cfg0.cold_start_sigma);
+        let _crash = mirror.bernoulli(cfg0.transient_failure_rate);
+        let _speed = mirror.lognormal(0.0, cfg0.client_speed_sigma);
+        let _jitter = mirror.lognormal(0.0, cfg0.invocation_jitter_sigma);
+        let inv1 = gcf.invoke(1, 0.0, compute_s, payload_mb, 1e9, None);
+        let startup1 = mirror.lognormal(cfg0.cold_start_median_s.ln(), cfg0.cold_start_sigma);
+        let _crash1 = mirror.bernoulli(cfg0.transient_failure_rate);
+        let speed1 = mirror.lognormal(0.0, cfg0.client_speed_sigma);
+        let jitter1 = mirror.lognormal(0.0, cfg0.invocation_jitter_sigma);
+        let train1 = compute_s * speed1 * jitter1 + 2.0 * payload_mb / cfg0.network_mbps;
+        assert!((inv1.finished_at - (startup1 + train1)).abs() < 1e-9);
     }
 
     #[test]

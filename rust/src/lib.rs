@@ -26,6 +26,12 @@
 //!   artifacts executed through the PJRT C API (`xla` crate), with
 //!   model architectures structurally identical to the paper's.
 //!
+//! The controller is event-driven: [`sched`] plans every invocation's
+//! platform outcome up front (crashes never burn compute), runs the
+//! surviving local training rounds in parallel across worker threads,
+//! and replays completions through a virtual-clock event queue so
+//! updates land in true arrival order.
+//!
 //! Entry points: [`coordinator::Controller`] drives one experiment;
 //! [`repro`] regenerates every table and figure of the paper's §VI.
 
@@ -40,6 +46,7 @@ pub mod metrics;
 pub mod paramsvr;
 pub mod repro;
 pub mod runtime;
+pub mod sched;
 pub mod strategy;
 pub mod util;
 

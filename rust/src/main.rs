@@ -95,8 +95,11 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
     let n_clients = cfg.n_clients;
     let mut ctl = Controller::new(cfg, backend.as_ref())?;
     let result = ctl.run()?;
+    let stale_total: usize = result.rounds.iter().map(|r| r.stale_applied).sum();
+    let in_flight_total: usize = result.rounds.iter().map(|r| r.in_flight_skipped).sum();
     println!(
-        "\n{} / {} / {}: final acc {:.3}, mean EUR {:.3}, time {:.1} min, cost ${:.4}, bias {}",
+        "\n{} / {} / {}: final acc {:.3}, mean EUR {:.3}, time {:.1} min, cost ${:.4}, \
+         bias {}, stale applied {}, in-flight skips {}",
         result.dataset,
         result.strategy,
         result.scenario,
@@ -105,6 +108,8 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         result.total_time_s / 60.0,
         result.total_cost,
         result.bias(n_clients),
+        stale_total,
+        in_flight_total,
     );
     if let Some(out) = args.get("out") {
         let out = PathBuf::from(out);

@@ -19,6 +19,9 @@ pub struct RoundRecord {
     pub failures: usize,
     /// Stale updates folded into this round's aggregation (FedLesScan).
     pub stale_applied: usize,
+    /// Selected clients skipped because their previous invocation was
+    /// still in flight (the scheduler never re-invokes mid-flight).
+    pub in_flight_skipped: usize,
     /// Round duration: slowest on-time client or the round timeout.
     pub duration_s: f64,
     /// Central accuracy after this round's aggregation (if evaluated).
@@ -28,16 +31,22 @@ pub struct RoundRecord {
     pub train_loss: Option<f32>,
     /// Cost incurred this round ($).
     pub cost: f64,
-    /// Effective Update Ratio of this round (successes / selected).
+    /// Effective Update Ratio of this round (successes / invoked; the
+    /// in-flight-skipped clients are not in the denominator because they
+    /// were never invoked).
     pub eur: f64,
 }
 
 impl RoundRecord {
-    pub fn compute_eur(successes: usize, selected: usize) -> f64 {
-        if selected == 0 {
-            return 1.0;
+    /// Effective Update Ratio. A round that invoked nobody delivered no
+    /// effective updates, so its EUR is 0 — not the vacuous 1.0 the seed
+    /// reported, which inflated mean EUR whenever `adaptive_clients`
+    /// clamping or a strategy produced an empty selection.
+    pub fn compute_eur(successes: usize, invoked: usize) -> f64 {
+        if invoked == 0 {
+            return 0.0;
         }
-        successes as f64 / selected as f64
+        successes as f64 / invoked as f64
     }
 }
 
@@ -100,16 +109,17 @@ impl ExperimentResult {
     /// Write the per-round timeline as CSV (Fig. 3a/3b series).
     pub fn write_timeline_csv(&self, path: &Path) -> Result<()> {
         let mut out = String::from(
-            "round,selected,successes,failures,stale_applied,duration_s,accuracy,eval_loss,train_loss,cost,eur\n",
+            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4}\n",
+                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4}\n",
                 r.round,
                 r.selected.len(),
                 r.successes,
                 r.failures,
                 r.stale_applied,
+                r.in_flight_skipped,
                 r.duration_s,
                 r.accuracy.map_or(String::new(), |v| format!("{v:.4}")),
                 r.eval_loss.map_or(String::new(), |v| format!("{v:.4}")),
@@ -137,6 +147,7 @@ impl ExperimentResult {
                     ("successes", Json::num(r.successes as f64)),
                     ("failures", Json::num(r.failures as f64)),
                     ("stale_applied", Json::num(r.stale_applied as f64)),
+                    ("in_flight_skipped", Json::num(r.in_flight_skipped as f64)),
                     ("duration_s", Json::num(r.duration_s)),
                     (
                         "accuracy",
@@ -198,6 +209,7 @@ mod tests {
             successes: succ,
             failures: sel - succ,
             stale_applied: 0,
+            in_flight_skipped: 0,
             duration_s: 10.0,
             accuracy: Some(0.1 * round as f32),
             eval_loss: None,
@@ -225,7 +237,8 @@ mod tests {
     fn eur_bounds() {
         assert_eq!(RoundRecord::compute_eur(0, 10), 0.0);
         assert_eq!(RoundRecord::compute_eur(10, 10), 1.0);
-        assert_eq!(RoundRecord::compute_eur(0, 0), 1.0);
+        // empty-round semantics: no invocations -> no effective updates
+        assert_eq!(RoundRecord::compute_eur(0, 0), 0.0);
     }
 
     #[test]

@@ -125,6 +125,11 @@ impl ParameterServer {
     /// yet older than `tau` relative to aggregation round `t`. Expired
     /// updates are dropped permanently (τ discard, §V-D); not-yet-arrived
     /// updates stay buffered.
+    ///
+    /// Returned updates are in **true arrival order** (earliest
+    /// `arrived_at_s` first, client id as the deterministic tie-break)
+    /// regardless of the order they were pushed — the server replays the
+    /// semi-asynchronous timeline, not the controller's invocation order.
     pub fn drain_stale(&mut self, now_s: f64, t: u32, tau: u32) -> Vec<StaleUpdate> {
         let mut ready = Vec::new();
         let mut keep = Vec::new();
@@ -140,6 +145,11 @@ impl ParameterServer {
             }
         }
         self.stale = keep;
+        ready.sort_by(|a, b| {
+            a.arrived_at_s
+                .total_cmp(&b.arrived_at_s)
+                .then_with(|| a.client.cmp(&b.client))
+        });
         ready
     }
 }
@@ -209,6 +219,29 @@ mod tests {
         assert_eq!(ready.len(), 1);
         assert_eq!(ready[0].produced_round, 9);
         assert_eq!(ps.stale_len(), 1); // the future one stays
+    }
+
+    #[test]
+    fn drain_returns_true_arrival_order() {
+        let mk = |client, arrive| StaleUpdate {
+            client,
+            produced_round: 9,
+            arrived_at_s: arrive,
+            training_time_s: 1.0,
+            params: vec![0.0],
+            cardinality: 1,
+            loss: 0.0,
+        };
+        let mut ps = ParameterServer::new(vec![0.0]);
+        // pushed in controller/invocation order, deliberately shuffled
+        // relative to the arrival timeline
+        ps.push_stale(mk(3, 40.0));
+        ps.push_stale(mk(1, 10.0));
+        ps.push_stale(mk(2, 10.0)); // simultaneous: client id tie-break
+        ps.push_stale(mk(0, 25.0));
+        let ready = ps.drain_stale(100.0, 10, 2);
+        let order: Vec<_> = ready.iter().map(|u| u.client).collect();
+        assert_eq!(order, vec![1, 2, 0, 3]);
     }
 
     #[test]

@@ -170,6 +170,10 @@ pub struct CellStats {
     pub time_s: f64,
     pub cost: f64,
     pub bias: f64,
+    /// Mean stale updates folded in per experiment (semi-async depth).
+    pub stale_applied: f64,
+    /// Mean in-flight skips per experiment (scheduler back-pressure).
+    pub in_flight_skipped: f64,
     pub repeats: usize,
 }
 
@@ -184,6 +188,8 @@ impl CellStats {
             ("time_s", Json::num(self.time_s)),
             ("cost", Json::num(self.cost)),
             ("bias", Json::num(self.bias)),
+            ("stale_applied", Json::num(self.stale_applied)),
+            ("in_flight_skipped", Json::num(self.in_flight_skipped)),
             ("repeats", Json::num(self.repeats as f64)),
         ])
     }
@@ -199,6 +205,16 @@ pub fn cell_stats(results: &[ExperimentResult], n_clients: usize) -> CellStats {
         time_s: mean(results.iter().map(|r| r.total_time_s)),
         cost: mean(results.iter().map(|r| r.total_cost)),
         bias: mean(results.iter().map(|r| r.bias(n_clients) as f64)),
+        stale_applied: mean(
+            results
+                .iter()
+                .map(|r| r.rounds.iter().map(|x| x.stale_applied).sum::<usize>() as f64),
+        ),
+        in_flight_skipped: mean(
+            results
+                .iter()
+                .map(|r| r.rounds.iter().map(|x| x.in_flight_skipped).sum::<usize>() as f64),
+        ),
         repeats: results.len(),
     }
 }

@@ -64,7 +64,14 @@ pub struct EvalResult {
 
 /// One model family's execution engine. Object-safe: the coordinator and
 /// the repro harness hold `&dyn Backend` / `Box<dyn Backend>`.
-pub trait Backend {
+///
+/// `Sync` is a supertrait: the round scheduler shares one backend across
+/// scoped worker threads ([`crate::sched::train_parallel`]), so every
+/// implementation must be callable concurrently through `&self`. The
+/// native backend is stateless per call; the PJRT backend keeps its
+/// non-`Send` engine handles in thread-local storage (one engine per
+/// worker thread) to satisfy the bound.
+pub trait Backend: Sync {
     /// Backend implementation name ("native" / "pjrt").
     fn backend_name(&self) -> &'static str;
 
@@ -85,6 +92,16 @@ pub trait Backend {
     /// (paper Eq. 3 inner sum; weight semantics belong to the caller).
     /// `updates.len()` must be in `[1, k_max]`.
     fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)>;
+
+    /// Whether `train_round` should be fanned out across short-lived
+    /// worker threads. Backends whose per-thread setup is expensive
+    /// return `false` and run inline on the scheduler's thread instead:
+    /// the PJRT backend compiles its executables into thread-local
+    /// storage, so a fresh scope thread per round would recompile the
+    /// model every round.
+    fn parallel_train(&self) -> bool {
+        true
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -167,9 +167,22 @@ impl ModelRuntime {
     }
 }
 
-/// The PJRT path packaged as a [`Backend`]: holds a handle on the shared
-/// per-thread engine so the boxed backend is self-contained.
+/// The PJRT path packaged as a [`Backend`]. PJRT client handles are not
+/// `Send`/`Sync`, but the `Backend` trait requires `Sync` (the round
+/// scheduler shares one backend across worker threads), so this struct
+/// holds only plain data — artifacts directory, model name and a cached
+/// manifest — and resolves the actual engine + compiled executables
+/// through thread-local storage: each worker thread lazily compiles its
+/// own [`ModelRuntime`] on first use and reuses it afterwards.
 pub struct PjrtBackend {
+    dir: PathBuf,
+    model: String,
+    manifest: Manifest,
+}
+
+/// A per-thread compiled runtime plus the engine that owns its buffers
+/// (kept alive together for as long as the cache entry exists).
+struct ThreadRuntime {
     _engine: std::rc::Rc<Engine>,
     runtime: ModelRuntime,
 }
@@ -180,6 +193,14 @@ thread_local! {
     /// a single client instead of instantiating one per dataset.
     static SHARED_ENGINE: std::cell::RefCell<std::rc::Weak<Engine>> =
         std::cell::RefCell::new(std::rc::Weak::new());
+
+    /// Per-thread compiled artifact sets, keyed by (artifacts dir,
+    /// model). Worker threads of the parallel scheduler each get their
+    /// own engine and executables; within a thread, repeated calls hit
+    /// the cache.
+    static THREAD_RUNTIMES: std::cell::RefCell<
+        std::collections::HashMap<(PathBuf, String), std::rc::Rc<ThreadRuntime>>,
+    > = std::cell::RefCell::new(std::collections::HashMap::new());
 }
 
 fn shared_engine() -> Result<std::rc::Rc<Engine>> {
@@ -194,18 +215,39 @@ fn shared_engine() -> Result<std::rc::Rc<Engine>> {
 }
 
 impl PjrtBackend {
-    /// Compile the artifact set for `model` on the shared CPU PJRT client.
+    /// Compile the artifact set for `model` on the calling thread's PJRT
+    /// client (so load/compile errors surface here, not mid-round).
     pub fn load(artifacts_dir: &Path, model: &str) -> Result<Self> {
-        let engine = shared_engine()?;
-        let runtime = ModelRuntime::load(&engine, artifacts_dir, model)?;
-        Ok(Self {
-            _engine: engine,
-            runtime,
-        })
+        let backend = Self {
+            dir: artifacts_dir.to_path_buf(),
+            model: model.to_string(),
+            manifest: Manifest::load(artifacts_dir, model)?,
+        };
+        backend.with_runtime(|_| Ok(()))?;
+        Ok(backend)
     }
 
-    pub fn runtime(&self) -> &ModelRuntime {
-        &self.runtime
+    /// Run `f` against this thread's compiled runtime, compiling it
+    /// first if this thread has never executed this model.
+    fn with_runtime<R>(&self, f: impl FnOnce(&ModelRuntime) -> Result<R>) -> Result<R> {
+        THREAD_RUNTIMES.with(|cell| {
+            let key = (self.dir.clone(), self.model.clone());
+            let cached = cell.borrow().get(&key).cloned();
+            let entry = match cached {
+                Some(entry) => entry,
+                None => {
+                    let engine = shared_engine()?;
+                    let runtime = ModelRuntime::load(&engine, &self.dir, &self.model)?;
+                    let entry = std::rc::Rc::new(ThreadRuntime {
+                        _engine: engine,
+                        runtime,
+                    });
+                    cell.borrow_mut().insert(key, entry.clone());
+                    entry
+                }
+            };
+            f(&entry.runtime)
+        })
     }
 }
 
@@ -215,22 +257,30 @@ impl Backend for PjrtBackend {
     }
 
     fn manifest(&self) -> &Manifest {
-        &self.runtime.manifest
+        &self.manifest
     }
 
     fn init_params(&self) -> Result<Vec<f32>> {
-        self.runtime.init_params()
+        self.with_runtime(|rt| rt.init_params())
     }
 
     fn train_round(&self, req: &TrainRequest) -> Result<(TrainResult, Duration)> {
-        self.runtime.train_round(req)
+        self.with_runtime(|rt| rt.train_round(req))
     }
 
     fn evaluate(&self, params: &[f32], x: &Features, y: &[i32]) -> Result<EvalResult> {
-        self.runtime.evaluate(params, x, y)
+        self.with_runtime(|rt| rt.evaluate(params, x, y))
     }
 
     fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)> {
-        self.runtime.aggregate(updates, weights)
+        self.with_runtime(|rt| rt.aggregate(updates, weights))
+    }
+
+    /// Scheduler worker threads are short-lived (one `thread::scope` per
+    /// round), so fanning out would recompile this model's executables
+    /// on every round. Run inline: the calling thread's cache compiles
+    /// once and stays warm for the whole experiment.
+    fn parallel_train(&self) -> bool {
+        false
     }
 }

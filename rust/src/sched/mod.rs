@@ -1,0 +1,435 @@
+//! Event-driven round scheduler: the virtual-clock machinery between the
+//! coordinator and the simulated FaaS platform.
+//!
+//! The seed controller ran one monolithic serial loop — every client was
+//! invoked at `round_start`, trained sequentially on one core, and its
+//! update was folded in in *selection* order. This module replaces that
+//! with the semi-asynchronous shape the paper actually describes (§V-D)
+//! and FedLess implements (functions fire concurrently; updates land on
+//! their own timeline):
+//!
+//! * **Outcome before compute** — the platform decides each invocation's
+//!   fate (crash / late / on-time) and full virtual timeline up front
+//!   ([`crate::faas::SimulatedGcf::invoke`] draws no RNG from the
+//!   training path), so doomed invocations never burn real training
+//!   cycles.
+//! * **Parallel client execution** — the real `Backend::train_round`
+//!   calls for the surviving invocations run across scoped worker
+//!   threads ([`train_parallel`]); results are positionally aligned with
+//!   the plan list, so the outcome is identical to the serial order.
+//! * **Virtual-clock event queue** — completions are replayed through a
+//!   [`BinaryHeap`] min-heap ([`EventQueue`]) in true arrival order:
+//!   fresh updates aggregate in the order they reached the parameter
+//!   server, and late updates enter the staleness buffer the same way.
+//! * **In-flight ledger** — a late client whose function is still
+//!   running past the round boundary ([`InFlight`]) is not re-invoked
+//!   mid-flight; the seed controller happily double-invoked it, which
+//!   both corrupted the warm-instance bookkeeping and double-billed the
+//!   client.
+//!
+//! Everything here is deterministic in the experiment seed: the heap
+//! tie-breaks on platform issue order, worker threads write disjoint
+//! result slots, and no wall-clock time ever enters the virtual
+//! timeline.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::faas::{Invocation, Outcome};
+use crate::paramsvr::StaleUpdate;
+use crate::runtime::{Backend, TrainRequest, TrainResult};
+use crate::{ClientId, Result};
+
+/// One planned invocation: the platform decided the entire virtual
+/// timeline (including the crash/late/on-time outcome) before any real
+/// compute ran.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientPlan {
+    pub client: ClientId,
+    pub inv: Invocation,
+    /// Partial-work step count for this client (FedProx toleration).
+    pub num_steps: i32,
+}
+
+/// A completion on the virtual clock. `seq` is the platform issue order
+/// (selection order): it tie-breaks simultaneous completions
+/// deterministically and indexes back into the plan/result tables.
+#[derive(Debug, Clone, Copy)]
+pub struct CompletionEvent {
+    pub at_s: f64,
+    pub seq: usize,
+    pub client: ClientId,
+    pub outcome: Outcome,
+}
+
+impl PartialEq for CompletionEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_s.total_cmp(&other.at_s).is_eq() && self.seq == other.seq
+    }
+}
+
+impl Eq for CompletionEvent {}
+
+impl PartialOrd for CompletionEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for CompletionEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // `BinaryHeap` is a max-heap; invert so the earliest completion
+        // (lowest time, then lowest issue seq) pops first.
+        other
+            .at_s
+            .total_cmp(&self.at_s)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of completion events ordered by virtual arrival time.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<CompletionEvent>,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue every completion of a planned invocation batch.
+    pub fn schedule(plans: &[ClientPlan]) -> Self {
+        let mut q = Self::new();
+        for (seq, p) in plans.iter().enumerate() {
+            q.push(CompletionEvent {
+                at_s: p.inv.finished_at,
+                seq,
+                client: p.client,
+                outcome: p.inv.outcome,
+            });
+        }
+        q
+    }
+
+    pub fn push(&mut self, ev: CompletionEvent) {
+        self.heap.push(ev);
+    }
+
+    /// Earliest pending completion, or `None` when drained.
+    pub fn pop(&mut self) -> Option<CompletionEvent> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// In-flight ledger: client → virtual time its current invocation
+/// finishes. A client still running past the round boundary must not be
+/// re-invoked mid-flight — the platform would fan out a second instance
+/// while the controller double-counted the client.
+#[derive(Debug, Default)]
+pub struct InFlight {
+    until: HashMap<ClientId, f64>,
+}
+
+impl InFlight {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop entries whose invocation has completed by `now_s`.
+    pub fn expire(&mut self, now_s: f64) {
+        self.until.retain(|_, &mut t| t > now_s);
+    }
+
+    pub fn is_busy(&self, client: ClientId) -> bool {
+        self.until.contains_key(&client)
+    }
+
+    /// Record an invocation that outlives the current round (late
+    /// completion or hard-timeout kill).
+    pub fn track(&mut self, client: ClientId, until_s: f64) {
+        self.until.insert(client, until_s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.until.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.until.is_empty()
+    }
+}
+
+/// Partition a strategy selection into the clients to invoke now and
+/// those skipped because their previous invocation is still in flight.
+/// Order is preserved (the platform RNG stream is consumed in invoke
+/// order, so this must stay deterministic).
+pub fn split_in_flight(
+    selected: &[ClientId],
+    in_flight: &InFlight,
+) -> (Vec<ClientId>, Vec<ClientId>) {
+    let mut invoke = Vec::with_capacity(selected.len());
+    let mut skipped = Vec::new();
+    for &c in selected {
+        if in_flight.is_busy(c) {
+            skipped.push(c);
+        } else {
+            invoke.push(c);
+        }
+    }
+    (invoke, skipped)
+}
+
+/// Order drained stale updates newest-first — highest produced round,
+/// then earliest arrival, then client id — and cap the combined
+/// fresh + stale aggregation set at `k_max`, fresh first. Returns only
+/// the stale updates that actually enter the aggregation; the dropped
+/// tail must receive neither `stale_applied` accounting nor
+/// `record_late_completion` history credit (it was never applied).
+pub fn cap_stale(
+    fresh_len: usize,
+    mut drained: Vec<StaleUpdate>,
+    k_max: usize,
+) -> Vec<StaleUpdate> {
+    drained.sort_by(|a, b| {
+        b.produced_round
+            .cmp(&a.produced_round)
+            .then_with(|| a.arrived_at_s.total_cmp(&b.arrived_at_s))
+            .then_with(|| a.client.cmp(&b.client))
+    });
+    drained.truncate(k_max.saturating_sub(fresh_len));
+    drained
+}
+
+/// Median of an already-sorted distance set (the `stale_norm_clip`
+/// reference). Even-length sets average the two middles — the seed took
+/// the upper middle, biasing the clip threshold wide on every
+/// even-sized fresh set. Empty input has no median; the caller skips
+/// the filter when there are no fresh updates.
+pub fn median_sorted(sorted: &[f64]) -> f64 {
+    assert!(!sorted.is_empty(), "median of an empty set");
+    let mid = sorted.len() / 2;
+    if sorted.len() % 2 == 0 {
+        0.5 * (sorted[mid - 1] + sorted[mid])
+    } else {
+        sorted[mid]
+    }
+}
+
+/// Default worker count for the parallel training pool.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+/// Execute `Backend::train_round` for every `Some` job across scoped
+/// worker threads. Results come back positionally aligned with `jobs`;
+/// `None` marks a skipped (doomed) invocation. Uses
+/// [`default_workers`] threads — unless the backend opts out of
+/// fan-out via [`Backend::parallel_train`] (the PJRT backend would
+/// recompile its executables on every fresh worker thread), in which
+/// case the jobs run inline on the caller's thread.
+pub fn train_parallel(
+    backend: &dyn Backend,
+    jobs: &[Option<TrainRequest<'_>>],
+) -> Result<Vec<Option<TrainResult>>> {
+    let workers = if backend.parallel_train() {
+        default_workers()
+    } else {
+        1
+    };
+    train_parallel_with(backend, jobs, workers)
+}
+
+/// [`train_parallel`] with an explicit worker count (`1` reproduces the
+/// serial seed path; the benches compare the two). Jobs are chunked
+/// contiguously so the work split is deterministic; if several jobs
+/// fail, the lowest-indexed error wins.
+///
+/// `workers == 1` runs inline on the caller's thread — no spawn — so
+/// backends with per-thread state (the PJRT backend caches its engine
+/// and compiled executables in thread-local storage) keep their caches
+/// warm across rounds instead of recompiling on every fresh scope
+/// thread.
+pub fn train_parallel_with(
+    backend: &dyn Backend,
+    jobs: &[Option<TrainRequest<'_>>],
+    workers: usize,
+) -> Result<Vec<Option<TrainResult>>> {
+    let n = jobs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        let mut out = Vec::with_capacity(n);
+        for job in jobs {
+            out.push(match job {
+                Some(req) => Some(backend.train_round(req).map(|(result, _wall)| result)?),
+                None => None,
+            });
+        }
+        return Ok(out);
+    }
+    let chunk = n.div_ceil(workers);
+    let mut slots: Vec<Option<Result<TrainResult>>> = Vec::new();
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        for (job_chunk, slot_chunk) in jobs.chunks(chunk).zip(slots.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for (job, slot) in job_chunk.iter().zip(slot_chunk.iter_mut()) {
+                    if let Some(req) = job {
+                        *slot = Some(backend.train_round(req).map(|(result, _wall)| result));
+                    }
+                }
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for slot in slots {
+        match slot {
+            Some(Ok(result)) => out.push(Some(result)),
+            Some(Err(e)) => return Err(e),
+            None => out.push(None),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthDataset;
+    use crate::runtime::NativeBackend;
+
+    fn ev(at_s: f64, seq: usize, outcome: Outcome) -> CompletionEvent {
+        CompletionEvent {
+            at_s,
+            seq,
+            client: seq,
+            outcome,
+        }
+    }
+
+    #[test]
+    fn event_queue_pops_in_arrival_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(30.0, 0, Outcome::Late));
+        q.push(ev(10.0, 1, Outcome::OnTime));
+        q.push(ev(20.0, 2, Outcome::OnTime));
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.seq).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn event_queue_ties_break_on_issue_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(5.0, 2, Outcome::Crash));
+        q.push(ev(5.0, 0, Outcome::Crash));
+        q.push(ev(5.0, 1, Outcome::Crash));
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.seq).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn in_flight_tracks_and_expires() {
+        let mut f = InFlight::new();
+        f.track(3, 100.0);
+        f.track(7, 50.0);
+        assert!(f.is_busy(3) && f.is_busy(7));
+        f.expire(50.0); // boundary: an invocation finishing exactly now is done
+        assert!(f.is_busy(3) && !f.is_busy(7));
+        let (invoke, skipped) = split_in_flight(&[1, 3, 5], &f);
+        assert_eq!(invoke, vec![1, 5]);
+        assert_eq!(skipped, vec![3]);
+    }
+
+    fn stale(client: ClientId, produced_round: u32, arrived_at_s: f64) -> StaleUpdate {
+        StaleUpdate {
+            client,
+            produced_round,
+            arrived_at_s,
+            training_time_s: 1.0,
+            params: vec![0.0],
+            cardinality: 1,
+            loss: 0.0,
+        }
+    }
+
+    #[test]
+    fn cap_stale_keeps_newest_and_drops_overflow() {
+        // 2 fresh + k_max 4 leaves two stale slots: the round-5 updates
+        // win over the round-4 one; within round 5 the earlier arrival
+        // wins.
+        let drained = vec![stale(0, 4, 10.0), stale(1, 5, 30.0), stale(2, 5, 20.0)];
+        let kept = cap_stale(2, drained, 4);
+        assert_eq!(
+            kept.iter().map(|u| u.client).collect::<Vec<_>>(),
+            vec![2, 1]
+        );
+        // a full fresh set leaves no stale slots at all
+        assert!(cap_stale(4, vec![stale(0, 5, 1.0)], 4).is_empty());
+        // and more fresh than k_max must not underflow
+        assert!(cap_stale(9, vec![stale(0, 5, 1.0)], 4).is_empty());
+    }
+
+    #[test]
+    fn median_averages_even_length_sets() {
+        assert_eq!(median_sorted(&[3.0]), 3.0);
+        assert_eq!(median_sorted(&[1.0, 3.0]), 2.0); // not the upper middle
+        assert_eq!(median_sorted(&[1.0, 2.0, 9.0]), 2.0);
+        assert_eq!(median_sorted(&[1.0, 2.0, 4.0, 9.0]), 3.0);
+    }
+
+    #[test]
+    fn train_parallel_matches_serial_and_skips_none_jobs() {
+        let rt = NativeBackend::for_dataset("mnist").unwrap();
+        let mf = rt.manifest().clone();
+        let data = SynthDataset::from_manifest(&mf, 4, 11, Default::default()).unwrap();
+        let shards: Vec<_> = (0..4).map(|c| data.client_data(c)).collect();
+        let p0 = rt.init_params().unwrap();
+        let zeros = vec![0f32; p0.len()];
+        let jobs: Vec<Option<TrainRequest>> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                if i == 2 {
+                    return None; // doomed invocation: no compute
+                }
+                Some(TrainRequest {
+                    params: &p0,
+                    m: &zeros,
+                    v: &zeros,
+                    t: 0.0,
+                    x: &shard.x,
+                    y: &shard.y,
+                    seed: i as i32,
+                    num_steps: mf.steps_per_round as i32,
+                    global: None,
+                })
+            })
+            .collect();
+        let serial = train_parallel_with(&rt, &jobs, 1).unwrap();
+        let parallel = train_parallel_with(&rt, &jobs, 4).unwrap();
+        assert_eq!(serial.len(), 4);
+        assert!(serial[2].is_none() && parallel[2].is_none());
+        for (s, p) in serial.iter().zip(&parallel) {
+            match (s, p) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.params, b.params);
+                    assert_eq!(a.loss, b.loss);
+                }
+                (None, None) => {}
+                _ => panic!("serial/parallel slot mismatch"),
+            }
+        }
+    }
+}
