@@ -11,6 +11,7 @@
 use fedless::clientdb::HistoryStore;
 use fedless::clustering::cluster_clients;
 use fedless::data::{Partition, SynthDataset};
+use fedless::params::fold_weighted_into;
 use fedless::paramsvr::{staleness_weights, WeightedUpdate};
 use fedless::runtime::{Backend, NativeBackend};
 use fedless::strategy::{ema, FedLesScan, SelectionContext, Strategy};
@@ -122,6 +123,59 @@ fn main() {
                 2,
                 15,
                 || rt.aggregate(&refs, &w).unwrap(),
+            );
+        }
+    }
+
+    // --- params fold: scalar vs chunk-parallel weighted sum --------------
+    // The aggregation hot path of the zero-copy parameter plane. The
+    // 1-worker case IS the batch scalar reference op for op, so the
+    // speedup line is the scalar-vs-chunked comparison. Sized at the
+    // largest preset's (P, k_max) plus a north-star ~1M-param case.
+    // Honesty note: the coordinator streams one entry per fold call and
+    // `fold_workers(P, 1)` keeps preset-sized entries serial (P is far
+    // below MIN_PARALLEL_MADDS), so the preset row's chunked column is
+    // a *forced* fan-out; the ~1M-param row is where the production
+    // heuristic itself goes parallel. Each printout discloses the
+    // heuristic's per-entry choice.
+    {
+        let largest = ["mnist", "femnist", "shakespeare", "speech", "transformer"]
+            .iter()
+            .map(|d| NativeBackend::for_dataset(d).expect("preset"))
+            .max_by_key(|b| b.manifest().param_count)
+            .expect("presets");
+        let workers = fedless::params::default_workers();
+        for (p, k) in [
+            (largest.manifest().param_count, largest.manifest().k_max),
+            (1 << 20, 8),
+        ] {
+            let updates: Vec<Vec<f32>> = (0..k)
+                .map(|i| (0..p).map(|j| ((i + j) % 17) as f32 * 0.01 - 0.05).collect())
+                .collect();
+            let entries: Vec<(&[f32], f32)> = updates
+                .iter()
+                .map(|u| (u.as_slice(), 1.0 / k as f32))
+                .collect();
+            let serial = bench(&format!("params/fold P={p} K={k} scalar"), 2, 12, || {
+                let mut acc = vec![0.0f32; p];
+                fold_weighted_into(&mut acc, &entries, 1);
+                acc
+            });
+            let chunked = bench(
+                &format!("params/fold P={p} K={k} chunked x{workers}"),
+                2,
+                12,
+                || {
+                    let mut acc = vec![0.0f32; p];
+                    fold_weighted_into(&mut acc, &entries, workers);
+                    acc
+                },
+            );
+            println!(
+                "   -> chunk-parallel speedup: {:.2}x over scalar ({workers} workers; \
+                 heuristic picks {} worker(s) per streamed entry)",
+                serial.mean.as_secs_f64() / chunked.mean.as_secs_f64().max(1e-12),
+                fedless::params::fold_workers(p, 1),
             );
         }
     }

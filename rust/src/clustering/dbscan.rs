@@ -75,7 +75,13 @@ mod tests {
             vec![5.1, 5.0],
             vec![5.0, 5.1],
         ];
-        let labels = dbscan(&pts, &DbscanParams { eps: 0.5, min_pts: 2 });
+        let labels = dbscan(
+            &pts,
+            &DbscanParams {
+                eps: 0.5,
+                min_pts: 2,
+            },
+        );
         assert_eq!(labels[0], labels[1]);
         assert_eq!(labels[0], labels[2]);
         assert_eq!(labels[3], labels[4]);
@@ -91,7 +97,13 @@ mod tests {
             vec![0.2],
             vec![100.0],
         ];
-        let labels = dbscan(&pts, &DbscanParams { eps: 0.5, min_pts: 2 });
+        let labels = dbscan(
+            &pts,
+            &DbscanParams {
+                eps: 0.5,
+                min_pts: 2,
+            },
+        );
         assert_eq!(labels[3], NOISE);
         assert!(labels[..3].iter().all(|&l| l == 0));
     }
@@ -100,20 +112,38 @@ mod tests {
     fn chain_connectivity_merges() {
         // points spaced 0.4 apart form one density-connected chain
         let pts: Vec<Point> = (0..10).map(|i| vec![i as f64 * 0.4]).collect();
-        let labels = dbscan(&pts, &DbscanParams { eps: 0.5, min_pts: 2 });
+        let labels = dbscan(
+            &pts,
+            &DbscanParams {
+                eps: 0.5,
+                min_pts: 2,
+            },
+        );
         assert!(labels.iter().all(|&l| l == 0));
     }
 
     #[test]
     fn min_pts_one_makes_every_point_core() {
         let pts: Vec<Point> = vec![vec![0.0], vec![10.0]];
-        let labels = dbscan(&pts, &DbscanParams { eps: 0.5, min_pts: 1 });
+        let labels = dbscan(
+            &pts,
+            &DbscanParams {
+                eps: 0.5,
+                min_pts: 1,
+            },
+        );
         assert_eq!(labels, vec![0, 1]);
     }
 
     #[test]
     fn empty_input() {
-        let labels = dbscan(&[], &DbscanParams { eps: 1.0, min_pts: 2 });
+        let labels = dbscan(
+            &[],
+            &DbscanParams {
+                eps: 1.0,
+                min_pts: 2,
+            },
+        );
         assert!(labels.is_empty());
     }
 }

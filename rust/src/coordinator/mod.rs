@@ -11,12 +11,14 @@
 //!    through the execution [`Backend`] (native MLP or one PJRT HLO
 //!    call each), in parallel across scoped worker threads;
 //! 4. completions are replayed through the virtual-clock event queue in
-//!    true arrival order: on-time updates aggregate in arrival order,
-//!    late updates enter the staleness buffer the same way;
-//! 5. on-time updates (plus, for staleness-aware strategies, late
-//!    updates that have arrived since) are aggregated through the
-//!    backend's Eq. 3 kernel, capped at the kernel's `k_max` with
-//!    fresh-first / newest-stale-next priority;
+//!    true arrival order: on-time updates stream straight into the
+//!    backend's O(P) aggregation fold ([`RoundAgg`], weighted by their
+//!    Eq. 3 component) and their buffers are released immediately; late
+//!    updates enter the staleness buffer the same way;
+//! 5. for staleness-aware strategies the buffer is drained into the
+//!    same fold, capped at the kernel's `k_max` with fresh-first /
+//!    newest-stale-next priority — still-τ-valid overflow re-buffers
+//!    for a later round — and the accumulator is normalized once;
 //! 6. the client-history DB is updated exactly as Algorithm 1 does,
 //!    including the client-side correction of missed rounds when a slow
 //!    update finally lands;
@@ -28,6 +30,7 @@
 //! tie-breaks on issue order.
 
 use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 use crate::clientdb::HistoryStore;
 use crate::config::ExperimentConfig;
@@ -35,18 +38,19 @@ use crate::cost::CostLedger;
 use crate::data::{ClientData, SynthDataset};
 use crate::faas::{Forced, Outcome, SimulatedGcf};
 use crate::metrics::{ExperimentResult, RoundRecord};
-use crate::paramsvr::{staleness_weights, ParameterServer, StaleUpdate, WeightedUpdate};
-use crate::runtime::{Backend, TrainRequest};
+use crate::params::{ParamBlock, PlaneGauge};
+use crate::paramsvr::{weight_component, ParameterServer, StaleUpdate};
+use crate::runtime::{AggregateFold, Backend, TrainRequest};
 use crate::sched;
 use crate::strategy::{Aggregation, SelectionContext, Strategy};
 use crate::util::Rng;
 use crate::{ClientId, Result};
 
-/// A fresh (on-time) client update collected during a round.
-struct FreshUpdate {
+/// Metadata of a fresh (on-time) update that has already streamed into
+/// this round's aggregation fold — the parameter buffer itself was
+/// released at arrival.
+struct FreshMeta {
     client: ClientId,
-    params: Vec<f32>,
-    cardinality: usize,
     training_time_s: f64,
     loss: f32,
 }
@@ -80,6 +84,10 @@ pub struct Controller<'rt> {
     /// clock (late completion or hard-timeout kill): the scheduler never
     /// re-invokes them mid-flight.
     in_flight: sched::InFlight,
+    /// Live/peak accounting of parameter-plane bytes (model-weight
+    /// buffers only); windowed per round into
+    /// `RoundRecord::param_plane_peak_bytes`.
+    gauge: PlaneGauge,
 }
 
 impl<'rt> Controller<'rt> {
@@ -120,6 +128,8 @@ impl<'rt> Controller<'rt> {
 
         let init = backend.init_params()?;
         let zeros = vec![0f32; init.len()];
+        let mut gauge = PlaneGauge::default();
+        gauge.add(init.len() * std::mem::size_of::<f32>());
         let strategy = cfg.strategy.build();
         let cfg_k = cfg.clients_per_round;
         Ok(Self {
@@ -140,6 +150,7 @@ impl<'rt> Controller<'rt> {
             shard_cache: HashMap::new(),
             effective_k: cfg_k,
             in_flight: sched::InFlight::new(),
+            gauge,
         })
     }
 
@@ -204,6 +215,8 @@ impl<'rt> Controller<'rt> {
         let deadline = round_start + self.cfg.round_timeout_s();
         let cost_before = self.ledger.total;
         let mf = self.backend.manifest();
+        let p_bytes = mf.param_count * std::mem::size_of::<f32>();
+        self.gauge.begin_window();
 
         // 1. selection (clients_per_round may be adapted — extension)
         let k_now = if self.cfg.adaptive_clients {
@@ -252,7 +265,11 @@ impl<'rt> Controller<'rt> {
                 forced,
             );
             self.ledger.bill(inv.billed_s, self.cfg.faas.memory_mb);
-            plans.push(sched::ClientPlan { client, inv, num_steps });
+            plans.push(sched::ClientPlan {
+                client,
+                inv,
+                num_steps,
+            });
         }
 
         // 4. real compute, in parallel across worker threads, only for
@@ -265,11 +282,12 @@ impl<'rt> Controller<'rt> {
                     .insert(p.client, self.data.client_data(p.client));
             }
         }
-        let global_anchor: Option<Vec<f32>> = if self.strategy.uses_prox() {
-            Some(self.server.global().to_vec())
-        } else {
-            None
-        };
+        // Zero-copy prox anchor: the round-start global is one shared
+        // `ParamBlock` snapshot — every TrainRequest's `params` and the
+        // FedProx anchor read the same allocation (the seed deep-copied
+        // the anchor into a second full buffer every prox round).
+        let global_now: ParamBlock = self.server.global_block();
+        let use_prox = self.strategy.uses_prox();
         let jobs: Vec<Option<TrainRequest>> = plans
             .iter()
             .map(|p| {
@@ -278,7 +296,7 @@ impl<'rt> Controller<'rt> {
                 }
                 let shard = &self.shard_cache[&p.client];
                 Some(TrainRequest {
-                    params: self.server.global(),
+                    params: global_now.as_slice(),
                     m: &self.zeros,
                     v: &self.zeros,
                     t: 0.0,
@@ -286,18 +304,34 @@ impl<'rt> Controller<'rt> {
                     y: &shard.y,
                     seed: (round as i32) * 100_003 + p.client as i32,
                     num_steps: p.num_steps,
-                    global: global_anchor.as_deref(),
+                    global: use_prox.then(|| global_now.as_slice()),
                 })
             })
             .collect();
         let mut results = sched::train_parallel(self.backend, &jobs)?;
         drop(jobs);
+        let trained = results.iter().flatten().count();
+        self.gauge.add(trained * p_bytes);
 
         // 5. replay completions on the virtual clock, in true arrival
-        //    order: fresh updates aggregate (and stale updates enter the
-        //    buffer) in the order they reached the parameter server.
+        //    order: fresh updates stream straight into the backend's
+        //    O(P) aggregation fold (weighted by their Eq. 3 component)
+        //    and their buffers are released immediately; stale updates
+        //    enter the buffer in the same order.
+        let (tau, normalize) = match self.strategy.aggregation() {
+            Aggregation::Synchronous => (1, true),
+            Aggregation::StalenessAware { tau, normalize } => (tau, normalize),
+        };
+        let staleness_aware = matches!(
+            self.strategy.aggregation(),
+            Aggregation::StalenessAware { .. }
+        );
+        let t_1b = round + 1; // 1-based aggregation round for Eq. 3
+        let expected_k = mf.k_max.min(trained + self.server.stale_len()).max(1);
+        let mut agg = RoundAgg::new(self.backend, expected_k);
         let mut queue = sched::EventQueue::schedule(&plans);
-        let mut fresh: Vec<FreshUpdate> = Vec::new();
+        let mut fresh: Vec<FreshMeta> = Vec::new();
+        let mut fresh_dists: Vec<f64> = Vec::new();
         let mut failed_now: Vec<ClientId> = Vec::new();
         let mut latest_ontime = round_start;
         let mut any_missed = false;
@@ -309,10 +343,27 @@ impl<'rt> Controller<'rt> {
                         .take()
                         .expect("on-time invocation must have trained");
                     latest_ontime = latest_ontime.max(ev.at_s);
-                    fresh.push(FreshUpdate {
+                    if self.cfg.stale_norm_clip.is_some() {
+                        // stale_norm_clip reference distance, measured
+                        // against the round-start global (the server is
+                        // not mutated until this round's fold finishes)
+                        fresh_dists.push(l2_dist(&result.params, global_now.as_slice()));
+                    }
+                    // fresh updates beyond k_max (unreachable with the
+                    // presets) still count as successes; they just
+                    // cannot enter this round's fold
+                    if fresh.len() < mf.k_max {
+                        let card = self.data.cardinality(ev.client);
+                        // fresh component: damp = t/t = 1, so c_k = n_k
+                        let held_before = agg.held_bytes();
+                        agg.push(&result.params, card as f64, card)?;
+                        // fold growth: O(P) once for a streaming
+                        // accumulator, O(P) per entry for a buffered one
+                        self.gauge.add(agg.held_bytes().saturating_sub(held_before));
+                    }
+                    self.gauge.sub(p_bytes); // update buffer released
+                    fresh.push(FreshMeta {
                         client: ev.client,
-                        params: result.params,
-                        cardinality: self.data.cardinality(ev.client),
                         training_time_s: plan.inv.training_time_s,
                         loss: result.loss,
                     });
@@ -328,15 +379,23 @@ impl<'rt> Controller<'rt> {
                     self.history.record_failure(ev.client, round);
                     failed_now.push(ev.client);
                     self.in_flight.track(ev.client, ev.at_s);
-                    self.server.push_stale(StaleUpdate {
-                        client: ev.client,
-                        produced_round: round + 1, // 1-based t_k for Eq. 3
-                        arrived_at_s: ev.at_s,
-                        training_time_s: plan.inv.training_time_s,
-                        params: result.params,
-                        cardinality: self.data.cardinality(ev.client),
-                        loss: result.loss,
-                    });
+                    if staleness_aware {
+                        self.server.push_stale(StaleUpdate {
+                            client: ev.client,
+                            produced_round: round + 1, // 1-based t_k for Eq. 3
+                            arrived_at_s: ev.at_s,
+                            training_time_s: plan.inv.training_time_s,
+                            params: result.params,
+                            cardinality: self.data.cardinality(ev.client),
+                            loss: result.loss,
+                        });
+                    } else {
+                        // synchronous strategies never drain the buffer:
+                        // keeping the update would grow the parameter
+                        // plane forever for work Alg. 1 already wrote
+                        // off as a failure
+                        self.gauge.sub(p_bytes);
+                    }
                 }
                 Outcome::Crash => {
                     any_missed = true;
@@ -361,83 +420,67 @@ impl<'rt> Controller<'rt> {
             latest_ontime
         };
 
-        // 6. aggregation
-        let t_1b = round + 1; // 1-based aggregation round for Eq. 3
-        let mut stale_applied = 0usize;
+        // 6. aggregation tail: drain the staleness buffer, clip/cap,
+        //    fold the surviving stale updates into the same accumulator
+        //    the fresh updates streamed into, then normalize once.
         let successes = fresh.len();
-        if !fresh.is_empty() || self.server.stale_len() > 0 {
-            let (tau, normalize) = match self.strategy.aggregation() {
-                Aggregation::Synchronous => (1, true),
-                Aggregation::StalenessAware { tau, normalize } => (tau, normalize),
-            };
-            let mut drained = if matches!(
-                self.strategy.aggregation(),
-                Aggregation::StalenessAware { .. }
-            ) {
-                self.server.drain_stale(round_end, t_1b, tau)
-            } else {
-                Vec::new()
-            };
-            // Extension (config.stale_norm_clip): discard stale updates
-            // that drifted too far from the current global relative to
-            // this round's fresh updates — "aggregate valuable updates
-            // and discard the unnecessary ones" (paper §VII). With no
-            // fresh updates there is no reference distance and the
-            // filter is a no-op.
-            if let (Some(clip), false) = (self.cfg.stale_norm_clip, fresh.is_empty()) {
-                let dist = |p: &[f32]| -> f64 {
-                    p.iter()
-                        .zip(self.server.global())
-                        .map(|(a, b)| ((a - b) as f64).powi(2))
-                        .sum::<f64>()
-                        .sqrt()
-                };
-                let mut fresh_d: Vec<f64> = fresh.iter().map(|u| dist(&u.params)).collect();
-                fresh_d.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                let median = sched::median_sorted(&fresh_d).max(1e-12);
-                drained.retain(|u| dist(&u.params) <= clip * median);
+        let mut drained = if staleness_aware && self.server.stale_len() > 0 {
+            let buffered = self.server.stale_len();
+            let ready = self.server.drain_stale(round_end, t_1b, tau);
+            // τ-expired updates were dropped inside the drain
+            let expired = buffered - self.server.stale_len() - ready.len();
+            self.gauge.sub(expired * p_bytes);
+            ready
+        } else {
+            Vec::new()
+        };
+        // Extension (config.stale_norm_clip): discard stale updates
+        // that drifted too far from the current global relative to
+        // this round's fresh updates — "aggregate valuable updates
+        // and discard the unnecessary ones" (paper §VII). The fresh
+        // reference distances were recorded at arrival (the buffers are
+        // gone); with no fresh updates the filter is a no-op.
+        if let (Some(clip), false) = (self.cfg.stale_norm_clip, fresh_dists.is_empty()) {
+            fresh_dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = sched::median_sorted(&fresh_dists).max(1e-12);
+            let before = drained.len();
+            drained.retain(|u| l2_dist(&u.params, global_now.as_slice()) <= clip * median);
+            self.gauge.sub((before - drained.len()) * p_bytes);
+        }
+        // k_max cap: fresh first, newest stale next. Only applied stale
+        // updates receive history credit and `stale_applied` accounting;
+        // the still-τ-valid overflow re-buffers for a later aggregation
+        // round instead of being discarded (the seed dropped it).
+        let (kept, overflow) = sched::cap_stale(successes, drained, mf.k_max);
+        for u in overflow {
+            self.server.push_stale(u);
+        }
+        for u in &kept {
+            // client-side history correction (§V-B): round numbers in
+            // the DB are 0-based
+            self.history
+                .record_late_completion(u.client, u.produced_round - 1, u.training_time_s);
+        }
+        let stale_applied = kept.len();
+        for u in kept {
+            if let Some(c) = weight_component(u.produced_round, u.cardinality, t_1b, tau) {
+                let held_before = agg.held_bytes();
+                agg.push(&u.params, c, u.cardinality)?;
+                self.gauge.add(agg.held_bytes().saturating_sub(held_before));
             }
-            // k_max cap: fresh first, newest stale next. Only stale
-            // updates that actually enter the aggregation receive history
-            // credit and `stale_applied` accounting — the seed credited
-            // and counted updates it then truncated away.
-            let drained = sched::cap_stale(fresh.len(), drained, mf.k_max);
-            for u in &drained {
-                // client-side history correction (§V-B): round numbers in
-                // the DB are 0-based
-                self.history.record_late_completion(
-                    u.client,
-                    u.produced_round - 1,
-                    u.training_time_s,
-                );
+            self.gauge.sub(p_bytes); // stale buffer entry released
+        }
+        let fold_held = agg.held_bytes();
+        let mut agg_wall_s = 0.0;
+        match agg.finish(normalize)? {
+            Some((aggregated, wall)) => {
+                agg_wall_s = wall.as_secs_f64();
+                self.gauge.add(p_bytes); // frozen snapshot materializes
+                self.server.set_global(aggregated.into(), t_1b);
+                self.gauge.sub(fold_held); // fold holdings released by finish
+                self.gauge.sub(p_bytes); // previous global released
             }
-            stale_applied = drained.len();
-            let mut params_refs: Vec<&[f32]> = Vec::new();
-            let mut winfo: Vec<WeightedUpdate> = Vec::new();
-            // fresh updates beyond k_max (unreachable with the presets)
-            // still count as successes; they just cannot enter this
-            // aggregate call
-            for u in fresh.iter().take(mf.k_max) {
-                params_refs.push(&u.params);
-                winfo.push(WeightedUpdate {
-                    produced_round: t_1b,
-                    cardinality: u.cardinality,
-                });
-            }
-            for u in &drained {
-                params_refs.push(&u.params);
-                winfo.push(WeightedUpdate {
-                    produced_round: u.produced_round,
-                    cardinality: u.cardinality,
-                });
-            }
-            if !params_refs.is_empty() {
-                let weights = staleness_weights(&winfo, t_1b, tau, normalize);
-                if weights.iter().any(|&w| w > 0.0) {
-                    let (agg, _) = self.backend.aggregate(&params_refs, &weights)?;
-                    self.server.set_global(agg, t_1b);
-                }
-            }
+            None => self.gauge.sub(fold_held), // degenerate fold dropped unused
         }
 
         // 7. history bookkeeping for on-time clients + cooldown decay
@@ -448,12 +491,13 @@ impl<'rt> Controller<'rt> {
         self.history.tick_cooldowns(&failed_now);
 
         // 8. central evaluation
-        let do_eval =
-            round % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds;
+        let do_eval = round % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds;
         let (accuracy, eval_loss) = if do_eval {
-            let ev = self
-                .backend
-                .evaluate(self.server.global(), &self.eval_set.x, &self.eval_set.y)?;
+            let ev = self.backend.evaluate(
+                self.server.global().as_slice(),
+                &self.eval_set.x,
+                &self.eval_set.y,
+            )?;
             (Some(ev.accuracy), Some(ev.loss))
         } else {
             (None, None)
@@ -494,7 +538,93 @@ impl<'rt> Controller<'rt> {
             eval_loss,
             train_loss,
             cost: self.ledger.total - cost_before,
+            agg_wall_s,
+            param_plane_peak_bytes: self.gauge.peak(),
         })
+    }
+}
+
+/// L2 distance between an update and the round-start global snapshot
+/// (the `stale_norm_clip` reference metric).
+fn l2_dist(p: &[f32], q: &[f32]) -> f64 {
+    p.iter()
+        .zip(q)
+        .map(|(a, b)| f64::from(a - b).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// One round's streaming Eq. 3 aggregation: updates fold into the
+/// backend's O(P) accumulator as the event queue replays their arrival,
+/// each weighted by its Eq. 3 component `c_k = (t_k/t) · n_k`
+/// ([`weight_component`]); `finish` divides by the batch normalizer `Z`
+/// (the included-cardinality sum, or `Σ c_k` when normalizing) exactly
+/// once. Algebraically identical to weighting each update by
+/// `staleness_weights` and batch-aggregating — the floating-point
+/// rounding differs in the last ulp, and the equivalence is pinned to
+/// 1e-5 by `tests/native_golden.rs` — but the hot path holds one O(P)
+/// accumulator instead of every update vector simultaneously.
+struct RoundAgg<'b> {
+    backend: &'b dyn Backend,
+    expected_k: usize,
+    fold: Option<Box<dyn AggregateFold + 'b>>,
+    /// Σ c_k over folded updates (the normalized-variant divisor).
+    comp_sum: f64,
+    /// Σ n_k over folded updates (the verbatim-Eq. 3 divisor).
+    card_sum: f64,
+}
+
+impl<'b> RoundAgg<'b> {
+    fn new(backend: &'b dyn Backend, expected_k: usize) -> Self {
+        Self {
+            backend,
+            expected_k,
+            fold: None,
+            comp_sum: 0.0,
+            card_sum: 0.0,
+        }
+    }
+
+    /// Bytes the backend fold currently holds (0 before the first
+    /// push): O(P) for the native streaming accumulator, O(count × P)
+    /// for a buffered batch fold — the gauge tracks whichever is real.
+    fn held_bytes(&self) -> usize {
+        self.fold.as_ref().map_or(0, |f| f.held_bytes())
+    }
+
+    /// Fold one update with Eq. 3 component `c`; `cardinality` feeds
+    /// the verbatim-Eq. 3 divisor. The fold allocates lazily so empty
+    /// rounds never touch the backend.
+    fn push(&mut self, update: &[f32], component: f64, cardinality: usize) -> Result<()> {
+        if self.fold.is_none() {
+            self.fold = Some(self.backend.begin_fold(self.expected_k)?);
+        }
+        let fold = self.fold.as_mut().expect("fold just created");
+        fold.accumulate(update, component as f32)?;
+        self.comp_sum += component;
+        self.card_sum += cardinality as f64;
+        Ok(())
+    }
+
+    /// Normalize the accumulator by the Eq. 3 divisor and return the
+    /// new global plus the aggregation wall time. `None` when nothing
+    /// was folded or every component was zero (mirroring the batch
+    /// path, which skips `set_global` when all weights are zero).
+    fn finish(self, normalize: bool) -> Result<Option<(Vec<f32>, Duration)>> {
+        let Some(fold) = self.fold else {
+            return Ok(None);
+        };
+        let z = if normalize { self.comp_sum } else { self.card_sum };
+        if z <= 0.0 {
+            return Ok(None);
+        }
+        let (mut out, wall) = fold.finish()?;
+        let t0 = Instant::now();
+        let scale = (1.0 / z) as f32;
+        for o in out.iter_mut() {
+            *o *= scale;
+        }
+        Ok(Some((out, wall + t0.elapsed())))
     }
 }
 

@@ -205,7 +205,11 @@ impl SimulatedGcf {
                 .lognormal(0.0, self.cfg.invocation_jitter_sigma.max(1e-9));
             Some((speed, jitter))
         };
-        Decision { cold, startup, perf }
+        Decision {
+            cold,
+            startup,
+            perf,
+        }
     }
 
     /// Phase 2 — pure timeline materialization: no RNG, just the warm
@@ -436,8 +440,7 @@ mod tests {
         for client in 0..32usize {
             // each client invoked once at t=0: always a cold start
             let inv = gcf.invoke(client, 0.0, compute_s, payload_mb, deadline, None);
-            let startup =
-                mirror.lognormal(cfg.cold_start_median_s.ln(), cfg.cold_start_sigma);
+            let startup = mirror.lognormal(cfg.cold_start_median_s.ln(), cfg.cold_start_sigma);
             let crashed = mirror.bernoulli(cfg.transient_failure_rate);
             if crashed {
                 assert_eq!(inv.outcome, Outcome::Crash, "client {client}");

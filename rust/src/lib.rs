@@ -32,6 +32,13 @@
 //! and replays completions through a virtual-clock event queue so
 //! updates land in true arrival order.
 //!
+//! Model bytes move through the zero-copy parameter plane ([`params`]):
+//! the global model is an immutable `Arc<[f32]>` snapshot shared by the
+//! parameter server, the FedProx anchor and every concurrent
+//! `TrainRequest`, and aggregation streams updates into a single O(P)
+//! accumulator (`Backend::begin_fold`) as they arrive instead of
+//! materializing O(k x P) batches.
+//!
 //! Entry points: [`coordinator::Controller`] drives one experiment;
 //! [`repro`] regenerates every table and figure of the paper's §VI.
 
@@ -43,6 +50,7 @@ pub mod cost;
 pub mod data;
 pub mod faas;
 pub mod metrics;
+pub mod params;
 pub mod paramsvr;
 pub mod repro;
 pub mod runtime;

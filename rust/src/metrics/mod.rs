@@ -35,6 +35,16 @@ pub struct RoundRecord {
     /// in-flight-skipped clients are not in the denominator because they
     /// were never invoked).
     pub eur: f64,
+    /// Wall-clock seconds spent in this round's aggregation fold (real
+    /// machine time, not virtual time — excluded from the determinism
+    /// goldens).
+    pub agg_wall_s: f64,
+    /// Peak live parameter-plane bytes during this round: model-weight
+    /// buffers only (global snapshot, per-update vectors, staleness
+    /// buffer, and the aggregation fold's real holdings — O(P) for the
+    /// native streaming accumulator, O(k × P) for a buffered batch
+    /// fold), tracked by [`crate::params::PlaneGauge`].
+    pub param_plane_peak_bytes: usize,
 }
 
 impl RoundRecord {
@@ -109,11 +119,11 @@ impl ExperimentResult {
     /// Write the per-round timeline as CSV (Fig. 3a/3b series).
     pub fn write_timeline_csv(&self, path: &Path) -> Result<()> {
         let mut out = String::from(
-            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur\n",
+            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur,agg_wall_s,param_plane_peak_bytes\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4}\n",
+                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4},{:.6},{}\n",
                 r.round,
                 r.selected.len(),
                 r.successes,
@@ -126,6 +136,8 @@ impl ExperimentResult {
                 r.train_loss.map_or(String::new(), |v| format!("{v:.4}")),
                 r.cost,
                 r.eur,
+                r.agg_wall_s,
+                r.param_plane_peak_bytes,
             ));
         }
         std::fs::write(path, out)?;
@@ -163,6 +175,11 @@ impl ExperimentResult {
                     ),
                     ("cost", Json::num(r.cost)),
                     ("eur", Json::num(r.eur)),
+                    ("agg_wall_s", Json::num(r.agg_wall_s)),
+                    (
+                        "param_plane_peak_bytes",
+                        Json::num(r.param_plane_peak_bytes as f64),
+                    ),
                 ])
             })
             .collect();
@@ -216,6 +233,8 @@ mod tests {
             train_loss: None,
             cost: 0.01,
             eur: RoundRecord::compute_eur(succ, sel),
+            agg_wall_s: 0.0,
+            param_plane_peak_bytes: 0,
         }
     }
 
@@ -272,6 +291,11 @@ mod tests {
         e.write_timeline_csv(&p).unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.starts_with("round,"));
+        assert!(s
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("agg_wall_s,param_plane_peak_bytes"));
         assert_eq!(s.lines().count(), 2);
         std::fs::remove_file(&p).ok();
     }

@@ -1,0 +1,274 @@
+//! The zero-copy parameter plane: immutable [`ParamBlock`] snapshots
+//! (`Arc<[f32]>`) plus the chunk-parallel weighted-sum engine behind the
+//! backends' fold-style aggregation API.
+//!
+//! Every layer that hands a full model around — the parameter server's
+//! global blob, the FedProx anchor, the staleness buffer, the
+//! aggregation fold — shares one refcounted allocation instead of
+//! deep-copying `Vec<f32>`s. The only copy left is the one-time
+//! "freeze" when a freshly trained (mutable) parameter vector becomes a
+//! snapshot; after that, clones are pointer bumps.
+//!
+//! The weighted sum itself ([`fold_weighted_into`]) is element-wise
+//! (`acc[i] += w_k * u_k[i]`, entries folded in registration order), so
+//! chunking the parameter range across scoped worker threads never
+//! changes any element's accumulation order: the result is
+//! **bit-identical across worker counts**, including the serial path.
+//! That determinism contract is tested here and in `tests/proptests.rs`.
+
+use std::sync::Arc;
+
+/// An immutable, cheaply clonable snapshot of one flat parameter
+/// vector. `Clone` is an `Arc` refcount bump; the float data is shared.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamBlock(Arc<[f32]>);
+
+impl ParamBlock {
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Size of the shared float data in bytes (the param-plane
+    /// accounting unit).
+    pub fn bytes(&self) -> usize {
+        self.0.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Do two blocks share the same allocation? The zero-copy tests pin
+    /// snapshot semantics with this.
+    pub fn ptr_eq(&self, other: &ParamBlock) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+impl From<Vec<f32>> for ParamBlock {
+    /// Freeze a trained parameter vector into a snapshot. This is the
+    /// parameter plane's single remaining copy (the `Arc<[f32]>` header
+    /// forces a reallocation); everything downstream shares it.
+    fn from(v: Vec<f32>) -> Self {
+        Self(v.into())
+    }
+}
+
+impl From<&[f32]> for ParamBlock {
+    fn from(s: &[f32]) -> Self {
+        Self(Arc::from(s))
+    }
+}
+
+impl std::ops::Deref for ParamBlock {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+/// Default worker count for chunk-parallel folds (one per available
+/// core; the round scheduler's training fan-out uses the same number).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+/// Minimum multiply-accumulate count (`k * P`) before a fold fans out
+/// across threads; below this the scoped-spawn overhead dominates the
+/// arithmetic and the serial path wins.
+const MIN_PARALLEL_MADDS: usize = 1 << 18;
+
+/// Worker-count heuristic for a fold of `k` updates over `param_count`
+/// parameters: serial below [`MIN_PARALLEL_MADDS`] of work, one worker
+/// per core above it. Either choice produces bit-identical results.
+pub fn fold_workers(param_count: usize, k: usize) -> usize {
+    if param_count.saturating_mul(k) < MIN_PARALLEL_MADDS {
+        1
+    } else {
+        default_workers()
+    }
+}
+
+/// Fold `acc[i] += w * u[i]` for every `(u, w)` entry, in entry order,
+/// chunk-parallel over `workers` scoped threads (`workers == 1` runs
+/// serially on the caller's thread, spawn-free). Zero-weight entries
+/// are skipped, matching the batch scalar reference. Because each
+/// element's accumulation order is the entry order regardless of how
+/// the parameter range is chunked, the result is bit-identical for
+/// every worker count.
+///
+/// Panics if any entry's length differs from `acc.len()` (the backends
+/// validate shapes before registering entries).
+pub fn fold_weighted_into(acc: &mut [f32], entries: &[(&[f32], f32)], workers: usize) {
+    for (u, _) in entries {
+        assert_eq!(u.len(), acc.len(), "fold entry length mismatch");
+    }
+    let workers = workers.clamp(1, acc.len().max(1));
+    if workers == 1 {
+        fold_chunk(acc, entries, 0);
+        return;
+    }
+    let chunk = acc.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (ci, acc_chunk) in acc.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || fold_chunk(acc_chunk, entries, ci * chunk));
+        }
+    });
+}
+
+/// Serial weighted fold of one contiguous parameter range.
+fn fold_chunk(acc: &mut [f32], entries: &[(&[f32], f32)], offset: usize) {
+    for &(u, w) in entries {
+        if w == 0.0 {
+            continue;
+        }
+        for (a, x) in acc.iter_mut().zip(&u[offset..offset + acc.len()]) {
+            *a += w * x;
+        }
+    }
+}
+
+/// Running/peak accounting of live parameter-plane bytes. This is an
+/// accounting gauge, not an allocator hook: the coordinator reports
+/// buffers when they become live (a trained update materializes, the
+/// fold accumulator is allocated, a snapshot freezes) and releases them
+/// at their last logical use. Tracked state is model-weight buffers
+/// only — the global snapshot, per-update parameter vectors, the
+/// staleness buffer and the fold accumulator; optimizer moments and
+/// feature shards belong to the compute plane, not the parameter plane.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlaneGauge {
+    live: usize,
+    peak: usize,
+}
+
+impl PlaneGauge {
+    pub fn add(&mut self, bytes: usize) {
+        self.live += bytes;
+        self.peak = self.peak.max(self.live);
+    }
+
+    pub fn sub(&mut self, bytes: usize) {
+        self.live = self.live.saturating_sub(bytes);
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Peak live bytes since the last [`PlaneGauge::begin_window`].
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Start a fresh peak window (per-round accounting); live bytes
+    /// carry over.
+    pub fn begin_window(&mut self) {
+        self.peak = self.live;
+    }
+}
+
+/// Batch scalar reference for the Eq. 3 inner sum — the seed
+/// `NativeBackend::aggregate` loop, kept verbatim as the oracle the
+/// golden/property tests pin the streaming fold against.
+pub fn weighted_sum_scalar(updates: &[&[f32]], weights: &[f32]) -> Vec<f32> {
+    assert_eq!(updates.len(), weights.len(), "updates vs weights");
+    let p = updates.first().map_or(0, |u| u.len());
+    let mut out = vec![0.0f32; p];
+    for (u, &w) in updates.iter().zip(weights) {
+        if w == 0.0 {
+            continue;
+        }
+        for (o, x) in out.iter_mut().zip(*u) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_clone_shares_storage() {
+        let a = ParamBlock::from(vec![1.0f32, 2.0, 3.0]);
+        let b = a.clone();
+        assert!(a.ptr_eq(&b));
+        assert_eq!(a.as_slice(), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.len(), 3);
+        assert!(!a.is_empty());
+        assert_eq!(a.bytes(), 12);
+        // a fresh block over equal contents is a different allocation
+        let c = ParamBlock::from(vec![1.0f32, 2.0, 3.0]);
+        assert_eq!(a, c);
+        assert!(!a.ptr_eq(&c));
+    }
+
+    #[test]
+    fn fold_is_bit_identical_across_worker_counts() {
+        let p = 1031; // prime: uneven chunks
+        let u1: Vec<f32> = (0..p).map(|i| (i % 17) as f32 * 0.3 - 1.0).collect();
+        let u2: Vec<f32> = (0..p).map(|i| (i % 5) as f32 * -0.7).collect();
+        let u3: Vec<f32> = (0..p).map(|i| (i % 29) as f32 * 0.01).collect();
+        let entries: Vec<(&[f32], f32)> = vec![(&u1, 0.4), (&u2, 0.0), (&u3, 0.6)];
+        let scalar = weighted_sum_scalar(&[&u1, &u2, &u3], &[0.4, 0.0, 0.6]);
+        for workers in [1usize, 2, 3, 8, 64] {
+            let mut acc = vec![0.0f32; p];
+            fold_weighted_into(&mut acc, &entries, workers);
+            assert_eq!(acc, scalar, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_entries_are_skipped_not_multiplied() {
+        // skip semantics matter: 0.0 * NaN would poison the accumulator
+        let poison = vec![f32::NAN; 64];
+        let good = vec![1.0f32; 64];
+        let entries: Vec<(&[f32], f32)> = vec![(&poison, 0.0), (&good, 0.5)];
+        let mut acc = vec![0.0f32; 64];
+        fold_weighted_into(&mut acc, &entries, 4);
+        assert!(acc.iter().all(|&x| x == 0.5));
+    }
+
+    #[test]
+    fn fold_workers_gates_on_total_work() {
+        assert_eq!(fold_workers(100, 2), 1, "tiny folds stay serial");
+        assert!(fold_workers(1 << 20, 8) >= 1);
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn plane_gauge_tracks_live_and_windowed_peak() {
+        let mut g = PlaneGauge::default();
+        g.add(100);
+        g.add(50);
+        assert_eq!(g.live(), 150);
+        assert_eq!(g.peak(), 150);
+        g.sub(120);
+        assert_eq!(g.live(), 30);
+        assert_eq!(g.peak(), 150, "peak survives releases");
+        g.begin_window();
+        assert_eq!(g.peak(), 30, "window restarts the peak at live");
+        g.add(10);
+        assert_eq!(g.peak(), 40);
+        g.sub(1000);
+        assert_eq!(g.live(), 0, "release saturates at zero");
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn fold_rejects_mismatched_lengths() {
+        let short = vec![0.0f32; 3];
+        let entries: Vec<(&[f32], f32)> = vec![(&short, 1.0)];
+        let mut acc = vec![0.0f32; 4];
+        fold_weighted_into(&mut acc, &entries, 1);
+    }
+}

@@ -4,8 +4,16 @@
 //! Late ("slow") updates land here tagged with the round they were
 //! *produced for* (t_k) and their arrival time; the FedLesScan aggregator
 //! drains the buffer at the next aggregation, dampens each update by
-//! t_k / t (Eq. 3) and discards anything older than τ.
+//! t_k / t (Eq. 3) and discards anything older than τ. Updates the
+//! `k_max` cap truncates out of a round re-enter the buffer (via
+//! [`ParameterServer::push_stale`]) so still-τ-valid work lands in a
+//! later round instead of being dropped.
+//!
+//! The global model itself is a zero-copy [`ParamBlock`] snapshot:
+//! handing it to the FedProx anchor or to concurrent train requests is
+//! an `Arc` refcount bump, not a buffer copy.
 
+use crate::params::ParamBlock;
 use crate::ClientId;
 
 /// A late client update waiting in the staleness buffer.
@@ -80,9 +88,27 @@ pub fn staleness_weights(
     w.into_iter().map(|v| v as f32).collect()
 }
 
+/// Streaming factorization of the Eq. 3 weights: for any update batch,
+/// [`staleness_weights`] yields `w_k = c_k / Z`, where
+/// `c_k = (t_k / t) · n_k` is the per-update **weight component**
+/// (`None` once τ-expired) and `Z` is one global normalizer — the
+/// included-cardinality sum `n` for verbatim Eq. 3, or `Σ c_k` when
+/// normalizing. The coordinator folds `Σ c_k · u_k` into a single O(P)
+/// accumulator as updates arrive and divides by `Z` once at the end,
+/// which is what lets aggregation stream instead of materializing the
+/// whole batch. Equivalence with [`staleness_weights`] is pinned by the
+/// tests below and in `tests/proptests.rs`.
+pub fn weight_component(produced_round: u32, cardinality: usize, t: u32, tau: u32) -> Option<f64> {
+    if t.saturating_sub(produced_round) >= tau {
+        return None;
+    }
+    let damp = (produced_round as f64 / t.max(1) as f64).min(1.0);
+    Some(damp * cardinality as f64)
+}
+
 /// The parameter server state.
 pub struct ParameterServer {
-    global: Vec<f32>,
+    global: ParamBlock,
     /// Completed aggregation count == current round index for Eq. 3.
     round: u32,
     stale: Vec<StaleUpdate>,
@@ -91,14 +117,23 @@ pub struct ParameterServer {
 impl ParameterServer {
     pub fn new(init: Vec<f32>) -> Self {
         Self {
-            global: init,
+            global: init.into(),
             round: 0,
             stale: Vec::new(),
         }
     }
 
-    pub fn global(&self) -> &[f32] {
+    /// Borrow the current global snapshot.
+    pub fn global(&self) -> &ParamBlock {
         &self.global
+    }
+
+    /// A shared handle to the current global snapshot: an `Arc`
+    /// refcount bump, no float copied. The FedProx anchor and every
+    /// concurrent `TrainRequest` read the same allocation through
+    /// handles like this one.
+    pub fn global_block(&self) -> ParamBlock {
+        self.global.clone()
     }
 
     pub fn round(&self) -> u32 {
@@ -106,7 +141,7 @@ impl ParameterServer {
     }
 
     /// Install the freshly aggregated global model.
-    pub fn set_global(&mut self, params: Vec<f32>, round: u32) {
+    pub fn set_global(&mut self, params: ParamBlock, round: u32) {
         assert_eq!(params.len(), self.global.len(), "param length change");
         self.global = params;
         self.round = round;
@@ -247,8 +282,51 @@ mod tests {
     #[test]
     fn set_global_updates_round() {
         let mut ps = ParameterServer::new(vec![1.0, 2.0]);
-        ps.set_global(vec![3.0, 4.0], 7);
-        assert_eq!(ps.global(), &[3.0, 4.0]);
+        ps.set_global(vec![3.0, 4.0].into(), 7);
+        assert_eq!(ps.global().as_slice(), &[3.0, 4.0]);
         assert_eq!(ps.round(), 7);
+    }
+
+    #[test]
+    fn global_block_shares_storage_with_the_server() {
+        // The zero-copy contract behind the FedProx anchor: every handle
+        // to the global model is the same allocation, so a prox round
+        // never materializes a second full parameter buffer.
+        let ps = ParameterServer::new(vec![0.5; 64]);
+        let anchor = ps.global_block();
+        let request_view = ps.global_block();
+        assert!(anchor.ptr_eq(ps.global()));
+        assert!(anchor.ptr_eq(&request_view));
+        assert_eq!(anchor.bytes(), 64 * std::mem::size_of::<f32>());
+    }
+
+    #[test]
+    fn weight_component_factorizes_batch_weights() {
+        // Streaming contract: staleness_weights == component / Z for
+        // both the verbatim-Eq. 3 and normalized variants.
+        let ups = [wu(10, 20), wu(9, 35), wu(7, 50), wu(10, 5)];
+        let (t, tau) = (10u32, 3u32);
+        for normalize in [false, true] {
+            let batch = staleness_weights(&ups, t, tau, normalize);
+            let comps: Vec<f64> = ups
+                .iter()
+                .map(|u| weight_component(u.produced_round, u.cardinality, t, tau).unwrap_or(0.0))
+                .collect();
+            let n: f64 = ups
+                .iter()
+                .zip(&comps)
+                .filter(|(_, &c)| c > 0.0)
+                .map(|(u, _)| u.cardinality as f64)
+                .sum();
+            let z = if normalize { comps.iter().sum::<f64>() } else { n };
+            assert_eq!(comps[2], 0.0, "age 3 >= tau must have no component");
+            for (b, c) in batch.iter().zip(&comps) {
+                assert!(
+                    (f64::from(*b) - c / z).abs() < 1e-6,
+                    "normalize={normalize}: {b} vs {}",
+                    c / z
+                );
+            }
+        }
     }
 }

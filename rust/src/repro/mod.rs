@@ -455,23 +455,38 @@ pub fn ablations(opts: &Options) -> Result<()> {
         ("default", FedLesScanParams::default()),
         (
             "tau=1 (no stale)",
-            FedLesScanParams { tau: 1, ..Default::default() },
+            FedLesScanParams {
+                tau: 1,
+                ..Default::default()
+            },
         ),
         (
             "tau=4",
-            FedLesScanParams { tau: 4, ..Default::default() },
+            FedLesScanParams {
+                tau: 4,
+                ..Default::default()
+            },
         ),
         (
             "no-normalize (Eq.3)",
-            FedLesScanParams { normalize: false, ..Default::default() },
+            FedLesScanParams {
+                normalize: false,
+                ..Default::default()
+            },
         ),
         (
             "alpha=0.1",
-            FedLesScanParams { ema_alpha: 0.1, ..Default::default() },
+            FedLesScanParams {
+                ema_alpha: 0.1,
+                ..Default::default()
+            },
         ),
         (
             "alpha=0.9",
-            FedLesScanParams { ema_alpha: 0.9, ..Default::default() },
+            FedLesScanParams {
+                ema_alpha: 0.9,
+                ..Default::default()
+            },
         ),
     ];
 

@@ -62,6 +62,33 @@ pub struct EvalResult {
     pub accuracy: f32,
 }
 
+/// An in-progress streaming aggregation (`begin → accumulate → finish`):
+/// updates fold into a single O(P) accumulator one at a time
+/// (`acc += w * update`, Eq. 3 inner sum in registration order), so the
+/// caller never has to materialize all `k` update vectors
+/// simultaneously. Obtain one via [`Backend::begin_fold`]; the batch
+/// [`Backend::aggregate`] is a thin wrapper that pushes every update
+/// through a fold.
+pub trait AggregateFold {
+    /// Fold one weighted update into the accumulator. Zero-weight
+    /// entries are skipped, matching the batch scalar reference. Fails
+    /// on a shape mismatch or once `k_max` updates have been folded.
+    fn accumulate(&mut self, update: &[f32], weight: f32) -> Result<()>;
+
+    /// Number of updates folded so far.
+    fn count(&self) -> usize;
+
+    /// Bytes of parameter data this fold currently holds — O(P) for a
+    /// streaming accumulator, O(count × P) for a buffering fold. Feeds
+    /// the coordinator's `param_plane_peak_bytes` accounting, so batch
+    /// backends report their true footprint.
+    fn held_bytes(&self) -> usize;
+
+    /// Consume the fold: the weighted sum plus the aggregation wall
+    /// time. Fails if no update was folded.
+    fn finish(self: Box<Self>) -> Result<(Vec<f32>, Duration)>;
+}
+
 /// One model family's execution engine. Object-safe: the coordinator and
 /// the repro harness hold `&dyn Backend` / `Box<dyn Backend>`.
 ///
@@ -88,10 +115,30 @@ pub trait Backend: Sync {
     /// Central federated evaluation on the fixed-size test set.
     fn evaluate(&self, params: &[f32], x: &Features, y: &[i32]) -> Result<EvalResult>;
 
+    /// Begin a streaming aggregation (`begin → accumulate(update, w) →
+    /// finish`). `expected_k` is a capacity hint bounded by
+    /// `manifest().k_max`, not a contract. The native backend streams
+    /// into a single O(P) accumulator, chunk-parallel when an entry is
+    /// large enough to amortize the fan-out; batch-only backends (PJRT:
+    /// one HLO call over a stacked buffer) return a [`BufferedFold`]
+    /// that defers to their `aggregate` override.
+    fn begin_fold(&self, expected_k: usize) -> Result<Box<dyn AggregateFold + '_>>;
+
     /// Weighted aggregation: `out = sum_k weights[k] * updates[k]` in f32
     /// (paper Eq. 3 inner sum; weight semantics belong to the caller).
     /// `updates.len()` must be in `[1, k_max]`.
-    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)>;
+    ///
+    /// Default: a thin wrapper over [`Backend::begin_fold`], so the
+    /// Eq. 3 goldens in `tests/native_golden.rs` pin one entry point for
+    /// both the batch and streaming paths.
+    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)> {
+        check_aggregate_args(self.manifest(), updates, weights)?;
+        let mut fold = self.begin_fold(updates.len())?;
+        for (u, &w) in updates.iter().zip(weights) {
+            fold.accumulate(u, w)?;
+        }
+        fold.finish()
+    }
 
     /// Whether `train_round` should be fanned out across short-lived
     /// worker threads. Backends whose per-thread setup is expensive
@@ -101,6 +148,58 @@ pub trait Backend: Sync {
     /// model every round.
     fn parallel_train(&self) -> bool {
         true
+    }
+}
+
+/// [`AggregateFold`] for batch-only backends: buffers owned copies of
+/// every update and runs the backend's batch `aggregate` at `finish`.
+/// O(k × P) memory by construction (each `accumulate` is one full
+/// P-length copy — the price of keeping one-call batch semantics behind
+/// the streaming API; `held_bytes` reports it honestly), and only
+/// correct for backends that *override* [`Backend::aggregate`] (a
+/// backend relying on the default wrapper would recurse back into
+/// `begin_fold`).
+pub struct BufferedFold<'b> {
+    backend: &'b dyn Backend,
+    updates: Vec<Vec<f32>>,
+    weights: Vec<f32>,
+}
+
+impl<'b> BufferedFold<'b> {
+    pub fn new(backend: &'b dyn Backend, expected_k: usize) -> Self {
+        let cap = expected_k.min(backend.manifest().k_max);
+        Self {
+            backend,
+            updates: Vec::with_capacity(cap),
+            weights: Vec::with_capacity(cap),
+        }
+    }
+}
+
+impl AggregateFold for BufferedFold<'_> {
+    fn accumulate(&mut self, update: &[f32], weight: f32) -> Result<()> {
+        let mf = self.backend.manifest();
+        check_params(mf, "update", update)?;
+        if self.updates.len() == mf.k_max {
+            bail!("{}: fold exceeds k_max={}", mf.name, mf.k_max);
+        }
+        self.updates.push(update.to_vec());
+        self.weights.push(weight);
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.updates.len()
+    }
+
+    fn held_bytes(&self) -> usize {
+        let floats: usize = self.updates.iter().map(Vec::len).sum();
+        floats * std::mem::size_of::<f32>()
+    }
+
+    fn finish(self: Box<Self>) -> Result<(Vec<f32>, Duration)> {
+        let refs: Vec<&[f32]> = self.updates.iter().map(Vec::as_slice).collect();
+        self.backend.aggregate(&refs, &self.weights)
     }
 }
 
@@ -298,6 +397,41 @@ mod tests {
         assert_eq!(BackendKind::from_str("native").unwrap(), BackendKind::Native);
         assert_eq!(BackendKind::from_str("PJRT").unwrap(), BackendKind::Pjrt);
         assert!(BackendKind::from_str("tpu").is_err());
+    }
+
+    #[test]
+    fn default_aggregate_wrapper_matches_manual_fold() {
+        let b = load_backend(BackendKind::Native, Path::new("unused"), "mnist").unwrap();
+        let p = b.manifest().param_count;
+        let u1: Vec<f32> = (0..p).map(|i| (i % 13) as f32 * 0.01).collect();
+        let u2: Vec<f32> = (0..p).map(|i| (i % 7) as f32 * -0.02).collect();
+        let (batch, _) = b.aggregate(&[&u1, &u2], &[0.25, 0.75]).unwrap();
+        let mut fold = b.begin_fold(2).unwrap();
+        fold.accumulate(&u1, 0.25).unwrap();
+        assert_eq!(fold.count(), 1);
+        fold.accumulate(&u2, 0.75).unwrap();
+        let (streamed, _) = fold.finish().unwrap();
+        assert_eq!(streamed, batch, "wrapper and fold are the same math");
+    }
+
+    #[test]
+    fn buffered_fold_defers_to_batch_aggregate() {
+        // The native backend overrides begin_fold (not aggregate), so
+        // the default wrapper is safe for BufferedFold to call back into.
+        let b = load_backend(BackendKind::Native, Path::new("unused"), "mnist").unwrap();
+        let p = b.manifest().param_count;
+        let u: Vec<f32> = (0..p).map(|i| (i % 5) as f32).collect();
+        let mut fold: Box<dyn AggregateFold + '_> = Box::new(BufferedFold::new(b.as_ref(), 1));
+        assert_eq!(fold.held_bytes(), 0);
+        fold.accumulate(&u, 0.5).unwrap();
+        // a buffering fold holds a full copy per entry
+        assert_eq!(fold.held_bytes(), p * std::mem::size_of::<f32>());
+        let (out, _) = fold.finish().unwrap();
+        assert!(out.iter().zip(&u).all(|(o, x)| *o == 0.5 * x));
+        // shape and emptiness validation
+        let mut bad: Box<dyn AggregateFold + '_> = Box::new(BufferedFold::new(b.as_ref(), 1));
+        assert!(bad.accumulate(&u[..3], 1.0).is_err());
+        assert!(bad.finish().is_err());
     }
 
     #[test]

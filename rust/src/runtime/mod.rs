@@ -16,7 +16,8 @@ pub mod engine;
 pub mod model;
 
 pub use backend::{
-    load_backend, Backend, BackendKind, EvalResult, TrainRequest, TrainResult,
+    load_backend, AggregateFold, Backend, BackendKind, BufferedFold, EvalResult, TrainRequest,
+    TrainResult,
 };
 pub use manifest::{ArtifactIndex, Manifest};
 pub use native::NativeBackend;

@@ -14,8 +14,8 @@ use std::time::Duration;
 use anyhow::bail;
 
 use super::backend::{
-    check_aggregate_args, check_eval_args, check_train_request, Backend, EvalResult,
-    TrainRequest, TrainResult,
+    check_aggregate_args, check_eval_args, check_train_request, AggregateFold, Backend,
+    BufferedFold, EvalResult, TrainRequest, TrainResult,
 };
 use super::engine::{
     lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, to_vec_f32, Engine, Executable,
@@ -274,6 +274,14 @@ impl Backend for PjrtBackend {
 
     fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)> {
         self.with_runtime(|rt| rt.aggregate(updates, weights))
+    }
+
+    /// The Pallas aggregation kernel is one HLO call over a stacked
+    /// `[k_max, P]` buffer, so streaming element folds would launch one
+    /// execution per update. Keep the batch semantics behind the fold
+    /// API: buffer the updates and run the kernel once at `finish`.
+    fn begin_fold(&self, expected_k: usize) -> Result<Box<dyn AggregateFold + '_>> {
+        Ok(Box::new(BufferedFold::new(self, expected_k)))
     }
 
     /// Scheduler worker threads are short-lived (one `thread::scope` per

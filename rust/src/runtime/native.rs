@@ -21,11 +21,12 @@ use std::time::{Duration, Instant};
 use anyhow::bail;
 
 use super::backend::{
-    check_aggregate_args, check_eval_args, check_train_request, Backend, EvalResult,
+    check_eval_args, check_params, check_train_request, AggregateFold, Backend, EvalResult,
     TrainRequest, TrainResult,
 };
 use super::manifest::{Entrypoint, Manifest};
 use crate::data::Features;
+use crate::params::{fold_weighted_into, fold_workers};
 use crate::util::Rng;
 use crate::Result;
 
@@ -528,20 +529,57 @@ impl Backend for NativeBackend {
         })
     }
 
-    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)> {
-        let mf = &self.manifest;
-        check_aggregate_args(mf, updates, weights)?;
-        let t0 = Instant::now();
-        let mut out = vec![0.0f32; mf.param_count];
-        for (u, &w) in updates.iter().zip(weights) {
-            if w == 0.0 {
-                continue;
-            }
-            for (o, x) in out.iter_mut().zip(*u) {
-                *o += w * x;
-            }
+    fn begin_fold(&self, _expected_k: usize) -> Result<Box<dyn AggregateFold + '_>> {
+        Ok(Box::new(NativeFold {
+            mf: &self.manifest,
+            acc: vec![0.0f32; self.manifest.param_count],
+            count: 0,
+            wall: Duration::ZERO,
+        }))
+    }
+}
+
+/// Streaming O(P) accumulator behind [`NativeBackend::begin_fold`]:
+/// each `accumulate` is one `acc += w * u` pass
+/// ([`fold_weighted_into`]), chunk-parallel across scoped worker
+/// threads when the entry is large enough to amortize the fan-out
+/// ([`fold_workers`]) and bit-identical to the serial seed loop either
+/// way. The batch [`Backend::aggregate`] default wrapper drives this
+/// same fold, so the Eq. 3 goldens pin both paths at once.
+struct NativeFold<'b> {
+    mf: &'b Manifest,
+    acc: Vec<f32>,
+    count: usize,
+    wall: Duration,
+}
+
+impl AggregateFold for NativeFold<'_> {
+    fn accumulate(&mut self, update: &[f32], weight: f32) -> Result<()> {
+        check_params(self.mf, "update", update)?;
+        if self.count == self.mf.k_max {
+            bail!("{}: fold exceeds k_max={}", self.mf.name, self.mf.k_max);
         }
-        Ok((out, t0.elapsed()))
+        let t0 = Instant::now();
+        let workers = fold_workers(self.acc.len(), 1);
+        fold_weighted_into(&mut self.acc, &[(update, weight)], workers);
+        self.wall += t0.elapsed();
+        self.count += 1;
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn held_bytes(&self) -> usize {
+        self.acc.len() * std::mem::size_of::<f32>()
+    }
+
+    fn finish(self: Box<Self>) -> Result<(Vec<f32>, Duration)> {
+        if self.count == 0 {
+            bail!("{}: fold finished with no updates", self.mf.name);
+        }
+        Ok((self.acc, self.wall))
     }
 }
 
@@ -607,6 +645,42 @@ mod tests {
             let want = 0.3 * u1[i] + 0.7 * u2[i];
             assert!((agg[i] - want).abs() < 1e-6, "elem {i}");
         }
+    }
+
+    #[test]
+    fn streaming_fold_matches_batch_bit_for_bit() {
+        let b = mnist();
+        let p = b.manifest().param_count;
+        let us: Vec<Vec<f32>> = (0..3)
+            .map(|k| (0..p).map(|i| ((i + 7 * k) % 11) as f32 * 0.03 - 0.1).collect())
+            .collect();
+        let w = [0.5f32, 0.0, 0.3];
+        let refs: Vec<&[f32]> = us.iter().map(Vec::as_slice).collect();
+        let (batch, _) = b.aggregate(&refs, &w).unwrap();
+        let mut fold = b.begin_fold(3).unwrap();
+        for (u, &wi) in refs.iter().zip(&w) {
+            fold.accumulate(u, wi).unwrap();
+        }
+        assert_eq!(fold.count(), 3);
+        // streaming fold: one O(P) accumulator no matter how many entries
+        assert_eq!(fold.held_bytes(), p * std::mem::size_of::<f32>());
+        let (streamed, _) = fold.finish().unwrap();
+        assert_eq!(streamed, batch);
+    }
+
+    #[test]
+    fn fold_validates_shapes_count_and_emptiness() {
+        let b = mnist();
+        let p = b.manifest().param_count;
+        let u = vec![0.25f32; p];
+        let mut fold = b.begin_fold(1).unwrap();
+        assert!(fold.accumulate(&u[..p - 1], 1.0).is_err(), "short update");
+        for _ in 0..b.manifest().k_max {
+            fold.accumulate(&u, 0.0).unwrap();
+        }
+        assert!(fold.accumulate(&u, 0.0).is_err(), "k_max overflow");
+        let empty = b.begin_fold(0).unwrap();
+        assert!(empty.finish().is_err(), "empty fold must not finish");
     }
 
     #[test]
@@ -743,7 +817,11 @@ mod tests {
         let mf = b.manifest();
         let p0 = b.init_params().unwrap();
         let zeros = vec![0.0f32; p0.len()];
-        let x = Features::F32((0..mf.shard_size * mf.sample_elems()).map(|i| (i % 17) as f32 * 0.1).collect());
+        let x = Features::F32(
+            (0..mf.shard_size * mf.sample_elems())
+                .map(|i| (i % 17) as f32 * 0.1)
+                .collect(),
+        );
         let y: Vec<i32> = (0..mf.shard_size as i32).map(|i| i % 10).collect();
         let run = |seed: i32| {
             let req = TrainRequest {

@@ -189,23 +189,28 @@ pub fn split_in_flight(
 
 /// Order drained stale updates newest-first — highest produced round,
 /// then earliest arrival, then client id — and cap the combined
-/// fresh + stale aggregation set at `k_max`, fresh first. Returns only
-/// the stale updates that actually enter the aggregation; the dropped
-/// tail must receive neither `stale_applied` accounting nor
-/// `record_late_completion` history credit (it was never applied).
+/// fresh + stale aggregation set at `k_max`, fresh first. Returns
+/// `(kept, overflow)`: only `kept` enters the aggregation, and only it
+/// may receive `stale_applied` accounting or `record_late_completion`
+/// history credit. `overflow` is still-τ-valid work the round had no
+/// room for — the coordinator re-buffers it into the parameter server
+/// so it can land in a later aggregation (the seed discarded it
+/// permanently even when it had not yet τ-expired; `drain_stale`
+/// remains the only place updates age out).
 pub fn cap_stale(
     fresh_len: usize,
     mut drained: Vec<StaleUpdate>,
     k_max: usize,
-) -> Vec<StaleUpdate> {
+) -> (Vec<StaleUpdate>, Vec<StaleUpdate>) {
     drained.sort_by(|a, b| {
         b.produced_round
             .cmp(&a.produced_round)
             .then_with(|| a.arrived_at_s.total_cmp(&b.arrived_at_s))
             .then_with(|| a.client.cmp(&b.client))
     });
-    drained.truncate(k_max.saturating_sub(fresh_len));
-    drained
+    let keep = k_max.saturating_sub(fresh_len).min(drained.len());
+    let overflow = drained.split_off(keep);
+    (drained, overflow)
 }
 
 /// Median of an already-sorted distance set (the `stale_norm_clip`
@@ -223,11 +228,11 @@ pub fn median_sorted(sorted: &[f64]) -> f64 {
     }
 }
 
-/// Default worker count for the parallel training pool.
+/// Default worker count for the parallel training pool — the same
+/// per-core fan-out the parameter plane uses for chunk-parallel folds
+/// ([`crate::params::default_workers`] is the single definition).
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
+    crate::params::default_workers()
 }
 
 /// Execute `Backend::train_round` for every `Some` job across scoped
@@ -365,20 +370,29 @@ mod tests {
     }
 
     #[test]
-    fn cap_stale_keeps_newest_and_drops_overflow() {
+    fn cap_stale_keeps_newest_and_returns_overflow() {
         // 2 fresh + k_max 4 leaves two stale slots: the round-5 updates
         // win over the round-4 one; within round 5 the earlier arrival
-        // wins.
+        // wins. The round-4 update is overflow, not garbage — it goes
+        // back to the staleness buffer.
         let drained = vec![stale(0, 4, 10.0), stale(1, 5, 30.0), stale(2, 5, 20.0)];
-        let kept = cap_stale(2, drained, 4);
+        let (kept, overflow) = cap_stale(2, drained, 4);
         assert_eq!(
             kept.iter().map(|u| u.client).collect::<Vec<_>>(),
             vec![2, 1]
         );
+        assert_eq!(
+            overflow.iter().map(|u| u.client).collect::<Vec<_>>(),
+            vec![0]
+        );
         // a full fresh set leaves no stale slots at all
-        assert!(cap_stale(4, vec![stale(0, 5, 1.0)], 4).is_empty());
+        let (kept, overflow) = cap_stale(4, vec![stale(0, 5, 1.0)], 4);
+        assert!(kept.is_empty());
+        assert_eq!(overflow.len(), 1);
         // and more fresh than k_max must not underflow
-        assert!(cap_stale(9, vec![stale(0, 5, 1.0)], 4).is_empty());
+        let (kept, overflow) = cap_stale(9, vec![stale(0, 5, 1.0)], 4);
+        assert!(kept.is_empty());
+        assert_eq!(overflow.len(), 1);
     }
 
     #[test]

@@ -26,7 +26,7 @@ impl Strategy for FedAvg {
 mod tests {
     use super::*;
     use crate::clientdb::HistoryStore;
-    
+
     #[test]
     fn selects_k_distinct_clients() {
         let clients: Vec<ClientId> = (0..20).collect();

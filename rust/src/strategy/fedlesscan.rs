@@ -210,7 +210,7 @@ fn sample_clustered(
 mod tests {
     use super::*;
     use crate::clientdb::HistoryStore;
-    
+
     fn ctx<'a>(
         clients: &'a [ClientId],
         history: &'a HistoryStore,
@@ -382,7 +382,10 @@ mod tests {
         let s = FedLesScan::default();
         assert_eq!(
             s.aggregation(),
-            Aggregation::StalenessAware { tau: 2, normalize: true }
+            Aggregation::StalenessAware {
+                tau: 2,
+                normalize: true,
+            }
         );
     }
 }

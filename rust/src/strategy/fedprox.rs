@@ -48,7 +48,7 @@ impl Strategy for FedProx {
 #[cfg(test)]
 mod tests {
     use super::*;
-    
+
     #[test]
     fn work_fraction_in_range() {
         let s = FedProx::default();

@@ -48,7 +48,10 @@ impl Strategy for SafaLite {
     }
 
     fn aggregation(&self) -> Aggregation {
-        Aggregation::StalenessAware { tau: 2, normalize: true }
+        Aggregation::StalenessAware {
+            tau: 2,
+            normalize: true,
+        }
     }
 }
 
@@ -56,7 +59,7 @@ impl Strategy for SafaLite {
 mod tests {
     use super::*;
     use crate::clientdb::HistoryStore;
-    
+
     #[test]
     fn picks_fastest_known_clients() {
         let clients: Vec<ClientId> = (0..6).collect();

@@ -10,8 +10,8 @@
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
 use fedless::data::{Features, SynthDataset};
-use fedless::runtime::{Backend, NativeBackend, TrainRequest};
-use fedless::strategy::StrategyKind;
+use fedless::runtime::{AggregateFold, Backend, BufferedFold, NativeBackend, TrainRequest};
+use fedless::strategy::{FedLesScan, FedLesScanParams, StrategyKind};
 
 fn mnist_backend() -> NativeBackend {
     NativeBackend::for_dataset("mnist").expect("native mnist backend")
@@ -584,6 +584,12 @@ impl Backend for TinyBackend {
         }
         Ok((out, std::time::Duration::from_millis(1)))
     }
+
+    fn begin_fold(&self, expected_k: usize) -> fedless::Result<Box<dyn AggregateFold + '_>> {
+        // batch-only mock: buffer and defer to the capacity-checked
+        // aggregate above
+        Ok(Box::new(BufferedFold::new(self, expected_k)))
+    }
 }
 
 #[test]
@@ -636,6 +642,98 @@ fn kmax_truncated_stale_updates_get_no_credit_or_count() {
         credited, stale_total,
         "late-completion credit must match applied stale updates exactly"
     );
+}
+
+#[test]
+fn kmax_overflow_stale_updates_land_in_a_later_round() {
+    // Regression for the cap_stale overflow discard: with every client
+    // forced slow and k_max = 2, each drain truncates most of the
+    // backlog. Truncated updates that are still τ-valid must re-buffer
+    // and land in round t+1 — the seed dropped them permanently, so
+    // "dry" rounds (all clients in flight, no new arrivals) applied
+    // nothing.
+    //
+    // Virtual timeline (mnist straggler timeout = 60 s): round 0 invokes
+    // 6 slow clients whose updates arrive ~75 s, i.e. inside round 1;
+    // round 1 skips everyone (in flight) and drains the 6-update burst:
+    // 2 applied, 4 re-buffered. Round 2 re-invokes (the new updates
+    // arrive ~195 s, inside round 3), so its only candidates are the 4
+    // re-buffered updates: 2 of them must land. τ = 4 keeps the
+    // overflow valid across the extra round.
+    let rt = TinyBackend::new(2);
+    let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(100));
+    cfg.straggler_slow_frac = 1.0;
+    cfg.faas.transient_failure_rate = 0.0;
+    cfg.n_clients = 6;
+    cfg.clients_per_round = 6;
+    cfg.rounds = 6;
+    let mut ctl = Controller::new(cfg, &rt).unwrap();
+    ctl.set_strategy(Box::new(FedLesScan::new(FedLesScanParams {
+        tau: 4,
+        ..Default::default()
+    })));
+    let res = ctl.run().unwrap();
+
+    let r1 = &res.rounds[1];
+    assert_eq!(r1.in_flight_skipped, 6, "round 1 is blocked on round 0");
+    assert_eq!(r1.stale_applied, 2, "burst drain caps at k_max");
+    let r2 = &res.rounds[2];
+    assert_eq!(r2.in_flight_skipped, 0, "round 2 re-invokes everyone");
+    assert_eq!(
+        r2.stale_applied, 2,
+        "round 2 has no new arrivals: only re-buffered overflow can land"
+    );
+    for r in &res.rounds {
+        assert!(r.stale_applied <= 2, "round {} broke the k_max cap", r.round);
+    }
+    // an update is applied (and credited) at most once, overflow or not
+    let stale_total: usize = res.rounds.iter().map(|r| r.stale_applied).sum();
+    let credited: usize = ctl
+        .history()
+        .iter()
+        .map(|(_, h)| h.training_times.len())
+        .sum();
+    assert_eq!(credited, stale_total);
+}
+
+#[test]
+fn prox_anchor_adds_no_param_plane_bytes() {
+    // Zero-copy prox anchor regression: with a noise-free platform every
+    // invocation is on-time, so a round's parameter plane holds exactly
+    // the global snapshot + one buffer per trained client + the fold
+    // accumulator = (k + 2) buffers. The FedProx anchor is an Arc view
+    // of the same snapshot handed to every TrainRequest — the seed
+    // deep-copied it, which would read (k + 3) here — so the prox peak
+    // must equal the anchor-free FedAvg peak byte for byte.
+    let rt = mnist_backend();
+    let p_bytes = rt.manifest().param_count * std::mem::size_of::<f32>();
+    let run = |strategy| {
+        let mut cfg = quick_cfg(strategy, Scenario::Standard);
+        cfg.faas.transient_failure_rate = 0.0;
+        cfg.faas.client_speed_sigma = 1e-9;
+        cfg.faas.invocation_jitter_sigma = 1e-9;
+        cfg.faas.cold_start_sigma = 1e-9;
+        cfg.rounds = 4;
+        let mut ctl = Controller::new(cfg, &rt).unwrap();
+        ctl.run().unwrap()
+    };
+    let prox = run(StrategyKind::Fedprox);
+    let avg = run(StrategyKind::Fedavg);
+    for (rp, ra) in prox.rounds.iter().zip(&avg.rounds) {
+        assert_eq!(
+            rp.successes,
+            rp.selected.len(),
+            "precondition: noise-free rounds are all on-time"
+        );
+        assert_eq!(
+            rp.param_plane_peak_bytes,
+            (rp.successes + 2) * p_bytes,
+            "round {}: prox allocated an extra param buffer",
+            rp.round
+        );
+        assert_eq!(rp.param_plane_peak_bytes, ra.param_plane_peak_bytes);
+        assert!(rp.agg_wall_s >= 0.0);
+    }
 }
 
 #[test]

@@ -12,7 +12,7 @@
 //!   fixed-seed synthetic dataset.
 
 use fedless::data::{Features, SynthDataset};
-use fedless::paramsvr::{staleness_weights, WeightedUpdate};
+use fedless::paramsvr::{staleness_weights, weight_component, WeightedUpdate};
 use fedless::runtime::manifest::{Entrypoint, Manifest};
 use fedless::runtime::{Backend, NativeBackend, TrainRequest};
 
@@ -195,9 +195,18 @@ fn aggregation_weights_match_staleness_reference() {
     let t = 10u32;
     let tau = 2u32;
     let winfo = [
-        WeightedUpdate { produced_round: 10, cardinality: 20 },
-        WeightedUpdate { produced_round: 9, cardinality: 20 },
-        WeightedUpdate { produced_round: 7, cardinality: 20 }, // age 3 >= tau
+        WeightedUpdate {
+            produced_round: 10,
+            cardinality: 20,
+        },
+        WeightedUpdate {
+            produced_round: 9,
+            cardinality: 20,
+        },
+        WeightedUpdate {
+            produced_round: 7,
+            cardinality: 20,
+        }, // age 3 >= tau
     ];
     let weights = staleness_weights(&winfo, t, tau, true);
     assert_eq!(weights[2], 0.0, "expired update must get weight 0");
@@ -217,6 +226,62 @@ fn aggregation_weights_match_staleness_reference() {
             "elem {i}: {} vs {want}",
             agg[i]
         );
+    }
+}
+
+#[test]
+fn streaming_component_fold_matches_batch_staleness_path() {
+    // The coordinator's streaming aggregation: fold each update with its
+    // Eq. 3 component c_k = (t_k/t)·n_k, divide by Z once at the end.
+    // Must match the batch reference (staleness_weights + aggregate)
+    // within 1e-5 — the two differ only in f32 rounding order.
+    let rt = NativeBackend::for_dataset("mnist").unwrap();
+    let p = rt.manifest().param_count;
+    let updates: Vec<Vec<f32>> = (0..3)
+        .map(|k| (0..p).map(|i| ((i + k * 5) % 9) as f32 * 0.05 - 0.2).collect())
+        .collect();
+    let winfo = [
+        WeightedUpdate {
+            produced_round: 10,
+            cardinality: 20,
+        },
+        WeightedUpdate {
+            produced_round: 9,
+            cardinality: 35,
+        },
+        WeightedUpdate {
+            produced_round: 8,
+            cardinality: 10,
+        },
+    ];
+    let (t, tau) = (10u32, 3u32);
+    for normalize in [false, true] {
+        let weights = staleness_weights(&winfo, t, tau, normalize);
+        let refs: Vec<&[f32]> = updates.iter().map(Vec::as_slice).collect();
+        let (batch, _) = rt.aggregate(&refs, &weights).unwrap();
+
+        let mut fold = rt.begin_fold(3).unwrap();
+        let mut comp_sum = 0.0f64;
+        let mut card_sum = 0.0f64;
+        for (u, w) in updates.iter().zip(&winfo) {
+            let c = weight_component(w.produced_round, w.cardinality, t, tau).unwrap();
+            fold.accumulate(u, c as f32).unwrap();
+            comp_sum += c;
+            card_sum += w.cardinality as f64;
+        }
+        let z = if normalize { comp_sum } else { card_sum };
+        let (mut streamed, _) = fold.finish().unwrap();
+        let scale = (1.0 / z) as f32;
+        streamed.iter_mut().for_each(|x| *x *= scale);
+
+        for i in (0..p).step_by(211) {
+            assert!(
+                (f64::from(streamed[i]) - f64::from(batch[i])).abs() < 1e-5,
+                "normalize={normalize} elem {i}: {} vs {}",
+                streamed[i],
+                batch[i]
+            );
+        }
     }
 }
 

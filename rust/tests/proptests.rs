@@ -9,7 +9,8 @@ use fedless::config::Scenario;
 use fedless::cost::GcfPricing;
 use fedless::data::{Partition, SynthDataset};
 use fedless::metrics::RoundRecord;
-use fedless::paramsvr::{staleness_weights, WeightedUpdate};
+use fedless::params::{fold_weighted_into, weighted_sum_scalar};
+use fedless::paramsvr::{staleness_weights, weight_component, WeightedUpdate};
 use fedless::strategy::{
     ema, missed_round_ema, FedAvg, FedLesScan, FedProx, SafaLite, SelectionContext, Strategy,
     StrategyKind,
@@ -166,6 +167,93 @@ fn prop_staleness_weights_invariants() {
                         "case {case}: monotonicity violated"
                     );
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_chunk_parallel_fold_is_bit_identical_to_scalar_reference() {
+    // The streaming-aggregation determinism contract: the chunk-parallel
+    // weighted fold is *bit-identical* to the batch scalar reference
+    // for every worker count (each element accumulates in entry order
+    // no matter how the parameter range is chunked) — strictly stronger
+    // than the documented 1e-5 equivalence bound. Random k, random
+    // weights with zero-weight entries, 1/2/8 workers.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xcc);
+        let p = 1 + rng.below(3000);
+        let k = 1 + rng.below(12);
+        let updates: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..p).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect())
+            .collect();
+        let weights: Vec<f32> = (0..k)
+            .map(|_| {
+                if rng.bernoulli(0.2) {
+                    0.0
+                } else {
+                    rng.range_f64(0.0, 1.5) as f32
+                }
+            })
+            .collect();
+        let refs: Vec<&[f32]> = updates.iter().map(Vec::as_slice).collect();
+        let scalar = weighted_sum_scalar(&refs, &weights);
+        let entries: Vec<(&[f32], f32)> = refs
+            .iter()
+            .copied()
+            .zip(weights.iter().copied())
+            .collect();
+        for workers in [1usize, 2, 8] {
+            let mut acc = vec![0.0f32; p];
+            fold_weighted_into(&mut acc, &entries, workers);
+            assert_eq!(acc, scalar, "case {case} workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn prop_weight_component_factorizes_staleness_weights() {
+    // The coordinator streams Σ c_k·u_k and divides by Z once; this
+    // pins c_k / Z == staleness_weights for random batches, both
+    // normalized and verbatim Eq. 3.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xdd);
+        let t = 1 + rng.below(50) as u32;
+        let tau = 1 + rng.below(5) as u32;
+        let n = 1 + rng.below(16);
+        let updates: Vec<WeightedUpdate> = (0..n)
+            .map(|_| WeightedUpdate {
+                produced_round: 1 + rng.below(t as usize) as u32,
+                cardinality: 1 + rng.below(500),
+            })
+            .collect();
+        let comps: Vec<f64> = updates
+            .iter()
+            .map(|u| weight_component(u.produced_round, u.cardinality, t, tau).unwrap_or(0.0))
+            .collect();
+        let card_sum: f64 = updates
+            .iter()
+            .zip(&comps)
+            .filter(|(_, &c)| c > 0.0)
+            .map(|(u, _)| u.cardinality as f64)
+            .sum();
+        for normalize in [false, true] {
+            let batch = staleness_weights(&updates, t, tau, normalize);
+            let z = if normalize {
+                comps.iter().sum::<f64>()
+            } else {
+                card_sum
+            };
+            if z <= 0.0 {
+                assert!(batch.iter().all(|&w| w == 0.0), "case {case}");
+                continue;
+            }
+            for (i, (&b, &c)) in batch.iter().zip(&comps).enumerate() {
+                assert!(
+                    (f64::from(b) - c / z).abs() < 1e-5,
+                    "case {case} update {i} normalize={normalize}: {b} vs {}",
+                    c / z
+                );
             }
         }
     }
