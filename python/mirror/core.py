@@ -1,0 +1,639 @@
+"""Bit-exact Python mirror of the Rust behaviour-plane path.
+
+Python floats are IEEE-754 doubles, so every f64 op here reproduces the
+Rust arithmetic exactly as long as operation order matches. u64 ops are
+masked. Used to (a) validate grid-DBSCAN == naive == seed-naive labels,
+(b) validate old (unbounded-history) select == new (bounded-history)
+select, and (c) generate the pinned goldens for tests/goldens.rs.
+"""
+
+import itertools
+import math
+
+MASK = (1 << 64) - 1
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** seeded via SplitMix64 (util/rng.rs)."""
+
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        assert n > 0
+        return int(self.f64() * float(n)) % n
+
+    def range_f64(self, lo, hi):
+        return lo + self.f64() * (hi - lo)
+
+    def bernoulli(self, p):
+        return self.f64() < p
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def sample(self, xs, k):
+        pool = list(xs)
+        self.shuffle(pool)
+        return pool[:k]
+
+    def sample_indices(self, n, k):
+        if k >= n:
+            pool = list(range(n))
+            self.shuffle(pool)
+            return pool
+        swapped = {}
+        out = []
+        for i in range(k):
+            j = i + self.below(n - i)
+            vj = swapped.get(j, j)
+            vi = swapped.get(i, i)
+            swapped[j] = vi
+            out.append(vj)
+        return out
+
+
+def rust_round(x):
+    """f64::round — half away from zero (non-negative domain here)."""
+    assert x >= 0.0
+    f = math.floor(x)
+    r = x - f
+    if r > 0.5:
+        return f + 1
+    if r < 0.5:
+        return f
+    return f + 1
+
+
+# ---------------------------------------------------------------- features
+
+def ema(values, alpha):
+    if not values:
+        return 0.0
+    acc = values[0]
+    for x in values[1:]:
+        acc = alpha * x + (1.0 - alpha) * acc
+    return acc
+
+
+def missed_round_ema(missed, current_round, alpha):
+    if current_round == 0:
+        return 0.0
+    ratios = [r / float(current_round) for r in missed]
+    return ema(ratios, alpha)
+
+
+# ---------------------------------------------------------------- history
+
+HISTORY_WINDOW = 64
+HISTORY_EMA_ALPHA = 0.5
+
+
+class OldHistory:
+    """Seed ClientHistory: unbounded vectors."""
+
+    def __init__(self):
+        self.training_times = []
+        self.missed_rounds = []
+        self.cooldown = 0
+        self.invocations = 0
+        self.successes = 0
+
+    def is_rookie(self):
+        return self.invocations == 0
+
+    def is_straggler(self):
+        return self.cooldown > 0
+
+    def t_feature(self, alpha):
+        return ema(self.training_times, alpha)
+
+    def m_feature(self, rnd, alpha):
+        return missed_round_ema(self.missed_rounds, rnd, alpha)
+
+
+class NewHistory:
+    """Bounded ClientHistory: incremental EMA + recency windows."""
+
+    def __init__(self):
+        self.t_ema = 0.0
+        self.t_sum = 0.0
+        self.times_count = 0
+        self.recent_times = []
+        self.missed_recent = []
+        self.missed_evicted = 0
+        self.cooldown = 0
+        self.invocations = 0
+        self.successes = 0
+
+    def is_rookie(self):
+        return self.invocations == 0
+
+    def is_straggler(self):
+        return self.cooldown > 0
+
+    def note_time(self, t):
+        if self.times_count == 0:
+            self.t_ema = t
+        else:
+            self.t_ema = HISTORY_EMA_ALPHA * t + (1.0 - HISTORY_EMA_ALPHA) * self.t_ema
+        self.t_sum += t
+        self.times_count += 1
+        if len(self.recent_times) == HISTORY_WINDOW:
+            self.recent_times.pop(0)
+        self.recent_times.append(t)
+
+    def note_miss(self, rnd):
+        if rnd in self.missed_recent:
+            return
+        if len(self.missed_recent) == HISTORY_WINDOW:
+            self.missed_recent.pop(0)
+            self.missed_evicted += 1
+        self.missed_recent.append(rnd)
+
+    def unmiss(self, rnd):
+        self.missed_recent = [r for r in self.missed_recent if r != rnd]
+
+    def t_feature(self, alpha):
+        if alpha == HISTORY_EMA_ALPHA:
+            return self.t_ema
+        return ema(self.recent_times, alpha)
+
+    def m_feature(self, rnd, alpha):
+        return missed_round_ema(self.missed_recent, rnd, alpha)
+
+
+class HistoryStore:
+    def __init__(self, cls):
+        self.cls = cls
+        self.map = {}
+
+    def entry(self, cid):
+        if cid not in self.map:
+            self.map[cid] = self.cls()
+        return self.map[cid]
+
+    def view(self, cid):
+        return self.map.get(cid) or self.cls()
+
+    def record_invocation(self, cid):
+        self.entry(cid).invocations += 1
+
+    def record_success(self, cid, rnd, t):
+        h = self.entry(cid)
+        h.cooldown = 0
+        h.successes += 1
+        if self.cls is OldHistory:
+            h.training_times.append(t)
+            h.missed_rounds = [r for r in h.missed_rounds if r != rnd]
+        else:
+            h.note_time(t)
+            h.unmiss(rnd)
+
+    def record_failure(self, cid, rnd):
+        h = self.entry(cid)
+        if self.cls is OldHistory:
+            if rnd not in h.missed_rounds:
+                h.missed_rounds.append(rnd)
+        else:
+            h.note_miss(rnd)
+        h.cooldown = 1 if h.cooldown == 0 else h.cooldown * 2
+
+    def record_late_completion(self, cid, rnd, t):
+        h = self.entry(cid)
+        if self.cls is OldHistory:
+            h.missed_rounds = [r for r in h.missed_rounds if r != rnd]
+            h.training_times.append(t)
+        else:
+            h.unmiss(rnd)
+            h.note_time(t)
+
+    def tick_cooldowns(self, failed):
+        fs = set(failed)
+        for cid, h in self.map.items():
+            if h.cooldown > 0 and cid not in fs:
+                h.cooldown -= 1
+
+
+# ---------------------------------------------------------------- clustering
+
+NOISE = -1
+UNVISITED = -2
+
+
+def dist2(a, b):
+    s = 0.0
+    for x, y in zip(a, b):
+        s += (x - y) * (x - y)
+    return s
+
+
+def dbscan_seed(points, eps, min_pts):
+    """The seed implementation, duplicated frontier and all."""
+    n = len(points)
+    eps2 = eps * eps
+    labels = [UNVISITED] * n
+    cluster = 0
+
+    def neighbours(i):
+        return [j for j in range(n) if dist2(points[i], points[j]) <= eps2]
+
+    for i in range(n):
+        if labels[i] != UNVISITED:
+            continue
+        nb = neighbours(i)
+        if len(nb) < min_pts:
+            labels[i] = NOISE
+            continue
+        labels[i] = cluster
+        frontier = list(nb)
+        while frontier:
+            j = frontier.pop()
+            if labels[j] == NOISE:
+                labels[j] = cluster
+            if labels[j] != UNVISITED:
+                continue
+            labels[j] = cluster
+            nb_j = neighbours(j)
+            if len(nb_j) >= min_pts:
+                frontier.extend(nb_j)
+        cluster += 1
+    return labels
+
+
+def expand(n, min_pts, neighbours):
+    """New shared expansion (deduped frontier). Returns (labels, peak)."""
+    labels = [UNVISITED] * n
+    queued = [False] * n
+    cluster = 0
+    peak = 0
+    frontier = []
+
+    def enqueue(nb):
+        nonlocal peak
+        for j in nb:
+            if not queued[j] and (labels[j] == UNVISITED or labels[j] == NOISE):
+                queued[j] = True
+                frontier.append(j)
+        peak = max(peak, len(frontier))
+
+    for i in range(n):
+        if labels[i] != UNVISITED:
+            continue
+        nb = neighbours(i)
+        if len(nb) < min_pts:
+            labels[i] = NOISE
+            continue
+        labels[i] = cluster
+        enqueue(nb)
+        while frontier:
+            j = frontier.pop()
+            if labels[j] == NOISE:
+                labels[j] = cluster
+                continue
+            assert labels[j] == UNVISITED
+            labels[j] = cluster
+            nb_j = neighbours(j)
+            if len(nb_j) >= min_pts:
+                enqueue(nb_j)
+        cluster += 1
+    return labels, peak
+
+
+def dbscan_naive_new(points, eps, min_pts):
+    n = len(points)
+    eps2 = eps * eps
+    return expand(
+        n, min_pts,
+        lambda i: [j for j in range(n) if dist2(points[i], points[j]) <= eps2],
+    )[0]
+
+
+MAX_CELL = 1.0e12
+
+
+def cell_key(p, eps):
+    key = []
+    for x in p:
+        q = x / eps
+        if not math.isfinite(q):
+            return None
+        c = math.floor(q)
+        if abs(c) > MAX_CELL:
+            return None
+        key.append(int(c))
+    return tuple(key)
+
+
+def grid_build(points, eps):
+    if not (math.isfinite(eps) and eps > 0.0):
+        return None
+    dim = len(points[0]) if points else 0
+    if any(len(p) != dim for p in points):
+        return None
+    cells = {}
+    for i, p in enumerate(points):
+        k = cell_key(p, eps)
+        if k is None:
+            return None
+        cells.setdefault(k, []).append(i)
+    return cells
+
+
+def grid_neighbours(points, cells, eps, i):
+    # Visit order differs from the Rust odometer but the result is the
+    # same sorted set: cells partition the points, so no duplicates.
+    p = points[i]
+    eps2 = eps * eps
+    center = cell_key(p, eps)
+    out = []
+    for offs in itertools.product((-1, 0, 1), repeat=len(center)):
+        key = tuple(c + o for c, o in zip(center, offs))
+        for j in cells.get(key, ()):
+            if dist2(p, points[j]) <= eps2:
+                out.append(j)
+    out.sort()
+    return out
+
+
+def dbscan_grid(points, eps, min_pts):
+    cells = grid_build(points, eps)
+    if cells is None:
+        return dbscan_naive_new(points, eps, min_pts)
+    return expand(
+        len(points), min_pts,
+        lambda i: grid_neighbours(points, cells, eps, i),
+    )[0]
+
+
+def relabel_outliers(labels):
+    mx = max(labels) if labels else NOISE
+    noise_id = mx + 1
+    any_noise = False
+    for i, l in enumerate(labels):
+        if l == NOISE:
+            labels[i] = noise_id
+            any_noise = True
+    return (mx + 1) + (1 if any_noise else 0)
+
+
+def calinski_harabasz(points, labels, k):
+    n = len(points)
+    if k < 2 or k >= n:
+        return float("-inf")
+    dim = len(points[0])
+    g = [0.0] * dim
+    for p in points:
+        for d in range(dim):
+            g[d] += p[d]
+    for d in range(dim):
+        g[d] /= float(n)
+    cent = [[0.0] * dim for _ in range(k)]
+    sizes = [0] * k
+    for p, l in zip(points, labels):
+        sizes[l] += 1
+        for d in range(dim):
+            cent[l][d] += p[d]
+    for c, s in zip(cent, sizes):
+        if s > 0:
+            for d in range(dim):
+                c[d] /= float(s)
+    ssb = 0.0
+    for c, s in zip(cent, sizes):
+        d2 = 0.0
+        for a, b in zip(c, g):
+            d2 += (a - b) * (a - b)
+        ssb += float(s) * d2
+    ssw = 0.0
+    for p, l in zip(points, labels):
+        c = cent[l]
+        t = 0.0
+        for a, b in zip(p, c):
+            t += (a - b) * (a - b)
+        ssw += t
+    if ssw <= 2.220446049250313e-16:  # f64::EPSILON
+        return float("inf") if ssb > 0.0 else 0.0
+    return (ssb / (k - 1.0)) / (ssw / (n - float(k)))
+
+
+EPS_SAMPLE_MAX = 512
+EPS_SAMPLE_SEED = 0x5EED_CA11_AB5A_7E57
+
+
+def cluster_clients(points, min_pts, dbscan_fn):
+    n = len(points)
+    if n == 0:
+        return [], 0
+    if n == 1:
+        return [0], 1
+    if n <= EPS_SAMPLE_MAX:
+        sample = list(range(n))
+    else:
+        rng = Rng(EPS_SAMPLE_SEED ^ n)
+        picked = rng.sample_indices(n, EPS_SAMPLE_MAX)
+        picked.sort()
+        sample = picked
+    m = len(sample)
+    dists = []
+    for i in range(m):
+        for j in range(i + 1, m):
+            dists.append(math.sqrt(dist2(points[sample[i]], points[sample[j]])))
+    dists.sort()
+
+    def quantile(q):
+        idx = rust_round((len(dists) - 1) * q)
+        return dists[idx]
+
+    candidates = [quantile(q) for q in (0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.75)]
+    candidates = [e for e in candidates if e > 0.0]
+    # Vec::dedup — consecutive duplicates only
+    deduped = []
+    for e in candidates:
+        if not deduped or deduped[-1] != e:
+            deduped.append(e)
+    candidates = deduped
+    if not candidates:
+        return [0] * n, 1
+
+    best = None
+    for eps in candidates:
+        labels = dbscan_fn(points, eps, min_pts)
+        k = relabel_outliers(labels)
+        if k < 2 or k >= n:
+            continue
+        score = calinski_harabasz(points, labels, k)
+        if best is None or score > best[0]:
+            best = (score, labels, k)
+    if best is None:
+        return [0] * n, 1
+    return best[1], best[2]
+
+
+# ---------------------------------------------------------------- selection
+
+COHORT_MAX = 1024
+COHORT_STRATA = 16
+
+
+SAMPLE_SWITCH_MIN = 1024  # strategy/mod.rs: sparse-sampler threshold
+
+
+def random_sample(clients, k, rng):
+    if len(clients) > SAMPLE_SWITCH_MIN:
+        return [clients[i] for i in rng.sample_indices(len(clients), k)]
+    return rng.sample(clients, k)
+
+
+def tier_partition(all_clients, hist):
+    rookies, participants, stragglers = [], [], []
+    for c in all_clients:
+        h = hist.view(c)
+        if h.is_rookie():
+            rookies.append(c)
+        elif h.is_straggler():
+            stragglers.append(c)
+        else:
+            participants.append(c)
+    return rookies, participants, stragglers
+
+
+def sample_clustered(participants, total_ema, labels, n_clusters, take, hist,
+                     rnd, max_rounds, rng):
+    if n_clusters == 0:
+        return random_sample(participants, take, rng)
+    cluster_sum = [0.0] * n_clusters
+    cluster_cnt = [0] * n_clusters
+    for i, l in enumerate(labels):
+        cluster_sum[l] += total_ema[i]
+        cluster_cnt[l] += 1
+    order = sorted(
+        range(n_clusters),
+        key=lambda x: cluster_sum[x] / float(max(cluster_cnt[x], 1)),
+    )
+    members = [[] for _ in range(n_clusters)]
+    for i, l in enumerate(labels):
+        members[l].append(participants[i])
+    for m in members:
+        m.sort(key=lambda c: (hist.view(c).invocations, c))
+    progress = 0.0 if max_rounds == 0 else rnd / float(max_rounds)
+    start = min(int(progress * float(n_clusters)), n_clusters - 1)
+    picked = []
+    for step in range(n_clusters):
+        cl = order[(start + step) % n_clusters]
+        for c in members[cl]:
+            picked.append(c)
+            if len(picked) == take:
+                return picked
+    return picked
+
+
+def stratified_cohort(participants, hist, take, rng):
+    assert take < len(participants)
+    keys = [hist.view(c).t_ema for c in participants]
+    lo = float("inf")
+    hi = float("-inf")
+    for x in keys:
+        lo = min(lo, x)
+        hi = max(hi, x)
+    if not hi > lo:
+        return random_sample(participants, take, rng)
+    buckets = [[] for _ in range(COHORT_STRATA)]
+    for c, x in zip(participants, keys):
+        b = min(int((x - lo) / (hi - lo) * float(COHORT_STRATA)), COHORT_STRATA - 1)
+        buckets[b].append(c)
+    n = len(participants)
+    quota = [len(b) * take // n for b in buckets]
+    rem = sorted(
+        [((len(b) * take) % n, i) for i, b in enumerate(buckets)],
+        key=lambda t: (-t[0], t[1]),
+    )
+    short = take - sum(quota)
+    for _, i in rem:
+        if short == 0:
+            break
+        if quota[i] < len(buckets[i]):
+            quota[i] += 1
+            short -= 1
+    while short > 0:
+        progressed = False
+        for i in range(COHORT_STRATA):
+            if short > 0 and quota[i] < len(buckets[i]):
+                quota[i] += 1
+                short -= 1
+                progressed = True
+        if not progressed:
+            break
+    cohort = []
+    for bucket, q in zip(buckets, quota):
+        if q > 0:
+            cohort.extend(random_sample(bucket, q, rng))
+    return cohort
+
+
+def fedlesscan_select(all_clients, hist, rnd, max_rounds, k, rng,
+                      new_path, alpha=0.5, min_pts=2):
+    rookies, participants, stragglers = tier_partition(all_clients, hist)
+    if len(rookies) >= k:
+        return random_sample(rookies, k, rng)
+    selected = list(rookies)
+    need = k - len(selected)
+    n_cluster = min(need, len(participants))
+    n_straggler = min(need - n_cluster, len(stragglers))
+    straggler_picks = random_sample(stragglers, n_straggler, rng)
+    if n_cluster > 0:
+        if new_path:
+            cohort_cap = max(COHORT_MAX, n_cluster * 4)
+            if len(participants) > cohort_cap:
+                cohort = stratified_cohort(participants, hist, cohort_cap, rng)
+            else:
+                cohort = participants
+            dbscan_fn = dbscan_grid
+        else:
+            cohort = participants
+            dbscan_fn = dbscan_seed
+        feats = []
+        for c in cohort:
+            h = hist.view(c)
+            feats.append((h.t_feature(alpha), h.m_feature(max(rnd, 1), alpha)))
+        max_t = 0.0
+        for t, _ in feats:
+            max_t = max(max_t, t)
+        max_t = max(max_t, 1e-9)
+        points = [[t, m * max_t] for t, m in feats]
+        labels, n_clusters = cluster_clients(points, min_pts, dbscan_fn)
+        total_ema = [t + m * max_t for t, m in feats]
+        selected.extend(
+            sample_clustered(cohort, total_ema, labels, n_clusters, n_cluster,
+                             hist, rnd, max_rounds, rng)
+        )
+    selected.extend(straggler_picks)
+    return selected[:k]

@@ -1,0 +1,64 @@
+"""Generate the pinned selection goldens for tests/goldens.rs.
+
+Computed with the OLD (pre-refactor, unbounded-history, seed-DBSCAN)
+semantics and cross-checked equal under the NEW path — so the Rust test
+pins refactor-is-behaviour-preserving, not implementation echo."""
+
+import core
+from core import (Rng, HistoryStore, OldHistory, NewHistory,
+                  fedlesscan_select, tier_partition)
+
+PRESETS = [
+    # (label, n, k, max_rounds, drive_rounds, seed)
+    ("mnist_shape", 60, 12, 20, 10, 42),
+    ("femnist_shape", 50, 10, 15, 8, 1337),
+    ("speech_shape", 60, 15, 20, 10, 7),
+]
+
+
+def drive(n, k, max_rounds, rounds, seed, cls, new_path):
+    hist = HistoryStore(cls)
+    rng = Rng(seed)
+    clients = list(range(n))
+    sels = []
+    prev_failed = []
+    for r in range(rounds):
+        sel = fedlesscan_select(clients, hist, r, max_rounds, k, rng, new_path)
+        sels.append(sel)
+        for c in prev_failed:
+            if (c + r) % 2 == 0:
+                hist.record_late_completion(c, r - 1, 60.0 + float(c))
+        failed = []
+        for c in sel:
+            hist.record_invocation(c)
+            if (c * 7 + r) % 5 == 0:
+                hist.record_failure(c, r)
+                failed.append(c)
+            else:
+                hist.record_success(c, r, 5.0 + float((c * 13 + r * 3) % 40) * 1.5)
+        hist.tick_cooldowns(failed)
+        prev_failed = failed
+    tiers = tier_partition(clients, hist)
+    return sels, tiers
+
+
+def fmt(v):
+    return "&[" + ", ".join(str(x) for x in v) + "]"
+
+
+for label, n, k, max_rounds, rounds, seed in PRESETS:
+    old_sels, old_tiers = drive(n, k, max_rounds, rounds, seed, OldHistory, False)
+    new_sels, new_tiers = drive(n, k, max_rounds, rounds, seed, NewHistory, True)
+    assert old_sels == new_sels, f"{label}: selection drifted under the new path"
+    assert old_tiers == new_tiers, f"{label}: tiers drifted under the new path"
+    print(f"// {label}: n={n} k={k} max_rounds={max_rounds} seed={seed}")
+    print(f"const {label.upper()}_SELECTIONS: &[&[ClientId]] = &[")
+    for sel in old_sels:
+        print(f"    {fmt(sel)},")
+    print("];")
+    r, p, s = old_tiers
+    print(f"const {label.upper()}_ROOKIES: &[ClientId] = {fmt(r)};")
+    print(f"const {label.upper()}_PARTICIPANTS: &[ClientId] = {fmt(p)};")
+    print(f"const {label.upper()}_STRAGGLERS: &[ClientId] = {fmt(s)};")
+    print()
+print("// all presets: old path == new path verified")

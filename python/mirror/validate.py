@@ -1,0 +1,113 @@
+"""Validation battery over the mirror:
+
+1. seed-naive vs deduped-naive vs grid DBSCAN: identical labels on
+   random clouds (incl. degenerate cases) — supports the Rust claim that
+   the refactor is label-preserving, not just partition-equivalent.
+2. old (unbounded) vs new (bounded) FedLesScan selection: identical
+   selections + identical RNG stream consumption over random multi-round
+   drives at paper scale.
+3. frontier peak stays <= n on dense blobs (the regression claim).
+"""
+
+import core
+from core import (Rng, dbscan_seed, dbscan_naive_new, dbscan_grid, expand,
+                  dist2, HistoryStore, OldHistory, NewHistory,
+                  fedlesscan_select, tier_partition)
+
+fails = 0
+
+
+def check(cond, msg):
+    global fails
+    if not cond:
+        fails += 1
+        print("FAIL:", msg)
+
+
+# ---- 1. DBSCAN triple equivalence ------------------------------------
+CASES = 300
+for case in range(CASES):
+    rng = Rng(case ^ 0x5A5A)
+    n = 1 + rng.below(80)
+    dim = 1 + rng.below(3)
+    style = rng.below(4)
+    pts = []
+    for i in range(n):
+        if style == 0:  # uniform cloud
+            pts.append([rng.range_f64(-10.0, 10.0) for _ in range(dim)])
+        elif style == 1:  # blobs
+            c = float(rng.below(4)) * 8.0
+            pts.append([c + rng.range_f64(-0.7, 0.7) for _ in range(dim)])
+        elif style == 2:  # all identical
+            pts.append([3.25] * dim)
+        else:  # exact grid-boundary lattice: multiples of eps
+            pts.append([float(rng.below(6)) * 0.5 for _ in range(dim)])
+    eps = [0.5, 0.25, 1.0, 5.0, 100.0][rng.below(5)]  # incl. eps spanning many cells
+    min_pts = 1 + rng.below(4)
+    a = dbscan_seed(pts, eps, min_pts)
+    b = dbscan_naive_new(pts, eps, min_pts)
+    c = dbscan_grid(pts, eps, min_pts)
+    check(a == b, f"case {case}: seed vs dedup mismatch {a} {b}")
+    check(a == c, f"case {case}: seed vs grid mismatch n={n} eps={eps} mp={min_pts}")
+print(f"dbscan triple equivalence: {CASES} cases done")
+
+# dense blob frontier bound
+n = 400
+pts = [[0.01 * __import__('math').sin(i * 0.618),
+        0.01 * __import__('math').cos(i * 0.618)] for i in range(n)]
+labels, peak = expand(
+    n, 2, lambda i: [j for j in range(n) if dist2(pts[i], pts[j]) <= 1.0])
+check(all(l == 0 for l in labels), "dense blob: one cluster")
+check(peak <= n, f"dense blob: peak {peak} > n")
+seed_labels = dbscan_seed(pts, 1.0, 2)
+check(labels == seed_labels, "dense blob: dedup changed labels")
+print(f"dense blob: peak frontier {peak} (n={n})")
+
+# ---- 2. old vs new selection equivalence ------------------------------
+DRIVES = 60
+for case in range(DRIVES):
+    drive_rng = Rng(case ^ 0xD21)
+    n = 10 + drive_rng.below(80)
+    k = 1 + drive_rng.below(max(n // 2, 1))
+    max_rounds = 20
+    rounds = 12
+    old = HistoryStore(OldHistory)
+    new = HistoryStore(NewHistory)
+    rng_old = Rng(1000 + case)
+    rng_new = Rng(1000 + case)
+    clients = list(range(n))
+    prev_failed = []
+    for r in range(rounds):
+        sel_old = fedlesscan_select(clients, old, r, max_rounds, k, rng_old, False)
+        sel_new = fedlesscan_select(clients, new, r, max_rounds, k, rng_new, True)
+        check(sel_old == sel_new,
+              f"drive {case} round {r}: {sel_old} vs {sel_new}")
+        check(rng_old.s == rng_new.s,
+              f"drive {case} round {r}: RNG streams diverged")
+        # late completions correct half of last round's failures
+        for c in prev_failed:
+            if (c + r) % 2 == 0:
+                t = 60.0 + float(c)
+                old.record_late_completion(c, r - 1, t)
+                new.record_late_completion(c, r - 1, t)
+        failed = []
+        for c in sel_old:
+            old.record_invocation(c)
+            new.record_invocation(c)
+            if (c * 7 + r) % 5 == 0:
+                old.record_failure(c, r)
+                new.record_failure(c, r)
+                failed.append(c)
+            else:
+                t = 5.0 + float((c * 13 + r * 3) % 40) * 1.5
+                old.record_success(c, r, t)
+                new.record_success(c, r, t)
+        old.tick_cooldowns(failed)
+        new.tick_cooldowns(failed)
+        prev_failed = failed
+    ro, po, so = tier_partition(clients, old)
+    rn, pn, sn = tier_partition(clients, new)
+    check((ro, po, so) == (rn, pn, sn), f"drive {case}: tier mismatch")
+print(f"old-vs-new selection: {DRIVES} drives x 12 rounds identical")
+
+print("FAILURES:", fails)

@@ -9,7 +9,7 @@
 //! this offline environment.
 
 use fedless::clientdb::HistoryStore;
-use fedless::clustering::cluster_clients;
+use fedless::clustering::{cluster_clients, dbscan, dbscan_naive, DbscanParams};
 use fedless::data::{Partition, SynthDataset};
 use fedless::params::fold_weighted_into;
 use fedless::paramsvr::{staleness_weights, WeightedUpdate};
@@ -66,6 +66,64 @@ fn main() {
             .collect();
         bench(&format!("cluster/grid-search n={n}"), 3, 20, || {
             cluster_clients(&pts, 2)
+        });
+    }
+
+    // --- fleet-scale DBSCAN: naive O(n²) scan vs grid index --------------
+    // Behaviour-shaped data: many bounded-density blobs (client speed
+    // cohorts), blob centres far apart relative to ε. The naive 100k row
+    // is the slow one (~10^10 distance computations per pass) — it runs
+    // once, uncooked, purely to put the speedup on record.
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let blobs = (n / 100).max(1);
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let b = i % blobs;
+                let cx = (b % 330) as f64 * 40.0;
+                let cy = (b / 330) as f64 * 40.0;
+                vec![cx + rng.range_f64(-0.4, 0.4), cy + rng.range_f64(-0.4, 0.4)]
+            })
+            .collect();
+        let params = DbscanParams {
+            eps: 0.5,
+            min_pts: 4,
+        };
+        let (gw, gi) = if n >= 100_000 { (1, 3) } else { (2, 10) };
+        let grid = bench(&format!("cluster/dbscan-grid n={n}"), gw, gi, || {
+            dbscan(&pts, &params)
+        });
+        let (nw, ni) = if n >= 100_000 {
+            (0, 1)
+        } else if n >= 10_000 {
+            (0, 2)
+        } else {
+            (1, 5)
+        };
+        let naive = bench(&format!("cluster/dbscan-naive n={n}"), nw, ni, || {
+            dbscan_naive(&pts, &params)
+        });
+        println!(
+            "   -> grid speedup {:.1}x over naive at n={n}",
+            naive.mean.as_secs_f64() / grid.mean.as_secs_f64().max(1e-12)
+        );
+    }
+
+    // --- fleet-scale selection: tiering + cohort clustering --------------
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let hist = history_with(n, &mut rng);
+        let clients: Vec<usize> = (0..n).collect();
+        let mut strat = FedLesScan::default();
+        let k = 256.min(n / 4).max(4);
+        let mut r = Rng::seed_from_u64(3);
+        bench(&format!("select/fedlesscan-fleet n={n} k={k}"), 2, 8, || {
+            let ctx = SelectionContext {
+                round: 5,
+                max_rounds: 40,
+                clients_per_round: k,
+                all_clients: &clients,
+                history: &hist,
+            };
+            strat.select(&ctx, &mut r)
         });
     }
 

@@ -56,20 +56,15 @@ fn main() -> fedless::Result<()> {
     let mut ids: Vec<_> = hist.iter().map(|(&c, _)| c).collect();
     ids.sort_unstable();
     for c in ids {
-        let h = hist.get(c);
-        let mean_t = if h.training_times.is_empty() {
-            0.0
-        } else {
-            h.training_times.iter().sum::<f64>() / h.training_times.len() as f64
-        };
+        let h = hist.view(c);
         println!(
             "{:>6} {:>6} {:>9} {:>9} {:>9} {:>14.1}",
             c,
             h.invocations,
             h.successes,
-            h.missed_rounds.len(),
+            h.missed_total(),
             h.cooldown,
-            mean_t
+            h.training_mean()
         );
     }
     println!(

@@ -5,11 +5,11 @@
 //! Update semantics follow Algorithm 1 exactly:
 //!
 //! * controller, on success: cooldown := 0, record training time;
-//! * controller, on failure: append the round to `missed_rounds` and
-//!   apply Eq. 1 (`0 -> 1`, else `*2`);
+//! * controller, on failure: append the round to the missed-round window
+//!   and apply Eq. 1 (`0 -> 1`, else `*2`);
 //! * client, on late completion (a "slow update" arriving after the
-//!   round): remove the round from `missed_rounds` and record the time —
-//!   distinguishing *slow* from *crashed* is done on the client side
+//!   round): remove the round from the missed window and record the time
+//!   — distinguishing *slow* from *crashed* is done on the client side
 //!   (§V-B).
 //!
 //! The paper describes cooldown as "the number of rounds a client has to
@@ -19,6 +19,38 @@
 //! tick a client that is never re-invoked would remain a straggler
 //! forever, contradicting §V-A ("tier-3 clients can move to tier-2 and
 //! vice-versa").
+//!
+//! ## Bounded memory
+//!
+//! A [`ClientHistory`] is **O([`HISTORY_WINDOW`]) regardless of round
+//! count**. The seed kept every training time and missed round in
+//! unbounded vectors — O(rounds) per client, which a fleet of 100k+
+//! clients cannot afford — and recomputed behaviour features from the
+//! full series each selection. This version keeps:
+//!
+//! * a running EMA of training times at [`HISTORY_EMA_ALPHA`], updated
+//!   incrementally on every recorded time. The incremental update
+//!   `ema' = α·t + (1−α)·ema` performs *exactly* the fold
+//!   [`crate::strategy::ema`] performs over the full series, so for the
+//!   default strategy α the cached value is bit-identical to the
+//!   unbounded computation at any history length (pinned by the
+//!   property suite);
+//! * running count/sum summaries (`times_count`, `training_mean`);
+//! * two bounded recency windows — the last [`HISTORY_WINDOW`]
+//!   training times (for features at a non-default α) and the last
+//!   [`HISTORY_WINDOW`] uncorrected missed rounds (the missed-round
+//!   feature depends on the *current* round at query time, so it is a
+//!   windowed fold, exact whenever a client has ≤ window misses).
+//!   Deliberately `Vec`-backed rather than a ring: eviction shifts at
+//!   most window elements (a bounded constant, a few cache lines) in
+//!   exchange for contiguous zero-copy slice reads on every feature
+//!   fold, which is the hot direction. Late-completion corrections
+//!   always target a round within the staleness cutoff τ ≪ window, so
+//!   a correction never chases an entry that was already evicted.
+//!
+//! Hot paths read through [`HistoryStore::view`], which returns a
+//! reference (the seed's `get()` cloned the whole record per lookup —
+//! O(rounds) per client per selection).
 
 use std::collections::{HashMap, HashSet};
 use std::path::Path;
@@ -26,13 +58,43 @@ use std::path::Path;
 use crate::util::Json;
 use crate::{ClientId, Result};
 
-/// Behavioural record for one client (§V-B).
-#[derive(Debug, Clone, Default, PartialEq)]
+/// Recency window per client: both windows hold at most this many
+/// entries, bounding per-client memory regardless of experiment length.
+/// Must comfortably exceed the staleness cutoff τ (≤ 4 in every preset)
+/// so late-completion corrections always find their missed-round entry.
+/// Sized above the longest in-repo experiment (~50 rounds under the
+/// full-profile convergence runs), so a windowed feature fold is a
+/// full-series fold for every shipped configuration — including the
+/// `ema_alpha` 0.1/0.9 ablations, which bypass the cached-EMA fast
+/// path.
+pub const HISTORY_WINDOW: usize = 64;
+
+/// Smoothing factor of the incrementally-maintained training-time EMA.
+/// Matches the default `FedLesScanParams::ema_alpha` and SAFA-lite's
+/// fixed α, so the shipped strategies read the exact cached value;
+/// features at any other α fold over the recency window instead.
+pub const HISTORY_EMA_ALPHA: f64 = 0.5;
+
+/// Behavioural record for one client (§V-B), bounded at
+/// O([`HISTORY_WINDOW`]) memory.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClientHistory {
-    /// Completed local-training durations, in order (seconds, virtual).
-    pub training_times: Vec<f64>,
-    /// Rounds this client was invoked in but missed (slow or crashed).
-    pub missed_rounds: Vec<u32>,
+    /// Running EMA of recorded training times at [`HISTORY_EMA_ALPHA`]
+    /// (bit-identical to folding the full series; 0 until a time lands).
+    t_ema: f64,
+    /// Running sum of recorded training times (for the mean).
+    t_sum: f64,
+    /// Total training times ever recorded (on-time successes plus
+    /// credited late completions).
+    times_count: u32,
+    /// Last ≤ [`HISTORY_WINDOW`] recorded training times, oldest first.
+    recent_times: Vec<f64>,
+    /// Last ≤ [`HISTORY_WINDOW`] uncorrected missed rounds, oldest
+    /// first.
+    missed_recent: Vec<u32>,
+    /// Misses evicted from the window (still uncorrected); total misses
+    /// = `missed_evicted + missed_recent.len()`.
+    missed_evicted: u32,
     /// Eq. 1 counter: > 0 means tier-3 (straggler).
     pub cooldown: u32,
     /// Total controller invocations.
@@ -41,7 +103,30 @@ pub struct ClientHistory {
     pub successes: u32,
 }
 
+impl Default for ClientHistory {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
 impl ClientHistory {
+    /// The never-invoked record (also the [`HistoryStore::view`]
+    /// default). `const` so a static empty instance can back the
+    /// zero-allocation view of unknown clients.
+    pub const fn empty() -> Self {
+        Self {
+            t_ema: 0.0,
+            t_sum: 0.0,
+            times_count: 0,
+            recent_times: Vec::new(),
+            missed_recent: Vec::new(),
+            missed_evicted: 0,
+            cooldown: 0,
+            invocations: 0,
+            successes: 0,
+        }
+    }
+
     /// A rookie has never been invoked (§V-A tier 1).
     pub fn is_rookie(&self) -> bool {
         self.invocations == 0
@@ -51,6 +136,78 @@ impl ClientHistory {
     pub fn is_straggler(&self) -> bool {
         self.cooldown > 0
     }
+
+    /// Cached training-time EMA at [`HISTORY_EMA_ALPHA`]; 0.0 before
+    /// the first recorded time (mirroring `ema(&[], _)`).
+    pub fn training_time_ema(&self) -> f64 {
+        self.t_ema
+    }
+
+    /// Mean recorded training time (0.0 before the first).
+    pub fn training_mean(&self) -> f64 {
+        if self.times_count == 0 {
+            0.0
+        } else {
+            self.t_sum / self.times_count as f64
+        }
+    }
+
+    /// Total training times ever recorded (on-time + credited late).
+    pub fn times_count(&self) -> u32 {
+        self.times_count
+    }
+
+    /// Recency window of recorded training times, oldest first.
+    pub fn recent_times(&self) -> &[f64] {
+        &self.recent_times
+    }
+
+    /// Recency window of still-uncorrected missed rounds, oldest first.
+    pub fn missed_recent(&self) -> &[u32] {
+        &self.missed_recent
+    }
+
+    /// Total uncorrected misses, including entries evicted from the
+    /// window.
+    pub fn missed_total(&self) -> u32 {
+        self.missed_evicted + self.missed_recent.len() as u32
+    }
+
+    /// Record one training time: incremental EMA + running sums + the
+    /// recency window (evicting the oldest entry beyond the window).
+    fn note_time(&mut self, t: f64) {
+        self.t_ema = if self.times_count == 0 {
+            t
+        } else {
+            HISTORY_EMA_ALPHA * t + (1.0 - HISTORY_EMA_ALPHA) * self.t_ema
+        };
+        self.t_sum += t;
+        self.times_count += 1;
+        if self.recent_times.len() == HISTORY_WINDOW {
+            self.recent_times.remove(0);
+        }
+        self.recent_times.push(t);
+    }
+
+    /// Record a missed round in the window (evicting the oldest
+    /// still-uncorrected miss beyond the window).
+    fn note_miss(&mut self, round: u32) {
+        if self.missed_recent.contains(&round) {
+            return;
+        }
+        if self.missed_recent.len() == HISTORY_WINDOW {
+            self.missed_recent.remove(0);
+            self.missed_evicted += 1;
+        }
+        self.missed_recent.push(round);
+    }
+
+    /// Client-side correction: un-miss `round` if it is still in the
+    /// window (corrections target rounds within τ ≪ window, so an
+    /// evicted entry is unreachable by construction).
+    fn unmiss(&mut self, round: u32) {
+        self.missed_recent.retain(|&r| r != round);
+    }
 }
 
 /// In-memory history store with JSON snapshot persistence.
@@ -59,13 +216,29 @@ pub struct HistoryStore {
     map: HashMap<ClientId, ClientHistory>,
 }
 
+/// Zero-allocation default for [`HistoryStore::view`] lookups of
+/// never-seen clients.
+static EMPTY_HISTORY: ClientHistory = ClientHistory::empty();
+
 impl HistoryStore {
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Owned copy of a client's record (the empty record for unknown
+    /// ids). Convenient for tests and reports; hot paths use [`view`]
+    /// to avoid the clone.
+    ///
+    /// [`view`]: HistoryStore::view
     pub fn get(&self, id: ClientId) -> ClientHistory {
         self.map.get(&id).cloned().unwrap_or_default()
+    }
+
+    /// Borrowed view of a client's record; unknown ids read as the
+    /// static empty record. This is the per-client hot-path lookup —
+    /// no clone, no allocation.
+    pub fn view(&self, id: ClientId) -> &ClientHistory {
+        self.map.get(&id).unwrap_or(&EMPTY_HISTORY)
     }
 
     pub fn get_ref(&self, id: ClientId) -> Option<&ClientHistory> {
@@ -86,16 +259,14 @@ impl HistoryStore {
         let h = self.entry(id);
         h.cooldown = 0;
         h.successes += 1;
-        h.training_times.push(training_time);
-        h.missed_rounds.retain(|&r| r != round);
+        h.note_time(training_time);
+        h.unmiss(round);
     }
 
     /// Missed round (Algorithm 1 lines 9-13): Eq. 1 growth.
     pub fn record_failure(&mut self, id: ClientId, round: u32) {
         let h = self.entry(id);
-        if !h.missed_rounds.contains(&round) {
-            h.missed_rounds.push(round);
-        }
+        h.note_miss(round);
         h.cooldown = if h.cooldown == 0 { 1 } else { h.cooldown * 2 };
     }
 
@@ -103,8 +274,8 @@ impl HistoryStore {
     /// corrects its own record (§V-B): un-miss the round, record the time.
     pub fn record_late_completion(&mut self, id: ClientId, round: u32, training_time: f64) {
         let h = self.entry(id);
-        h.missed_rounds.retain(|&r| r != round);
-        h.training_times.push(training_time);
+        h.unmiss(round);
+        h.note_time(training_time);
     }
 
     /// End-of-round tick: cooldowns decay by one except for clients that
@@ -132,7 +303,9 @@ impl HistoryStore {
         self.map.iter()
     }
 
-    /// Snapshot to JSON (the paper's DB persistence stand-in).
+    /// Snapshot to JSON (the paper's DB persistence stand-in). The
+    /// schema mirrors the bounded record: summary scalars plus the two
+    /// recency windows — O(window) per client on disk too.
     pub fn save(&self, path: &Path) -> Result<()> {
         let entries: Vec<Json> = self
             .map
@@ -140,11 +313,15 @@ impl HistoryStore {
             .map(|(id, h)| {
                 Json::obj(vec![
                     ("client", Json::num(*id as f64)),
-                    ("training_times", Json::from_f64_slice(&h.training_times)),
+                    ("t_ema", Json::num(h.t_ema)),
+                    ("t_sum", Json::num(h.t_sum)),
+                    ("times_count", Json::num(h.times_count as f64)),
+                    ("recent_times", Json::from_f64_slice(&h.recent_times)),
                     (
-                        "missed_rounds",
-                        Json::Arr(h.missed_rounds.iter().map(|&r| Json::num(r as f64)).collect()),
+                        "missed_recent",
+                        Json::Arr(h.missed_recent.iter().map(|&r| Json::num(r as f64)).collect()),
                     ),
+                    ("missed_evicted", Json::num(h.missed_evicted as f64)),
                     ("cooldown", Json::num(h.cooldown as f64)),
                     ("invocations", Json::num(h.invocations as f64)),
                     ("successes", Json::num(h.successes as f64)),
@@ -159,22 +336,46 @@ impl HistoryStore {
         let mut map = HashMap::new();
         for e in root.get("clients")?.as_arr()? {
             let id = e.get("client")?.as_usize()?;
-            let h = ClientHistory {
-                training_times: e
-                    .get("training_times")?
-                    .as_arr()?
-                    .iter()
-                    .map(|v| v.as_f64())
-                    .collect::<Result<_>>()?,
-                missed_rounds: e
-                    .get("missed_rounds")?
-                    .as_arr()?
-                    .iter()
-                    .map(|v| Ok(v.as_u64()? as u32))
-                    .collect::<Result<_>>()?,
-                cooldown: e.get("cooldown")?.as_u64()? as u32,
-                invocations: e.get("invocations")?.as_u64()? as u32,
-                successes: e.get("successes")?.as_u64()? as u32,
+            let h = if e.get("t_ema").is_ok() {
+                ClientHistory {
+                    t_ema: e.get("t_ema")?.as_f64()?,
+                    t_sum: e.get("t_sum")?.as_f64()?,
+                    times_count: e.get("times_count")?.as_u64()? as u32,
+                    recent_times: e
+                        .get("recent_times")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_f64())
+                        .collect::<Result<_>>()?,
+                    missed_recent: e
+                        .get("missed_recent")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| Ok(v.as_u64()? as u32))
+                        .collect::<Result<_>>()?,
+                    missed_evicted: e.get("missed_evicted")?.as_u64()? as u32,
+                    cooldown: e.get("cooldown")?.as_u64()? as u32,
+                    invocations: e.get("invocations")?.as_u64()? as u32,
+                    successes: e.get("successes")?.as_u64()? as u32,
+                }
+            } else {
+                // Legacy (pre-bounded) snapshot: unbounded
+                // `training_times` / `missed_rounds` vectors. Replay
+                // them through the summary updates so old artifacts
+                // keep loading instead of erroring on a missing key.
+                let mut h = ClientHistory {
+                    cooldown: e.get("cooldown")?.as_u64()? as u32,
+                    invocations: e.get("invocations")?.as_u64()? as u32,
+                    successes: e.get("successes")?.as_u64()? as u32,
+                    ..ClientHistory::empty()
+                };
+                for v in e.get("training_times")?.as_arr()? {
+                    h.note_time(v.as_f64()?);
+                }
+                for v in e.get("missed_rounds")?.as_arr()? {
+                    h.note_miss(v.as_u64()? as u32);
+                }
+                h
             };
             map.insert(id, h);
         }
@@ -212,11 +413,13 @@ mod tests {
         let mut db = HistoryStore::new();
         db.record_failure(7, 3);
         db.record_failure(7, 5);
-        assert_eq!(db.get(7).missed_rounds, vec![3, 5]);
+        assert_eq!(db.get(7).missed_recent(), &[3, 5]);
+        assert_eq!(db.get(7).missed_total(), 2);
         // slow update for round 3 arrives later: client corrects itself
         db.record_late_completion(7, 3, 40.0);
-        assert_eq!(db.get(7).missed_rounds, vec![5]);
-        assert_eq!(db.get(7).training_times, vec![40.0]);
+        assert_eq!(db.get(7).missed_recent(), &[5]);
+        assert_eq!(db.get(7).recent_times(), &[40.0]);
+        assert_eq!(db.get(7).times_count(), 1);
         // cooldown untouched by a late completion (only on-time resets)
         assert_eq!(db.get(7).cooldown, 2);
     }
@@ -226,7 +429,8 @@ mod tests {
         let mut db = HistoryStore::new();
         db.record_failure(1, 3);
         db.record_failure(1, 3);
-        assert_eq!(db.get(1).missed_rounds, vec![3]);
+        assert_eq!(db.get(1).missed_recent(), &[3]);
+        assert_eq!(db.get(1).missed_total(), 1);
     }
 
     #[test]
@@ -266,10 +470,111 @@ mod tests {
     }
 
     #[test]
+    fn view_is_borrowed_and_defaults_empty() {
+        let mut db = HistoryStore::new();
+        assert!(db.view(99).is_rookie());
+        assert_eq!(db.view(99).times_count(), 0);
+        db.record_invocation(5);
+        db.record_success(5, 0, 7.0);
+        assert_eq!(db.view(5).training_time_ema(), 7.0);
+        // view and get agree
+        assert_eq!(*db.view(5), db.get(5));
+    }
+
+    #[test]
+    fn incremental_ema_matches_full_series_fold() {
+        // The cached EMA must perform exactly the fold `strategy::ema`
+        // performs over the unbounded series — seed with the first
+        // value, then α·x + (1−α)·acc — at any length, including far
+        // past the recency window.
+        let mut db = HistoryStore::new();
+        let mut series: Vec<f64> = Vec::new();
+        for i in 0..200u32 {
+            let t = 5.0 + ((i * 37) % 97) as f64 * 0.5;
+            db.record_success(1, i, t);
+            series.push(t);
+            let mut oracle = series[0];
+            for &x in &series[1..] {
+                oracle = HISTORY_EMA_ALPHA * x + (1.0 - HISTORY_EMA_ALPHA) * oracle;
+            }
+            assert_eq!(db.view(1).training_time_ema().to_bits(), oracle.to_bits());
+        }
+    }
+
+    #[test]
+    fn memory_is_bounded_by_the_window() {
+        // O(window) regardless of round count: thousands of recorded
+        // events never grow either ring past HISTORY_WINDOW, while the
+        // running summaries keep full-series accuracy.
+        let mut db = HistoryStore::new();
+        let rounds = 10_000u32;
+        for r in 0..rounds {
+            db.record_invocation(1);
+            if r % 3 == 0 {
+                db.record_failure(1, r);
+            } else {
+                db.record_success(1, r, 10.0 + (r % 7) as f64);
+            }
+        }
+        let h = db.get(1);
+        assert!(h.recent_times().len() <= HISTORY_WINDOW);
+        assert!(h.missed_recent().len() <= HISTORY_WINDOW);
+        assert_eq!(h.invocations, rounds);
+        let expected_misses = rounds.div_ceil(3);
+        assert_eq!(h.missed_total(), expected_misses);
+        assert_eq!(h.times_count(), rounds - expected_misses);
+        let mean = h.training_mean();
+        assert!((10.0..=16.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn load_accepts_legacy_unbounded_snapshots() {
+        // Snapshots written before the bounded-history refactor carry
+        // `training_times` / `missed_rounds` vectors; load must replay
+        // them into the summary form, not error on the missing keys.
+        let legacy = Json::obj(vec![(
+            "clients",
+            Json::Arr(vec![Json::obj(vec![
+                ("client", Json::num(4.0)),
+                ("training_times", Json::from_f64_slice(&[5.0, 9.0, 7.0])),
+                (
+                    "missed_rounds",
+                    Json::Arr(vec![Json::num(2.0), Json::num(6.0)]),
+                ),
+                ("cooldown", Json::num(2.0)),
+                ("invocations", Json::num(5.0)),
+                ("successes", Json::num(3.0)),
+            ])]),
+        )]);
+        let path = std::env::temp_dir().join(format!("fedless-leg-{}.json", std::process::id()));
+        legacy.write_file(&path).unwrap();
+        let db = HistoryStore::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        // oracle: replay the same events through the live API
+        let mut want = HistoryStore::new();
+        for _ in 0..5 {
+            want.record_invocation(4);
+        }
+        let w = want.entry(4);
+        w.successes = 3;
+        w.note_time(5.0);
+        w.note_time(9.0);
+        w.note_time(7.0);
+        w.note_miss(2);
+        w.note_miss(6);
+        w.cooldown = 2;
+        assert_eq!(db.get(4), want.get(4));
+        assert_eq!(db.view(4).times_count(), 3);
+        assert_eq!(db.view(4).missed_recent(), &[2, 6]);
+    }
+
+    #[test]
     fn save_load_roundtrip() {
         let mut db = HistoryStore::new();
         db.record_invocation(1);
         db.record_success(1, 0, 5.0);
+        db.record_success(1, 1, 7.25);
         db.record_failure(2, 0);
         let path = std::env::temp_dir().join(format!("fedless-hist-{}.json", std::process::id()));
         db.save(&path).unwrap();

@@ -1,0 +1,198 @@
+//! Uniform-grid spatial index for DBSCAN neighbourhood queries.
+//!
+//! Cell size equals the query radius ε, so every ε-neighbour of a point
+//! lives in the point's own cell or one of its 3^d − 1 adjacent cells
+//! (d = 2–3 for the behaviour features; the index is dimension-generic
+//! for the test suite). Building the index is one O(n) pass; a
+//! neighbourhood query scans ≤ 3^d cells and distance-filters their
+//! occupants, so DBSCAN over n clients costs O(n · m̄) where m̄ is the
+//! mean occupancy of a 3^d cell block — linear for the bounded-density
+//! clouds client behaviour produces, against the naive scan's O(n²).
+//!
+//! Degenerate inputs (ε ≤ 0, non-finite ε, or coordinates whose cell
+//! index would overflow `i64`) refuse to build ([`GridIndex::build`]
+//! returns `None`) and the caller falls back to the naive scan, which
+//! has no such preconditions.
+
+use std::collections::HashMap;
+
+use super::{dist2, Point};
+
+/// Grid index over a point set for radius-ε neighbourhood queries.
+pub struct GridIndex<'a> {
+    points: &'a [Point],
+    eps2: f64,
+    /// cell coordinate (⌊x_j/ε⌋ per axis) → indices of occupants, in
+    /// point order (deterministic: built by one in-order pass).
+    cells: HashMap<Vec<i64>, Vec<u32>>,
+    /// Per-point cell key, precomputed at build time so a query never
+    /// re-derives it (and the odometer below can reuse one scratch
+    /// buffer instead of allocating a key per adjacent cell — queries
+    /// are the 100k-per-pass hot path).
+    keys: Vec<Vec<i64>>,
+}
+
+/// Cell-coordinate bound: beyond it the `x / eps` quotient's f64
+/// rounding error approaches a whole cell (ulp(2^52) ≈ 0.5), which
+/// could bin a true ε-neighbour two cells away and silently escape the
+/// ±1 scan. At ≤ 1e12 (< 2^40) the quotient error is ≤ ~2^-12 cells —
+/// geometrically irrelevant — and ±1 stepping cannot overflow `i64`
+/// either. Inputs beyond the bound fall back to the naive scan.
+const MAX_CELL: f64 = 1.0e12;
+
+fn cell_key(p: &[f64], eps: f64) -> Option<Vec<i64>> {
+    p.iter()
+        .map(|&x| {
+            let c = (x / eps).floor();
+            if c.is_finite() && c.abs() <= MAX_CELL {
+                Some(c as i64)
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+impl<'a> GridIndex<'a> {
+    /// Build the index, or `None` when ε or the coordinates are outside
+    /// the grid's preconditions (the caller should use the naive scan).
+    /// Ragged dimensionality is refused too: `dist2` zips the shorter
+    /// point, so under the naive scan points of different dimension can
+    /// be neighbours — a cell grid keyed per-dimension cannot represent
+    /// that, and label identity with the oracle comes first.
+    pub fn build(points: &'a [Point], eps: f64) -> Option<Self> {
+        if !eps.is_finite() || eps <= 0.0 {
+            return None;
+        }
+        if points.len() > u32::MAX as usize {
+            return None;
+        }
+        let dim = points.first().map_or(0, |p| p.len());
+        if points.iter().any(|p| p.len() != dim) {
+            return None;
+        }
+        let mut cells: HashMap<Vec<i64>, Vec<u32>> = HashMap::new();
+        let mut keys = Vec::with_capacity(points.len());
+        for (i, p) in points.iter().enumerate() {
+            let key = cell_key(p, eps)?;
+            cells.entry(key.clone()).or_default().push(i as u32);
+            keys.push(key);
+        }
+        Some(Self {
+            points,
+            eps2: eps * eps,
+            cells,
+            keys,
+        })
+    }
+
+    /// Indices (ascending, self included) of all points within ε of
+    /// point `i` — the same set the naive O(n) scan returns.
+    pub fn neighbours(&self, i: usize) -> Vec<usize> {
+        let p = &self.points[i][..];
+        let center = &self.keys[i];
+        let d = center.len();
+        let mut out = Vec::new();
+        // Odometer over the 3^d offset block [-1, 1]^d; one scratch key
+        // buffer serves every probed cell.
+        let mut offs = vec![-1i64; d];
+        let mut key = vec![0i64; d];
+        'cells: loop {
+            for (k, (c, o)) in key.iter_mut().zip(center.iter().zip(&offs)) {
+                *k = c + o;
+            }
+            if let Some(cands) = self.cells.get(&key) {
+                for &j in cands {
+                    if dist2(p, &self.points[j as usize]) <= self.eps2 {
+                        out.push(j as usize);
+                    }
+                }
+            }
+            let mut axis = 0;
+            while axis < d {
+                offs[axis] += 1;
+                if offs[axis] <= 1 {
+                    continue 'cells;
+                }
+                offs[axis] = -1;
+                axis += 1;
+            }
+            break; // 0-d points: the single (empty-offset) cell was visited
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_neighbours(points: &[Point], i: usize, eps: f64) -> Vec<usize> {
+        let eps2 = eps * eps;
+        (0..points.len())
+            .filter(|&j| dist2(&points[i], &points[j]) <= eps2)
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_on_a_small_cloud() {
+        let pts: Vec<Point> = vec![
+            vec![0.0, 0.0],
+            vec![0.4, 0.1],
+            vec![0.9, 0.9],
+            vec![5.0, 5.0],
+            vec![-0.3, 0.2],
+        ];
+        let eps = 1.0;
+        let g = GridIndex::build(&pts, eps).unwrap();
+        for i in 0..pts.len() {
+            assert_eq!(g.neighbours(i), naive_neighbours(&pts, i, eps), "point {i}");
+        }
+    }
+
+    #[test]
+    fn exact_cell_boundary_points_are_found() {
+        // Points sitting exactly on multiples of ε land on cell edges;
+        // the ±1 block scan must still see neighbours across the edge.
+        let eps = 0.5;
+        let pts: Vec<Point> = (0..8).map(|i| vec![i as f64 * eps]).collect();
+        let g = GridIndex::build(&pts, eps).unwrap();
+        for i in 0..pts.len() {
+            assert_eq!(g.neighbours(i), naive_neighbours(&pts, i, eps), "point {i}");
+        }
+    }
+
+    #[test]
+    fn identical_points_share_one_cell() {
+        let pts = vec![vec![2.0, 2.0]; 5];
+        let g = GridIndex::build(&pts, 0.1).unwrap();
+        assert_eq!(g.neighbours(3), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn negative_coordinates_floor_correctly() {
+        // floor(-0.1 / 1.0) = -1: the point must not be binned with cell 0.
+        let pts: Vec<Point> = vec![vec![-0.1], vec![0.1], vec![-1.5]];
+        let g = GridIndex::build(&pts, 1.0).unwrap();
+        for i in 0..pts.len() {
+            assert_eq!(g.neighbours(i), naive_neighbours(&pts, i, 1.0), "point {i}");
+        }
+    }
+
+    #[test]
+    fn degenerate_eps_refuses_to_build() {
+        let pts = vec![vec![0.0]];
+        assert!(GridIndex::build(&pts, 0.0).is_none());
+        assert!(GridIndex::build(&pts, -1.0).is_none());
+        assert!(GridIndex::build(&pts, f64::NAN).is_none());
+        assert!(GridIndex::build(&pts, f64::INFINITY).is_none());
+        // non-finite coordinate: no valid cell
+        assert!(GridIndex::build(&[vec![f64::NAN]], 1.0).is_none());
+        // tiny ε under a huge coordinate overflows the cell index
+        assert!(GridIndex::build(&[vec![1.0e300]], 1.0e-300).is_none());
+        // ragged dimensionality: naive-scan semantics (dist2 zips the
+        // shorter point) are unrepresentable on a grid
+        assert!(GridIndex::build(&[vec![0.0], vec![0.0, 0.0]], 1.0).is_none());
+    }
+}

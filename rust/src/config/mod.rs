@@ -339,6 +339,23 @@ mod tests {
     }
 
     #[test]
+    fn preset_rounds_fit_the_history_window() {
+        // The bounded client history documents full-series-exact feature
+        // folds for every in-repo experiment; the repro harness inflates
+        // preset rounds by 5/3 for its convergence runs, so that
+        // inflated count is the bound that must stay under the window.
+        // If a preset grows past this, grow clientdb::HISTORY_WINDOW
+        // with it (the exactness claim rots silently otherwise).
+        for d in ["mnist", "femnist", "shakespeare", "speech", "transformer"] {
+            let inflated = ExperimentConfig::preset(d).rounds * 5 / 3;
+            assert!(
+                (inflated as usize) <= crate::clientdb::HISTORY_WINDOW,
+                "{d}: {inflated} inflated rounds exceed HISTORY_WINDOW"
+            );
+        }
+    }
+
+    #[test]
     fn scenario_labels() {
         assert_eq!(Scenario::Standard.label(), "standard");
         assert_eq!(Scenario::Straggler(30).label(), "straggler30");

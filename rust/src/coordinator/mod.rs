@@ -80,6 +80,9 @@ pub struct Controller<'rt> {
     /// Adaptive clients-per-round (extension, config.adaptive_clients):
     /// starts at the configured k and tracks recent EUR.
     effective_k: usize,
+    /// Registered client ids, materialized once (the seed rebuilt this
+    /// O(n) vector every round — real money at 100k+ clients).
+    client_ids: Vec<ClientId>,
     /// Clients whose latest invocation is still running on the virtual
     /// clock (late completion or hard-timeout kill): the scheduler never
     /// re-invokes them mid-flight.
@@ -132,6 +135,7 @@ impl<'rt> Controller<'rt> {
         gauge.add(init.len() * std::mem::size_of::<f32>());
         let strategy = cfg.strategy.build();
         let cfg_k = cfg.clients_per_round;
+        let n_clients = cfg.n_clients;
         Ok(Self {
             cfg,
             backend,
@@ -149,6 +153,7 @@ impl<'rt> Controller<'rt> {
             zeros,
             shard_cache: HashMap::new(),
             effective_k: cfg_k,
+            client_ids: (0..n_clients).collect(),
             in_flight: sched::InFlight::new(),
             gauge,
         })
@@ -218,22 +223,27 @@ impl<'rt> Controller<'rt> {
         let p_bytes = mf.param_count * std::mem::size_of::<f32>();
         self.gauge.begin_window();
 
-        // 1. selection (clients_per_round may be adapted — extension)
-        let k_now = if self.cfg.adaptive_clients {
-            self.effective_k
-        } else {
-            self.cfg.clients_per_round
-        };
+        // 1. selection (clients_per_round may be adapted — extension);
+        //    timed for the per-round `select_wall_s` observability row
+        //    (tiering + clustering + cohort sampling are the scaling-
+        //    sensitive path at fleet sizes).
+        let select_t0 = Instant::now();
         let selected = {
+            let k_now = if self.cfg.adaptive_clients {
+                self.effective_k
+            } else {
+                self.cfg.clients_per_round
+            };
             let ctx = SelectionContext {
                 round,
                 max_rounds: self.cfg.rounds,
                 clients_per_round: k_now,
-                all_clients: &(0..self.cfg.n_clients).collect::<Vec<_>>(),
+                all_clients: &self.client_ids,
                 history: &self.history,
             };
             self.strategy.select(&ctx, &mut self.rng)
         };
+        let select_wall_s = select_t0.elapsed().as_secs_f64();
 
         // 2. in-flight filter: a client whose previous invocation is
         //    still running on the virtual clock is never re-invoked
@@ -538,6 +548,7 @@ impl<'rt> Controller<'rt> {
             eval_loss,
             train_loss,
             cost: self.ledger.total - cost_before,
+            select_wall_s,
             agg_wall_s,
             param_plane_peak_bytes: self.gauge.peak(),
         })

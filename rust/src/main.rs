@@ -98,6 +98,7 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
     let stale_total: usize = result.rounds.iter().map(|r| r.stale_applied).sum();
     let in_flight_total: usize = result.rounds.iter().map(|r| r.in_flight_skipped).sum();
     let agg_wall_total: f64 = result.rounds.iter().map(|r| r.agg_wall_s).sum();
+    let select_wall_total: f64 = result.rounds.iter().map(|r| r.select_wall_s).sum();
     let peak_bytes = result
         .rounds
         .iter()
@@ -106,8 +107,8 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         .unwrap_or(0);
     println!(
         "\n{} / {} / {}: final acc {:.3}, mean EUR {:.3}, time {:.1} min, cost ${:.4}, \
-         bias {}, stale applied {}, in-flight skips {}, agg wall {:.1} ms, \
-         param-plane peak {:.2} MB",
+         bias {}, stale applied {}, in-flight skips {}, select wall {:.1} ms, \
+         agg wall {:.1} ms, param-plane peak {:.2} MB",
         result.dataset,
         result.strategy,
         result.scenario,
@@ -118,6 +119,7 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         result.bias(n_clients),
         stale_total,
         in_flight_total,
+        select_wall_total * 1e3,
         agg_wall_total * 1e3,
         peak_bytes as f64 / 1e6,
     );

@@ -35,6 +35,12 @@ pub struct RoundRecord {
     /// in-flight-skipped clients are not in the denominator because they
     /// were never invoked).
     pub eur: f64,
+    /// Wall-clock seconds spent in this round's client selection
+    /// (tier partitioning, behaviour clustering, cohort sampling) —
+    /// real machine time, not virtual time, excluded from the
+    /// determinism goldens. The fleet-scale acceptance metric: it must
+    /// stay sub-second at 100k+ clients.
+    pub select_wall_s: f64,
     /// Wall-clock seconds spent in this round's aggregation fold (real
     /// machine time, not virtual time — excluded from the determinism
     /// goldens).
@@ -119,11 +125,11 @@ impl ExperimentResult {
     /// Write the per-round timeline as CSV (Fig. 3a/3b series).
     pub fn write_timeline_csv(&self, path: &Path) -> Result<()> {
         let mut out = String::from(
-            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur,agg_wall_s,param_plane_peak_bytes\n",
+            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur,select_wall_s,agg_wall_s,param_plane_peak_bytes\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4},{:.6},{}\n",
+                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4},{:.6},{:.6},{}\n",
                 r.round,
                 r.selected.len(),
                 r.successes,
@@ -136,6 +142,7 @@ impl ExperimentResult {
                 r.train_loss.map_or(String::new(), |v| format!("{v:.4}")),
                 r.cost,
                 r.eur,
+                r.select_wall_s,
                 r.agg_wall_s,
                 r.param_plane_peak_bytes,
             ));
@@ -175,6 +182,7 @@ impl ExperimentResult {
                     ),
                     ("cost", Json::num(r.cost)),
                     ("eur", Json::num(r.eur)),
+                    ("select_wall_s", Json::num(r.select_wall_s)),
                     ("agg_wall_s", Json::num(r.agg_wall_s)),
                     (
                         "param_plane_peak_bytes",
@@ -233,6 +241,7 @@ mod tests {
             train_loss: None,
             cost: 0.01,
             eur: RoundRecord::compute_eur(succ, sel),
+            select_wall_s: 0.0,
             agg_wall_s: 0.0,
             param_plane_peak_bytes: 0,
         }
@@ -295,7 +304,7 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("agg_wall_s,param_plane_peak_bytes"));
+            .ends_with("select_wall_s,agg_wall_s,param_plane_peak_bytes"));
         assert_eq!(s.lines().count(), 2);
         std::fs::remove_file(&p).ok();
     }

@@ -97,9 +97,13 @@ impl EventQueue {
         Self::default()
     }
 
-    /// Queue every completion of a planned invocation batch.
+    /// Queue every completion of a planned invocation batch. The heap
+    /// is pre-sized: fleet-scale rounds schedule tens of thousands of
+    /// completions and should not pay the doubling reallocations.
     pub fn schedule(plans: &[ClientPlan]) -> Self {
-        let mut q = Self::new();
+        let mut q = Self {
+            heap: BinaryHeap::with_capacity(plans.len()),
+        };
         for (seq, p) in plans.iter().enumerate() {
             q.push(CompletionEvent {
                 at_s: p.inv.finished_at,

@@ -1,6 +1,21 @@
 //! Behavioural feature extraction for FedLesScan's clustering (§V-C):
 //! exponential moving averages over training times and missed-round
 //! ratios.
+//!
+//! Since the bounded-history refactor, per-client feature rows are
+//! **incremental**: [`feature_row`] reads the summaries `ClientHistory`
+//! maintains on every success/failure event — the cached training-time
+//! EMA (O(1), bit-identical to folding the unbounded series at the
+//! default α) and a fold over the ≤ [`HISTORY_WINDOW`] missed-round
+//! window — instead of rebuilding both features from full per-client
+//! vectors each selection. The slice functions [`ema`] and
+//! [`missed_round_ema`] remain the definition: they are what the
+//! incremental path is property-tested against, and the fallback for a
+//! non-default training-time α (folded over the recency window).
+//!
+//! [`HISTORY_WINDOW`]: crate::clientdb::HISTORY_WINDOW
+
+use crate::clientdb::{ClientHistory, HISTORY_EMA_ALPHA};
 
 /// Exponential moving average with smoothing factor `alpha` in (0, 1]:
 /// recent observations get higher weight (the paper's rationale for EMA
@@ -30,9 +45,35 @@ pub fn missed_round_ema(missed_rounds: &[u32], current_round: u32, alpha: f64) -
     ema(&ratios, alpha)
 }
 
+/// Training-time EMA feature from the bounded history: the cached
+/// incremental EMA when `alpha` is the store's [`HISTORY_EMA_ALPHA`]
+/// (exact at any history length), otherwise a fold over the recency
+/// window — exact while the client has at most window entries, which
+/// the window size guarantees for every in-repo experiment length (the
+/// repro α ablations included); beyond that, the evicted prefix
+/// carries EMA weight ≤ (1−α)^window.
+pub fn training_time_feature(h: &ClientHistory, alpha: f64) -> f64 {
+    if alpha == HISTORY_EMA_ALPHA {
+        h.training_time_ema()
+    } else {
+        ema(h.recent_times(), alpha)
+    }
+}
+
+/// One client's behaviour feature row `(trainingEma, missedRoundEma)`
+/// for round `current_round`, read incrementally from the bounded
+/// history summaries. O(window) worst case, O(1) for the shipped α.
+pub fn feature_row(h: &ClientHistory, current_round: u32, alpha: f64) -> (f64, f64) {
+    (
+        training_time_feature(h, alpha),
+        missed_round_ema(h.missed_recent(), current_round, alpha),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clientdb::HistoryStore;
 
     #[test]
     fn ema_empty_is_zero() {
@@ -77,5 +118,43 @@ mod tests {
     #[test]
     fn no_misses_no_penalty() {
         assert_eq!(missed_round_ema(&[], 10, 0.5), 0.0);
+    }
+
+    #[test]
+    fn feature_row_matches_slice_oracles_at_default_alpha() {
+        // Mirror the store updates into unbounded vectors and check the
+        // incremental row is bit-identical to the slice definitions
+        // (while within the window, where both are exact).
+        let mut db = HistoryStore::new();
+        let mut times: Vec<f64> = Vec::new();
+        let mut missed: Vec<u32> = Vec::new();
+        for r in 0..24u32 {
+            db.record_invocation(3);
+            if r % 4 == 1 {
+                db.record_failure(3, r);
+                missed.push(r);
+            } else {
+                let t = 8.0 + (r % 5) as f64 * 1.25;
+                db.record_success(3, r, t);
+                times.push(t);
+            }
+            let (t_feat, m_feat) = feature_row(db.view(3), r.max(1), 0.5);
+            assert_eq!(t_feat.to_bits(), ema(&times, 0.5).to_bits(), "round {r}");
+            assert_eq!(
+                m_feat.to_bits(),
+                missed_round_ema(&missed, r.max(1), 0.5).to_bits(),
+                "round {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn feature_row_non_default_alpha_folds_the_window() {
+        let mut db = HistoryStore::new();
+        for (i, t) in [4.0, 6.0, 10.0].iter().enumerate() {
+            db.record_success(1, i as u32, *t);
+        }
+        let (t_feat, _) = feature_row(db.view(1), 3, 0.25);
+        assert_eq!(t_feat.to_bits(), ema(&[4.0, 6.0, 10.0], 0.25).to_bits());
     }
 }

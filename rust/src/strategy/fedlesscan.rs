@@ -17,8 +17,21 @@
 //! 5. stragglers back-fill only if tiers 1+2 cannot cover the round.
 //!
 //! Aggregation: staleness-aware Eq. 3 with the τ cutoff (§V-D).
+//!
+//! ## Fleet-scale path
+//!
+//! The paper evaluates ≤ 300 clients; this implementation also serves
+//! the ROADMAP's 100k+ fleets. Feature rows are read incrementally from
+//! the bounded history ([`feature_row`], O(1)–O(window) per client), and
+//! when the participant tier exceeds [`COHORT_MAX`] the clustering input
+//! is a **stratified cohort**: participants are bucketed by their cached
+//! training-time EMA and sampled proportionally per stratum, so the
+//! behaviour spectrum survives while clustering allocates O(cohort), not
+//! O(n). At paper scale (participants ≤ [`COHORT_MAX`]) the path is
+//! byte-identical to clustering everyone — pinned by the selection
+//! goldens in `tests/goldens.rs`.
 
-use super::{ema, missed_round_ema, random_sample, Aggregation, SelectionContext, Strategy};
+use super::{feature_row, random_sample, Aggregation, SelectionContext, Strategy};
 use crate::clustering::cluster_clients;
 use crate::util::Rng;
 use crate::ClientId;
@@ -46,6 +59,17 @@ impl Default for FedLesScanParams {
     }
 }
 
+/// Participant tiers larger than this are stratified-sampled down to a
+/// clustering cohort (see the module doc). Far above every paper-scale
+/// preset (≤ a few hundred clients), so the small path never changes;
+/// the effective cap also never drops below 4× the number of clients
+/// the round still needs.
+pub const COHORT_MAX: usize = 1024;
+
+/// Strata count for the cohort sample: buckets over the cached
+/// training-time EMA range.
+const COHORT_STRATA: usize = 16;
+
 #[derive(Default)]
 pub struct FedLesScan {
     pub params: FedLesScanParams,
@@ -55,6 +79,27 @@ impl FedLesScan {
     pub fn new(params: FedLesScanParams) -> Self {
         Self { params }
     }
+}
+
+/// §V-A tier partition over the registered fleet:
+/// `(rookies, participants, stragglers)`. Reads the history through the
+/// borrowed [`view`](crate::clientdb::HistoryStore::view) — no per-client
+/// clone.
+pub fn tier_partition(ctx: &SelectionContext) -> (Vec<ClientId>, Vec<ClientId>, Vec<ClientId>) {
+    let mut rookies = Vec::new();
+    let mut participants = Vec::new();
+    let mut stragglers = Vec::new();
+    for &c in ctx.all_clients {
+        let h = ctx.history.view(c);
+        if h.is_rookie() {
+            rookies.push(c);
+        } else if h.is_straggler() {
+            stragglers.push(c);
+        } else {
+            participants.push(c);
+        }
+    }
+    (rookies, participants, stragglers)
 }
 
 impl Strategy for FedLesScan {
@@ -67,19 +112,7 @@ impl Strategy for FedLesScan {
         let a = self.params.ema_alpha;
 
         // ---- tier partitioning (§V-A) --------------------------------
-        let mut rookies = Vec::new();
-        let mut participants = Vec::new();
-        let mut stragglers = Vec::new();
-        for &c in ctx.all_clients {
-            let h = ctx.history.get(c);
-            if h.is_rookie() {
-                rookies.push(c);
-            } else if h.is_straggler() {
-                stragglers.push(c);
-            } else {
-                participants.push(c);
-            }
-        }
+        let (rookies, participants, stragglers) = tier_partition(ctx);
 
         // ---- Algorithm 2, lines 3-5: rookies cover the round ---------
         if rookies.len() >= k {
@@ -95,15 +128,19 @@ impl Strategy for FedLesScan {
 
         // ---- lines 9-17: cluster the participants ---------------------
         if n_cluster > 0 {
-            // behaviour features
-            let feats: Vec<(f64, f64)> = participants
+            // Fleet-scale: stratify the participant tier down to a
+            // clustering cohort. Below the cap this is the identity.
+            let cohort_cap = COHORT_MAX.max(n_cluster * 4);
+            let cohort: Vec<ClientId> = if participants.len() > cohort_cap {
+                stratified_cohort(&participants, ctx, cohort_cap, rng)
+            } else {
+                participants
+            };
+
+            // behaviour features, incremental from the bounded history
+            let feats: Vec<(f64, f64)> = cohort
                 .iter()
-                .map(|&c| {
-                    let h = ctx.history.get(c);
-                    let t_ema = ema(&h.training_times, a);
-                    let m_ema = missed_round_ema(&h.missed_rounds, ctx.round.max(1), a);
-                    (t_ema, m_ema)
-                })
+                .map(|&c| feature_row(ctx.history.view(c), ctx.round.max(1), a))
                 .collect();
             let max_t = feats
                 .iter()
@@ -120,7 +157,7 @@ impl Strategy for FedLesScan {
             // mean totalEma (fast clusters first).
             let total_ema: Vec<f64> = feats.iter().map(|&(t, m)| t + m * max_t).collect();
             selected.extend(sample_clustered(
-                &participants,
+                &cohort,
                 &total_ema,
                 &labels,
                 n_clusters,
@@ -141,6 +178,84 @@ impl Strategy for FedLesScan {
             normalize: self.params.normalize,
         }
     }
+}
+
+/// Stratified cohort sample for fleet-scale participant tiers: bucket by
+/// the cached training-time EMA (O(1) per client), then draw from every
+/// stratum proportionally (largest-remainder rounding) so slow and fast
+/// behaviour regions are all represented in the clustering input.
+/// Deterministic in the RNG stream; only reached when
+/// `participants.len() > take`.
+fn stratified_cohort(
+    participants: &[ClientId],
+    ctx: &SelectionContext,
+    take: usize,
+    rng: &mut Rng,
+) -> Vec<ClientId> {
+    debug_assert!(take < participants.len());
+    let keys: Vec<f64> = participants
+        .iter()
+        .map(|&c| ctx.history.view(c).training_time_ema())
+        .collect();
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in &keys {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if hi <= lo {
+        // flat behaviour range: plain uniform sample
+        return random_sample(participants, take, rng);
+    }
+    let mut buckets: Vec<Vec<ClientId>> = vec![Vec::new(); COHORT_STRATA];
+    for (&c, &x) in participants.iter().zip(&keys) {
+        let b = (((x - lo) / (hi - lo) * COHORT_STRATA as f64) as usize).min(COHORT_STRATA - 1);
+        buckets[b].push(c);
+    }
+
+    // Proportional quota per stratum, floor first ...
+    let n = participants.len();
+    let mut quota: Vec<usize> = buckets.iter().map(|b| b.len() * take / n).collect();
+    // ... then the leftover slots by largest remainder (stable
+    // tie-break on bucket index keeps this deterministic).
+    let mut rem: Vec<(usize, usize)> = buckets
+        .iter()
+        .enumerate()
+        .map(|(i, b)| ((b.len() * take) % n, i))
+        .collect();
+    rem.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut short = take - quota.iter().sum::<usize>();
+    for &(_, i) in &rem {
+        if short == 0 {
+            break;
+        }
+        if quota[i] < buckets[i].len() {
+            quota[i] += 1;
+            short -= 1;
+        }
+    }
+    // Saturated strata can still leave a shortfall; sweep the rest up
+    // from whichever buckets have room (total capacity n > take).
+    while short > 0 {
+        let mut progressed = false;
+        for i in 0..COHORT_STRATA {
+            if short > 0 && quota[i] < buckets[i].len() {
+                quota[i] += 1;
+                short -= 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    let mut cohort = Vec::with_capacity(take);
+    for (bucket, &q) in buckets.iter().zip(&quota) {
+        if q > 0 {
+            cohort.extend(random_sample(bucket, q, rng));
+        }
+    }
+    cohort
 }
 
 /// Algorithm 2 lines 9-17: walk the behaviour clusters (ascending mean
@@ -182,7 +297,7 @@ fn sample_clustered(
         members[l as usize].push(participants[i]);
     }
     for m in members.iter_mut() {
-        m.sort_by_key(|&c| (ctx.history.get(c).invocations, c));
+        m.sort_by_key(|&c| (ctx.history.view(c).invocations, c));
     }
 
     // rotation start from training progress (§V-C)
@@ -375,6 +490,81 @@ mod tests {
         let picked =
             sample_clustered(&participants, &total_ema, &[0, 0, 0], 1, 2, &c, &mut rng);
         assert_eq!(picked, vec![2, 1]);
+    }
+
+    #[test]
+    fn tier_partition_buckets_by_state() {
+        let clients: Vec<ClientId> = (0..6).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..2 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 5.0);
+        }
+        for c in 2..4 {
+            hist.record_invocation(c);
+            hist.record_failure(c, 0);
+        }
+        let c = ctx(&clients, &hist, 1, 3);
+        let (rookies, participants, stragglers) = tier_partition(&c);
+        assert_eq!(rookies, vec![4, 5]);
+        assert_eq!(participants, vec![0, 1]);
+        assert_eq!(stragglers, vec![2, 3]);
+    }
+
+    #[test]
+    fn stratified_cohort_spans_the_behaviour_range() {
+        // 4000 participants in two speed regimes: the cohort must carry
+        // members of both, be duplicate-free and exactly `take` long.
+        let n = 4000usize;
+        let clients: Vec<ClientId> = (0..n).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..n {
+            hist.record_invocation(c);
+            let t = if c % 2 == 0 { 5.0 } else { 80.0 };
+            hist.record_success(c, 0, t + (c % 17) as f64 * 0.1);
+        }
+        let c = ctx(&clients, &hist, 1, 64);
+        let mut rng = Rng::seed_from_u64(21);
+        let take = 512;
+        let cohort = stratified_cohort(&clients, &c, take, &mut rng);
+        assert_eq!(cohort.len(), take);
+        let mut d = cohort.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), take, "duplicates in cohort");
+        let fast = cohort.iter().filter(|&&c| c % 2 == 0).count();
+        let slow = take - fast;
+        // proportional sampling from a 50/50 fleet: both regimes well
+        // represented (exact split depends on stratum boundaries)
+        assert!(fast > take / 4 && slow > take / 4, "fast {fast} slow {slow}");
+    }
+
+    #[test]
+    fn large_fleet_selection_is_bounded_and_deterministic() {
+        // Above COHORT_MAX participants the cohort path kicks in; the
+        // selection must stay duplicate-free, k-sized and a pure
+        // function of the RNG seed.
+        let n = COHORT_MAX * 3;
+        let clients: Vec<ClientId> = (0..n).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..n {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 5.0 + (c % 97) as f64);
+        }
+        let run = |seed: u64| {
+            let mut s = FedLesScan::default();
+            let mut rng = Rng::seed_from_u64(seed);
+            s.select(&ctx(&clients, &hist, 3, 48), &mut rng)
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 48);
+        let mut d = a.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 48);
+        assert_ne!(a, run(8), "different seeds should move the sample");
     }
 
     #[test]

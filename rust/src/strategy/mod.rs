@@ -13,9 +13,9 @@ mod fedlesscan;
 mod fedprox;
 mod safa;
 
-pub use features::{ema, missed_round_ema};
+pub use features::{ema, feature_row, missed_round_ema, training_time_feature};
 pub use fedavg::FedAvg;
-pub use fedlesscan::{FedLesScan, FedLesScanParams};
+pub use fedlesscan::{tier_partition, FedLesScan, FedLesScanParams, COHORT_MAX};
 pub use fedprox::FedProx;
 pub use safa::SafaLite;
 
@@ -120,9 +120,30 @@ impl std::str::FromStr for StrategyKind {
     }
 }
 
-/// Shared helper: uniform random sample of `k` distinct clients.
+/// Pool size above which [`random_sample`] switches from the
+/// historical clone-and-shuffle to the O(k) sparse sampler. Changing
+/// it changes the RNG draw sequence for every strategy on pools beyond
+/// the smaller of the two values, which invalidates seeded
+/// reproductions — it equals [`COHORT_MAX`] today but is deliberately
+/// a separate knob so tuning the clustering-cohort cap cannot silently
+/// move this switch.
+const SAMPLE_SWITCH_MIN: usize = 1024;
+
+/// Shared helper: uniform random sample of `k` distinct clients. Pools
+/// up to [`SAMPLE_SWITCH_MIN`] use the historical clone-and-shuffle
+/// (the exact RNG draw sequence the selection goldens pin); larger
+/// pools — never reachable at paper scale — switch to the O(k) sparse
+/// partial Fisher–Yates of [`Rng::sample_indices`] instead of cloning
+/// and fully shuffling 100k ids to keep a few hundred.
 pub(crate) fn random_sample(clients: &[ClientId], k: usize, rng: &mut Rng) -> Vec<ClientId> {
-    rng.sample(clients, k)
+    if clients.len() > SAMPLE_SWITCH_MIN {
+        rng.sample_indices(clients.len(), k)
+            .into_iter()
+            .map(|i| clients[i])
+            .collect()
+    } else {
+        rng.sample(clients, k)
+    }
 }
 
 #[cfg(test)]

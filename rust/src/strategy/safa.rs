@@ -9,8 +9,14 @@
 //! speed), then ascending EMA training time. It deliberately has *no*
 //! fairness mechanism, so its Bias is high — the contrast FedLesScan's
 //! violin plots are judged against.
+//!
+//! Fleet-scale: the speed key is the O(1) cached training-time EMA from
+//! the bounded history, and the k fastest are found with a
+//! `select_nth_unstable` partition + prefix sort — O(n + k log k)
+//! instead of the full O(n log n) sort, with byte-identical output (the
+//! comparator totally orders on (EMA, client id)).
 
-use super::{ema, random_sample, Aggregation, SelectionContext, Strategy};
+use super::{random_sample, training_time_feature, Aggregation, SelectionContext, Strategy};
 use crate::util::Rng;
 use crate::ClientId;
 
@@ -26,18 +32,27 @@ impl Strategy for SafaLite {
         let mut rookies = Vec::new();
         let mut known: Vec<(f64, ClientId)> = Vec::new();
         for &c in ctx.all_clients {
-            let h = ctx.history.get(c);
+            let h = ctx.history.view(c);
             if h.is_rookie() {
                 rookies.push(c);
             } else {
-                known.push((ema(&h.training_times, 0.5), c));
+                known.push((training_time_feature(h, 0.5), c));
             }
         }
         if rookies.len() >= k {
             return random_sample(&rookies, k, rng);
         }
         let mut selected = rookies;
-        known.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let need = k - selected.len();
+        let cmp = |a: &(f64, ClientId), b: &(f64, ClientId)| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        };
+        if need < known.len() {
+            // partition the k fastest to the front, then order just them
+            known.select_nth_unstable_by(need - 1, cmp);
+            known.truncate(need);
+        }
+        known.sort_by(cmp);
         for (_, c) in known {
             if selected.len() == k {
                 break;
@@ -79,5 +94,36 @@ mod tests {
         let mut rng = Rng::seed_from_u64(0);
         let sel = s.select(&ctx, &mut rng);
         assert_eq!(sel, vec![5, 4]);
+    }
+
+    #[test]
+    fn partial_selection_matches_full_sort() {
+        // The select_nth fast path must reproduce the full-sort answer
+        // exactly, ties broken by client id.
+        let n = 500usize;
+        let clients: Vec<ClientId> = (0..n).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..n {
+            hist.record_invocation(c);
+            // many duplicate speeds to stress the id tie-break
+            hist.record_success(c, 0, ((c * 31) % 13) as f64);
+        }
+        let ctx = SelectionContext {
+            round: 1,
+            max_rounds: 10,
+            clients_per_round: 40,
+            all_clients: &clients,
+            history: &hist,
+        };
+        let mut s = SafaLite;
+        let mut rng = Rng::seed_from_u64(1);
+        let sel = s.select(&ctx, &mut rng);
+        // oracle: full sort on (speed, id)
+        let mut all: Vec<(f64, ClientId)> = (0..n)
+            .map(|c| (((c * 31) % 13) as f64, c))
+            .collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let want: Vec<ClientId> = all[..40].iter().map(|&(_, c)| c).collect();
+        assert_eq!(sel, want);
     }
 }

@@ -134,6 +134,32 @@ impl Rng {
         pool.truncate(k);
         pool
     }
+
+    /// `k` distinct indices drawn uniformly from `0..n`, in O(k) time
+    /// and space (sparse partial Fisher–Yates over a virtual identity
+    /// array) — the fleet-scale counterpart of [`sample`](Rng::sample),
+    /// which clones and fully shuffles its pool even for k ≪ n. The
+    /// draw sequence differs from `sample`, so behaviour-pinned call
+    /// sites keep the historical path.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        if k >= n {
+            let mut pool: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut pool);
+            return pool;
+        }
+        // Only the displaced entries of the virtual array are stored.
+        let mut swapped: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            let vj = swapped.get(&j).copied().unwrap_or(j);
+            let vi = swapped.get(&i).copied().unwrap_or(i);
+            swapped.insert(j, vi);
+            out.push(vj);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -229,5 +255,42 @@ mod tests {
         d.sort_unstable();
         d.dedup();
         assert_eq!(d.len(), 5);
+    }
+
+    #[test]
+    fn sample_indices_distinct_bounded_and_deterministic() {
+        let mut r = Rng::seed_from_u64(10);
+        let s = r.sample_indices(10_000, 64);
+        assert_eq!(s.len(), 64);
+        assert!(s.iter().all(|&i| i < 10_000));
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 64, "duplicates in {s:?}");
+        let mut r2 = Rng::seed_from_u64(10);
+        assert_eq!(s, r2.sample_indices(10_000, 64));
+        // k >= n degenerates to a full permutation
+        let mut all = r.sample_indices(7, 99);
+        all.sort_unstable();
+        assert_eq!(all, (0..7).collect::<Vec<_>>());
+        // k = 0 draws nothing
+        assert!(r.sample_indices(5, 0).is_empty());
+    }
+
+    #[test]
+    fn sample_indices_is_roughly_uniform() {
+        // every index of a small domain must appear across many draws
+        let mut r = Rng::seed_from_u64(11);
+        let mut counts = [0usize; 10];
+        for _ in 0..2000 {
+            for i in r.sample_indices(10, 3) {
+                counts[i] += 1;
+            }
+        }
+        // expectation 600 each; a dead or doubled cell is a bug
+        assert!(
+            counts.iter().all(|&c| (400..=800).contains(&c)),
+            "skewed counts {counts:?}"
+        );
     }
 }

@@ -1,0 +1,119 @@
+//! Shared test support for the integration and scale suites.
+
+use std::time::Duration;
+
+use fedless::data::Features;
+use fedless::runtime::manifest::Entrypoint;
+use fedless::runtime::{
+    AggregateFold, Backend, BufferedFold, EvalResult, Manifest, TrainRequest, TrainResult,
+};
+use fedless::Result;
+
+/// Minimal deterministic mock backend (8 params, trivial transforms):
+/// training adds a constant, evaluation is fixed, and `aggregate`
+/// enforces the manifest `k_max` as a hard capacity limit — so tests
+/// exercise the coordinator's selection/scheduling/accounting without
+/// paying for model compute. The `k_max` is the knob: a tiny value
+/// (e.g. 2) forces stale-update truncation pressure; a large one lets
+/// fleet-scale rounds aggregate freely.
+pub struct MockBackend {
+    mf: Manifest,
+}
+
+impl MockBackend {
+    pub fn new(k_max: usize) -> Self {
+        let ep = |f: &str| Entrypoint {
+            file: f.into(),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let mf = Manifest {
+            name: "mnist".into(), // must match the config's dataset
+            scale: "mock".into(),
+            param_count: 8,
+            num_classes: 2,
+            input_shape: vec![4],
+            input_dtype: "f32".into(),
+            shard_size: 4,
+            batch_size: 2,
+            local_epochs: 1,
+            steps_per_round: 2,
+            optimizer: "sgd".into(),
+            lr: 0.1,
+            prox_mu: 0.0,
+            eval_size: 4,
+            eval_batch: 4,
+            k_max,
+            seq_len: None,
+            flops_per_round: 1,
+            entrypoints: ["train", "train_prox", "eval", "aggregate"]
+                .iter()
+                .map(|n| (n.to_string(), ep(n)))
+                .collect(),
+            init_file: "unused".into(),
+            init_sha256: "unused".into(),
+            init_seed: 0,
+        };
+        Self { mf }
+    }
+}
+
+impl Backend for MockBackend {
+    fn backend_name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.mf
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        Ok(vec![0.0; self.mf.param_count])
+    }
+
+    fn train_round(&self, req: &TrainRequest) -> Result<(TrainResult, Duration)> {
+        let params: Vec<f32> = req.params.iter().map(|p| p + 0.25).collect();
+        let n = params.len();
+        Ok((
+            TrainResult {
+                params,
+                m: vec![0.0; n],
+                v: vec![0.0; n],
+                t: req.num_steps as f32,
+                loss: 1.0,
+            },
+            Duration::from_millis(1),
+        ))
+    }
+
+    fn evaluate(&self, _params: &[f32], _x: &Features, _y: &[i32]) -> Result<EvalResult> {
+        Ok(EvalResult {
+            loss: 1.0,
+            accuracy: 0.5,
+        })
+    }
+
+    fn aggregate(&self, updates: &[&[f32]], weights: &[f32]) -> Result<(Vec<f32>, Duration)> {
+        // the kernel's hard capacity limit: the coordinator must never
+        // exceed it
+        anyhow::ensure!(
+            !updates.is_empty() && updates.len() <= self.mf.k_max,
+            "aggregate called with {} updates (k_max {})",
+            updates.len(),
+            self.mf.k_max
+        );
+        let mut out = vec![0.0f32; updates[0].len()];
+        for (u, &w) in updates.iter().zip(weights) {
+            for (o, &x) in out.iter_mut().zip(u.iter()) {
+                *o += w * x;
+            }
+        }
+        Ok((out, Duration::from_millis(1)))
+    }
+
+    fn begin_fold(&self, expected_k: usize) -> Result<Box<dyn AggregateFold + '_>> {
+        // batch-only mock: buffer and defer to the capacity-checked
+        // aggregate above
+        Ok(Box::new(BufferedFold::new(self, expected_k)))
+    }
+}

@@ -1,0 +1,219 @@
+//! Behaviour-plane selection goldens: end-to-end tier assignment and
+//! cohort selection for paper-scale preset shapes, pinned to literal
+//! selected-client sets (same RNG seed ⇒ bit-identical selections).
+//!
+//! The pinned values were computed from a bit-exact mirror of the
+//! **pre-refactor** selection path (unbounded per-client history
+//! vectors, O(n²) DBSCAN neighbourhood scans) and verified equal under
+//! the refactored path (bounded history summaries, grid-indexed
+//! DBSCAN, cohort sampling) before pinning — so this suite certifies
+//! that the fleet-scale rewrite is behaviour-preserving for the
+//! paper-scale path, not merely self-consistent. The generator is
+//! committed at `python/mirror/gen_goldens.py` (regeneration recipe in
+//! `python/mirror/README.md`).
+//!
+//! The drive script is deliberately RNG-free in its *outcomes* (client
+//! c fails round r iff (7c + r) % 5 == 0; training time is a fixed
+//! function of (c, r); half of a round's failures are corrected by a
+//! late completion one round later), so the only randomness is the
+//! strategy's own sampling stream — exactly what the goldens pin.
+
+use fedless::clientdb::HistoryStore;
+use fedless::strategy::{tier_partition, FedLesScan, SelectionContext, Strategy};
+use fedless::util::Rng;
+use fedless::ClientId;
+
+struct Drive {
+    selections: Vec<Vec<ClientId>>,
+    rookies: Vec<ClientId>,
+    participants: Vec<ClientId>,
+    stragglers: Vec<ClientId>,
+}
+
+/// Scripted multi-round drive of FedLesScan selection + Algorithm 1
+/// history updates (success / failure / late-completion / cooldown
+/// tick), mirroring the golden generator exactly.
+fn drive(n: usize, k: usize, max_rounds: u32, rounds: u32, seed: u64) -> Drive {
+    let mut hist = HistoryStore::new();
+    let mut rng = Rng::seed_from_u64(seed);
+    let clients: Vec<ClientId> = (0..n).collect();
+    let mut strat = FedLesScan::default();
+    let mut selections = Vec::new();
+    let mut prev_failed: Vec<ClientId> = Vec::new();
+    for r in 0..rounds {
+        let sel = {
+            let ctx = SelectionContext {
+                round: r,
+                max_rounds,
+                clients_per_round: k,
+                all_clients: &clients,
+                history: &hist,
+            };
+            strat.select(&ctx, &mut rng)
+        };
+        // late completions: half of last round's failures correct
+        // themselves (the slow-not-crashed clients of §V-B)
+        for &c in &prev_failed {
+            if (c + r as usize) % 2 == 0 {
+                hist.record_late_completion(c, r - 1, 60.0 + c as f64);
+            }
+        }
+        let mut failed = Vec::new();
+        for &c in &sel {
+            hist.record_invocation(c);
+            if (c * 7 + r as usize) % 5 == 0 {
+                hist.record_failure(c, r);
+                failed.push(c);
+            } else {
+                let t = 5.0 + ((c * 13 + r as usize * 3) % 40) as f64 * 1.5;
+                hist.record_success(c, r, t);
+            }
+        }
+        hist.tick_cooldowns(&failed);
+        prev_failed = failed;
+        selections.push(sel);
+    }
+    let ctx = SelectionContext {
+        round: rounds,
+        max_rounds,
+        clients_per_round: k,
+        all_clients: &clients,
+        history: &hist,
+    };
+    let (rookies, participants, stragglers) = tier_partition(&ctx);
+    Drive {
+        selections,
+        rookies,
+        participants,
+        stragglers,
+    }
+}
+
+fn assert_drive(
+    label: &str,
+    d: &Drive,
+    selections: &[&[ClientId]],
+    rookies: &[ClientId],
+    participants: &[ClientId],
+    stragglers: &[ClientId],
+) {
+    assert_eq!(
+        d.selections.len(),
+        selections.len(),
+        "{label}: round count"
+    );
+    for (r, (got, want)) in d.selections.iter().zip(selections).enumerate() {
+        assert_eq!(got, want, "{label}: selection drifted in round {r}");
+    }
+    assert_eq!(d.rookies, rookies, "{label}: rookie tier drifted");
+    assert_eq!(d.participants, participants, "{label}: participant tier drifted");
+    assert_eq!(d.stragglers, stragglers, "{label}: straggler tier drifted");
+}
+
+// mnist_shape: n=60 k=12 max_rounds=20 seed=42
+const MNIST_SHAPE_SELECTIONS: &[&[ClientId]] = &[
+    &[35, 47, 44, 8, 40, 0, 4, 46, 2, 59, 9, 19],
+    &[34, 24, 41, 20, 7, 48, 39, 1, 49, 18, 13, 57],
+    &[17, 22, 33, 21, 29, 25, 12, 6, 43, 27, 53, 16],
+    &[54, 45, 31, 58, 23, 30, 5, 15, 51, 36, 56, 11],
+    &[10, 14, 55, 28, 50, 52, 38, 26, 42, 3, 32, 37],
+    &[1, 4, 6, 12, 13, 15, 16, 19, 22, 25, 34, 37],
+    &[0, 2, 3, 5, 7, 8, 9, 10, 14, 17, 18, 20],
+    &[11, 28, 31, 38, 51, 15, 25, 29, 35, 36, 56, 21],
+    &[11, 51, 2, 28, 31, 38, 15, 25, 23, 24, 26, 27],
+    &[2, 28, 38, 15, 25, 29, 30, 32, 33, 39, 40, 41],
+];
+const MNIST_SHAPE_ROOKIES: &[ClientId] = &[];
+const MNIST_SHAPE_PARTICIPANTS: &[ClientId] = &[
+    0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, 22, 23, 24,
+    25, 26, 27, 29, 30, 31, 32, 34, 35, 36, 37, 39, 40, 41, 42, 43, 44, 45, 46, 47, 48, 49, 50,
+    51, 52, 53, 54, 55, 56, 57, 58, 59,
+];
+const MNIST_SHAPE_STRAGGLERS: &[ClientId] = &[28, 33, 38];
+
+// femnist_shape: n=50 k=10 max_rounds=15 seed=1337
+const FEMNIST_SHAPE_SELECTIONS: &[&[ClientId]] = &[
+    &[18, 1, 16, 32, 24, 47, 20, 28, 27, 5],
+    &[4, 41, 11, 13, 9, 2, 37, 44, 19, 29],
+    &[31, 17, 43, 14, 25, 22, 21, 12, 48, 0],
+    &[15, 30, 45, 40, 3, 46, 39, 10, 34, 42],
+    &[35, 7, 6, 49, 33, 36, 26, 8, 38, 23],
+    &[0, 1, 2, 3, 4, 5, 6, 7, 9, 10],
+    &[11, 12, 13, 15, 16, 17, 18, 19, 20, 21],
+    &[8, 38, 23, 33, 46, 5, 14, 22, 24, 25],
+];
+const FEMNIST_SHAPE_ROOKIES: &[ClientId] = &[];
+const FEMNIST_SHAPE_PARTICIPANTS: &[ClientId] = &[
+    0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 15, 16, 17, 18, 19, 20, 21, 22, 23, 25, 26,
+    27, 28, 29, 30, 31, 32, 33, 34, 35, 36, 37, 38, 39, 40, 41, 42, 43, 44, 45, 46, 47, 48, 49,
+];
+const FEMNIST_SHAPE_STRAGGLERS: &[ClientId] = &[14, 24];
+
+// speech_shape: n=60 k=15 max_rounds=20 seed=7
+const SPEECH_SHAPE_SELECTIONS: &[&[ClientId]] = &[
+    &[31, 37, 33, 30, 18, 58, 43, 29, 12, 39, 50, 9, 13, 22, 0],
+    &[24, 16, 4, 6, 17, 23, 38, 32, 44, 40, 47, 3, 52, 26, 54],
+    &[20, 59, 34, 57, 10, 49, 28, 21, 27, 2, 7, 25, 55, 46, 42],
+    &[19, 36, 48, 41, 53, 51, 14, 35, 8, 5, 45, 11, 15, 56, 1],
+    &[17, 47, 0, 2, 3, 4, 5, 6, 7, 8, 9, 10, 12, 13, 14],
+    &[15, 16, 18, 19, 20, 21, 22, 23, 24, 25, 26, 27, 28, 29, 30],
+    &[1, 11, 34, 41, 51, 32, 36, 49, 52, 56, 59, 8, 31, 33, 35],
+    &[11, 51, 15, 17, 25, 34, 47, 8, 30, 56, 59, 1, 41, 37, 38],
+    &[11, 15, 25, 51, 8, 32, 52, 39, 40, 42, 43, 44, 45, 46, 48],
+    &[32, 15, 25, 8, 52, 59, 50, 53, 54, 55, 57, 58, 0, 2, 3],
+];
+const SPEECH_SHAPE_ROOKIES: &[ClientId] = &[];
+const SPEECH_SHAPE_PARTICIPANTS: &[ClientId] = &[
+    0, 1, 2, 4, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, 22, 23, 24, 25, 26,
+    27, 28, 29, 30, 31, 32, 33, 34, 35, 36, 37, 38, 39, 40, 41, 42, 43, 44, 45, 46, 47, 48, 49,
+    50, 51, 52, 54, 55, 56, 57, 59,
+];
+const SPEECH_SHAPE_STRAGGLERS: &[ClientId] = &[3, 8, 53, 58];
+
+#[test]
+fn mnist_shape_selection_golden() {
+    let d = drive(60, 12, 20, 10, 42);
+    assert_drive(
+        "mnist_shape",
+        &d,
+        MNIST_SHAPE_SELECTIONS,
+        MNIST_SHAPE_ROOKIES,
+        MNIST_SHAPE_PARTICIPANTS,
+        MNIST_SHAPE_STRAGGLERS,
+    );
+}
+
+#[test]
+fn femnist_shape_selection_golden() {
+    let d = drive(50, 10, 15, 8, 1337);
+    assert_drive(
+        "femnist_shape",
+        &d,
+        FEMNIST_SHAPE_SELECTIONS,
+        FEMNIST_SHAPE_ROOKIES,
+        FEMNIST_SHAPE_PARTICIPANTS,
+        FEMNIST_SHAPE_STRAGGLERS,
+    );
+}
+
+#[test]
+fn speech_shape_selection_golden() {
+    let d = drive(60, 15, 20, 10, 7);
+    assert_drive(
+        "speech_shape",
+        &d,
+        SPEECH_SHAPE_SELECTIONS,
+        SPEECH_SHAPE_ROOKIES,
+        SPEECH_SHAPE_PARTICIPANTS,
+        SPEECH_SHAPE_STRAGGLERS,
+    );
+}
+
+#[test]
+fn drive_is_replayable() {
+    // The golden harness itself must be a pure function of its seed.
+    let a = drive(60, 12, 20, 10, 42);
+    let b = drive(60, 12, 20, 10, 42);
+    assert_eq!(a.selections, b.selections);
+    assert_eq!(a.stragglers, b.stragglers);
+}

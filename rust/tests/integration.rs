@@ -7,10 +7,12 @@
 //! Porting this suite to run against `PjrtBackend` behind the feature
 //! flag is future work once a real `xla_extension` environment exists.
 
+mod common;
+
 use fedless::config::{ExperimentConfig, Scenario};
 use fedless::coordinator::Controller;
 use fedless::data::{Features, SynthDataset};
-use fedless::runtime::{AggregateFold, Backend, BufferedFold, NativeBackend, TrainRequest};
+use fedless::runtime::{Backend, NativeBackend, TrainRequest};
 use fedless::strategy::{FedLesScan, FedLesScanParams, StrategyKind};
 
 fn mnist_backend() -> NativeBackend {
@@ -280,7 +282,7 @@ fn history_reflects_algorithm_one() {
         assert!(hist.get(c).invocations >= 1);
     }
     // with 70% stragglers someone must have missed rounds
-    let missed_any = hist.iter().any(|(_, h)| !h.missed_rounds.is_empty());
+    let missed_any = hist.iter().any(|(_, h)| h.missed_total() > 0);
     assert!(missed_any);
 }
 
@@ -473,125 +475,6 @@ fn scheduler_timeline_is_deterministic_and_deadline_bounded() {
     assert!(stale_total > 0);
 }
 
-/// Minimal mock backend with an aggressive `k_max` so the cap truncates
-/// stale updates in a normal run. Training is a trivial deterministic
-/// transform — this test is about the coordinator's accounting, not the
-/// model.
-struct TinyBackend {
-    mf: fedless::runtime::Manifest,
-}
-
-impl TinyBackend {
-    fn new(k_max: usize) -> Self {
-        use fedless::runtime::manifest::Entrypoint;
-        let ep = |f: &str| Entrypoint {
-            file: f.into(),
-            inputs: vec![],
-            outputs: vec![],
-        };
-        let mf = fedless::runtime::Manifest {
-            name: "mnist".into(), // must match the config's dataset
-            scale: "mock".into(),
-            param_count: 8,
-            num_classes: 2,
-            input_shape: vec![4],
-            input_dtype: "f32".into(),
-            shard_size: 4,
-            batch_size: 2,
-            local_epochs: 1,
-            steps_per_round: 2,
-            optimizer: "sgd".into(),
-            lr: 0.1,
-            prox_mu: 0.0,
-            eval_size: 4,
-            eval_batch: 4,
-            k_max,
-            seq_len: None,
-            flops_per_round: 1,
-            entrypoints: ["train", "train_prox", "eval", "aggregate"]
-                .iter()
-                .map(|n| (n.to_string(), ep(n)))
-                .collect(),
-            init_file: "unused".into(),
-            init_sha256: "unused".into(),
-            init_seed: 0,
-        };
-        Self { mf }
-    }
-}
-
-impl Backend for TinyBackend {
-    fn backend_name(&self) -> &'static str {
-        "mock"
-    }
-
-    fn manifest(&self) -> &fedless::runtime::Manifest {
-        &self.mf
-    }
-
-    fn init_params(&self) -> fedless::Result<Vec<f32>> {
-        Ok(vec![0.0; self.mf.param_count])
-    }
-
-    fn train_round(
-        &self,
-        req: &TrainRequest,
-    ) -> fedless::Result<(fedless::runtime::TrainResult, std::time::Duration)> {
-        let params: Vec<f32> = req.params.iter().map(|p| p + 0.25).collect();
-        let n = params.len();
-        Ok((
-            fedless::runtime::TrainResult {
-                params,
-                m: vec![0.0; n],
-                v: vec![0.0; n],
-                t: req.num_steps as f32,
-                loss: 1.0,
-            },
-            std::time::Duration::from_millis(1),
-        ))
-    }
-
-    fn evaluate(
-        &self,
-        _params: &[f32],
-        _x: &Features,
-        _y: &[i32],
-    ) -> fedless::Result<fedless::runtime::EvalResult> {
-        Ok(fedless::runtime::EvalResult {
-            loss: 1.0,
-            accuracy: 0.5,
-        })
-    }
-
-    fn aggregate(
-        &self,
-        updates: &[&[f32]],
-        weights: &[f32],
-    ) -> fedless::Result<(Vec<f32>, std::time::Duration)> {
-        // the kernel's hard capacity limit: the coordinator must never
-        // exceed it
-        anyhow::ensure!(
-            !updates.is_empty() && updates.len() <= self.mf.k_max,
-            "aggregate called with {} updates (k_max {})",
-            updates.len(),
-            self.mf.k_max
-        );
-        let mut out = vec![0.0f32; updates[0].len()];
-        for (u, &w) in updates.iter().zip(weights) {
-            for (o, &x) in out.iter_mut().zip(u.iter()) {
-                *o += w * x;
-            }
-        }
-        Ok((out, std::time::Duration::from_millis(1)))
-    }
-
-    fn begin_fold(&self, expected_k: usize) -> fedless::Result<Box<dyn AggregateFold + '_>> {
-        // batch-only mock: buffer and defer to the capacity-checked
-        // aggregate above
-        Ok(Box::new(BufferedFold::new(self, expected_k)))
-    }
-}
-
 #[test]
 fn kmax_truncated_stale_updates_get_no_credit_or_count() {
     // Regression for the k_max truncation accounting bug: every client
@@ -599,7 +482,7 @@ fn kmax_truncated_stale_updates_get_no_credit_or_count() {
     // the next round drains far more stale updates than k_max = 2 can
     // hold. Truncated-away updates must neither increment stale_applied
     // nor receive record_late_completion credit.
-    let rt = TinyBackend::new(2);
+    let rt = common::MockBackend::new(2);
     let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(100));
     cfg.straggler_slow_frac = 1.0; // everyone slow: zero fresh, max stale
     cfg.n_clients = 12;
@@ -630,13 +513,13 @@ fn kmax_truncated_stale_updates_get_no_credit_or_count() {
         failures_total > stale_total,
         "test setup did not create truncation pressure"
     );
-    // History credit identity: every training_times entry comes from an
-    // on-time success (none here) or a credited late completion. The
+    // History credit identity: every recorded training time comes from
+    // an on-time success (none here) or a credited late completion. The
     // seed credited truncated updates too, inflating this count.
     let credited: usize = ctl
         .history()
         .iter()
-        .map(|(_, h)| h.training_times.len())
+        .map(|(_, h)| h.times_count() as usize)
         .sum();
     assert_eq!(
         credited, stale_total,
@@ -660,7 +543,7 @@ fn kmax_overflow_stale_updates_land_in_a_later_round() {
     // arrive ~195 s, inside round 3), so its only candidates are the 4
     // re-buffered updates: 2 of them must land. τ = 4 keeps the
     // overflow valid across the extra round.
-    let rt = TinyBackend::new(2);
+    let rt = common::MockBackend::new(2);
     let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(100));
     cfg.straggler_slow_frac = 1.0;
     cfg.faas.transient_failure_rate = 0.0;
@@ -691,7 +574,7 @@ fn kmax_overflow_stale_updates_land_in_a_later_round() {
     let credited: usize = ctl
         .history()
         .iter()
-        .map(|(_, h)| h.training_times.len())
+        .map(|(_, h)| h.times_count() as usize)
         .sum();
     assert_eq!(credited, stale_total);
 }

@@ -3,8 +3,10 @@
 //! cases drawn via `fedless::util::Rng`. Failures print the case seed so
 //! the exact input can be replayed.
 
-use fedless::clientdb::HistoryStore;
-use fedless::clustering::{cluster_clients, dbscan, relabel_outliers, DbscanParams};
+use fedless::clientdb::{HistoryStore, HISTORY_WINDOW};
+use fedless::clustering::{
+    cluster_clients, dbscan, dbscan_naive, relabel_outliers, DbscanParams, NOISE,
+};
 use fedless::config::Scenario;
 use fedless::cost::GcfPricing;
 use fedless::data::{Partition, SynthDataset};
@@ -12,8 +14,8 @@ use fedless::metrics::RoundRecord;
 use fedless::params::{fold_weighted_into, weighted_sum_scalar};
 use fedless::paramsvr::{staleness_weights, weight_component, WeightedUpdate};
 use fedless::strategy::{
-    ema, missed_round_ema, FedAvg, FedLesScan, FedProx, SafaLite, SelectionContext, Strategy,
-    StrategyKind,
+    ema, feature_row, missed_round_ema, FedAvg, FedLesScan, FedProx, SafaLite,
+    SelectionContext, Strategy, StrategyKind,
 };
 use fedless::util::{Json, Rng};
 
@@ -287,6 +289,130 @@ fn prop_dbscan_labels_valid() {
         assert_eq!(glabels.len(), n);
         if n > 0 {
             assert!(gk >= 1 && gk <= n, "case {case}: gk {gk}");
+        }
+    }
+}
+
+/// Partition-equivalence oracle check: identical NOISE sets, and the
+/// non-noise labellings related by a bijection (cluster renumbering).
+fn assert_label_equivalent(a: &[isize], b: &[isize], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut fwd: std::collections::HashMap<isize, isize> = std::collections::HashMap::new();
+    let mut rev: std::collections::HashMap<isize, isize> = std::collections::HashMap::new();
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x == NOISE,
+            y == NOISE,
+            "{what}: NOISE sets differ at point {i} ({x} vs {y})"
+        );
+        if x == NOISE {
+            continue;
+        }
+        assert_eq!(*fwd.entry(x).or_insert(y), y, "{what}: non-injective at {i}");
+        assert_eq!(*rev.entry(y).or_insert(x), x, "{what}: non-surjective at {i}");
+    }
+}
+
+#[test]
+fn prop_grid_dbscan_matches_naive_oracle() {
+    // The tentpole contract: the grid-indexed DBSCAN produces label
+    // partitions equivalent to the O(n²) oracle (identical NOISE sets,
+    // clusters equal up to renumbering) across random point clouds,
+    // eps/min_pts/dimension sweeps, and the degenerate geometries a
+    // uniform grid is most likely to fumble — all-identical points,
+    // points exactly on cell boundaries, ε spanning many cells.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x6e1d);
+        let n = 1 + rng.below(90);
+        let dim = 1 + rng.below(3);
+        let style = rng.below(4);
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| match style {
+                0 => (0..dim).map(|_| rng.range_f64(-10.0, 10.0)).collect(),
+                1 => {
+                    // clustered blobs
+                    let c = rng.below(4) as f64 * 8.0;
+                    (0..dim).map(|_| c + rng.range_f64(-0.7, 0.7)).collect()
+                }
+                2 => vec![3.25; dim], // all points identical
+                // lattice of exact ε multiples: every coordinate sits on
+                // a cell boundary
+                _ => (0..dim).map(|_| rng.below(6) as f64 * 0.5).collect(),
+            })
+            .collect();
+        // ε sweep: sub-cell, exact-boundary, and spanning many cells
+        let eps = [0.25, 0.5, 1.0, 5.0, 100.0][rng.below(5)];
+        let min_pts = 1 + rng.below(4);
+        let params = DbscanParams { eps, min_pts };
+        let grid = dbscan(&pts, &params);
+        let naive = dbscan_naive(&pts, &params);
+        assert_label_equivalent(
+            &grid,
+            &naive,
+            &format!("case {case} n={n} dim={dim} style={style} eps={eps} min_pts={min_pts}"),
+        );
+    }
+}
+
+#[test]
+fn prop_bounded_history_features_match_unbounded_oracle() {
+    // The bounded ClientHistory must reproduce the unbounded slice
+    // oracles: the cached training-time EMA bit-exactly at the store α
+    // at ANY history length, and the windowed missed-round feature
+    // bit-exactly while a client's uncorrected misses fit the window.
+    // Ring lengths must never exceed the window.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x5107);
+        let mut db = HistoryStore::new();
+        let mut times: Vec<f64> = Vec::new();
+        let mut missed: Vec<u32> = Vec::new();
+        // the windowed missed feature is exact until the first eviction
+        let mut overflowed = false;
+        let rounds = 1 + rng.below(120) as u32;
+        for r in 0..rounds {
+            match rng.below(4) {
+                0 => {
+                    db.record_failure(7, r);
+                    if !missed.contains(&r) {
+                        missed.push(r);
+                    }
+                    overflowed |= missed.len() > HISTORY_WINDOW;
+                }
+                1 if !missed.is_empty() => {
+                    // late completion corrects the most recent miss
+                    let round = *missed.last().unwrap();
+                    let t = rng.range_f64(30.0, 90.0);
+                    db.record_late_completion(7, round, t);
+                    missed.retain(|&x| x != round);
+                    times.push(t);
+                }
+                _ => {
+                    let t = rng.range_f64(1.0, 60.0);
+                    db.record_success(7, r, t);
+                    missed.retain(|&x| x != r);
+                    times.push(t);
+                }
+            }
+            let h = db.view(7);
+            assert!(h.recent_times().len() <= HISTORY_WINDOW, "case {case}");
+            assert!(h.missed_recent().len() <= HISTORY_WINDOW, "case {case}");
+            assert_eq!(h.times_count() as usize, times.len(), "case {case}");
+            let (t_feat, m_feat) = feature_row(h, r.max(1), 0.5);
+            assert_eq!(
+                t_feat.to_bits(),
+                ema(&times, 0.5).to_bits(),
+                "case {case} round {r}: t-EMA diverged at len {}",
+                times.len()
+            );
+            if !overflowed {
+                assert_eq!(
+                    m_feat.to_bits(),
+                    missed_round_ema(&missed, r.max(1), 0.5).to_bits(),
+                    "case {case} round {r}: missed feature diverged"
+                );
+                assert_eq!(h.missed_recent(), &missed[..], "case {case} round {r}");
+            }
+            assert_eq!(h.missed_total() as usize, missed.len(), "case {case}");
         }
     }
 }

@@ -1,0 +1,128 @@
+//! Fleet-scale smoke tests, `#[ignore]`-gated: they need release-mode
+//! optimization to meet their wall-clock budgets, so the CI release job
+//! runs them explicitly:
+//!
+//!   cargo test --release -q -- --ignored
+//!
+//! Budgets are deliberately generous (shared CI runners); the point is
+//! catching accidental O(n²) regressions in the behaviour plane — the
+//! pre-refactor path at 50k clients is ~10^9–10^10 distance
+//! computations per ε candidate and would blow these budgets by orders
+//! of magnitude, not percents.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use fedless::clientdb::HistoryStore;
+use fedless::config::{ExperimentConfig, Scenario};
+use fedless::coordinator::Controller;
+use fedless::strategy::{FedLesScan, SelectionContext, Strategy, StrategyKind};
+use fedless::util::Rng;
+use fedless::ClientId;
+
+/// Scripted 50k-client behaviour history: a sparse rookie sliver (so
+/// the rookie shortcut cannot cover the round and selection *must*
+/// cluster), ~10% live stragglers, the rest participants with a few
+/// recorded events each — the full tier → stratified-cohort →
+/// grid-DBSCAN path is what the wall-clock budget measures.
+fn fleet_history(n: usize) -> HistoryStore {
+    let mut hist = HistoryStore::new();
+    for c in 0..n {
+        match c % 10 {
+            0 if c % 500 == 0 => {} // sparse rookies (~0.2%)
+            2 => {
+                hist.record_invocation(c);
+                hist.record_failure(c, 3); // live cooldown: straggler
+            }
+            _ => {
+                hist.record_invocation(c);
+                hist.record_success(c, 0, 5.0 + (c % 211) as f64 * 0.4);
+                hist.record_invocation(c);
+                hist.record_success(c, 1, 5.0 + ((c * 7) % 211) as f64 * 0.4);
+                if c % 13 == 0 {
+                    // a past miss followed by an on-time success: missed-
+                    // round texture in the window, cooldown back to 0
+                    hist.record_invocation(c);
+                    hist.record_failure(c, 2);
+                    hist.record_invocation(c);
+                    hist.record_success(c, 3, 6.0 + (c % 31) as f64);
+                }
+            }
+        }
+    }
+    hist
+}
+
+#[test]
+#[ignore = "release-mode scale smoke; run via cargo test --release -- --ignored"]
+fn selection_over_50k_clients_is_subsecond_scale_and_deterministic() {
+    let n = 50_000usize;
+    let k = 256usize;
+    let hist = fleet_history(n);
+    let clients: Vec<ClientId> = (0..n).collect();
+    let run = || {
+        let mut strat = FedLesScan::default();
+        let mut rng = Rng::seed_from_u64(99);
+        let ctx = SelectionContext {
+            round: 5,
+            max_rounds: 40,
+            clients_per_round: k,
+            all_clients: &clients,
+            history: &hist,
+        };
+        let t0 = Instant::now();
+        let sel = strat.select(&ctx, &mut rng);
+        (sel, t0.elapsed())
+    };
+    let (a, wall_a) = run();
+    let (b, _) = run();
+    assert_eq!(a, b, "selection must be deterministic in the seed");
+    assert_eq!(a.len(), k);
+    let mut d = a.clone();
+    d.sort_unstable();
+    d.dedup();
+    assert_eq!(d.len(), k, "duplicate clients selected");
+    // Budget: the grid-indexed cohort path runs in tens of milliseconds
+    // in release; 10 s is the "did someone reintroduce O(n²)" alarm.
+    assert!(
+        wall_a < Duration::from_secs(10),
+        "50k-client selection took {wall_a:?}"
+    );
+}
+
+#[test]
+#[ignore = "release-mode scale smoke; run via cargo test --release -- --ignored"]
+fn a_50k_client_mock_round_completes_within_budget_and_replays() {
+    // generous k_max: the fleet round aggregates freely; the shared
+    // mock keeps a 50k-client experiment at selection + scheduling cost
+    let rt = common::MockBackend::new(512);
+    let mut cfg = ExperimentConfig::preset("mnist");
+    cfg.strategy = StrategyKind::Fedlesscan;
+    cfg.scenario = Scenario::Standard;
+    cfg.n_clients = 50_000;
+    cfg.clients_per_round = 128;
+    cfg.rounds = 2;
+    cfg.seed = 23;
+    let run = |cfg: ExperimentConfig| {
+        let t0 = Instant::now();
+        let mut ctl = Controller::new(cfg, &rt).unwrap();
+        let res = ctl.run().unwrap();
+        (res, t0.elapsed())
+    };
+    let (a, wall) = run(cfg.clone());
+    let (b, _) = run(cfg);
+    assert_eq!(a.rounds.len(), 2);
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.selected, rb.selected, "round {} drifted", ra.round);
+        assert_eq!(ra.successes, rb.successes);
+        assert_eq!(ra.failures, rb.failures);
+        assert_eq!(ra.duration_s.to_bits(), rb.duration_s.to_bits());
+        assert!(ra.select_wall_s >= 0.0);
+    }
+    assert!(a.rounds[0].successes > 0, "nobody trained");
+    assert!(
+        wall < Duration::from_secs(60),
+        "50k-client 2-round experiment took {wall:?}"
+    );
+}
