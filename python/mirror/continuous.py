@@ -1,0 +1,330 @@
+"""Bit-exact Python mirror of the continuous-mode coordinator path.
+
+Mirrors, op for op:
+
+* ``util/rng.rs``      — Box–Muller ``normal()`` (with the cached spare
+                         deviate) and ``lognormal()`` on top of the
+                         ``core.Rng`` xoshiro256** mirror;
+* ``faas/mod.rs``      — ``SimulatedGcf``: cold/warm decision, the
+                         pinned RNG draw order (startup → crash →
+                         speed → jitter, with the ``||`` short-circuit
+                         skipping the transient draw on forced crashes),
+                         and the pure timeline materialization;
+* ``cost/mod.rs``      — GCF pricing at 100 ms granularity;
+* ``coordinator/mod.rs`` ``drive_continuous``/``dispatch_continuous`` —
+                         the generation-keyed Eq. 3 fold/expire logic,
+                         metric windows, in-flight ledger, cooldown tick
+                         cadence, and the budgeted replacement dispatch.
+
+The driver never models parameter values: with the test suites'
+``MockBackend`` the virtual timeline, history evolution, selection and
+cost are independent of the trained floats, which is exactly the state
+``tests/continuous_golden.rs`` pins. Run ``gen_continuous_golden.py`` to
+(re)generate the pinned constants.
+"""
+
+import heapq
+import math
+
+from core import GaussRng, HistoryStore, NewHistory, fedlesscan_select, rust_round
+
+# seed mixers (faas/mod.rs, coordinator/mod.rs)
+FAAS_SEED_MIX = 0xFAA5_0001
+COORD_SEED_MIX = 0xC00D_1234_5678_9ABC
+
+# FaasConfig::default()
+COLD_START_MEDIAN_S = 4.0
+COLD_START_SIGMA = 0.5
+WARM_OVERHEAD_S = 0.15
+IDLE_TIMEOUT_S = 300.0
+CLIENT_SPEED_SIGMA = 0.25
+INVOCATION_JITTER_SIGMA = 0.10
+TRANSIENT_FAILURE_RATE = 0.02
+MEMORY_MB = 2048
+NETWORK_MBPS = 40.0
+FUNCTION_TIMEOUT_S = 540.0
+
+# GcfPricing::default(); 2048 MB -> 2.0 GB, 2.4 GHz tier
+PER_INVOCATION = 0.40 / 1e6
+PER_GB_SECOND = 0.000_002_5
+PER_GHZ_SECOND = 0.000_010_0
+GRANULARITY_S = 0.1
+
+
+def invocation_cost(duration_s, memory_mb=MEMORY_MB, margins=None):
+    """cost/mod.rs invocation_cost, same op order."""
+    if margins is not None:
+        # ceil-boundary audit: a last-ulp drift in a transcendental-
+        # derived duration must not flip the billing quantum
+        q = duration_s / GRANULARITY_S
+        margins.append(("bill_ceil", abs(q - round(q))))
+    billed = math.ceil(duration_s / GRANULARITY_S) * GRANULARITY_S
+    gb = memory_mb / 1024.0
+    ghz = 2.4  # ghz_for_memory_mb(2048)
+    return PER_INVOCATION + billed * gb * PER_GB_SECOND + billed * ghz * PER_GHZ_SECOND
+
+
+class Faas:
+    """SimulatedGcf: decide (all RNG) + materialize (no RNG)."""
+
+    def __init__(self, seed):
+        self.rng = GaussRng(seed ^ FAAS_SEED_MIX)
+        self.warm = {}  # client -> last_used_at
+        self.speed = {}  # client -> cached speed factor
+        self.margins = []  # (kind, |lhs - rhs|) float-boundary audit trail
+
+    def invoke(self, client, now_s, compute_s, payload_mb, deadline_s, forced):
+        # ---- decide: pinned draw order --------------------------------
+        if client in self.warm:
+            gap = now_s - self.warm[client]
+            cold = not (0.0 <= gap <= IDLE_TIMEOUT_S)
+            self.margins.append(("warm_gap_lo", abs(gap)))
+            self.margins.append(("warm_gap_hi", abs(gap - IDLE_TIMEOUT_S)))
+        else:
+            cold = True
+        if cold:
+            startup = self.rng.lognormal(
+                math.log(COLD_START_MEDIAN_S), max(COLD_START_SIGMA, 1e-9)
+            )
+        else:
+            startup = WARM_OVERHEAD_S
+        # Rust `||` short-circuits: a forced crash skips the transient draw
+        crashed = forced == "crash" or self.rng.bernoulli(TRANSIENT_FAILURE_RATE)
+        if crashed:
+            perf = None
+        else:
+            if client not in self.speed:
+                self.speed[client] = self.rng.lognormal(
+                    0.0, max(CLIENT_SPEED_SIGMA, 1e-9)
+                )
+            jitter = self.rng.lognormal(0.0, max(INVOCATION_JITTER_SIGMA, 1e-9))
+            perf = (self.speed[client], jitter)
+
+        # ---- materialize ----------------------------------------------
+        if perf is None:
+            end = max(deadline_s, now_s)
+            self.warm.pop(client, None)
+            return {
+                "finished_at": end,
+                "billed_s": end - now_s,
+                "training_time_s": 0.0,
+                "outcome": "crash",
+            }
+        speed, jitter = perf
+        train_s = compute_s * speed * jitter + 2.0 * payload_mb / max(
+            NETWORK_MBPS, 1e-9
+        )
+        if forced == "slow":
+            past_deadline = max(deadline_s - now_s - startup, 0.0) * 1.25 + 1.0
+            train_s = max(train_s, past_deadline)
+        total = startup + train_s
+        self.margins.append(("fn_timeout", abs(total - FUNCTION_TIMEOUT_S)))
+        if total > FUNCTION_TIMEOUT_S:
+            end = now_s + FUNCTION_TIMEOUT_S
+            self.warm.pop(client, None)
+            return {
+                "finished_at": end,
+                "billed_s": FUNCTION_TIMEOUT_S,
+                "training_time_s": 0.0,
+                "outcome": "crash",
+            }
+        finished_at = now_s + total
+        prev = self.warm.get(client)
+        self.warm[client] = finished_at if prev is None else max(prev, finished_at)
+        self.margins.append(("deadline", abs(finished_at - deadline_s)))
+        return {
+            "finished_at": finished_at,
+            "billed_s": total,
+            "training_time_s": train_s,
+            "outcome": "ontime" if finished_at <= deadline_s else "late",
+        }
+
+
+def weight_component(produced_round, cardinality, t, tau):
+    """paramsvr weight_component (u32 saturating_sub on non-negatives)."""
+    if max(t - produced_round, 0) >= tau:
+        return None
+    damp = min(produced_round / float(max(t, 1)), 1.0)
+    return damp * float(cardinality)
+
+
+def run_continuous(
+    seed=42,
+    n_clients=12,
+    k=3,
+    rounds=4,
+    inflight_cohorts=2,
+    straggler_frac=0.25,
+    straggler_slow_frac=0.5,
+    base_train_s=25.0,
+    window_s=60.0,
+    param_count=8,
+    tau=2,
+):
+    """drive_continuous + dispatch_continuous for the Fedlesscan strategy
+    (work_fraction 1.0, StalenessAware tau, default ema_alpha/min_pts).
+
+    Returns a dict of everything tests/continuous_golden.rs pins, plus
+    the float-boundary margins for the cross-libm safety audit.
+    """
+    budget = rounds * k
+    target = k * max(inflight_cohorts, 1)
+    payload_mb = (param_count * 4) / 1e6
+    tau_gen = max(tau * k, 1)  # StalenessAware rescale (one round ~ k folds)
+    alpha0 = 0.5  # cfg.async_alpha default (preset)
+
+    rng = GaussRng(seed ^ COORD_SEED_MIX)
+    faas = Faas(seed)
+    hist = HistoryStore(NewHistory)
+    all_clients = list(range(n_clients))
+
+    # §VI-A4 forced straggler set, fixed up front (Controller::new)
+    forced = {}
+    if straggler_frac > 0.0:
+        ids = list(range(n_clients))
+        rng.shuffle(ids)
+        n_strag = rust_round(n_clients * straggler_frac)
+        for c in ids[:n_strag]:
+            forced[c] = "slow" if rng.bernoulli(straggler_slow_frac) else "crash"
+
+    events = []  # heap of (at_s, seq, client, outcome); seq pins ties
+    pending = {}  # seq -> (departed_gen, training_time_s)
+    in_flight = {}  # client -> finished_at
+    invocations = {}
+    state = {"seq": 0, "dispatched": 0}
+    generation = 0
+    total_cost = 0.0
+    window_margins = []
+
+    def expire(now_s):
+        for c in [c for c, t in in_flight.items() if not t > now_s]:
+            del in_flight[c]
+
+    def dispatch(want, now_s):
+        want = min(want, budget - state["dispatched"])
+        if want == 0:
+            return (0, 0)
+        pseudo_round = state["dispatched"] // k
+        selected = fedlesscan_select(
+            all_clients, hist, pseudo_round, rounds, want, rng, new_path=True
+        )
+        expire(now_s)
+        invoked = [c for c in selected if c not in in_flight]
+        skipped = [c for c in selected if c in in_flight]
+        gen_now = generation
+        n_invoked = 0
+        for client in invoked:
+            if state["dispatched"] >= budget:
+                break
+            hist.record_invocation(client)
+            invocations[client] = invocations.get(client, 0) + 1
+            # work_fraction is 1.0 for FedLesScan (no RNG draw)
+            compute_s = base_train_s * 1.0
+            deadline = now_s + window_s
+            inv = faas.invoke(
+                client, now_s, compute_s, payload_mb, deadline, forced.get(client)
+            )
+            nonlocal total_cost
+            total_cost += invocation_cost(inv["billed_s"], margins=faas.margins)
+            in_flight[client] = inv["finished_at"]
+            seq = state["seq"]
+            state["seq"] += 1
+            state["dispatched"] += 1
+            n_invoked += 1
+            pending[seq] = (gen_now, inv["training_time_s"])
+            heapq.heappush(
+                events, (inv["finished_at"], seq, client, inv["outcome"])
+            )
+        return (n_invoked, len(skipped))
+
+    def new_window(idx, start_s):
+        return {
+            "window": idx,
+            "start_s": start_s,
+            "end_s": start_s + window_s,
+            "dispatched": 0,
+            "completions": 0,
+            "folds": 0,
+            "crashes": 0,
+            "expired": 0,
+            "in_flight_peak": 0,
+        }
+
+    windows = []
+    win = new_window(0, 0.0)
+    failed_since_tick = []
+    completions = folds = crashes = expired = late = in_flight_skipped = 0
+    now_s = 0.0
+
+    inv0, skip0 = dispatch(target, now_s)
+    win["dispatched"] += inv0
+    in_flight_skipped += skip0
+    win["in_flight_peak"] = max(win["in_flight_peak"], len(pending))
+
+    while events:
+        at_s, seq, client, outcome = heapq.heappop(events)
+        now_s = at_s
+        while now_s >= win["end_s"]:
+            window_margins.append(abs(now_s - win["end_s"]))
+            windows.append(win)
+            start = win["end_s"]
+            win = new_window(len(windows), start)
+            win["in_flight_peak"] = len(pending)
+        window_margins.append(abs(now_s - win["end_s"]))
+        departed_gen, training_time_s = pending.pop(seq)
+        expire(now_s)
+        pseudo_round = completions // k
+        win["completions"] += 1
+        if outcome == "crash":
+            crashes += 1
+            win["crashes"] += 1
+            hist.record_failure(client, pseudo_round)
+            failed_since_tick.append(client)
+        else:
+            if outcome == "late":
+                late += 1
+            gen_now = generation
+            damp = weight_component(departed_gen + 1, 1, gen_now + 1, tau_gen)
+            if damp is None:
+                expired += 1
+                win["expired"] += 1
+                hist.record_failure(client, pseudo_round)
+                failed_since_tick.append(client)
+            else:
+                # the fold itself only moves parameters; the golden pins
+                # its bookkeeping (generation bump + history success)
+                generation = gen_now + 1
+                folds += 1
+                win["folds"] += 1
+                hist.record_success(client, pseudo_round, training_time_s)
+        completions += 1
+        if completions % k == 0:
+            hist.tick_cooldowns(failed_since_tick)
+            failed_since_tick = []
+        free = target - len(pending)
+        if free > 0:
+            inv_d, skip_d = dispatch(free, now_s)
+            win["dispatched"] += inv_d
+            in_flight_skipped += skip_d
+        win["in_flight_peak"] = max(win["in_flight_peak"], len(pending))
+    windows.append(win)
+    if failed_since_tick:
+        hist.tick_cooldowns(failed_since_tick)
+
+    return {
+        "seed": seed,
+        "windows": windows,
+        "duration_s": now_s,
+        "dispatched": state["dispatched"],
+        "completions": completions,
+        "folds": folds,
+        "crashes": crashes,
+        "expired": expired,
+        "late": late,
+        "in_flight_skipped": in_flight_skipped,
+        "final_generation": generation,
+        "total_cost": total_cost,
+        "invocations": dict(sorted(invocations.items())),
+        "faas_margins": faas.margins,
+        "window_margins": window_margins,
+    }

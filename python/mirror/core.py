@@ -82,6 +82,31 @@ class Rng:
         return out
 
 
+class GaussRng(Rng):
+    """Rng + the Box–Muller `normal()`/`lognormal()` pair (util/rng.rs),
+    including the cached spare deviate — the cache is part of the RNG
+    stream contract: every second `normal()` consumes no uniforms."""
+
+    def __init__(self, seed):
+        super().__init__(seed)
+        self.spare_normal = None
+
+    def normal(self):
+        if self.spare_normal is not None:
+            z = self.spare_normal
+            self.spare_normal = None
+            return z
+        u1 = max(self.f64(), 1e-300)
+        u2 = self.f64()
+        r = math.sqrt(-2.0 * math.log(u1))
+        theta = 2.0 * math.pi * u2
+        self.spare_normal = r * math.sin(theta)
+        return r * math.cos(theta)
+
+    def lognormal(self, mu, sigma):
+        return math.exp(mu + sigma * self.normal())
+
+
 def rust_round(x):
     """f64::round — half away from zero (non-negative domain here)."""
     assert x >= 0.0

@@ -1,0 +1,93 @@
+"""Generate the pinned constants for rust/tests/continuous_golden.rs.
+
+Runs the continuous-mode mirror (continuous.py) on the golden config —
+mnist preset shrunk to 12 clients / k=3 / 4-round budget / 2 cohorts,
+Straggler(25), Fedlesscan defaults, seed 42 — twice, asserting replay
+determinism, then audits every float comparison the timeline made for
+cross-libm safety and prints the Rust assertions.
+
+Float-boundary audit: the only libm-dependent ops in the timeline are
+exp/ln/sin/cos inside the log-normal draws (sqrt is correctly rounded
+everywhere). Any comparison whose sides could differ by an ulp across
+libms must clear a 1e-6 margin. Margins that are *exactly* 0.0 are safe
+by construction, not luck: they arise from identities whose two sides
+are the same arithmetic on the same floats (a crash billed to
+`deadline = now + window_s` landing on a window boundary that is the
+same `start + window_s` chain, or a warm-pool gap of `t - t`), so they
+compare equal bit-for-bit on every platform. If a *nonzero* margin ever
+falls under 1e-6, bump the golden seed and regenerate.
+
+Usage: cd python/mirror && python3 gen_continuous_golden.py
+"""
+
+from continuous import run_continuous
+
+MARGIN = 1e-6
+
+
+def main():
+    a = run_continuous(seed=42)
+    b = run_continuous(seed=42)
+    for key in (
+        "dispatched",
+        "completions",
+        "folds",
+        "crashes",
+        "expired",
+        "late",
+        "in_flight_skipped",
+        "final_generation",
+        "duration_s",
+        "total_cost",
+        "windows",
+        "invocations",
+    ):
+        assert a[key] == b[key], f"replay drift in {key}"
+
+    worst = {}
+    for kind, m in a["faas_margins"] + [("window", m) for m in a["window_margins"]]:
+        if m == 0.0:
+            continue  # exact identity — bit-equal on every platform
+        assert m > MARGIN, f"float boundary too close: {kind} margin {m}"
+        worst[kind] = min(worst.get(kind, float("inf")), m)
+    print("# float-boundary audit (worst nonzero margin per comparison):")
+    for kind, m in sorted(worst.items()):
+        print(f"#   {kind}: {m:.6g}")
+    zeros = sum(
+        1 for _, m in a["faas_margins"] if m == 0.0
+    ) + sum(1 for m in a["window_margins"] if m == 0.0)
+    print(f"#   exact-identity hits (safe by construction): {zeros}")
+
+    print()
+    print("// ---- paste into rust/tests/continuous_golden.rs ----")
+    print(f"assert_eq!(r.dispatched, {a['dispatched']});")
+    print(f"assert_eq!(r.completions, {a['completions']});")
+    print(f"assert_eq!(r.folds, {a['folds']});")
+    print(f"assert_eq!(r.crashes, {a['crashes']});")
+    print(f"assert_eq!(r.expired, {a['expired']});")
+    print(f"assert_eq!(r.late, {a['late']});")
+    print(f"assert_eq!(r.in_flight_skipped, {a['in_flight_skipped']});")
+    print(f"assert_eq!(r.final_generation, {a['final_generation']});")
+    print(f"assert!((r.duration_s - {a['duration_s']!r}).abs() < 1e-6);")
+    print(f"assert!((r.total_cost - {a['total_cost']!r}).abs() < 1e-9);")
+    print(f"assert_eq!(r.windows.len(), {len(a['windows'])});")
+    rows = ", ".join(
+        "({}, {}, {}, {}, {}, {})".format(
+            w["dispatched"],
+            w["completions"],
+            w["folds"],
+            w["crashes"],
+            w["expired"],
+            w["in_flight_peak"],
+        )
+        for w in a["windows"]
+    )
+    print(f"let want = [{rows}];")
+    total_inv = sum(a["invocations"].values())
+    print(f"// per-client invocation counts sum: {total_inv}")
+    print(f"// updates/s = {a['folds'] / a['duration_s']!r}")
+    print(f"// effective update ratio = {a['folds'] / a['completions']!r}")
+
+
+if __name__ == "__main__":
+    main()

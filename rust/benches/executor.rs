@@ -1,0 +1,130 @@
+//! Executor-plane benchmarks: spawn-per-round (the historical
+//! `sched::train_parallel` scoped-spawn path, kept as the bit-for-bit
+//! reference) vs the persistent [`fedless::exec::ExecutorPool`], at
+//! 8 / 64 / 512-client batch sizes, plus continuous-mode update
+//! throughput. These are the numbers behind `BENCH_executor.json`
+//! (regenerate with `cargo bench --bench executor`).
+//!
+//! The pool should match or beat spawn-per-round at every size: it pays
+//! thread creation once per experiment instead of once per round, and
+//! its work-stealing queue keeps all workers busy when per-client
+//! training times are uneven.
+
+use std::sync::Arc;
+
+use fedless::config::{ExperimentConfig, Mode, Scenario};
+use fedless::coordinator::Controller;
+use fedless::data::SynthDataset;
+use fedless::exec::{ExecutorPool, TrainJob};
+use fedless::params::ParamBlock;
+use fedless::runtime::{Backend, NativeBackend, TrainRequest};
+use fedless::sched;
+use fedless::strategy::StrategyKind;
+use fedless::util::bench::bench;
+
+fn main() {
+    println!("== executor-plane benches (native backend) ==");
+
+    let rt = NativeBackend::for_dataset("mnist").expect("native backend");
+    let mf = rt.manifest().clone();
+    let workers = sched::default_workers();
+
+    for &n_clients in &[8usize, 64, 512] {
+        let data =
+            SynthDataset::from_manifest(&mf, n_clients, 1, Default::default()).unwrap();
+        let shards: Vec<Arc<_>> = (0..n_clients)
+            .map(|c| Arc::new(data.client_data(c)))
+            .collect();
+        let p0 = rt.init_params().unwrap();
+        let zeros = vec![0f32; p0.len()];
+        let block: ParamBlock = p0.clone().into();
+
+        // spawn-per-round reference: a fresh scoped-thread fleet per call
+        let spawn_jobs: Vec<Option<TrainRequest>> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                Some(TrainRequest {
+                    params: &p0,
+                    m: &zeros,
+                    v: &zeros,
+                    t: 0.0,
+                    x: &shard.x,
+                    y: &shard.y,
+                    seed: i as i32,
+                    num_steps: mf.steps_per_round as i32,
+                    global: None,
+                })
+            })
+            .collect();
+        let spawn = bench(
+            &format!("executor/spawn-per-round {n_clients} clients ({workers} workers)"),
+            1,
+            8,
+            || sched::train_parallel(&rt, &spawn_jobs).unwrap(),
+        );
+
+        // persistent pool: fleet spawned once, batches dispatched into it
+        let pool_stats = std::thread::scope(|scope| {
+            let pool = ExecutorPool::new(scope, &rt, workers);
+            let stats = bench(
+                &format!("executor/persistent-pool {n_clients} clients ({workers} workers)"),
+                1,
+                8,
+                || {
+                    let jobs: Vec<Option<TrainJob>> = shards
+                        .iter()
+                        .enumerate()
+                        .map(|(i, shard)| {
+                            Some(TrainJob {
+                                id: 0, // run_batch assigns the slot index
+                                params: block.clone(),
+                                shard: Arc::clone(shard),
+                                seed: i as i32,
+                                num_steps: mf.steps_per_round as i32,
+                                prox: false,
+                            })
+                        })
+                        .collect();
+                    pool.run_batch(jobs).unwrap()
+                },
+            );
+            pool.shutdown().unwrap();
+            stats
+        });
+        println!(
+            "   -> pool vs spawn: {:.2}x at {n_clients} clients",
+            spawn.mean.as_secs_f64() / pool_stats.mean.as_secs_f64().max(1e-12),
+        );
+    }
+
+    // --- continuous-mode throughput -------------------------------------
+    // One full continuous experiment (mnist preset shrunk to bench size):
+    // wall-clock per run, plus the virtual-time updates/s the run reports.
+    {
+        let mk_cfg = || {
+            let mut cfg = ExperimentConfig::preset("mnist");
+            cfg.strategy = StrategyKind::Fedlesscan;
+            cfg.scenario = Scenario::Straggler(30);
+            cfg.mode = Mode::Continuous;
+            cfg.n_clients = 32;
+            cfg.clients_per_round = 8;
+            cfg.rounds = 10; // budget: 80 invocations
+            cfg.inflight_cohorts = 2;
+            cfg
+        };
+        bench("executor/continuous mnist 80-invocation budget", 1, 5, || {
+            let mut ctl = Controller::new(mk_cfg(), &rt).unwrap();
+            ctl.run_continuous().unwrap()
+        });
+        let mut ctl = Controller::new(mk_cfg(), &rt).unwrap();
+        let result = ctl.run_continuous().unwrap();
+        println!(
+            "   -> continuous: {:.3} updates/s (virtual), EUR {:.3}, {} folds / {} completions",
+            result.updates_per_s(),
+            result.effective_update_ratio(),
+            result.folds,
+            result.completions,
+        );
+    }
+}

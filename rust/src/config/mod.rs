@@ -50,6 +50,42 @@ impl FromStr for Scenario {
     }
 }
 
+/// Training loop shape: the paper's round-synchronised protocol, or the
+/// rounds-free continuous extension driven by the persistent executor
+/// plane (see `coordinator::Controller::run_continuous`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Round barrier: select k, invoke, wait for the deadline, aggregate
+    /// once (the paper's protocol; the default).
+    Rounds,
+    /// No barrier: keep `clients_per_round x inflight_cohorts` clients
+    /// in flight; each completion folds into the global immediately with
+    /// Eq. 3 staleness damping keyed to the fold generation it departed
+    /// from, and a replacement client is dispatched.
+    Continuous,
+}
+
+impl Mode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::Rounds => "rounds",
+            Mode::Continuous => "continuous",
+        }
+    }
+}
+
+impl FromStr for Mode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "rounds" => Ok(Mode::Rounds),
+            "continuous" | "cont" => Ok(Mode::Continuous),
+            other => anyhow::bail!("unknown mode {other:?}; expected rounds|continuous"),
+        }
+    }
+}
+
 /// Full configuration of one experiment run.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -96,6 +132,19 @@ pub struct ExperimentConfig {
     /// `stale_norm_clip x` the median distance of this round's fresh
     /// updates. `None` disables the filter (paper behaviour).
     pub stale_norm_clip: Option<f64>,
+    /// Training loop shape; [`Mode::Rounds`] is the paper's protocol.
+    pub mode: Mode,
+    /// Continuous mode: multiples of `clients_per_round` kept in flight
+    /// (the target concurrency is `clients_per_round * inflight_cohorts`).
+    pub inflight_cohorts: usize,
+    /// Continuous mode: base mixing rate of a single folded update
+    /// (`new = (1 - a*damp) * global + a*damp * update`, where `damp` is
+    /// the Eq. 3 staleness component for the departed generation).
+    pub async_alpha: f64,
+    /// Executor-pool size override; `None` sizes the fleet from
+    /// [`crate::params::default_workers`] (or pins a single persistent
+    /// worker for backends that opt out of `parallel_train`).
+    pub workers: Option<usize>,
 }
 
 impl ExperimentConfig {
@@ -137,6 +186,10 @@ impl ExperimentConfig {
             verbose: false,
             adaptive_clients: false,
             stale_norm_clip: None,
+            mode: Mode::Rounds,
+            inflight_cohorts: 2,
+            async_alpha: 0.5,
+            workers: None,
         }
     }
 
@@ -165,6 +218,17 @@ impl ExperimentConfig {
             "straggler_slow_frac must be a fraction"
         );
         anyhow::ensure!(self.base_train_s > 0.0, "base_train_s must be positive");
+        anyhow::ensure!(
+            self.inflight_cohorts >= 1,
+            "inflight_cohorts must be at least 1"
+        );
+        anyhow::ensure!(
+            self.async_alpha > 0.0 && self.async_alpha <= 1.0,
+            "async_alpha must be in (0, 1]"
+        );
+        if let Some(w) = self.workers {
+            anyhow::ensure!(w >= 1, "workers must be at least 1 when set");
+        }
         Ok(())
     }
 
@@ -221,6 +285,13 @@ impl ExperimentConfig {
             (
                 "stale_norm_clip",
                 self.stale_norm_clip.map_or(Json::Null, Json::Num),
+            ),
+            ("mode", Json::str(self.mode.as_str())),
+            ("inflight_cohorts", Json::num(self.inflight_cohorts as f64)),
+            ("async_alpha", Json::num(self.async_alpha)),
+            (
+                "workers",
+                self.workers.map_or(Json::Null, |w| Json::num(w as f64)),
             ),
         ])
     }
@@ -317,6 +388,20 @@ impl ExperimentConfig {
                 cfg.stale_norm_clip = Some(v.as_f64()?);
             }
         }
+        if let Some(v) = j.get_opt("mode") {
+            cfg.mode = Mode::from_str(v.as_str()?)?;
+        }
+        if let Some(v) = j.get_opt("inflight_cohorts") {
+            cfg.inflight_cohorts = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("async_alpha") {
+            cfg.async_alpha = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("workers") {
+            if !v.is_null() {
+                cfg.workers = Some(v.as_usize()?);
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -384,6 +469,44 @@ mod tests {
         assert_eq!(cfg.scenario, cfg2.scenario);
         assert_eq!(cfg.partition, cfg2.partition);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mode_roundtrip_and_validation() {
+        assert_eq!(Mode::from_str("rounds").unwrap(), Mode::Rounds);
+        assert_eq!(Mode::from_str("continuous").unwrap(), Mode::Continuous);
+        assert_eq!(Mode::from_str("cont").unwrap(), Mode::Continuous);
+        assert!(Mode::from_str("async").is_err());
+
+        let mut cfg = ExperimentConfig::preset("mnist");
+        assert_eq!(cfg.mode, Mode::Rounds);
+        cfg.mode = Mode::Continuous;
+        cfg.inflight_cohorts = 3;
+        cfg.async_alpha = 0.25;
+        cfg.workers = Some(4);
+        cfg.validate().unwrap();
+        let p = std::env::temp_dir().join(format!(
+            "fedless-cfg-mode-{}.json",
+            std::process::id()
+        ));
+        cfg.save(&p).unwrap();
+        let cfg2 = ExperimentConfig::load(&p).unwrap();
+        assert_eq!(cfg2.mode, Mode::Continuous);
+        assert_eq!(cfg2.inflight_cohorts, 3);
+        assert_eq!(cfg2.async_alpha, 0.25);
+        assert_eq!(cfg2.workers, Some(4));
+        std::fs::remove_file(&p).ok();
+
+        cfg.inflight_cohorts = 0;
+        assert!(cfg.validate().is_err());
+        cfg.inflight_cohorts = 2;
+        cfg.async_alpha = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.async_alpha = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.async_alpha = 0.5;
+        cfg.workers = Some(0);
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //!    doomed invocations skip real compute entirely;
 //! 3. local training for the surviving invocations runs for real
 //!    through the execution [`Backend`] (native MLP or one PJRT HLO
-//!    call each), in parallel across scoped worker threads;
+//!    call each), on the persistent executor plane ([`crate::exec`]):
+//!    one long-lived worker pool per experiment, work-stealing
+//!    dispatch, results re-slotted positionally;
 //! 4. completions are replayed through the virtual-clock event queue in
 //!    true arrival order: on-time updates stream straight into the
 //!    backend's O(P) aggregation fold ([`RoundAgg`], weighted by their
@@ -26,21 +28,35 @@
 //!
 //! Everything is deterministic in the experiment seed: the platform RNG
 //! is consumed in selection order (identical to the serial seed loop),
-//! worker threads write disjoint result slots, and the event queue
+//! pool completions are re-slotted by job id (so worker count and
+//! completion order never leak into results), and the event queue
 //! tie-breaks on issue order.
+//!
+//! Besides the paper's round-synchronous loop, the controller offers a
+//! rounds-free **continuous mode** ([`Controller::run_continuous`],
+//! `--mode continuous`): no round barrier — the event-driven scheduler
+//! keeps `clients_per_round × inflight_cohorts` invocations in flight,
+//! folds each completion into the global model as it lands
+//! (`new = (1-α·damp)·global + α·damp·update`, with the Eq. 3 staleness
+//! damp keyed to the fold *generation* the update departed from), and
+//! re-selects replacement clients on completion instead of on a round
+//! tick. Same seed ⇒ same event timeline, pinned by
+//! `tests/continuous_golden.rs` against a Python mirror.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::clientdb::HistoryStore;
 use crate::config::ExperimentConfig;
 use crate::cost::CostLedger;
 use crate::data::{ClientData, SynthDataset};
+use crate::exec;
 use crate::faas::{Forced, Outcome, SimulatedGcf};
-use crate::metrics::{ExperimentResult, RoundRecord};
+use crate::metrics::{ContinuousResult, ExperimentResult, RoundRecord, WindowRecord};
 use crate::params::{ParamBlock, PlaneGauge};
 use crate::paramsvr::{weight_component, ParameterServer, StaleUpdate};
-use crate::runtime::{AggregateFold, Backend, TrainRequest};
+use crate::runtime::{AggregateFold, Backend, TrainResult};
 use crate::sched;
 use crate::strategy::{Aggregation, SelectionContext, Strategy};
 use crate::util::Rng;
@@ -73,10 +89,10 @@ pub struct Controller<'rt> {
     forced: HashMap<ClientId, Forced>,
     clock_s: f64,
     invocations: HashMap<ClientId, u32>,
-    zeros: Vec<f32>,
     /// Synthesized-once cache of client shards (perf: shard synthesis is
     /// deterministic, so re-deriving it every invocation is pure waste).
-    shard_cache: HashMap<ClientId, ClientData>,
+    /// `Arc` so executor-pool jobs share the shard refcount-only.
+    shard_cache: HashMap<ClientId, Arc<ClientData>>,
     /// Adaptive clients-per-round (extension, config.adaptive_clients):
     /// starts at the configured k and tracks recent EUR.
     effective_k: usize,
@@ -130,7 +146,6 @@ impl<'rt> Controller<'rt> {
         }
 
         let init = backend.init_params()?;
-        let zeros = vec![0f32; init.len()];
         let mut gauge = PlaneGauge::default();
         gauge.add(init.len() * std::mem::size_of::<f32>());
         let strategy = cfg.strategy.build();
@@ -150,7 +165,6 @@ impl<'rt> Controller<'rt> {
             forced,
             clock_s: 0.0,
             invocations: HashMap::new(),
-            zeros,
             shard_cache: HashMap::new(),
             effective_k: cfg_k,
             client_ids: (0..n_clients).collect(),
@@ -174,26 +188,21 @@ impl<'rt> Controller<'rt> {
         &self.history
     }
 
-    /// Run the full experiment.
+    /// Run the full round-synchronous experiment: spawn the persistent
+    /// executor pool once, drive every round through it, retire it.
     pub fn run(&mut self) -> Result<ExperimentResult> {
-        let mut rounds = Vec::with_capacity(self.cfg.rounds as usize);
-        for round in 0..self.cfg.rounds {
-            let rec = self.run_round(round)?;
-            if self.cfg.verbose {
-                eprintln!(
-                    "[{} {} {}] round {:>3}: eur={:.2} dur={:>7.1}s acc={} cost=${:.4}",
-                    self.cfg.dataset,
-                    self.strategy.name(),
-                    self.cfg.scenario.label(),
-                    round,
-                    rec.eur,
-                    rec.duration_s,
-                    rec.accuracy.map_or("-".into(), |a| format!("{a:.3}")),
-                    rec.cost,
-                );
+        let backend = self.backend;
+        let workers = exec::pool_workers(backend, self.cfg.workers);
+        let rounds = std::thread::scope(|scope| {
+            let pool = exec::ExecutorPool::new(scope, backend, workers);
+            let result = self.run_rounds(&pool);
+            let shut = pool.shutdown();
+            match (result, shut) {
+                (Ok(r), Ok(())) => Ok(r),
+                (Err(e), _) => Err(e),
+                (Ok(_), Err(e)) => Err(e),
             }
-            rounds.push(rec);
-        }
+        })?;
         if let Some(path) = &self.cfg.history_path {
             self.history.save(path)?;
         }
@@ -215,7 +224,30 @@ impl<'rt> Controller<'rt> {
         })
     }
 
-    fn run_round(&mut self, round: u32) -> Result<RoundRecord> {
+    /// The round loop proper, driving every round through the pool.
+    fn run_rounds(&mut self, pool: &exec::ExecutorPool<'_>) -> Result<Vec<RoundRecord>> {
+        let mut rounds = Vec::with_capacity(self.cfg.rounds as usize);
+        for round in 0..self.cfg.rounds {
+            let rec = self.run_round(round, pool)?;
+            if self.cfg.verbose {
+                eprintln!(
+                    "[{} {} {}] round {:>3}: eur={:.2} dur={:>7.1}s acc={} cost=${:.4}",
+                    self.cfg.dataset,
+                    self.strategy.name(),
+                    self.cfg.scenario.label(),
+                    round,
+                    rec.eur,
+                    rec.duration_s,
+                    rec.accuracy.map_or("-".into(), |a| format!("{a:.3}")),
+                    rec.cost,
+                );
+            }
+            rounds.push(rec);
+        }
+        Ok(rounds)
+    }
+
+    fn run_round(&mut self, round: u32, pool: &exec::ExecutorPool<'_>) -> Result<RoundRecord> {
         let round_start = self.clock_s;
         let deadline = round_start + self.cfg.round_timeout_s();
         let cost_before = self.ledger.total;
@@ -282,44 +314,41 @@ impl<'rt> Controller<'rt> {
             });
         }
 
-        // 4. real compute, in parallel across worker threads, only for
+        // 4. real compute through the persistent executor pool, only for
         //    invocations that will deliver an update — crashed
         //    invocations skip training entirely (their work would be
         //    thrown away; the platform still billed them above).
+        //    `run_batch` re-slots completions positionally, so the
+        //    worker count and completion order never leak into results.
         for p in &plans {
             if p.inv.outcome != Outcome::Crash && !self.shard_cache.contains_key(&p.client) {
                 self.shard_cache
-                    .insert(p.client, self.data.client_data(p.client));
+                    .insert(p.client, Arc::new(self.data.client_data(p.client)));
             }
         }
         // Zero-copy prox anchor: the round-start global is one shared
-        // `ParamBlock` snapshot — every TrainRequest's `params` and the
-        // FedProx anchor read the same allocation (the seed deep-copied
-        // the anchor into a second full buffer every prox round).
+        // `ParamBlock` snapshot — every job's `params` and the FedProx
+        // anchor read the same allocation (the seed deep-copied the
+        // anchor into a second full buffer every prox round).
         let global_now: ParamBlock = self.server.global_block();
         let use_prox = self.strategy.uses_prox();
-        let jobs: Vec<Option<TrainRequest>> = plans
+        let jobs: Vec<Option<exec::TrainJob>> = plans
             .iter()
             .map(|p| {
                 if p.inv.outcome == Outcome::Crash {
                     return None;
                 }
-                let shard = &self.shard_cache[&p.client];
-                Some(TrainRequest {
-                    params: global_now.as_slice(),
-                    m: &self.zeros,
-                    v: &self.zeros,
-                    t: 0.0,
-                    x: &shard.x,
-                    y: &shard.y,
+                Some(exec::TrainJob {
+                    id: 0, // run_batch assigns the slot index
+                    params: global_now.clone(),
+                    shard: Arc::clone(&self.shard_cache[&p.client]),
                     seed: (round as i32) * 100_003 + p.client as i32,
                     num_steps: p.num_steps,
-                    global: use_prox.then(|| global_now.as_slice()),
+                    prox: use_prox,
                 })
             })
             .collect();
-        let mut results = sched::train_parallel(self.backend, &jobs)?;
-        drop(jobs);
+        let mut results = pool.run_batch(jobs)?;
         let trained = results.iter().flatten().count();
         self.gauge.add(trained * p_bytes);
 
@@ -552,6 +581,413 @@ impl<'rt> Controller<'rt> {
             agg_wall_s,
             param_plane_peak_bytes: self.gauge.peak(),
         })
+    }
+
+    /// Run the rounds-free **continuous mode** experiment
+    /// (`--mode continuous`): spawn the persistent executor pool, keep
+    /// `clients_per_round × inflight_cohorts` invocations in flight,
+    /// fold each completion into the global as it lands, and re-select
+    /// replacement clients on completion. The total invocation budget
+    /// is `rounds × clients_per_round`, so continuous and round mode
+    /// spend comparable platform work for one config.
+    pub fn run_continuous(&mut self) -> Result<ContinuousResult> {
+        let backend = self.backend;
+        let workers = exec::pool_workers(backend, self.cfg.workers);
+        let result = std::thread::scope(|scope| {
+            let pool = exec::ExecutorPool::new(scope, backend, workers);
+            let result = self.drive_continuous(&pool);
+            let shut = pool.shutdown();
+            match (result, shut) {
+                (Ok(r), Ok(())) => Ok(r),
+                (Err(e), _) => Err(e),
+                (Ok(_), Err(e)) => Err(e),
+            }
+        })?;
+        if let Some(path) = &self.cfg.history_path {
+            self.history.save(path)?;
+        }
+        Ok(result)
+    }
+
+    /// The continuous event loop. Determinism contract (pinned by
+    /// `tests/continuous_golden.rs` against the Python mirror in
+    /// `python/mirror/continuous.py`):
+    ///
+    /// * invocations are dispatched in selection order, consuming the
+    ///   platform RNG exactly as round mode does;
+    /// * each invocation's deadline is `dispatch + round_timeout_s()`
+    ///   (finishing later ⇒ `Late`, which still folds — there is no
+    ///   round barrier to miss);
+    /// * completions replay through the [`sched::EventQueue`] with its
+    ///   pinned `(arrival, issue-seq)` ordering;
+    /// * staleness is keyed to **fold generations**: an update that
+    ///   departed from generation `g` and lands at generation `t` gets
+    ///   Eq. 3 damp `(g+1)/(t+1)` and expires when `t - g ≥ τ·k` (the
+    ///   per-round τ rescaled to per-completion granularity; a
+    ///   synchronous strategy never expires, it only damps);
+    /// * metrics are windowed by `round_timeout_s()` so updates/s and
+    ///   the effective update ratio are comparable across modes.
+    fn drive_continuous(&mut self, pool: &exec::ExecutorPool<'_>) -> Result<ContinuousResult> {
+        let mf = self.backend.manifest();
+        let p_bytes = mf.param_count * std::mem::size_of::<f32>();
+        let k = self.cfg.clients_per_round.max(1);
+        let budget = self.cfg.rounds as usize * k;
+        let target = k * self.cfg.inflight_cohorts.max(1);
+        let window_s = self.cfg.round_timeout_s();
+        // Rescale the per-round staleness bound to per-completion fold
+        // generations: one round ≈ k folds.
+        let tau_gen = match self.strategy.aggregation() {
+            Aggregation::Synchronous => u32::MAX,
+            Aggregation::StalenessAware { tau, .. } => {
+                tau.saturating_mul(k as u32).max(1)
+            }
+        };
+        let alpha0 = self.cfg.async_alpha;
+        self.gauge.begin_window();
+
+        let mut st = ContState {
+            queue: sched::EventQueue::new(),
+            pending: HashMap::new(),
+            seq: 0,
+            dispatched: 0,
+        };
+        let mut results: HashMap<usize, TrainResult> = HashMap::new();
+        let mut windows: Vec<WindowRecord> = Vec::new();
+        let mut win = WindowAcc::new(0, 0.0, window_s);
+        let mut failed_since_tick: Vec<ClientId> = Vec::new();
+        let (mut completions, mut folds, mut crashes) = (0usize, 0usize, 0usize);
+        let (mut expired, mut late, mut in_flight_skipped) = (0usize, 0usize, 0usize);
+        let mut agg_wall_s = 0.0;
+        let mut now_s = 0.0;
+
+        let d = self.dispatch_continuous(pool, &mut st, target, now_s, budget, window_s)?;
+        win.dispatched += d.invoked;
+        in_flight_skipped += d.skipped;
+        win.in_flight_peak = win.in_flight_peak.max(st.pending.len());
+
+        while let Some(ev) = st.queue.pop() {
+            now_s = ev.at_s;
+            // close metric windows the virtual clock has passed (empty
+            // windows are recorded too — a stall is a data point)
+            while now_s >= win.end_s {
+                windows.push(win.finish());
+                let start = win.end_s;
+                win = WindowAcc::new(windows.len() as u32, start, start + window_s);
+                win.in_flight_peak = st.pending.len();
+            }
+            let p = st
+                .pending
+                .remove(&ev.seq)
+                .expect("completion event without a pending invocation");
+            self.in_flight.expire(now_s);
+            let pseudo_round = (completions / k) as u32;
+            win.completions += 1;
+            match ev.outcome {
+                Outcome::Crash => {
+                    crashes += 1;
+                    win.crashes += 1;
+                    self.history.record_failure(ev.client, pseudo_round);
+                    failed_since_tick.push(ev.client);
+                }
+                Outcome::OnTime | Outcome::Late => {
+                    if ev.outcome == Outcome::Late {
+                        late += 1;
+                    }
+                    let result = take_result(pool, &mut results, ev.seq)?;
+                    self.gauge.add(p_bytes); // trained update materializes
+                    let gen_now = self.server.generation();
+                    // Eq. 3 damp on generation staleness (cardinality 1:
+                    // shards are uniform and α carries the mixing rate)
+                    match weight_component(p.departed_gen + 1, 1, gen_now + 1, tau_gen) {
+                        None => {
+                            // τ-expired: the global moved too far since
+                            // this update departed — discard, count as a
+                            // failure (Alg. 1's write-off)
+                            expired += 1;
+                            win.expired += 1;
+                            self.history.record_failure(ev.client, pseudo_round);
+                            failed_since_tick.push(ev.client);
+                            self.gauge.sub(p_bytes);
+                        }
+                        Some(damp) => {
+                            let alpha = (alpha0 * damp).clamp(0.0, 1.0) as f32;
+                            let global_now = self.server.global_block();
+                            let mut fold = self.backend.begin_fold(2)?;
+                            fold.accumulate(global_now.as_slice(), 1.0 - alpha)?;
+                            fold.accumulate(&result.params, alpha)?;
+                            let held = fold.held_bytes();
+                            self.gauge.add(held);
+                            let (new_global, wall) = fold.finish()?;
+                            agg_wall_s += wall.as_secs_f64();
+                            self.gauge.add(p_bytes); // new snapshot
+                            self.server.set_global(new_global.into(), gen_now + 1);
+                            self.gauge.sub(held);
+                            self.gauge.sub(p_bytes); // previous global
+                            self.gauge.sub(p_bytes); // update released
+                            folds += 1;
+                            win.folds += 1;
+                            self.history.record_success(
+                                ev.client,
+                                pseudo_round,
+                                p.training_time_s,
+                            );
+                        }
+                    }
+                }
+            }
+            completions += 1;
+            // cooldown decay at round-equivalent cadence (every k
+            // completions ≈ one round of platform work)
+            if completions % k == 0 {
+                self.history.tick_cooldowns(&failed_since_tick);
+                failed_since_tick.clear();
+            }
+            let free = target.saturating_sub(st.pending.len());
+            if free > 0 {
+                let d =
+                    self.dispatch_continuous(pool, &mut st, free, now_s, budget, window_s)?;
+                win.dispatched += d.invoked;
+                in_flight_skipped += d.skipped;
+            }
+            win.in_flight_peak = win.in_flight_peak.max(st.pending.len());
+        }
+        windows.push(win.finish());
+        if !failed_since_tick.is_empty() {
+            self.history.tick_cooldowns(&failed_since_tick);
+        }
+        self.clock_s = now_s;
+
+        let ev = self.backend.evaluate(
+            self.server.global().as_slice(),
+            &self.eval_set.x,
+            &self.eval_set.y,
+        )?;
+        Ok(ContinuousResult {
+            dataset: self.cfg.dataset.clone(),
+            strategy: self.strategy.name().to_string(),
+            scenario: self.cfg.scenario.label(),
+            seed: self.cfg.seed,
+            windows,
+            duration_s: now_s,
+            dispatched: st.dispatched,
+            completions,
+            folds,
+            crashes,
+            expired,
+            late,
+            in_flight_skipped,
+            final_generation: self.server.generation(),
+            final_accuracy: ev.accuracy,
+            total_cost: self.ledger.total,
+            agg_wall_s,
+            invocations: self.invocations.clone(),
+        })
+    }
+
+    /// Select and dispatch up to `want` replacement invocations at
+    /// virtual time `now_s` (bounded by the remaining budget). Mirrors
+    /// round-mode dispatch draw-for-draw: record_invocation →
+    /// work_fraction → platform invoke → bill, in selection order.
+    fn dispatch_continuous(
+        &mut self,
+        pool: &exec::ExecutorPool<'_>,
+        st: &mut ContState,
+        want: usize,
+        now_s: f64,
+        budget: usize,
+        window_s: f64,
+    ) -> Result<Dispatched> {
+        let want = want.min(budget.saturating_sub(st.dispatched));
+        if want == 0 {
+            return Ok(Dispatched {
+                invoked: 0,
+                skipped: 0,
+            });
+        }
+        let k = self.cfg.clients_per_round.max(1);
+        let pseudo_round = (st.dispatched / k) as u32;
+        let selected = {
+            let ctx = SelectionContext {
+                round: pseudo_round,
+                max_rounds: self.cfg.rounds,
+                clients_per_round: want,
+                all_clients: &self.client_ids,
+                history: &self.history,
+            };
+            self.strategy.select_replacements(&ctx, &mut self.rng)
+        };
+        self.in_flight.expire(now_s);
+        let (invoked, skipped) = sched::split_in_flight(&selected, &self.in_flight);
+        let mf = self.backend.manifest();
+        let global_now = self.server.global_block();
+        let gen_now = self.server.generation();
+        let use_prox = self.strategy.uses_prox();
+        let mut n_invoked = 0usize;
+        for &client in &invoked {
+            if st.dispatched >= budget {
+                break;
+            }
+            self.history.record_invocation(client);
+            *self.invocations.entry(client).or_insert(0) += 1;
+            let forced = self.forced.get(&client).copied();
+            let frac = self.strategy.work_fraction(client, &mut self.rng);
+            let num_steps = ((mf.steps_per_round as f64 * frac).round() as i32).max(1);
+            let compute_s = self.cfg.base_train_s * frac;
+            // per-invocation deadline: one round-timeout of grace; a
+            // later finish is merely Late (it still folds)
+            let deadline = now_s + window_s;
+            let inv = self.faas.invoke(
+                client,
+                now_s,
+                compute_s,
+                mf.payload_mb(),
+                deadline,
+                forced,
+            );
+            self.ledger.bill(inv.billed_s, self.cfg.faas.memory_mb);
+            self.in_flight.track(client, inv.finished_at);
+            let seq = st.seq;
+            st.seq += 1;
+            st.dispatched += 1;
+            n_invoked += 1;
+            if inv.outcome != Outcome::Crash {
+                if !self.shard_cache.contains_key(&client) {
+                    self.shard_cache
+                        .insert(client, Arc::new(self.data.client_data(client)));
+                }
+                pool.submit(exec::TrainJob {
+                    id: seq,
+                    params: global_now.clone(),
+                    shard: Arc::clone(&self.shard_cache[&client]),
+                    seed: (seq as i32) * 100_003 + client as i32,
+                    num_steps,
+                    prox: use_prox,
+                })?;
+            }
+            st.pending.insert(
+                seq,
+                PendingInv {
+                    departed_gen: gen_now,
+                    training_time_s: inv.training_time_s,
+                },
+            );
+            st.queue.push(sched::CompletionEvent {
+                at_s: inv.finished_at,
+                seq,
+                client,
+                outcome: inv.outcome,
+            });
+        }
+        Ok(Dispatched {
+            invoked: n_invoked,
+            skipped: skipped.len(),
+        })
+    }
+}
+
+/// Continuous-mode dispatch bookkeeping.
+struct ContState {
+    queue: sched::EventQueue,
+    /// seq → in-flight invocation metadata (crashes included: they hold
+    /// an in-flight slot until their event fires).
+    pending: HashMap<usize, PendingInv>,
+    /// Monotonic invocation sequence number (job id + event tie-break).
+    seq: usize,
+    /// Total invocations dispatched (the budget counter).
+    dispatched: usize,
+}
+
+/// What the continuous driver remembers about one in-flight invocation.
+struct PendingInv {
+    /// Fold generation of the global snapshot the client departed with.
+    departed_gen: u32,
+    training_time_s: f64,
+}
+
+/// Per-dispatch summary.
+struct Dispatched {
+    invoked: usize,
+    skipped: usize,
+}
+
+/// One metric window being accumulated (continuous mode records
+/// per-unit-time rows instead of per-round rows).
+struct WindowAcc {
+    window: u32,
+    start_s: f64,
+    end_s: f64,
+    dispatched: usize,
+    completions: usize,
+    folds: usize,
+    crashes: usize,
+    expired: usize,
+    in_flight_peak: usize,
+}
+
+impl WindowAcc {
+    fn new(window: u32, start_s: f64, end_s: f64) -> Self {
+        Self {
+            window,
+            start_s,
+            end_s,
+            dispatched: 0,
+            completions: 0,
+            folds: 0,
+            crashes: 0,
+            expired: 0,
+            in_flight_peak: 0,
+        }
+    }
+
+    fn finish(&self) -> WindowRecord {
+        let dur = self.end_s - self.start_s;
+        WindowRecord {
+            window: self.window,
+            start_s: self.start_s,
+            end_s: self.end_s,
+            dispatched: self.dispatched,
+            completions: self.completions,
+            folds: self.folds,
+            crashes: self.crashes,
+            expired: self.expired,
+            updates_per_s: if dur > 0.0 {
+                self.folds as f64 / dur
+            } else {
+                0.0
+            },
+            effective_update_ratio: if self.completions > 0 {
+                self.folds as f64 / self.completions as f64
+            } else {
+                0.0
+            },
+            in_flight_peak: self.in_flight_peak,
+        }
+    }
+}
+
+/// Pull completions off the pool until `seq`'s result arrives, parking
+/// out-of-order results for later events. Never hangs: a job was
+/// submitted for every non-crash event, and worker panics come back as
+/// errors, not silence.
+fn take_result(
+    pool: &exec::ExecutorPool<'_>,
+    results: &mut HashMap<usize, TrainResult>,
+    seq: usize,
+) -> Result<TrainResult> {
+    if let Some(r) = results.remove(&seq) {
+        return Ok(r);
+    }
+    loop {
+        let done = pool.next_done()?;
+        match done.result {
+            Ok(r) => {
+                if done.id == seq {
+                    return Ok(r);
+                }
+                results.insert(done.id, r);
+            }
+            Err(e) => anyhow::bail!("train job {}: {e}", done.id),
+        }
     }
 }
 

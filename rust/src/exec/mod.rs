@@ -1,0 +1,527 @@
+//! The persistent executor plane: a long-lived, channel-based training
+//! worker pool replacing the per-round scoped spawn/join fan-out.
+//!
+//! Motivation (ROADMAP open item #1): `sched::train_parallel` pays a
+//! full thread spawn/join cycle every round, and — more importantly —
+//! couples *compute* lifetime to *round* lifetime, which makes a
+//! rounds-free (continuous) training mode impossible. The pool here
+//! decouples them:
+//!
+//! * a **fixed worker fleet** is spawned once per experiment (sized by
+//!   [`pool_workers`]: CLI/config override, else
+//!   [`sched::default_workers`](crate::sched::default_workers), else 1
+//!   for backends that opt out of fan-out via
+//!   [`Backend::parallel_train`](crate::runtime::Backend::parallel_train));
+//! * jobs are **work-stealing dispatched**: all workers pull from one
+//!   shared `Mutex<mpsc::Receiver<TrainJob>>`, so a slow job never
+//!   blocks the queue behind a fixed pre-partition;
+//! * completions stream back over a second mpsc channel **in
+//!   completion order**, tagged with the job id, so the coordinator can
+//!   fold them as they land (continuous mode) or re-slot them
+//!   positionally (round mode);
+//! * each worker runs [`Backend::init_worker`] once before accepting
+//!   jobs — the hook that lets the PJRT backend warm its thread-local
+//!   compiled engines exactly once per worker thread, while the
+//!   `Sync`-shared `NativeBackend` keeps a no-op;
+//! * a worker **panic mid-`train_round` is caught** and surfaced as a
+//!   per-job error (never a hang), and [`ExecutorPool::shutdown`]
+//!   drains/abandons queued jobs and joins every worker.
+//!
+//! Determinism: the pool moves *where* training computes, never *what*
+//! is computed — `train_round` is a pure function of its request, and
+//! round mode re-slots results by job id — so round-mode outputs are
+//! byte-identical to the scoped-thread path for every worker count.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{Scope, ScopedJoinHandle};
+
+use crate::data::ClientData;
+use crate::params::ParamBlock;
+use crate::runtime::{Backend, TrainRequest, TrainResult};
+use crate::Result;
+
+/// One unit of training work: everything `train_round` needs, owned (or
+/// refcounted), so the job can cross a channel into any worker thread.
+#[derive(Clone)]
+pub struct TrainJob {
+    /// Caller-chosen completion tag. Round mode overwrites it with the
+    /// positional slot index (see [`ExecutorPool::run_batch`]);
+    /// continuous mode uses the invocation sequence number.
+    pub id: usize,
+    /// Global snapshot the client trains from (refcount bump, no copy).
+    pub params: ParamBlock,
+    /// The client's local shard (shared with the coordinator's cache).
+    pub shard: Arc<ClientData>,
+    pub seed: i32,
+    pub num_steps: i32,
+    /// FedProx: anchor the proximal term to `params` (same snapshot the
+    /// client departs from — refcount-only, no extra param-plane bytes).
+    pub prox: bool,
+}
+
+/// One completion, tagged with the job id it answers.
+pub struct TrainDone {
+    pub id: usize,
+    /// `Err` carries a rendered message (worker panics included) rather
+    /// than `anyhow::Error` so it stays `Send` across the channel
+    /// unconditionally.
+    pub result: std::result::Result<TrainResult, String>,
+}
+
+/// The persistent training worker pool. Lives inside a
+/// `std::thread::scope` so workers may borrow the backend; construct
+/// with [`ExecutorPool::new`], retire with [`ExecutorPool::shutdown`].
+pub struct ExecutorPool<'scope> {
+    job_tx: Option<mpsc::Sender<TrainJob>>,
+    done_rx: mpsc::Receiver<TrainDone>,
+    handles: Vec<ScopedJoinHandle<'scope, ()>>,
+    abandon: Arc<AtomicBool>,
+    workers: usize,
+}
+
+/// Render a caught panic payload for the per-job error message.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl<'scope> ExecutorPool<'scope> {
+    /// Spawn the worker fleet inside `scope`. Workers immediately run
+    /// [`Backend::init_worker`] (an init failure is reported lazily, as
+    /// the error result of every job that worker pulls) and then block
+    /// on the shared job queue.
+    pub fn new<'env: 'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        backend: &'env dyn Backend,
+        workers: usize,
+    ) -> ExecutorPool<'scope> {
+        let workers = workers.max(1);
+        let (job_tx, job_rx) = mpsc::channel::<TrainJob>();
+        let (done_tx, done_rx) = mpsc::channel::<TrainDone>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let abandon = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let job_rx = Arc::clone(&job_rx);
+            let done_tx = done_tx.clone();
+            let abandon = Arc::clone(&abandon);
+            handles.push(scope.spawn(move || {
+                worker_loop(backend, &job_rx, &done_tx, &abandon)
+            }));
+        }
+        drop(done_tx);
+        ExecutorPool {
+            job_tx: Some(job_tx),
+            done_rx,
+            handles,
+            abandon,
+            workers,
+        }
+    }
+
+    /// Number of worker threads in the fleet.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue one job; some worker will pull it and eventually answer
+    /// with a [`TrainDone`] carrying `job.id`.
+    pub fn submit(&self, job: TrainJob) -> Result<()> {
+        let tx = self
+            .job_tx
+            .as_ref()
+            .expect("submit after shutdown");
+        tx.send(job)
+            .map_err(|_| anyhow::anyhow!("executor workers exited unexpectedly"))
+    }
+
+    /// Block for the next completion, in completion order.
+    pub fn next_done(&self) -> Result<TrainDone> {
+        self.done_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor workers exited unexpectedly"))
+    }
+
+    /// Round-mode batch: run every `Some` job and return results in the
+    /// same slots (`None` jobs — crashed invocations — stay `None`).
+    /// Job ids are overwritten with the slot index, so `run_batch` must
+    /// not be interleaved with manual [`submit`](Self::submit) /
+    /// [`next_done`](Self::next_done) traffic. On failure the
+    /// lowest-slot error wins (matching the scoped-thread path's
+    /// lowest-index contract).
+    pub fn run_batch(&self, jobs: Vec<Option<TrainJob>>) -> Result<Vec<Option<TrainResult>>> {
+        let mut slots: Vec<Option<TrainResult>> = Vec::new();
+        slots.resize_with(jobs.len(), || None);
+        let mut expected = 0usize;
+        for (i, job) in jobs.into_iter().enumerate() {
+            if let Some(mut job) = job {
+                job.id = i;
+                self.submit(job)?;
+                expected += 1;
+            }
+        }
+        let mut first_err: Option<(usize, String)> = None;
+        for _ in 0..expected {
+            let done = self.next_done()?;
+            match done.result {
+                Ok(r) => slots[done.id] = Some(r),
+                Err(e) => {
+                    if first_err.as_ref().map_or(true, |(i, _)| done.id < *i) {
+                        first_err = Some((done.id, e));
+                    }
+                }
+            }
+        }
+        if let Some((i, e)) = first_err {
+            anyhow::bail!("train job {i}: {e}");
+        }
+        Ok(slots)
+    }
+
+    /// Graceful shutdown: abandon still-queued jobs (workers ack them
+    /// with an error instead of training), close the queue, join every
+    /// worker. Errs if any worker thread itself died (which the
+    /// catch_unwind in the worker loop should make impossible).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.abandon.store(true, Ordering::SeqCst);
+        drop(self.job_tx.take()); // closes the queue; workers drain out
+        let mut panicked = 0usize;
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        anyhow::ensure!(
+            panicked == 0,
+            "{panicked} executor worker thread(s) panicked"
+        );
+        Ok(())
+    }
+}
+
+/// One worker: init the backend's thread-local state, then pull jobs
+/// until the queue closes. Panics inside `train_round` are caught and
+/// reported as that job's error; the worker itself survives.
+fn worker_loop(
+    backend: &dyn Backend,
+    job_rx: &Mutex<mpsc::Receiver<TrainJob>>,
+    done_tx: &mpsc::Sender<TrainDone>,
+    abandon: &AtomicBool,
+) {
+    let init_err = backend
+        .init_worker()
+        .err()
+        .map(|e| format!("worker init failed: {e:#}"));
+    // Workers own their (all-zero) optimizer-state scratch: clients are
+    // stateless between rounds, per the paper's serverless model.
+    let zeros = vec![0f32; backend.manifest().param_count];
+    loop {
+        // lock scoped to the recv: release before training so other
+        // workers can steal the next job mid-compute
+        let job = {
+            let rx = match job_rx.lock() {
+                Ok(rx) => rx,
+                Err(_) => return, // a sibling panicked holding the lock
+            };
+            match rx.recv() {
+                Ok(job) => job,
+                Err(_) => return, // queue closed: clean exit
+            }
+        };
+        let result = if abandon.load(Ordering::SeqCst) {
+            Err("executor pool shut down before the job ran".to_string())
+        } else if let Some(e) = &init_err {
+            Err(e.clone())
+        } else {
+            let req = TrainRequest {
+                params: job.params.as_slice(),
+                m: &zeros,
+                v: &zeros,
+                t: 0.0,
+                x: &job.shard.x,
+                y: &job.shard.y,
+                seed: job.seed,
+                num_steps: job.num_steps,
+                global: if job.prox { Some(&job.params[..]) } else { None },
+            };
+            match catch_unwind(AssertUnwindSafe(|| backend.train_round(&req))) {
+                Ok(Ok((r, _wall))) => Ok(r),
+                Ok(Err(e)) => Err(format!("{e:#}")),
+                Err(payload) => Err(format!(
+                    "worker panicked mid-train_round: {}",
+                    panic_message(payload)
+                )),
+            }
+        };
+        // send failure just means the coordinator stopped listening
+        // (shutdown with unread completions) — never panic the worker
+        let _ = done_tx.send(TrainDone { id: job.id, result });
+    }
+}
+
+/// Pool sizing: explicit override (CLI `--workers` / config, clamped
+/// ≥ 1) wins; otherwise one worker per core for backends that fan out
+/// ([`Backend::parallel_train`]), or a single persistent worker for
+/// backends with thread-local engine state (PJRT compiles once in that
+/// worker via [`Backend::init_worker`] and stays warm).
+pub fn pool_workers(backend: &dyn Backend, override_workers: Option<usize>) -> usize {
+    match override_workers {
+        Some(w) => w.max(1),
+        None => {
+            if backend.parallel_train() {
+                crate::sched::default_workers()
+            } else {
+                1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Features;
+    use crate::runtime::manifest::{Entrypoint, Manifest};
+    use crate::runtime::{AggregateFold, BufferedFold, EvalResult};
+    use std::time::Duration;
+
+    /// Tiny in-module backend with failure-injection knobs.
+    struct TestBackend {
+        mf: Manifest,
+        panic_on_seed: Option<i32>,
+        fail_init_worker: bool,
+    }
+
+    impl TestBackend {
+        fn new() -> Self {
+            let ep = |f: &str| Entrypoint {
+                file: f.into(),
+                inputs: vec![],
+                outputs: vec![],
+            };
+            let mf = Manifest {
+                name: "mnist".into(),
+                scale: "mock".into(),
+                param_count: 4,
+                num_classes: 2,
+                input_shape: vec![2],
+                input_dtype: "f32".into(),
+                shard_size: 2,
+                batch_size: 2,
+                local_epochs: 1,
+                steps_per_round: 2,
+                optimizer: "sgd".into(),
+                lr: 0.1,
+                prox_mu: 0.0,
+                eval_size: 2,
+                eval_batch: 2,
+                k_max: 64,
+                seq_len: None,
+                flops_per_round: 1,
+                entrypoints: ["train", "train_prox", "eval", "aggregate"]
+                    .iter()
+                    .map(|n| (n.to_string(), ep(n)))
+                    .collect(),
+                init_file: "unused".into(),
+                init_sha256: "unused".into(),
+                init_seed: 0,
+            };
+            Self {
+                mf,
+                panic_on_seed: None,
+                fail_init_worker: false,
+            }
+        }
+    }
+
+    impl Backend for TestBackend {
+        fn backend_name(&self) -> &'static str {
+            "exec-test"
+        }
+
+        fn manifest(&self) -> &Manifest {
+            &self.mf
+        }
+
+        fn init_params(&self) -> Result<Vec<f32>> {
+            Ok(vec![0.0; self.mf.param_count])
+        }
+
+        fn init_worker(&self) -> Result<()> {
+            anyhow::ensure!(!self.fail_init_worker, "injected init failure");
+            Ok(())
+        }
+
+        fn train_round(&self, req: &TrainRequest) -> Result<(TrainResult, Duration)> {
+            if self.panic_on_seed == Some(req.seed) {
+                panic!("injected panic for seed {}", req.seed);
+            }
+            let params: Vec<f32> =
+                req.params.iter().map(|p| p + req.seed as f32).collect();
+            let n = params.len();
+            Ok((
+                TrainResult {
+                    params,
+                    m: vec![0.0; n],
+                    v: vec![0.0; n],
+                    t: req.num_steps as f32,
+                    loss: 0.5,
+                },
+                Duration::from_millis(1),
+            ))
+        }
+
+        fn evaluate(&self, _p: &[f32], _x: &Features, _y: &[i32]) -> Result<EvalResult> {
+            Ok(EvalResult {
+                loss: 1.0,
+                accuracy: 0.5,
+            })
+        }
+
+        fn aggregate(
+            &self,
+            updates: &[&[f32]],
+            weights: &[f32],
+        ) -> Result<(Vec<f32>, Duration)> {
+            let mut out = vec![0.0f32; updates[0].len()];
+            for (u, &w) in updates.iter().zip(weights) {
+                for (o, &x) in out.iter_mut().zip(u.iter()) {
+                    *o += w * x;
+                }
+            }
+            Ok((out, Duration::from_millis(1)))
+        }
+
+        fn begin_fold(&self, expected_k: usize) -> Result<Box<dyn AggregateFold + '_>> {
+            Ok(Box::new(BufferedFold::new(self, expected_k)))
+        }
+    }
+
+    fn shard() -> Arc<ClientData> {
+        Arc::new(ClientData {
+            x: Features::F32(vec![0.0; 4]),
+            y: vec![0, 1],
+        })
+    }
+
+    fn job(id: usize, seed: i32) -> TrainJob {
+        TrainJob {
+            id,
+            params: ParamBlock::from(vec![1.0f32; 4]),
+            shard: shard(),
+            seed,
+            num_steps: 2,
+            prox: false,
+        }
+    }
+
+    #[test]
+    fn pool_matches_inline_train_round() {
+        let be = TestBackend::new();
+        let jobs: Vec<Option<TrainJob>> =
+            (0..8).map(|i| Some(job(0, i as i32 + 1))).collect();
+        let inline: Vec<Vec<f32>> = (0..8)
+            .map(|i| {
+                let j = job(0, i as i32 + 1);
+                let req = TrainRequest {
+                    params: j.params.as_slice(),
+                    m: &[0.0; 4],
+                    v: &[0.0; 4],
+                    t: 0.0,
+                    x: &j.shard.x,
+                    y: &j.shard.y,
+                    seed: j.seed,
+                    num_steps: j.num_steps,
+                    global: None,
+                };
+                be.train_round(&req).unwrap().0.params
+            })
+            .collect();
+        std::thread::scope(|scope| {
+            let pool = ExecutorPool::new(scope, &be, 3);
+            let results = pool.run_batch(jobs).unwrap();
+            for (i, r) in results.iter().enumerate() {
+                assert_eq!(r.as_ref().unwrap().params, inline[i], "slot {i}");
+            }
+            pool.shutdown().unwrap();
+        });
+    }
+
+    #[test]
+    fn none_jobs_keep_their_slots() {
+        let be = TestBackend::new();
+        std::thread::scope(|scope| {
+            let pool = ExecutorPool::new(scope, &be, 2);
+            let jobs = vec![Some(job(0, 1)), None, Some(job(0, 3)), None];
+            let results = pool.run_batch(jobs).unwrap();
+            assert!(results[0].is_some());
+            assert!(results[1].is_none());
+            assert!(results[2].is_some());
+            assert!(results[3].is_none());
+            pool.shutdown().unwrap();
+        });
+    }
+
+    #[test]
+    fn worker_panic_surfaces_error_not_hang() {
+        let mut be = TestBackend::new();
+        be.panic_on_seed = Some(2);
+        std::thread::scope(|scope| {
+            let pool = ExecutorPool::new(scope, &be, 2);
+            let jobs: Vec<Option<TrainJob>> =
+                (0..4).map(|i| Some(job(0, i as i32 + 1))).collect();
+            let err = pool.run_batch(jobs).unwrap_err().to_string();
+            assert!(err.contains("panicked"), "unexpected error: {err}");
+            // the worker caught the panic and stays serviceable
+            let ok = pool.run_batch(vec![Some(job(0, 5))]).unwrap();
+            assert!(ok[0].is_some());
+            pool.shutdown().unwrap();
+        });
+    }
+
+    #[test]
+    fn shutdown_drains_with_jobs_still_queued() {
+        let be = TestBackend::new();
+        std::thread::scope(|scope| {
+            let pool = ExecutorPool::new(scope, &be, 1);
+            // flood the single worker, then shut down without reading
+            // any completion: abandoned jobs are acked (not trained),
+            // the queue closes, and the join must not hang
+            for i in 0..64 {
+                pool.submit(job(i, i as i32 + 1)).unwrap();
+            }
+            pool.shutdown().unwrap();
+        });
+    }
+
+    #[test]
+    fn init_worker_failure_fails_jobs() {
+        let mut be = TestBackend::new();
+        be.fail_init_worker = true;
+        std::thread::scope(|scope| {
+            let pool = ExecutorPool::new(scope, &be, 2);
+            let err = pool
+                .run_batch(vec![Some(job(0, 1))])
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("init"), "unexpected error: {err}");
+            pool.shutdown().unwrap();
+        });
+    }
+
+    #[test]
+    fn pool_workers_sizing() {
+        let be = TestBackend::new();
+        assert_eq!(pool_workers(&be, Some(3)), 3);
+        assert_eq!(pool_workers(&be, Some(0)), 1);
+        // TestBackend keeps the default parallel_train() == true
+        assert!(pool_workers(&be, None) >= 1);
+    }
+}

@@ -27,10 +27,15 @@
 //!   model architectures structurally identical to the paper's.
 //!
 //! The controller is event-driven: [`sched`] plans every invocation's
-//! platform outcome up front (crashes never burn compute), runs the
-//! surviving local training rounds in parallel across worker threads,
-//! and replays completions through a virtual-clock event queue so
-//! updates land in true arrival order.
+//! platform outcome up front (crashes never burn compute), the
+//! persistent executor plane ([`exec`]) runs the surviving local
+//! training rounds on a long-lived worker pool, and completions replay
+//! through a virtual-clock event queue so updates land in true arrival
+//! order. Two driving modes share that machinery: the paper's
+//! round-synchronous loop, and a rounds-free **continuous mode** that
+//! keeps a target number of cohorts in flight and folds each completion
+//! into the global model as it lands (Eq. 3 staleness damping keyed to
+//! the global's fold generation).
 //!
 //! Model bytes move through the zero-copy parameter plane ([`params`]):
 //! the global model is an immutable `Arc<[f32]>` snapshot shared by the
@@ -48,6 +53,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
+pub mod exec;
 pub mod faas;
 pub mod metrics;
 pub mod params;

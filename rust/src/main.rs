@@ -13,7 +13,7 @@
 use std::path::PathBuf;
 use std::str::FromStr;
 
-use fedless::config::{ExperimentConfig, Scenario};
+use fedless::config::{ExperimentConfig, Mode, Scenario};
 use fedless::coordinator::Controller;
 use fedless::repro::{self, Options, Profile};
 use fedless::runtime::{load_backend, ArtifactIndex, BackendKind, Manifest};
@@ -27,6 +27,7 @@ fedless — serverless federated learning with straggler mitigation (FedLesScan)
 USAGE:
   fedless train [--dataset D] [--strategy fedavg|fedprox|fedlesscan|safalite]
                 [--stragglers PCT] [--rounds N] [--clients N] [--per-round K]
+                [--mode rounds|continuous] [--cohorts C] [--workers W]
                 [--seed S] [--config FILE.json] [--out DIR] [--verbose]
   fedless repro <fig1|tables|fig3|ablations|all>
                 [--datasets a,b,c] [--profile quick|full] [--out DIR]
@@ -36,6 +37,12 @@ USAGE:
 GLOBAL:
   --backend KIND    execution backend: native (default) | pjrt
   --artifacts DIR   artifacts directory, pjrt backend only (default: artifacts)
+  --workers W       executor-pool size (default: one per core, or the
+                    FEDLESS_WORKERS env var; backends that opt out of
+                    parallel training always get a single worker)
+  --mode M          rounds (default, the paper's protocol) or continuous
+                    (rounds-free: fold every completion, Eq. 3 damping)
+  --cohorts C       continuous mode: keep C x per-round clients in flight
 ";
 
 fn main() -> Result<()> {
@@ -84,6 +91,16 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
     }
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     cfg.verbose = args.get_bool("verbose");
+    if let Some(m) = args.get("mode") {
+        cfg.mode = Mode::from_str(m)?;
+    }
+    if let Some(c) = args.get_parse_opt::<usize>("cohorts")? {
+        cfg.inflight_cohorts = c;
+    }
+    if let Some(w) = args.get_parse_opt::<usize>("workers")? {
+        cfg.workers = Some(w);
+    }
+    cfg.validate()?;
 
     let backend = load_backend(backend_kind, &artifacts, &cfg.dataset)?;
     eprintln!(
@@ -93,7 +110,41 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         backend.manifest().param_count
     );
     let n_clients = cfg.n_clients;
+    let mode = cfg.mode;
     let mut ctl = Controller::new(cfg, backend.as_ref())?;
+    if mode == Mode::Continuous {
+        let result = ctl.run_continuous()?;
+        println!(
+            "\n{} / {} / {} (continuous): final acc {:.3}, folds {}/{} completions \
+             (EUR {:.3}), {:.3} updates/s, time {:.1} min, crashes {}, expired {}, \
+             late {}, generation {}, cost ${:.4}",
+            result.dataset,
+            result.strategy,
+            result.scenario,
+            result.final_accuracy,
+            result.folds,
+            result.completions,
+            result.effective_update_ratio(),
+            result.updates_per_s(),
+            result.duration_s / 60.0,
+            result.crashes,
+            result.expired,
+            result.late,
+            result.final_generation,
+            result.total_cost,
+        );
+        if let Some(out) = args.get("out") {
+            let out = PathBuf::from(out);
+            std::fs::create_dir_all(&out)?;
+            let base = format!(
+                "{}_{}_{}_continuous",
+                result.dataset, result.strategy, result.scenario
+            );
+            result.write_json(&out.join(format!("{base}.json")))?;
+            println!("wrote {}/{base}.json", out.display());
+        }
+        return Ok(());
+    }
     let result = ctl.run()?;
     let stale_total: usize = result.rounds.iter().map(|r| r.stale_applied).sum();
     let in_flight_total: usize = result.rounds.iter().map(|r| r.in_flight_skipped).sum();

@@ -223,6 +223,160 @@ impl ExperimentResult {
     }
 }
 
+/// Continuous-mode reporting slice: rounds don't exist, so progress is
+/// bucketed into fixed-duration virtual-time windows (one round-timeout
+/// each). Counts are attributed to the window in which the event
+/// *completed*; `dispatched` is attributed to the window in which the
+/// invocation departed.
+#[derive(Debug, Clone)]
+pub struct WindowRecord {
+    pub window: u32,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Invocations dispatched during this window.
+    pub dispatched: usize,
+    /// Invocations that completed (any outcome) during this window.
+    pub completions: usize,
+    /// Completions folded into the global model.
+    pub folds: usize,
+    /// Completions that crashed (transient failure or hard timeout).
+    pub crashes: usize,
+    /// Completions whose departed generation aged past tau: returned a
+    /// model too stale to fold (Eq. 3 discard).
+    pub expired: usize,
+    /// Folds per virtual second within this window.
+    pub updates_per_s: f64,
+    /// folds / completions in this window (the continuous analogue of
+    /// per-round EUR).
+    pub effective_update_ratio: f64,
+    /// Max concurrent in-flight invocations observed in this window.
+    pub in_flight_peak: usize,
+}
+
+/// Full continuous-mode experiment result (`--mode continuous`).
+#[derive(Debug, Clone)]
+pub struct ContinuousResult {
+    /// Identification
+    pub dataset: String,
+    pub strategy: String,
+    pub scenario: String,
+    pub seed: u64,
+    /// Timeline, bucketed into round-timeout-sized windows.
+    pub windows: Vec<WindowRecord>,
+    /// Virtual seconds from first dispatch to last completion.
+    pub duration_s: f64,
+    /// Totals over the whole run.
+    pub dispatched: usize,
+    pub completions: usize,
+    pub folds: usize,
+    pub crashes: usize,
+    /// Completions discarded as too stale (Eq. 3 age >= tau).
+    pub expired: usize,
+    /// Completions that arrived after their dispatch deadline but still
+    /// folded (staleness damping absorbs lateness; only age expires it).
+    pub late: usize,
+    /// Selected clients skipped because a previous invocation of theirs
+    /// was still in flight.
+    pub in_flight_skipped: usize,
+    /// Global-model install count at the end of the run.
+    pub final_generation: u32,
+    pub final_accuracy: f32,
+    pub total_cost: f64,
+    /// Wall-clock seconds spent in aggregation folds (real machine time,
+    /// excluded from determinism goldens).
+    pub agg_wall_s: f64,
+    /// client -> invocation count across the run (bias input).
+    pub invocations: HashMap<ClientId, u32>,
+}
+
+impl ContinuousResult {
+    /// Folded updates per virtual second — the headline continuous-mode
+    /// throughput metric.
+    pub fn updates_per_s(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.folds as f64 / self.duration_s
+    }
+
+    /// folds / completions over the whole run (continuous EUR).
+    pub fn effective_update_ratio(&self) -> f64 {
+        if self.completions == 0 {
+            return 0.0;
+        }
+        self.folds as f64 / self.completions as f64
+    }
+
+    /// Serialize the full result (windows + invocation counts) to JSON.
+    pub fn to_json(&self) -> Json {
+        let windows: Vec<Json> = self
+            .windows
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("window", Json::num(w.window as f64)),
+                    ("start_s", Json::num(w.start_s)),
+                    ("end_s", Json::num(w.end_s)),
+                    ("dispatched", Json::num(w.dispatched as f64)),
+                    ("completions", Json::num(w.completions as f64)),
+                    ("folds", Json::num(w.folds as f64)),
+                    ("crashes", Json::num(w.crashes as f64)),
+                    ("expired", Json::num(w.expired as f64)),
+                    ("updates_per_s", Json::num(w.updates_per_s)),
+                    (
+                        "effective_update_ratio",
+                        Json::num(w.effective_update_ratio),
+                    ),
+                    ("in_flight_peak", Json::num(w.in_flight_peak as f64)),
+                ])
+            })
+            .collect();
+        let mut invocations: Vec<(ClientId, u32)> =
+            self.invocations.iter().map(|(&c, &n)| (c, n)).collect();
+        invocations.sort_unstable();
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("mode", Json::str("continuous")),
+            ("duration_s", Json::num(self.duration_s)),
+            ("dispatched", Json::num(self.dispatched as f64)),
+            ("completions", Json::num(self.completions as f64)),
+            ("folds", Json::num(self.folds as f64)),
+            ("crashes", Json::num(self.crashes as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("late", Json::num(self.late as f64)),
+            ("in_flight_skipped", Json::num(self.in_flight_skipped as f64)),
+            ("final_generation", Json::num(self.final_generation as f64)),
+            ("final_accuracy", Json::num(self.final_accuracy as f64)),
+            ("total_cost", Json::num(self.total_cost)),
+            ("updates_per_s", Json::num(self.updates_per_s())),
+            (
+                "effective_update_ratio",
+                Json::num(self.effective_update_ratio()),
+            ),
+            ("agg_wall_s", Json::num(self.agg_wall_s)),
+            ("windows", Json::Arr(windows)),
+            (
+                "invocations",
+                Json::Arr(
+                    invocations
+                        .iter()
+                        .map(|&(c, n)| {
+                            Json::arr(vec![Json::num(c as f64), Json::num(n as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +445,87 @@ mod tests {
         let e = exp(vec![rec(0, 1, 1), rec(1, 1, 1), rec(2, 1, 1)]);
         assert_eq!(e.rounds_to_accuracy(0.15), Some(2));
         assert_eq!(e.rounds_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn continuous_result_ratios_guard_zero() {
+        let mut c = ContinuousResult {
+            dataset: "mnist".into(),
+            strategy: "fedlesscan".into(),
+            scenario: "standard".into(),
+            seed: 0,
+            windows: vec![],
+            duration_s: 0.0,
+            dispatched: 0,
+            completions: 0,
+            folds: 0,
+            crashes: 0,
+            expired: 0,
+            late: 0,
+            in_flight_skipped: 0,
+            final_generation: 0,
+            final_accuracy: 0.0,
+            total_cost: 0.0,
+            agg_wall_s: 0.0,
+            invocations: HashMap::new(),
+        };
+        assert_eq!(c.updates_per_s(), 0.0);
+        assert_eq!(c.effective_update_ratio(), 0.0);
+        c.duration_s = 50.0;
+        c.completions = 20;
+        c.folds = 15;
+        assert!((c.updates_per_s() - 0.3).abs() < 1e-12);
+        assert!((c.effective_update_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continuous_result_json_has_windows_and_totals() {
+        let c = ContinuousResult {
+            dataset: "mnist".into(),
+            strategy: "fedlesscan".into(),
+            scenario: "straggler25".into(),
+            seed: 42,
+            windows: vec![WindowRecord {
+                window: 0,
+                start_s: 0.0,
+                end_s: 60.0,
+                dispatched: 6,
+                completions: 4,
+                folds: 3,
+                crashes: 1,
+                expired: 0,
+                updates_per_s: 0.05,
+                effective_update_ratio: 0.75,
+                in_flight_peak: 6,
+            }],
+            duration_s: 55.0,
+            dispatched: 6,
+            completions: 4,
+            folds: 3,
+            crashes: 1,
+            expired: 0,
+            late: 1,
+            in_flight_skipped: 0,
+            final_generation: 3,
+            final_accuracy: 0.5,
+            total_cost: 0.01,
+            agg_wall_s: 0.0,
+            invocations: [(0, 2), (1, 4)].into_iter().collect(),
+        };
+        let p = std::env::temp_dir().join(format!("fedless-cont-{}.json", std::process::id()));
+        c.write_json(&p).unwrap();
+        let j = Json::parse_file(&p).unwrap();
+        assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "continuous");
+        assert_eq!(j.get("folds").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("final_generation").unwrap().as_usize().unwrap(), 3);
+        match j.get("windows").unwrap() {
+            Json::Arr(ws) => {
+                assert_eq!(ws.len(), 1);
+                assert_eq!(ws[0].get("folds").unwrap().as_usize().unwrap(), 3);
+            }
+            other => panic!("windows not an array: {other:?}"),
+        }
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

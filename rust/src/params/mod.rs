@@ -72,12 +72,26 @@ impl std::ops::Deref for ParamBlock {
     }
 }
 
-/// Default worker count for chunk-parallel folds (one per available
-/// core; the round scheduler's training fan-out uses the same number).
+/// Default worker count for chunk-parallel folds and the executor
+/// pool's training fleet (one per available core). A `FEDLESS_WORKERS`
+/// environment override (clamped ≥ 1) wins, so CI and the 50k scale
+/// smokes can pin the pool size on shared runners.
 pub fn default_workers() -> usize {
+    if let Some(w) = workers_override(std::env::var("FEDLESS_WORKERS").ok().as_deref()) {
+        return w;
+    }
     std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1)
+}
+
+/// Parse a `FEDLESS_WORKERS`-style override: `None`/empty/garbage fall
+/// through to the core count; a parsed value is clamped to ≥ 1 (a pool
+/// of zero workers would deadlock every job). Pure so the clamp rules
+/// are unit-testable without mutating process environment.
+pub fn workers_override(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .map(|w| w.max(1))
 }
 
 /// Minimum multiply-accumulate count (`k * P`) before a fold fans out
@@ -243,6 +257,36 @@ mod tests {
         assert_eq!(fold_workers(100, 2), 1, "tiny folds stay serial");
         assert!(fold_workers(1 << 20, 8) >= 1);
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn workers_override_parses_and_clamps() {
+        assert_eq!(workers_override(Some("3")), Some(3));
+        assert_eq!(workers_override(Some(" 16 ")), Some(16), "whitespace trimmed");
+        assert_eq!(workers_override(Some("0")), Some(1), "clamped to >= 1");
+        assert_eq!(workers_override(Some("")), None);
+        assert_eq!(workers_override(Some("lots")), None);
+        assert_eq!(workers_override(Some("-2")), None);
+        assert_eq!(workers_override(None), None);
+    }
+
+    #[test]
+    fn fedless_workers_env_overrides_default() {
+        // Regression for the FEDLESS_WORKERS contract: the env override
+        // wins over the core count and is clamped to >= 1. Env mutation
+        // is process-global, so both cases run inside this one test
+        // (cargo runs tests in threads; restore the prior value after).
+        let prior = std::env::var("FEDLESS_WORKERS").ok();
+        std::env::set_var("FEDLESS_WORKERS", "3");
+        assert_eq!(default_workers(), 3);
+        std::env::set_var("FEDLESS_WORKERS", "0");
+        assert_eq!(default_workers(), 1, "zero workers would deadlock");
+        std::env::set_var("FEDLESS_WORKERS", "not-a-number");
+        assert!(default_workers() >= 1, "garbage falls back to cores");
+        match prior {
+            Some(v) => std::env::set_var("FEDLESS_WORKERS", v),
+            None => std::env::remove_var("FEDLESS_WORKERS"),
+        }
     }
 
     #[test]

@@ -111,6 +111,12 @@ pub struct ParameterServer {
     global: ParamBlock,
     /// Completed aggregation count == current round index for Eq. 3.
     round: u32,
+    /// Fold generation: bumps on **every** global install, independent
+    /// of the mode-specific `round` argument. Round mode installs once
+    /// per aggregated round; continuous mode installs once per folded
+    /// completion — and keys its Eq. 3 staleness damping to the
+    /// generation an update departed from.
+    gen: u32,
     stale: Vec<StaleUpdate>,
 }
 
@@ -119,6 +125,7 @@ impl ParameterServer {
         Self {
             global: init.into(),
             round: 0,
+            gen: 0,
             stale: Vec::new(),
         }
     }
@@ -140,11 +147,19 @@ impl ParameterServer {
         self.round
     }
 
-    /// Install the freshly aggregated global model.
+    /// Fold generation of the current global (number of installs since
+    /// the initial model).
+    pub fn generation(&self) -> u32 {
+        self.gen
+    }
+
+    /// Install the freshly aggregated global model; bumps the fold
+    /// generation.
     pub fn set_global(&mut self, params: ParamBlock, round: u32) {
         assert_eq!(params.len(), self.global.len(), "param length change");
         self.global = params;
         self.round = round;
+        self.gen = self.gen.saturating_add(1);
     }
 
     /// Buffer a late update for a future aggregation.
@@ -285,6 +300,19 @@ mod tests {
         ps.set_global(vec![3.0, 4.0].into(), 7);
         assert_eq!(ps.global().as_slice(), &[3.0, 4.0]);
         assert_eq!(ps.round(), 7);
+    }
+
+    #[test]
+    fn generation_counts_installs_not_rounds() {
+        // The continuous-mode staleness key: one bump per install,
+        // regardless of the round argument (which round mode reuses and
+        // continuous mode sets to the generation itself).
+        let mut ps = ParameterServer::new(vec![0.0]);
+        assert_eq!(ps.generation(), 0);
+        ps.set_global(vec![1.0].into(), 7);
+        assert_eq!(ps.generation(), 1);
+        ps.set_global(vec![2.0].into(), 7); // same round, new install
+        assert_eq!(ps.generation(), 2);
     }
 
     #[test]

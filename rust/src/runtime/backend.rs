@@ -140,14 +140,25 @@ pub trait Backend: Sync {
         fold.finish()
     }
 
-    /// Whether `train_round` should be fanned out across short-lived
-    /// worker threads. Backends whose per-thread setup is expensive
-    /// return `false` and run inline on the scheduler's thread instead:
-    /// the PJRT backend compiles its executables into thread-local
-    /// storage, so a fresh scope thread per round would recompile the
-    /// model every round.
+    /// Whether `train_round` benefits from fanning out across multiple
+    /// executor workers. Backends whose per-worker setup is expensive
+    /// return `false` and get a **single persistent worker** instead
+    /// (see [`crate::exec::pool_workers`]): the PJRT backend compiles
+    /// its executables into thread-local storage, so one long-lived
+    /// worker compiles once via [`Backend::init_worker`] and stays warm
+    /// for the whole experiment.
     fn parallel_train(&self) -> bool {
         true
+    }
+
+    /// Per-worker-thread initialization hook, called once by each
+    /// executor-pool worker before it accepts jobs. Backends with
+    /// thread-local engine state (PJRT) warm their caches here so the
+    /// first training job doesn't pay the compile; stateless backends
+    /// keep the no-op default. An error fails every job the worker
+    /// would have run (surfaced per-job, never a hang).
+    fn init_worker(&self) -> Result<()> {
+        Ok(())
     }
 }
 

@@ -284,11 +284,21 @@ impl Backend for PjrtBackend {
         Ok(Box::new(BufferedFold::new(self, expected_k)))
     }
 
-    /// Scheduler worker threads are short-lived (one `thread::scope` per
-    /// round), so fanning out would recompile this model's executables
-    /// on every round. Run inline: the calling thread's cache compiles
-    /// once and stays warm for the whole experiment.
+    /// Compiled engine handles live in thread-local storage, so fanning
+    /// out across many executor workers would compile one engine per
+    /// worker. Opt out: the persistent pool then runs a **single
+    /// long-lived worker**, which compiles once (via
+    /// [`Backend::init_worker`]) and stays warm for the whole
+    /// experiment — the same compile-once economics as the old inline
+    /// path, without tying compute to the coordinator's thread.
     fn parallel_train(&self) -> bool {
         false
+    }
+
+    /// Warm this worker thread's engine cache before it accepts jobs:
+    /// compile the model into the thread-local runtime so the first
+    /// training job doesn't pay the compile latency.
+    fn init_worker(&self) -> Result<()> {
+        self.with_runtime(|_| Ok(()))
     }
 }

@@ -14,13 +14,20 @@
 //!   training path), so doomed invocations never burn real training
 //!   cycles.
 //! * **Parallel client execution** — the real `Backend::train_round`
-//!   calls for the surviving invocations run across scoped worker
-//!   threads ([`train_parallel`]); results are positionally aligned with
-//!   the plan list, so the outcome is identical to the serial order.
+//!   calls for the surviving invocations run on the persistent executor
+//!   plane ([`crate::exec`]): a long-lived worker pool with
+//!   work-stealing dispatch, spawned once per experiment instead of one
+//!   `thread::scope` per round. Round mode re-slots completions
+//!   positionally, so the outcome is identical to the serial order.
+//!   (The scoped-thread fan-out [`train_parallel`] is retained as the
+//!   spawn-per-round reference path that `benches/executor.rs` compares
+//!   the pool against.)
 //! * **Virtual-clock event queue** — completions are replayed through a
 //!   [`BinaryHeap`] min-heap ([`EventQueue`]) in true arrival order:
 //!   fresh updates aggregate in the order they reached the parameter
 //!   server, and late updates enter the staleness buffer the same way.
+//!   Continuous mode pushes events incrementally into the same queue as
+//!   it dispatches replacements.
 //! * **In-flight ledger** — a late client whose function is still
 //!   running past the round boundary ([`InFlight`]) is not re-invoked
 //!   mid-flight; the seed controller happily double-invoked it, which
@@ -28,9 +35,9 @@
 //!   client.
 //!
 //! Everything here is deterministic in the experiment seed: the heap
-//! tie-breaks on platform issue order, worker threads write disjoint
-//! result slots, and no wall-clock time ever enters the virtual
-//! timeline.
+//! tie-breaks on platform issue order (a **pinned** contract — see
+//! [`CompletionEvent`]'s `Ord`), executor completions are re-keyed by
+//! job id, and no wall-clock time ever enters the virtual timeline.
 
 use std::collections::{BinaryHeap, HashMap};
 
@@ -79,6 +86,18 @@ impl Ord for CompletionEvent {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // `BinaryHeap` is a max-heap; invert so the earliest completion
         // (lowest time, then lowest issue seq) pops first.
+        //
+        // The `seq` tie-break is a **pinned contract**, not a nicety:
+        // `BinaryHeap` makes no ordering promise for equal elements, so
+        // without it, simultaneous completions (same `at_s` — e.g. two
+        // forced crashes billed to the same deadline) would pop in
+        // unspecified heap order. Round mode tolerates that only by
+        // luck of its accounting; continuous-mode replay determinism
+        // (selection/history state evolves per event) requires
+        // simultaneous events to pop in platform issue order. Pinned by
+        // `event_queue_ties_break_on_issue_order` and
+        // `event_queue_interleaved_ties_stay_in_issue_order`; mirrored
+        // exactly by `python/mirror/continuous.py`.
         other
             .at_s
             .total_cmp(&self.at_s)
@@ -246,6 +265,14 @@ pub fn default_workers() -> usize {
 /// fan-out via [`Backend::parallel_train`] (the PJRT backend would
 /// recompile its executables on every fresh worker thread), in which
 /// case the jobs run inline on the caller's thread.
+///
+/// This is the historical **spawn-per-round** path: one `thread::scope`
+/// per call, threads joined before returning. The coordinator now runs
+/// on the persistent [`crate::exec::ExecutorPool`] instead; this
+/// function remains as the reference implementation the executor bench
+/// (`benches/executor.rs`, `BENCH_executor.json`) measures the pool
+/// against, and as the proof that results are a pure function of the
+/// jobs (both paths must agree bit-for-bit).
 pub fn train_parallel(
     backend: &dyn Backend,
     jobs: &[Option<TrainRequest<'_>>],
@@ -346,6 +373,44 @@ mod tests {
         q.push(ev(5.0, 1, Outcome::Crash));
         let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.seq).collect();
         assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn event_queue_interleaved_ties_stay_in_issue_order() {
+        // The pinned tie-break contract under adversarial conditions:
+        // several distinct timestamps, each with several simultaneous
+        // events, pushed in scrambled order and interleaved with pops
+        // (continuous mode pushes replacements while draining). Every
+        // timestamp group must come out in ascending issue order.
+        let mut q = EventQueue::new();
+        for &(at, seq) in &[
+            (20.0, 7),
+            (10.0, 4),
+            (20.0, 3),
+            (10.0, 0),
+            (20.0, 5),
+            (10.0, 2),
+        ] {
+            q.push(ev(at, seq, Outcome::OnTime));
+        }
+        // drain the t=10 group...
+        assert_eq!(q.pop().unwrap().seq, 0);
+        assert_eq!(q.pop().unwrap().seq, 2);
+        // ...push more simultaneous events mid-drain, as the continuous
+        // driver does when a completion triggers replacement dispatch
+        q.push(ev(10.0, 6, Outcome::OnTime));
+        q.push(ev(20.0, 1, Outcome::OnTime));
+        assert_eq!(q.pop().unwrap().seq, 4);
+        assert_eq!(q.pop().unwrap().seq, 6);
+        let tail: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|e| e.seq).collect();
+        assert_eq!(tail, vec![1, 3, 5, 7], "t=20 group out of issue order");
+        // -0.0 and +0.0 are one timestamp under total_cmp? No: total_cmp
+        // orders -0.0 < +0.0, so they are distinct instants — pin that
+        // too, since finished_at arithmetic can produce signed zeros.
+        q.push(ev(0.0, 9, Outcome::OnTime));
+        q.push(ev(-0.0, 8, Outcome::OnTime));
+        assert_eq!(q.pop().unwrap().seq, 8);
+        assert_eq!(q.pop().unwrap().seq, 9);
     }
 
     #[test]

@@ -50,6 +50,17 @@ pub trait Strategy {
     /// Pick the clients to invoke this round.
     fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId>;
 
+    /// Pick replacement clients in continuous mode, where completions
+    /// free capacity one at a time instead of a round barrier emptying
+    /// the whole cohort at once. `ctx.clients_per_round` carries the
+    /// number of slots to refill (often 1). Defaults to [`Self::select`]
+    /// — every strategy's selection logic already takes the cohort size
+    /// from the context, so the same policy applies unchanged; override
+    /// only if a strategy wants different steady-state behaviour.
+    fn select_replacements(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        self.select(ctx, rng)
+    }
+
     /// Route client training through the FedProx proximal entrypoint?
     fn uses_prox(&self) -> bool {
         false
@@ -163,6 +174,34 @@ mod tests {
         // k larger than the pool: everything
         let s = random_sample(&clients, 99, &mut rng);
         assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn select_replacements_defaults_to_select() {
+        use crate::clientdb::HistoryStore;
+        let clients: Vec<ClientId> = (0..20).collect();
+        let history = HistoryStore::new();
+        let ctx = SelectionContext {
+            round: 3,
+            max_rounds: 10,
+            clients_per_round: 5,
+            all_clients: &clients,
+            history: &history,
+        };
+        for kind in [
+            StrategyKind::Fedavg,
+            StrategyKind::Fedprox,
+            StrategyKind::Fedlesscan,
+            StrategyKind::Safalite,
+        ] {
+            // Identical RNG state => the default delegation must produce
+            // exactly the cohort select() would have produced.
+            let picked = kind.build().select(&ctx, &mut Rng::seed_from_u64(7));
+            let replaced = kind
+                .build()
+                .select_replacements(&ctx, &mut Rng::seed_from_u64(7));
+            assert_eq!(picked, replaced, "{}", kind.as_str());
+        }
     }
 
     #[test]

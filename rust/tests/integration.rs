@@ -9,7 +9,7 @@
 
 mod common;
 
-use fedless::config::{ExperimentConfig, Scenario};
+use fedless::config::{ExperimentConfig, Mode, Scenario};
 use fedless::coordinator::Controller;
 use fedless::data::{Features, SynthDataset};
 use fedless::runtime::{Backend, NativeBackend, TrainRequest};
@@ -636,4 +636,70 @@ fn stale_norm_clip_discards_outlier_stale_updates() {
     let stale_cl: usize = clipped.rounds.iter().map(|r| r.stale_applied).sum();
     assert!(stale_un > 0);
     assert_eq!(stale_cl, 0, "clip=0 must discard all stale updates");
+}
+
+#[test]
+fn round_mode_results_are_invariant_in_worker_count() {
+    // The executor plane only moves *where* training computes; the
+    // virtual timeline, RNG streams and aggregation order are fixed by
+    // the coordinator. One worker vs many must be byte-identical.
+    let rt = mnist_backend();
+    let run = |workers: usize| {
+        let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(30));
+        cfg.workers = Some(workers);
+        let mut ctl = Controller::new(cfg, &rt).unwrap();
+        ctl.run().unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.total_cost, b.total_cost);
+    assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.selected, rb.selected, "round {} drifted", ra.round);
+        assert_eq!(ra.successes, rb.successes);
+        assert_eq!(ra.stale_applied, rb.stale_applied);
+        assert_eq!(ra.duration_s.to_bits(), rb.duration_s.to_bits());
+    }
+}
+
+#[test]
+fn continuous_mode_replays_and_respects_budget() {
+    // Fast every-`cargo test` cousin of the golden: same-seed replay is
+    // bit-identical, the invocation budget is exact, and the fold
+    // generation counter agrees with the fold count (each fold installs
+    // exactly one new global). Worker count must not matter here either.
+    let rt = mnist_backend();
+    let run = |workers: Option<usize>| {
+        let mut cfg = quick_cfg(StrategyKind::Fedlesscan, Scenario::Straggler(30));
+        cfg.mode = Mode::Continuous;
+        cfg.inflight_cohorts = 2;
+        cfg.workers = workers;
+        let mut ctl = Controller::new(cfg, &rt).unwrap();
+        ctl.run_continuous().unwrap()
+    };
+    let a = run(Some(1));
+    let b = run(Some(3));
+    assert_eq!(a.dispatched, 5 * 6, "budget is rounds x clients_per_round");
+    assert_eq!(a.completions, a.dispatched, "every invocation completes");
+    assert_eq!(a.folds as u32, a.final_generation);
+    assert_eq!(
+        a.folds + a.crashes + a.expired,
+        a.completions,
+        "every completion folds, crashes, or expires"
+    );
+    assert!(a.folds > 0, "nothing folded");
+    assert_eq!(a.windows.iter().map(|w| w.dispatched).sum::<usize>(), a.dispatched);
+    assert_eq!(a.windows.iter().map(|w| w.folds).sum::<usize>(), a.folds);
+
+    assert_eq!(a.dispatched, b.dispatched);
+    assert_eq!(a.folds, b.folds);
+    assert_eq!(a.crashes, b.crashes);
+    assert_eq!(a.late, b.late);
+    assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+    assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+    assert_eq!(a.invocations, b.invocations);
+    // the model actually trained: continuous folds move the global, so
+    // accuracy is a real evaluation, not the init params
+    assert!(a.final_accuracy > 0.0 && a.final_accuracy <= 1.0);
 }

@@ -15,7 +15,7 @@ mod common;
 use std::time::{Duration, Instant};
 
 use fedless::clientdb::HistoryStore;
-use fedless::config::{ExperimentConfig, Scenario};
+use fedless::config::{ExperimentConfig, Mode, Scenario};
 use fedless::coordinator::Controller;
 use fedless::strategy::{FedLesScan, SelectionContext, Strategy, StrategyKind};
 use fedless::util::Rng;
@@ -124,5 +124,58 @@ fn a_50k_client_mock_round_completes_within_budget_and_replays() {
     assert!(
         wall < Duration::from_secs(60),
         "50k-client 2-round experiment took {wall:?}"
+    );
+}
+
+#[test]
+#[ignore = "release-mode scale smoke; run via cargo test --release -- --ignored"]
+fn continuous_mode_scales_to_thousands_of_clients_and_replays() {
+    // Continuous-mode counterpart of the round smoke: a few-thousand-
+    // client fleet, a multi-thousand-invocation budget, everything
+    // through the persistent executor pool — and the full event
+    // timeline must replay bit-for-bit on a second run.
+    let rt = common::MockBackend::new(512);
+    let mut cfg = ExperimentConfig::preset("mnist");
+    cfg.strategy = StrategyKind::Fedlesscan;
+    cfg.scenario = Scenario::Straggler(30);
+    cfg.mode = Mode::Continuous;
+    cfg.n_clients = 4_000;
+    cfg.clients_per_round = 64;
+    cfg.rounds = 40; // budget: 2560 invocations
+    cfg.inflight_cohorts = 2;
+    cfg.seed = 23;
+    let run = |cfg: ExperimentConfig| {
+        let t0 = Instant::now();
+        let mut ctl = Controller::new(cfg, &rt).unwrap();
+        let res = ctl.run_continuous().unwrap();
+        (res, t0.elapsed())
+    };
+    let (a, wall) = run(cfg.clone());
+    let (b, _) = run(cfg);
+    assert!(a.folds > 0, "nothing folded");
+    assert_eq!(a.dispatched, b.dispatched);
+    assert_eq!(a.completions, b.completions);
+    assert_eq!(a.folds, b.folds);
+    assert_eq!(a.crashes, b.crashes);
+    assert_eq!(a.expired, b.expired);
+    assert_eq!(a.late, b.late);
+    assert_eq!(a.final_generation, b.final_generation);
+    assert_eq!(
+        a.duration_s.to_bits(),
+        b.duration_s.to_bits(),
+        "virtual timeline drifted across replays"
+    );
+    assert_eq!(a.windows.len(), b.windows.len());
+    for (wa, wb) in a.windows.iter().zip(&b.windows) {
+        assert_eq!(wa.dispatched, wb.dispatched, "window {} drifted", wa.window);
+        assert_eq!(wa.completions, wb.completions);
+        assert_eq!(wa.folds, wb.folds);
+        assert_eq!(wa.crashes, wb.crashes);
+        assert_eq!(wa.expired, wb.expired);
+        assert_eq!(wa.in_flight_peak, wb.in_flight_peak);
+    }
+    assert!(
+        wall < Duration::from_secs(120),
+        "continuous 2560-invocation experiment took {wall:?}"
     );
 }
