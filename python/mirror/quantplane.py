@@ -1,0 +1,169 @@
+"""Bit-exact Python mirror of the quantized parameter plane.
+
+Mirrors, op for op, ``rust/src/params/shard.rs`` (``ShardLayout``) and
+``rust/src/params/quant.rs`` (dense/top-k int8 quantization and the
+error-feedback residual). Python floats are IEEE-754 doubles; every f32
+op is emulated by computing in double and rounding the result back to
+f32 via a struct round-trip — exact for +, -, *, / of f32 operands
+(single ops evaluated in double then rounded are correctly rounded).
+``f32::round`` is half-AWAY-from-zero, not Python's banker's rounding,
+so it is emulated explicitly.
+
+Run ``gen_params_golden.py`` to (re)generate the pinned constants in
+``rust/tests/quant_golden.rs``.
+"""
+
+import math
+import struct
+
+QMAX = 127.0
+
+
+def f32(x):
+    """Round an f64 to the nearest f32 (returned as Python float)."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+def rust_round_f32(q):
+    """f32::round — half away from zero (q is f32-valued, |q| < 2**52)."""
+    if q >= 0.0:
+        return math.floor(q + 0.5)
+    return math.ceil(q - 0.5)
+
+
+class ShardLayout:
+    """params/shard.rs ShardLayout: balanced chunk boundaries."""
+
+    def __init__(self, length, shards):
+        self.len = length
+        self.shards_n = max(1, min(shards, max(length, 1)))
+
+    def range(self, i):
+        base = self.len // self.shards_n
+        extra = self.len % self.shards_n
+        start = i * base + min(i, extra)
+        size = base + (1 if i < extra else 0)
+        return range(start, start + size)
+
+    def ranges(self):
+        return (self.range(i) for i in range(self.shards_n))
+
+    def shard_of(self, elem):
+        base = self.len // self.shards_n
+        extra = self.len % self.shards_n
+        boundary = extra * (base + 1)
+        if elem < boundary:
+            return elem // (base + 1)
+        return extra + (elem - boundary) // base
+
+
+def shard_scale(values):
+    m = 0.0
+    for v in values:
+        m = max(m, abs(v))  # f32 abs/max are exact
+    if m == 0.0:
+        return 0.0
+    return f32(m / QMAX)
+
+
+def encode_one(v, scale):
+    if scale == 0.0:
+        return 0
+    q = f32(v / scale)
+    c = rust_round_f32(q)
+    return int(max(-127, min(127, c)))
+
+
+def quantize(values, layout):
+    assert len(values) == layout.len
+    scales, data = [], []
+    for r in layout.ranges():
+        shard = values[r.start : r.stop]
+        scale = shard_scale(shard)
+        scales.append(scale)
+        data.extend(encode_one(v, scale) for v in shard)
+    return {"len": len(values), "scales": scales, "data": data, "indices": None}
+
+
+def topk_keep(shard_len, frac):
+    return max(1, min(math.ceil(shard_len * frac), max(shard_len, 1)))
+
+
+def quantize_topk(values, layout, frac):
+    assert len(values) == layout.len and 0.0 < frac <= 1.0
+    scales, data, indices = [], [], []
+    for r in layout.ranges():
+        shard = values[r.start : r.stop]
+        keep = topk_keep(len(shard), frac)
+        order = sorted(range(len(shard)), key=lambda a: (-abs(shard[a]), a))
+        kept = sorted(order[:keep])
+        scale = shard_scale(shard)
+        scales.append(scale)
+        for local in kept:
+            indices.append(r.start + local)
+            data.append(encode_one(shard[local], scale))
+    return {"len": len(values), "scales": scales, "data": data, "indices": indices}
+
+
+def dequantize(q, layout):
+    out = [0.0] * q["len"]
+    if q["indices"] is None:
+        pos = 0
+        for i, r in enumerate(layout.ranges()):
+            scale = q["scales"][i]
+            for e in r:
+                out[e] = f32(float(q["data"][pos]) * scale)
+                pos += 1
+    else:
+        for ix, c in zip(q["indices"], q["data"]):
+            out[ix] = f32(float(c) * q["scales"][layout.shard_of(ix)])
+    return out
+
+
+def wire_bytes(q):
+    return (
+        len(q["data"])
+        + len(q["scales"]) * 4
+        + (0 if q["indices"] is None else len(q["indices"]) * 4)
+    )
+
+
+class ErrorFeedback:
+    def __init__(self, length):
+        self.residual = [0.0] * length
+
+    def encode(self, update, layout, topk=None):
+        compensated = [f32(u + e) for u, e in zip(update, self.residual)]
+        if topk is None:
+            q = quantize(compensated, layout)
+        else:
+            q = quantize_topk(compensated, layout, topk)
+        dq = dequantize(q, layout)
+        self.residual = [f32(v - d) for v, d in zip(compensated, dq)]
+        return q
+
+
+if __name__ == "__main__":
+    # self-check: roundtrip error bound + EF telescoping on a ramp
+    p = 1031
+    v = [f32(((i % 31) - 15.0) * 0.013) for i in range(p)]
+    for shards in (1, 4, 17):
+        layout = ShardLayout(p, shards)
+        q = quantize(v, layout)
+        dq = dequantize(q, layout)
+        for i in range(p):
+            bound = q["scales"][layout.shard_of(i)] * 0.5 * 1.0001 + 1.2e-7
+            assert abs(v[i] - dq[i]) <= bound, (shards, i)
+    layout = ShardLayout(64, 4)
+    vv = [0.0] * 64
+    vv[0], vv[1] = 1.0, 0.002
+    ef = ErrorFeedback(64)
+    transmitted = 0.0
+    for _ in range(8):
+        transmitted += dequantize(ef.encode(vv, layout), layout)[1]
+    assert abs(transmitted - 8 * 0.002) <= 0.5 / QMAX + 1e-6, transmitted
+    print("quantplane mirror self-checks pass")

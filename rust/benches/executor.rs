@@ -83,6 +83,7 @@ fn main() {
                                 seed: i as i32,
                                 num_steps: mf.steps_per_round as i32,
                                 prox: false,
+                                wire: None,
                             })
                         })
                         .collect();

@@ -190,12 +190,14 @@ fn main() {
     // 1-worker case IS the batch scalar reference op for op, so the
     // speedup line is the scalar-vs-chunked comparison. Sized at the
     // largest preset's (P, k_max) plus a north-star ~1M-param case.
-    // Honesty note: the coordinator streams one entry per fold call and
-    // `fold_workers(P, 1)` keeps preset-sized entries serial (P is far
-    // below MIN_PARALLEL_MADDS), so the preset row's chunked column is
-    // a *forced* fan-out; the ~1M-param row is where the production
-    // heuristic itself goes parallel. Each printout discloses the
-    // heuristic's per-entry choice.
+    // Honesty note: the coordinator streams one entry per fold call, and
+    // the fold-worker heuristic prices the whole fold (P x expected_k
+    // multiply-adds) once at begin_fold — a preset-sized model fans out
+    // when the round's total work warrants it, even though each streamed
+    // entry alone is below the parallel threshold. The crossover line
+    // below pins the k at which a preset-sized fold goes parallel; the
+    // ~1M-param row is where even a single entry does. Each printout
+    // discloses the heuristic's choice at both prices.
     {
         let largest = ["mnist", "femnist", "shakespeare", "speech", "transformer"]
             .iter()
@@ -231,10 +233,31 @@ fn main() {
             );
             println!(
                 "   -> chunk-parallel speedup: {:.2}x over scalar ({workers} workers; \
-                 heuristic picks {} worker(s) per streamed entry)",
+                 heuristic picks {} worker(s) at k=1, {} at k={k})",
                 serial.mean.as_secs_f64() / chunked.mean.as_secs_f64().max(1e-12),
                 fedless::params::fold_workers(p, 1),
+                fedless::params::fold_workers(p, k),
             );
+        }
+
+        // Pin the fan-out crossover for the smallest preset: the first k
+        // at which the round-priced heuristic sends a streamed fold
+        // parallel (BENCH_params.json `crossover_k` regeneration source).
+        let mnist_p = NativeBackend::for_dataset("mnist")
+            .expect("preset")
+            .manifest()
+            .param_count;
+        if workers >= 2 {
+            let crossover = (1..=1024)
+                .find(|&k| fedless::params::fold_workers(mnist_p, k) > 1)
+                .unwrap_or(0);
+            println!(
+                "   -> fold_workers crossover: mnist P={mnist_p} goes parallel at \
+                 k={crossover} ({} workers at that k)",
+                fedless::params::fold_workers(mnist_p, crossover),
+            );
+        } else {
+            println!("   -> fold_workers crossover: skipped (single-core host)");
         }
     }
 

@@ -1,0 +1,101 @@
+//! Parameter-plane benchmarks: streamed fold throughput vs shard count
+//! at a north-star ~1M-param model, and the int8 quantized wire against
+//! raw f32 uploads. These are the numbers behind `BENCH_params.json`
+//! (regenerate with `cargo bench --bench params`).
+//!
+//! The sharded accumulator must (a) stay bit-identical to the scalar
+//! oracle at every shard count — the proptests pin that — and (b) scale
+//! fold throughput with shards until the core count caps it. The int8
+//! wire must cut accounted upload bytes ~4x dense (and further with
+//! top-k) while the client-side error-feedback residual keeps the
+//! cumulative transmitted signal honest.
+
+use fedless::params::{
+    default_workers, dequantize, quantize, quantize_topk, wire_bytes_estimate, ErrorFeedback,
+    ShardLayout, ShardedAccumulator,
+};
+use fedless::util::bench::bench;
+
+const P: usize = 1 << 20; // ~1M params, the north-star plane size
+const K: usize = 8; // streamed entries per fold (per-round survivors)
+
+fn main() {
+    println!("== parameter-plane benches (P={P}, K={K}) ==");
+    let workers = default_workers();
+
+    let updates: Vec<Vec<f32>> = (0..K)
+        .map(|i| {
+            (0..P)
+                .map(|j| ((i + j) % 17) as f32 * 0.01 - 0.05)
+                .collect()
+        })
+        .collect();
+    let weight = 1.0 / K as f32;
+
+    // --- streamed fold throughput vs shard count -------------------------
+    // One accumulate() call per entry, exactly how the coordinator feeds
+    // NativeFold; every shard count lands bit-identical, so this sweep
+    // is pure throughput.
+    let mut base = f64::NAN;
+    for shards in [1usize, 2, 4, 8, 16] {
+        let stats = bench(&format!("params/fold P={P} K={K} shards={shards}"), 2, 12, || {
+            let acc = ShardedAccumulator::new(ShardLayout::new(P, shards));
+            for u in &updates {
+                acc.accumulate(u, weight, workers);
+            }
+            acc.finish()
+        });
+        let s = stats.mean.as_secs_f64();
+        if shards == 1 {
+            base = s;
+        }
+        let madds_per_s = (P * K) as f64 / s.max(1e-12);
+        println!(
+            "   -> {:.1} M madd/s at {shards} shard(s), {:.2}x vs 1 shard",
+            madds_per_s / 1e6,
+            base / s.max(1e-12),
+        );
+    }
+
+    // --- int8 wire: encode cost and accounted bytes ----------------------
+    let shards = 16usize;
+    let layout = ShardLayout::new(P, shards);
+    let raw_bytes = P * std::mem::size_of::<f32>();
+
+    let dense = quantize(&updates[0], &layout);
+    bench(&format!("params/quantize dense P={P} shards={shards}"), 2, 12, || {
+        quantize(&updates[0], &layout)
+    });
+    bench(&format!("params/dequantize dense P={P} shards={shards}"), 2, 12, || {
+        dequantize(&dense, &layout)
+    });
+    assert_eq!(dense.wire_bytes(), wire_bytes_estimate(P, shards, None));
+    println!(
+        "   -> dense int8 wire: {} B vs raw {} B ({:.2}x cut)",
+        dense.wire_bytes(),
+        raw_bytes,
+        raw_bytes as f64 / dense.wire_bytes() as f64,
+    );
+
+    let frac = 0.1;
+    let sparse = quantize_topk(&updates[0], &layout, frac);
+    bench(
+        &format!("params/quantize topk={frac} P={P} shards={shards}"),
+        2,
+        12,
+        || quantize_topk(&updates[0], &layout, frac),
+    );
+    println!(
+        "   -> top-{frac} int8 wire: {} B vs raw {} B ({:.2}x cut)",
+        sparse.wire_bytes(),
+        raw_bytes,
+        raw_bytes as f64 / sparse.wire_bytes() as f64,
+    );
+
+    // --- error-feedback round trip (the full client-side wire path) ------
+    bench(&format!("params/ef-encode+decode P={P} shards={shards}"), 2, 12, || {
+        let mut ef = ErrorFeedback::new(P);
+        let q = ef.encode(&updates[0], &layout, None);
+        dequantize(&q, &layout)
+    });
+}

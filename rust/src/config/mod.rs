@@ -145,6 +145,21 @@ pub struct ExperimentConfig {
     /// [`crate::params::default_workers`] (or pins a single persistent
     /// worker for backends that opt out of `parallel_train`).
     pub workers: Option<usize>,
+    /// Parameter-plane shard count override; `None` resolves via
+    /// [`crate::params::resolve_shards`] (`FEDLESS_SHARDS` env ▸ core
+    /// count). Any value is arithmetic-identical — it only sets lock
+    /// and fold-parallelism granularity.
+    pub shards: Option<usize>,
+    /// Quantize client uploads: int8 symmetric per-shard with
+    /// client-side error-feedback residuals
+    /// ([`crate::params::ErrorFeedback`]). Changes the training
+    /// arithmetic (updates round to the int8 grid), so the goldens run
+    /// with it off.
+    pub quantize_updates: bool,
+    /// Top-k sparse variant of the quantized upload: keep this fraction
+    /// of each shard's largest-magnitude elements. Requires
+    /// `quantize_updates`.
+    pub quantize_topk: Option<f64>,
 }
 
 impl ExperimentConfig {
@@ -190,6 +205,9 @@ impl ExperimentConfig {
             inflight_cohorts: 2,
             async_alpha: 0.5,
             workers: None,
+            shards: None,
+            quantize_updates: false,
+            quantize_topk: None,
         }
     }
 
@@ -228,6 +246,19 @@ impl ExperimentConfig {
         );
         if let Some(w) = self.workers {
             anyhow::ensure!(w >= 1, "workers must be at least 1 when set");
+        }
+        if let Some(s) = self.shards {
+            anyhow::ensure!(s >= 1, "shards must be at least 1 when set");
+        }
+        if let Some(f) = self.quantize_topk {
+            anyhow::ensure!(
+                f > 0.0 && f <= 1.0,
+                "quantize_topk must be a fraction in (0, 1]"
+            );
+            anyhow::ensure!(
+                self.quantize_updates,
+                "quantize_topk requires quantize_updates"
+            );
         }
         Ok(())
     }
@@ -292,6 +323,15 @@ impl ExperimentConfig {
             (
                 "workers",
                 self.workers.map_or(Json::Null, |w| Json::num(w as f64)),
+            ),
+            (
+                "shards",
+                self.shards.map_or(Json::Null, |s| Json::num(s as f64)),
+            ),
+            ("quantize_updates", Json::Bool(self.quantize_updates)),
+            (
+                "quantize_topk",
+                self.quantize_topk.map_or(Json::Null, Json::Num),
             ),
         ])
     }
@@ -402,6 +442,19 @@ impl ExperimentConfig {
                 cfg.workers = Some(v.as_usize()?);
             }
         }
+        if let Some(v) = j.get_opt("shards") {
+            if !v.is_null() {
+                cfg.shards = Some(v.as_usize()?);
+            }
+        }
+        if let Some(v) = j.get_opt("quantize_updates") {
+            cfg.quantize_updates = v.as_bool()?;
+        }
+        if let Some(v) = j.get_opt("quantize_topk") {
+            if !v.is_null() {
+                cfg.quantize_topk = Some(v.as_f64()?);
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -507,6 +560,36 @@ mod tests {
         cfg.async_alpha = 0.5;
         cfg.workers = Some(0);
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn shard_and_quantization_fields_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::preset("mnist");
+        assert_eq!(cfg.shards, None, "presets default to unsharded-choice");
+        assert!(!cfg.quantize_updates, "quantization defaults off");
+        cfg.shards = Some(8);
+        cfg.quantize_updates = true;
+        cfg.quantize_topk = Some(0.1);
+        cfg.validate().unwrap();
+        let p = std::env::temp_dir().join(format!(
+            "fedless-cfg-quant-{}.json",
+            std::process::id()
+        ));
+        cfg.save(&p).unwrap();
+        let cfg2 = ExperimentConfig::load(&p).unwrap();
+        assert_eq!(cfg2.shards, Some(8));
+        assert!(cfg2.quantize_updates);
+        assert_eq!(cfg2.quantize_topk, Some(0.1));
+        std::fs::remove_file(&p).ok();
+
+        cfg.shards = Some(0);
+        assert!(cfg.validate().is_err(), "zero shards rejected");
+        cfg.shards = None;
+        cfg.quantize_topk = Some(1.5);
+        assert!(cfg.validate().is_err(), "topk fraction out of range");
+        cfg.quantize_topk = Some(0.1);
+        cfg.quantize_updates = false;
+        assert!(cfg.validate().is_err(), "topk requires quantize_updates");
     }
 
     #[test]

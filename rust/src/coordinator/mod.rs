@@ -54,9 +54,9 @@ use crate::data::{ClientData, SynthDataset};
 use crate::exec;
 use crate::faas::{Forced, Outcome, SimulatedGcf};
 use crate::metrics::{ContinuousResult, ExperimentResult, RoundRecord, WindowRecord};
-use crate::params::{ParamBlock, PlaneGauge};
+use crate::params::{resolve_shards, wire_bytes_estimate, ParamBlock, PlaneGauge, ShardLayout};
 use crate::paramsvr::{weight_component, ParameterServer, StaleUpdate};
-use crate::runtime::{AggregateFold, Backend, TrainResult};
+use crate::runtime::{AggregateFold, Backend};
 use crate::sched;
 use crate::strategy::{Aggregation, SelectionContext, Strategy};
 use crate::util::Rng;
@@ -107,6 +107,15 @@ pub struct Controller<'rt> {
     /// buffers only); windowed per round into
     /// `RoundRecord::param_plane_peak_bytes`.
     gauge: PlaneGauge,
+    /// Resolved parameter-plane shard count (`FEDLESS_SHARDS` env ▸
+    /// config `shards` ▸ core count), threaded through the server, the
+    /// aggregation folds, and the quantized wire layout.
+    shards: usize,
+    /// Per-client error-feedback residuals (quantized-update state):
+    /// serverless clients are stateless, so the residual rides the
+    /// client DB plane between invocations. Empty when quantization is
+    /// off.
+    residuals: HashMap<ClientId, Vec<f32>>,
 }
 
 impl<'rt> Controller<'rt> {
@@ -151,6 +160,7 @@ impl<'rt> Controller<'rt> {
         let strategy = cfg.strategy.build();
         let cfg_k = cfg.clients_per_round;
         let n_clients = cfg.n_clients;
+        let shards = resolve_shards(cfg.shards);
         Ok(Self {
             cfg,
             backend,
@@ -158,7 +168,7 @@ impl<'rt> Controller<'rt> {
             eval_set,
             faas,
             history: HistoryStore::new(),
-            server: ParameterServer::new(init),
+            server: ParameterServer::with_shards(init, shards),
             strategy,
             ledger: CostLedger::default(),
             rng,
@@ -170,7 +180,71 @@ impl<'rt> Controller<'rt> {
             client_ids: (0..n_clients).collect(),
             in_flight: sched::InFlight::new(),
             gauge,
+            shards,
+            residuals: HashMap::new(),
         })
+    }
+
+    /// Build the wire policy for one invocation of `client` (`None`
+    /// when quantization is off): attach the shard layout and top-k
+    /// fraction, and take the client's carried error-feedback residual
+    /// out of the client-DB plane (all-zero on first invocation; its
+    /// bytes enter the parameter-plane gauge when first materialized
+    /// and stay live — residuals are persistent client state).
+    fn wire_spec(&mut self, client: ClientId) -> Option<exec::WireSpec> {
+        if !self.cfg.quantize_updates {
+            return None;
+        }
+        let p = self.backend.manifest().param_count;
+        let residual = match self.residuals.remove(&client) {
+            Some(r) => r,
+            None => {
+                self.gauge.add(p * std::mem::size_of::<f32>());
+                vec![0.0f32; p]
+            }
+        };
+        Some(exec::WireSpec {
+            layout: ShardLayout::new(p, self.shards),
+            topk: self.cfg.quantize_topk,
+            residual,
+        })
+    }
+
+    /// Account one delivered upload and store the client's residual
+    /// back into the client-DB plane. Returns the accounted upload
+    /// bytes — the quantized wire size, or raw f32 (`p_bytes`) when the
+    /// job carried no wire policy.
+    fn absorb_wire(
+        &mut self,
+        client: ClientId,
+        wire: Option<exec::WireMeta>,
+        p_bytes: usize,
+    ) -> usize {
+        match wire {
+            None => p_bytes,
+            Some(w) => {
+                let bytes = w.bytes_up;
+                self.residuals.insert(client, w.residual);
+                bytes
+            }
+        }
+    }
+
+    /// Simulated invocation payload (MB): the platform's transfer model
+    /// doubles it (`transfer_s = 2·payload/bw`, download + upload), so
+    /// this is the *mean* of the raw-f32 download leg and the upload
+    /// leg ([`wire_bytes_estimate`] — deterministic pre-outcome, so the
+    /// platform RNG stream order never depends on training results).
+    /// With quantization off it returns `manifest().payload_mb()`
+    /// verbatim, keeping existing timelines/costs bit-identical.
+    fn invoke_payload_mb(&self) -> f64 {
+        let mf = self.backend.manifest();
+        if !self.cfg.quantize_updates {
+            return mf.payload_mb();
+        }
+        let down = mf.param_count * std::mem::size_of::<f32>();
+        let up = wire_bytes_estimate(mf.param_count, self.shards, self.cfg.quantize_topk);
+        (down as f64 + up as f64) / 2.0 / 1e6
     }
 
     /// Number of forced stragglers (used by tests / reports).
@@ -289,6 +363,7 @@ impl<'rt> Controller<'rt> {
         //    outcome and timeline before any real compute runs. The
         //    platform RNG stream is consumed in selection order, exactly
         //    as the serial seed loop drew it.
+        let payload_mb = self.invoke_payload_mb();
         let mut plans: Vec<sched::ClientPlan> = Vec::with_capacity(invoked.len());
         for &client in &invoked {
             self.history.record_invocation(client);
@@ -302,7 +377,7 @@ impl<'rt> Controller<'rt> {
                 client,
                 round_start,
                 compute_s,
-                mf.payload_mb(),
+                payload_mb,
                 deadline,
                 forced,
             );
@@ -332,22 +407,27 @@ impl<'rt> Controller<'rt> {
         // anchor into a second full buffer every prox round).
         let global_now: ParamBlock = self.server.global_block();
         let use_prox = self.strategy.uses_prox();
-        let jobs: Vec<Option<exec::TrainJob>> = plans
-            .iter()
-            .map(|p| {
-                if p.inv.outcome == Outcome::Crash {
-                    return None;
-                }
-                Some(exec::TrainJob {
-                    id: 0, // run_batch assigns the slot index
-                    params: global_now.clone(),
-                    shard: Arc::clone(&self.shard_cache[&p.client]),
-                    seed: (round as i32) * 100_003 + p.client as i32,
-                    num_steps: p.num_steps,
-                    prox: use_prox,
-                })
-            })
-            .collect();
+        // Every invocation downloads the global model; uploads accrue
+        // at event replay as each surviving update actually arrives.
+        let bytes_down = plans.len() * p_bytes;
+        let mut bytes_up = 0usize;
+        let mut jobs: Vec<Option<exec::TrainJob>> = Vec::with_capacity(plans.len());
+        for p in &plans {
+            if p.inv.outcome == Outcome::Crash {
+                jobs.push(None);
+                continue;
+            }
+            let wire = self.wire_spec(p.client);
+            jobs.push(Some(exec::TrainJob {
+                id: 0, // run_batch assigns the slot index
+                params: global_now.clone(),
+                shard: Arc::clone(&self.shard_cache[&p.client]),
+                seed: (round as i32) * 100_003 + p.client as i32,
+                num_steps: p.num_steps,
+                prox: use_prox,
+                wire,
+            }));
+        }
         let mut results = pool.run_batch(jobs)?;
         let trained = results.iter().flatten().count();
         self.gauge.add(trained * p_bytes);
@@ -367,7 +447,7 @@ impl<'rt> Controller<'rt> {
         );
         let t_1b = round + 1; // 1-based aggregation round for Eq. 3
         let expected_k = mf.k_max.min(trained + self.server.stale_len()).max(1);
-        let mut agg = RoundAgg::new(self.backend, expected_k);
+        let mut agg = RoundAgg::new(self.backend, expected_k, self.shards);
         let mut queue = sched::EventQueue::schedule(&plans);
         let mut fresh: Vec<FreshMeta> = Vec::new();
         let mut fresh_dists: Vec<f64> = Vec::new();
@@ -378,9 +458,11 @@ impl<'rt> Controller<'rt> {
             let plan = &plans[ev.seq];
             match ev.outcome {
                 Outcome::OnTime => {
-                    let result = results[ev.seq]
+                    let out = results[ev.seq]
                         .take()
                         .expect("on-time invocation must have trained");
+                    bytes_up += self.absorb_wire(ev.client, out.wire, p_bytes);
+                    let result = out.train;
                     latest_ontime = latest_ontime.max(ev.at_s);
                     if self.cfg.stale_norm_clip.is_some() {
                         // stale_norm_clip reference distance, measured
@@ -408,9 +490,11 @@ impl<'rt> Controller<'rt> {
                     });
                 }
                 Outcome::Late => {
-                    let result = results[ev.seq]
+                    let out = results[ev.seq]
                         .take()
                         .expect("late invocation must have trained");
+                    bytes_up += self.absorb_wire(ev.client, out.wire, p_bytes);
+                    let result = out.train;
                     any_missed = true;
                     // Controller assumes the client failed (Alg. 1 L9-12);
                     // the slow update itself lands in the staleness buffer
@@ -580,6 +664,8 @@ impl<'rt> Controller<'rt> {
             select_wall_s,
             agg_wall_s,
             param_plane_peak_bytes: self.gauge.peak(),
+            bytes_down,
+            bytes_up,
         })
     }
 
@@ -650,8 +736,10 @@ impl<'rt> Controller<'rt> {
             pending: HashMap::new(),
             seq: 0,
             dispatched: 0,
+            bytes_down: 0,
         };
-        let mut results: HashMap<usize, TrainResult> = HashMap::new();
+        let mut bytes_up = 0usize;
+        let mut results: HashMap<usize, exec::TrainOutput> = HashMap::new();
         let mut windows: Vec<WindowRecord> = Vec::new();
         let mut win = WindowAcc::new(0, 0.0, window_s);
         let mut failed_since_tick: Vec<ClientId> = Vec::new();
@@ -693,7 +781,11 @@ impl<'rt> Controller<'rt> {
                     if ev.outcome == Outcome::Late {
                         late += 1;
                     }
-                    let result = take_result(pool, &mut results, ev.seq)?;
+                    let out = take_result(pool, &mut results, ev.seq)?;
+                    // the upload crossed the wire whether or not the
+                    // update survives the τ check below
+                    bytes_up += self.absorb_wire(ev.client, out.wire, p_bytes);
+                    let result = out.train;
                     self.gauge.add(p_bytes); // trained update materializes
                     let gen_now = self.server.generation();
                     // Eq. 3 damp on generation staleness (cardinality 1:
@@ -712,7 +804,8 @@ impl<'rt> Controller<'rt> {
                         Some(damp) => {
                             let alpha = (alpha0 * damp).clamp(0.0, 1.0) as f32;
                             let global_now = self.server.global_block();
-                            let mut fold = self.backend.begin_fold(2)?;
+                            let mut fold =
+                                self.backend.begin_fold_sharded(2, self.shards)?;
                             fold.accumulate(global_now.as_slice(), 1.0 - alpha)?;
                             fold.accumulate(&result.params, alpha)?;
                             let held = fold.held_bytes();
@@ -780,6 +873,8 @@ impl<'rt> Controller<'rt> {
             final_accuracy: ev.accuracy,
             total_cost: self.ledger.total,
             agg_wall_s,
+            bytes_down: st.bytes_down,
+            bytes_up,
             invocations: self.invocations.clone(),
         })
     }
@@ -805,6 +900,7 @@ impl<'rt> Controller<'rt> {
             });
         }
         let k = self.cfg.clients_per_round.max(1);
+        let payload_mb = self.invoke_payload_mb();
         let pseudo_round = (st.dispatched / k) as u32;
         let selected = {
             let ctx = SelectionContext {
@@ -840,12 +936,13 @@ impl<'rt> Controller<'rt> {
                 client,
                 now_s,
                 compute_s,
-                mf.payload_mb(),
+                payload_mb,
                 deadline,
                 forced,
             );
             self.ledger.bill(inv.billed_s, self.cfg.faas.memory_mb);
             self.in_flight.track(client, inv.finished_at);
+            st.bytes_down += mf.param_count * std::mem::size_of::<f32>();
             let seq = st.seq;
             st.seq += 1;
             st.dispatched += 1;
@@ -855,6 +952,7 @@ impl<'rt> Controller<'rt> {
                     self.shard_cache
                         .insert(client, Arc::new(self.data.client_data(client)));
                 }
+                let wire = self.wire_spec(client);
                 pool.submit(exec::TrainJob {
                     id: seq,
                     params: global_now.clone(),
@@ -862,6 +960,7 @@ impl<'rt> Controller<'rt> {
                     seed: (seq as i32) * 100_003 + client as i32,
                     num_steps,
                     prox: use_prox,
+                    wire,
                 })?;
             }
             st.pending.insert(
@@ -895,6 +994,9 @@ struct ContState {
     seq: usize,
     /// Total invocations dispatched (the budget counter).
     dispatched: usize,
+    /// Accounted download bytes (every dispatch ships the raw f32
+    /// global to the client).
+    bytes_down: usize,
 }
 
 /// What the continuous driver remembers about one in-flight invocation.
@@ -971,9 +1073,9 @@ impl WindowAcc {
 /// errors, not silence.
 fn take_result(
     pool: &exec::ExecutorPool<'_>,
-    results: &mut HashMap<usize, TrainResult>,
+    results: &mut HashMap<usize, exec::TrainOutput>,
     seq: usize,
-) -> Result<TrainResult> {
+) -> Result<exec::TrainOutput> {
     if let Some(r) = results.remove(&seq) {
         return Ok(r);
     }
@@ -1014,6 +1116,8 @@ fn l2_dist(p: &[f32], q: &[f32]) -> f64 {
 struct RoundAgg<'b> {
     backend: &'b dyn Backend,
     expected_k: usize,
+    /// Parameter-plane shard count for the backend fold accumulator.
+    shards: usize,
     fold: Option<Box<dyn AggregateFold + 'b>>,
     /// Σ c_k over folded updates (the normalized-variant divisor).
     comp_sum: f64,
@@ -1022,10 +1126,11 @@ struct RoundAgg<'b> {
 }
 
 impl<'b> RoundAgg<'b> {
-    fn new(backend: &'b dyn Backend, expected_k: usize) -> Self {
+    fn new(backend: &'b dyn Backend, expected_k: usize, shards: usize) -> Self {
         Self {
             backend,
             expected_k,
+            shards,
             fold: None,
             comp_sum: 0.0,
             card_sum: 0.0,
@@ -1044,7 +1149,10 @@ impl<'b> RoundAgg<'b> {
     /// rounds never touch the backend.
     fn push(&mut self, update: &[f32], component: f64, cardinality: usize) -> Result<()> {
         if self.fold.is_none() {
-            self.fold = Some(self.backend.begin_fold(self.expected_k)?);
+            self.fold = Some(
+                self.backend
+                    .begin_fold_sharded(self.expected_k, self.shards)?,
+            );
         }
         let fold = self.fold.as_mut().expect("fold just created");
         fold.accumulate(update, component as f32)?;

@@ -38,9 +38,44 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::{Scope, ScopedJoinHandle};
 
 use crate::data::ClientData;
-use crate::params::ParamBlock;
+use crate::params::{ErrorFeedback, ParamBlock, ShardLayout};
 use crate::runtime::{Backend, TrainRequest, TrainResult};
 use crate::Result;
+
+/// Client-side wire policy for one job: quantize the trained delta
+/// (int8 symmetric per shard of `layout`, optionally top-k sparse)
+/// with the client's carried error-feedback residual. The worker plays
+/// the serverless client here — it encodes, then *reconstructs* its
+/// parameters as `departed global + dequantized delta`, so the server
+/// fold path downstream sees exactly what crossed the simulated wire.
+#[derive(Clone)]
+pub struct WireSpec {
+    pub layout: ShardLayout,
+    /// Top-k sparse fraction per shard; `None` sends dense int8.
+    pub topk: Option<f64>,
+    /// Error-feedback residual carried from this client's previous
+    /// invocation (all-zero on its first; the coordinator's client DB
+    /// plane stores it between invocations — serverless clients are
+    /// stateless).
+    pub residual: Vec<f32>,
+}
+
+/// What the wire policy produced for one completion: the accounted
+/// upload bytes and the residual to carry to the client's next
+/// invocation.
+pub struct WireMeta {
+    pub bytes_up: usize,
+    pub residual: Vec<f32>,
+}
+
+/// One completed training job: the training result (with `params`
+/// already reconstructed from the quantized wire when a [`WireSpec`]
+/// was attached) plus the wire metadata.
+pub struct TrainOutput {
+    pub train: TrainResult,
+    /// `None` when the job had no wire policy (raw f32 upload).
+    pub wire: Option<WireMeta>,
+}
 
 /// One unit of training work: everything `train_round` needs, owned (or
 /// refcounted), so the job can cross a channel into any worker thread.
@@ -59,6 +94,8 @@ pub struct TrainJob {
     /// FedProx: anchor the proximal term to `params` (same snapshot the
     /// client departs from — refcount-only, no extra param-plane bytes).
     pub prox: bool,
+    /// Quantize the upload (`None` ships raw f32, the default).
+    pub wire: Option<WireSpec>,
 }
 
 /// One completion, tagged with the job id it answers.
@@ -67,7 +104,7 @@ pub struct TrainDone {
     /// `Err` carries a rendered message (worker panics included) rather
     /// than `anyhow::Error` so it stays `Send` across the channel
     /// unconditionally.
-    pub result: std::result::Result<TrainResult, String>,
+    pub result: std::result::Result<TrainOutput, String>,
 }
 
 /// The persistent training worker pool. Lives inside a
@@ -156,8 +193,8 @@ impl<'scope> ExecutorPool<'scope> {
     /// [`next_done`](Self::next_done) traffic. On failure the
     /// lowest-slot error wins (matching the scoped-thread path's
     /// lowest-index contract).
-    pub fn run_batch(&self, jobs: Vec<Option<TrainJob>>) -> Result<Vec<Option<TrainResult>>> {
-        let mut slots: Vec<Option<TrainResult>> = Vec::new();
+    pub fn run_batch(&self, jobs: Vec<Option<TrainJob>>) -> Result<Vec<Option<TrainOutput>>> {
+        let mut slots: Vec<Option<TrainOutput>> = Vec::new();
         slots.resize_with(jobs.len(), || None);
         let mut expected = 0usize;
         for (i, job) in jobs.into_iter().enumerate() {
@@ -225,7 +262,7 @@ fn worker_loop(
     loop {
         // lock scoped to the recv: release before training so other
         // workers can steal the next job mid-compute
-        let job = {
+        let mut job = {
             let rx = match job_rx.lock() {
                 Ok(rx) => rx,
                 Err(_) => return, // a sibling panicked holding the lock
@@ -240,29 +277,63 @@ fn worker_loop(
         } else if let Some(e) = &init_err {
             Err(e.clone())
         } else {
-            let req = TrainRequest {
-                params: job.params.as_slice(),
-                m: &zeros,
-                v: &zeros,
-                t: 0.0,
-                x: &job.shard.x,
-                y: &job.shard.y,
-                seed: job.seed,
-                num_steps: job.num_steps,
-                global: if job.prox { Some(&job.params[..]) } else { None },
+            let trained = {
+                let req = TrainRequest {
+                    params: job.params.as_slice(),
+                    m: &zeros,
+                    v: &zeros,
+                    t: 0.0,
+                    x: &job.shard.x,
+                    y: &job.shard.y,
+                    seed: job.seed,
+                    num_steps: job.num_steps,
+                    global: if job.prox { Some(&job.params[..]) } else { None },
+                };
+                match catch_unwind(AssertUnwindSafe(|| backend.train_round(&req))) {
+                    Ok(Ok((r, _wall))) => Ok(r),
+                    Ok(Err(e)) => Err(format!("{e:#}")),
+                    Err(payload) => Err(format!(
+                        "worker panicked mid-train_round: {}",
+                        panic_message(payload)
+                    )),
+                }
             };
-            match catch_unwind(AssertUnwindSafe(|| backend.train_round(&req))) {
-                Ok(Ok((r, _wall))) => Ok(r),
-                Ok(Err(e)) => Err(format!("{e:#}")),
-                Err(payload) => Err(format!(
-                    "worker panicked mid-train_round: {}",
-                    panic_message(payload)
-                )),
-            }
+            trained.map(|mut r| {
+                let wire = job.wire.take().map(|spec| {
+                    encode_wire(&mut r.params, &job.params, spec)
+                });
+                TrainOutput { train: r, wire }
+            })
         };
         // send failure just means the coordinator stopped listening
         // (shutdown with unread completions) — never panic the worker
         let _ = done_tx.send(TrainDone { id: job.id, result });
+    }
+}
+
+/// Apply one job's wire policy on the worker (client) side: quantize
+/// `trained − departed global` through the client's error-feedback
+/// residual, then overwrite `trained` with `global + dequantized delta`
+/// — the value the server actually receives over the simulated wire.
+/// Deterministic per client regardless of worker scheduling: the
+/// residual rides the job and the encoded result depends only on it and
+/// the training output.
+fn encode_wire(trained: &mut Vec<f32>, departed: &ParamBlock, spec: WireSpec) -> WireMeta {
+    let delta: Vec<f32> = trained
+        .iter()
+        .zip(departed.as_slice())
+        .map(|(t, g)| t - g)
+        .collect();
+    let mut ef = ErrorFeedback::from_residual(spec.residual);
+    let q = ef.encode(&delta, &spec.layout, spec.topk);
+    let bytes_up = q.wire_bytes();
+    let dq = crate::params::dequantize(&q, &spec.layout);
+    for ((t, g), d) in trained.iter_mut().zip(departed.as_slice()).zip(&dq) {
+        *t = g + d;
+    }
+    WireMeta {
+        bytes_up,
+        residual: ef.into_residual(),
     }
 }
 
@@ -419,6 +490,7 @@ mod tests {
             seed,
             num_steps: 2,
             prox: false,
+            wire: None,
         }
     }
 
@@ -448,8 +520,41 @@ mod tests {
             let pool = ExecutorPool::new(scope, &be, 3);
             let results = pool.run_batch(jobs).unwrap();
             for (i, r) in results.iter().enumerate() {
-                assert_eq!(r.as_ref().unwrap().params, inline[i], "slot {i}");
+                let out = r.as_ref().unwrap();
+                assert_eq!(out.train.params, inline[i], "slot {i}");
+                assert!(out.wire.is_none(), "no wire policy attached");
             }
+            pool.shutdown().unwrap();
+        });
+    }
+
+    #[test]
+    fn quantized_wire_reconstructs_params_and_accounts_bytes() {
+        // TestBackend trains params = departed + seed, so the delta is
+        // the constant `seed` — exactly representable (scale = seed/127
+        // times code 127): the reconstruction matches the raw result
+        // bit-for-bit and the residual stays zero.
+        let be = TestBackend::new();
+        let layout = ShardLayout::new(4, 2);
+        std::thread::scope(|scope| {
+            let pool = ExecutorPool::new(scope, &be, 2);
+            let mut j = job(0, 3);
+            j.wire = Some(WireSpec {
+                layout,
+                topk: None,
+                residual: vec![0.0; 4],
+            });
+            let out = pool.run_batch(vec![Some(j)]).unwrap();
+            let out = out[0].as_ref().unwrap();
+            assert_eq!(out.train.params, vec![4.0f32; 4], "1.0 + seed 3");
+            let wire = out.wire.as_ref().unwrap();
+            assert_eq!(
+                wire.bytes_up,
+                crate::params::wire_bytes_estimate(4, 2, None),
+                "actual wire == deterministic estimate"
+            );
+            assert!(wire.bytes_up < 4 * std::mem::size_of::<f32>());
+            assert!(wire.residual.iter().all(|&e| e == 0.0));
             pool.shutdown().unwrap();
         });
     }

@@ -28,6 +28,7 @@ USAGE:
   fedless train [--dataset D] [--strategy fedavg|fedprox|fedlesscan|safalite]
                 [--stragglers PCT] [--rounds N] [--clients N] [--per-round K]
                 [--mode rounds|continuous] [--cohorts C] [--workers W]
+                [--shards N] [--quantize] [--topk F]
                 [--seed S] [--config FILE.json] [--out DIR] [--verbose]
   fedless repro <fig1|tables|fig3|ablations|all>
                 [--datasets a,b,c] [--profile quick|full] [--out DIR]
@@ -43,10 +44,18 @@ GLOBAL:
   --mode M          rounds (default, the paper's protocol) or continuous
                     (rounds-free: fold every completion, Eq. 3 damping)
   --cohorts C       continuous mode: keep C x per-round clients in flight
+  --shards N        parameter-plane shard count (default: one per core, or
+                    the FEDLESS_SHARDS env var; folds, anchor reads and
+                    snapshot installs proceed per-shard)
+  --quantize        int8-quantize client updates (symmetric per-shard
+                    scales, client-side error-feedback residuals); cuts
+                    accounted upload bytes ~4x
+  --topk F          with --quantize: ship only the top F fraction of
+                    entries per shard (0 < F <= 1)
 ";
 
 fn main() -> Result<()> {
-    let args = cli::parse(std::env::args().skip(1), &["verbose", "help"])?;
+    let args = cli::parse(std::env::args().skip(1), &["verbose", "help", "quantize"])?;
     if args.get_bool("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -99,6 +108,15 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
     }
     if let Some(w) = args.get_parse_opt::<usize>("workers")? {
         cfg.workers = Some(w);
+    }
+    if let Some(s) = args.get_parse_opt::<usize>("shards")? {
+        cfg.shards = Some(s);
+    }
+    if args.get_bool("quantize") {
+        cfg.quantize_updates = true;
+    }
+    if let Some(f) = args.get_parse_opt::<f64>("topk")? {
+        cfg.quantize_topk = Some(f);
     }
     cfg.validate()?;
 
@@ -156,10 +174,12 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         .map(|r| r.param_plane_peak_bytes)
         .max()
         .unwrap_or(0);
+    let bytes_down_total: usize = result.rounds.iter().map(|r| r.bytes_down).sum();
+    let bytes_up_total: usize = result.rounds.iter().map(|r| r.bytes_up).sum();
     println!(
         "\n{} / {} / {}: final acc {:.3}, mean EUR {:.3}, time {:.1} min, cost ${:.4}, \
          bias {}, stale applied {}, in-flight skips {}, select wall {:.1} ms, \
-         agg wall {:.1} ms, param-plane peak {:.2} MB",
+         agg wall {:.1} ms, param-plane peak {:.2} MB, net down/up {:.2}/{:.2} MB",
         result.dataset,
         result.strategy,
         result.scenario,
@@ -173,6 +193,8 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         select_wall_total * 1e3,
         agg_wall_total * 1e3,
         peak_bytes as f64 / 1e6,
+        bytes_down_total as f64 / 1e6,
+        bytes_up_total as f64 / 1e6,
     );
     if let Some(out) = args.get("out") {
         let out = PathBuf::from(out);

@@ -51,6 +51,14 @@ pub struct RoundRecord {
     /// native streaming accumulator, O(k × P) for a buffered batch
     /// fold), tracked by [`crate::params::PlaneGauge`].
     pub param_plane_peak_bytes: usize,
+    /// Simulated network bytes sent server -> clients this round: every
+    /// dispatched invocation downloads the full f32 global model.
+    pub bytes_down: usize,
+    /// Simulated network bytes sent clients -> server this round: raw
+    /// f32 updates by default, or the quantized wire size (int8 codes +
+    /// per-shard scales, plus indices for top-k) when
+    /// `quantize_updates` is on.
+    pub bytes_up: usize,
 }
 
 impl RoundRecord {
@@ -125,11 +133,11 @@ impl ExperimentResult {
     /// Write the per-round timeline as CSV (Fig. 3a/3b series).
     pub fn write_timeline_csv(&self, path: &Path) -> Result<()> {
         let mut out = String::from(
-            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur,select_wall_s,agg_wall_s,param_plane_peak_bytes\n",
+            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur,select_wall_s,agg_wall_s,param_plane_peak_bytes,bytes_down,bytes_up\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4},{:.6},{:.6},{}\n",
+                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4},{:.6},{:.6},{},{},{}\n",
                 r.round,
                 r.selected.len(),
                 r.successes,
@@ -145,6 +153,8 @@ impl ExperimentResult {
                 r.select_wall_s,
                 r.agg_wall_s,
                 r.param_plane_peak_bytes,
+                r.bytes_down,
+                r.bytes_up,
             ));
         }
         std::fs::write(path, out)?;
@@ -188,6 +198,8 @@ impl ExperimentResult {
                         "param_plane_peak_bytes",
                         Json::num(r.param_plane_peak_bytes as f64),
                     ),
+                    ("bytes_down", Json::num(r.bytes_down as f64)),
+                    ("bytes_up", Json::num(r.bytes_up as f64)),
                 ])
             })
             .collect();
@@ -285,6 +297,12 @@ pub struct ContinuousResult {
     /// Wall-clock seconds spent in aggregation folds (real machine time,
     /// excluded from determinism goldens).
     pub agg_wall_s: f64,
+    /// Simulated network bytes server -> clients over the whole run
+    /// (full f32 model per dispatched invocation).
+    pub bytes_down: usize,
+    /// Simulated network bytes clients -> server over the whole run
+    /// (raw f32, or int8-quantized wire size when `quantize_updates`).
+    pub bytes_up: usize,
     /// client -> invocation count across the run (bias input).
     pub invocations: HashMap<ClientId, u32>,
 }
@@ -357,6 +375,8 @@ impl ContinuousResult {
                 Json::num(self.effective_update_ratio()),
             ),
             ("agg_wall_s", Json::num(self.agg_wall_s)),
+            ("bytes_down", Json::num(self.bytes_down as f64)),
+            ("bytes_up", Json::num(self.bytes_up as f64)),
             ("windows", Json::Arr(windows)),
             (
                 "invocations",
@@ -398,6 +418,8 @@ mod tests {
             select_wall_s: 0.0,
             agg_wall_s: 0.0,
             param_plane_peak_bytes: 0,
+            bytes_down: 0,
+            bytes_up: 0,
         }
     }
 
@@ -467,6 +489,8 @@ mod tests {
             final_accuracy: 0.0,
             total_cost: 0.0,
             agg_wall_s: 0.0,
+            bytes_down: 0,
+            bytes_up: 0,
             invocations: HashMap::new(),
         };
         assert_eq!(c.updates_per_s(), 0.0);
@@ -510,6 +534,8 @@ mod tests {
             final_accuracy: 0.5,
             total_cost: 0.01,
             agg_wall_s: 0.0,
+            bytes_down: 24_000,
+            bytes_up: 6_000,
             invocations: [(0, 2), (1, 4)].into_iter().collect(),
         };
         let p = std::env::temp_dir().join(format!("fedless-cont-{}.json", std::process::id()));
@@ -517,6 +543,8 @@ mod tests {
         let j = Json::parse_file(&p).unwrap();
         assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "continuous");
         assert_eq!(j.get("folds").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("bytes_down").unwrap().as_usize().unwrap(), 24_000);
+        assert_eq!(j.get("bytes_up").unwrap().as_usize().unwrap(), 6_000);
         assert_eq!(j.get("final_generation").unwrap().as_usize().unwrap(), 3);
         match j.get("windows").unwrap() {
             Json::Arr(ws) => {
@@ -539,7 +567,7 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("select_wall_s,agg_wall_s,param_plane_peak_bytes"));
+            .ends_with("select_wall_s,agg_wall_s,param_plane_peak_bytes,bytes_down,bytes_up"));
         assert_eq!(s.lines().count(), 2);
         std::fs::remove_file(&p).ok();
     }

@@ -15,6 +15,20 @@
 //! changes any element's accumulation order: the result is
 //! **bit-identical across worker counts**, including the serial path.
 //! That determinism contract is tested here and in `tests/proptests.rs`.
+//!
+//! [`shard`] cuts the same flat vector into independently-locked shards
+//! (shard boundaries are chunk boundaries, so the invariance argument
+//! carries over verbatim: any shard count is bit-identical to the
+//! unsharded fold). [`quant`] adds int8 symmetric per-shard client
+//! updates with error-feedback residuals.
+
+pub mod quant;
+pub mod shard;
+
+pub use quant::{
+    dequantize, quantize, quantize_topk, wire_bytes_estimate, ErrorFeedback, QuantizedUpdate,
+};
+pub use shard::{default_shards, resolve_shards, shards_override, ShardLayout, ShardedAccumulator};
 
 use std::sync::Arc;
 
@@ -46,6 +60,16 @@ impl ParamBlock {
     /// snapshot semantics with this.
     pub fn ptr_eq(&self, other: &ParamBlock) -> bool {
         Arc::ptr_eq(&self.0, &other.0)
+    }
+
+    /// Zero-copy view of shard `i` under `layout`: a borrowed slice of
+    /// the shared allocation, so per-shard anchor reads and snapshot
+    /// clones never copy the flat vector.
+    ///
+    /// Panics if the layout length differs from the block length.
+    pub fn shard(&self, layout: &ShardLayout, i: usize) -> &[f32] {
+        assert_eq!(layout.len(), self.len(), "shard layout length mismatch");
+        &self.0[layout.range(i)]
     }
 }
 
@@ -100,14 +124,20 @@ pub fn workers_override(raw: Option<&str>) -> Option<usize> {
 const MIN_PARALLEL_MADDS: usize = 1 << 18;
 
 /// Worker-count heuristic for a fold of `k` updates over `param_count`
-/// parameters: serial below [`MIN_PARALLEL_MADDS`] of work, one worker
-/// per core above it. Either choice produces bit-identical results.
+/// parameters: one worker per [`MIN_PARALLEL_MADDS`] of total work,
+/// capped at the core count. The old all-or-nothing gate kept
+/// preset-sized (~10⁵-param) streamed entries serial forever because
+/// the streaming path priced each entry at `k = 1`; the proportional
+/// ramp (plus the streaming folds now pricing their whole expected
+/// cohort up front) lets them fan out once the cohort is large enough —
+/// e.g. the mnist preset (P = 25450) crosses to 2 workers at k = 11.
+/// Every choice produces bit-identical results; the crossover is pinned
+/// by a `benches/micro.rs` row and the unit test below.
 pub fn fold_workers(param_count: usize, k: usize) -> usize {
-    if param_count.saturating_mul(k) < MIN_PARALLEL_MADDS {
-        1
-    } else {
-        default_workers()
-    }
+    param_count
+        .saturating_mul(k)
+        .div_ceil(MIN_PARALLEL_MADDS)
+        .clamp(1, default_workers())
 }
 
 /// Fold `acc[i] += w * u[i]` for every `(u, w)` entry, in entry order,
@@ -260,6 +290,27 @@ mod tests {
     }
 
     #[test]
+    fn fold_workers_ramps_proportionally_to_total_work() {
+        // The mnist preset (P = 25450) must cross from serial to 2
+        // workers at k = 11 (25450 * 11 = 279950 > 2^18 = 262144) —
+        // the satellite retune: preset-sized streamed folds fan out
+        // once the cohort warrants it instead of staying serial.
+        let p = 25450;
+        assert_eq!(fold_workers(p, 10), 1, "just under one work quantum");
+        if default_workers() >= 2 {
+            assert_eq!(fold_workers(p, 11), 2, "crossover at k = 11");
+        }
+        // the ramp is monotone and capped at the core count
+        let mut last = 0;
+        for k in 1..=256 {
+            let w = fold_workers(p, k);
+            assert!(w >= last, "ramp must be monotone in k");
+            assert!(w <= default_workers(), "capped at cores");
+            last = w;
+        }
+    }
+
+    #[test]
     fn workers_override_parses_and_clamps() {
         assert_eq!(workers_override(Some("3")), Some(3));
         assert_eq!(workers_override(Some(" 16 ")), Some(16), "whitespace trimmed");
@@ -286,6 +337,25 @@ mod tests {
         match prior {
             Some(v) => std::env::set_var("FEDLESS_WORKERS", v),
             None => std::env::remove_var("FEDLESS_WORKERS"),
+        }
+    }
+
+    #[test]
+    fn fedless_shards_env_overrides_config_and_default() {
+        // Shard-count precedence: FEDLESS_SHARDS env ▸ config `shards`
+        // ▸ core count. Sharding is bit-identical at any count, so a
+        // concurrent test seeing the temporary value stays correct.
+        let prior = std::env::var("FEDLESS_SHARDS").ok();
+        std::env::set_var("FEDLESS_SHARDS", "5");
+        assert_eq!(default_shards(), 5);
+        assert_eq!(resolve_shards(Some(3)), 5, "env wins over config");
+        std::env::remove_var("FEDLESS_SHARDS");
+        assert_eq!(resolve_shards(Some(3)), 3, "config wins over cores");
+        assert_eq!(resolve_shards(Some(0)), 1, "config clamped to >= 1");
+        assert!(resolve_shards(None) >= 1);
+        match prior {
+            Some(v) => std::env::set_var("FEDLESS_SHARDS", v),
+            None => std::env::remove_var("FEDLESS_SHARDS"),
         }
     }
 

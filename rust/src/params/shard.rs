@@ -1,0 +1,308 @@
+//! Sharded view of the parameter plane: one flat parameter vector cut
+//! into N contiguous, independently-locked shards so folds, FedProx
+//! anchor reads and snapshot clones touching different shards never
+//! serialize on a single accumulator lock.
+//!
+//! The shard count resolves `FEDLESS_SHARDS` env ▸ config `shards` ▸
+//! core-count default ([`resolve_shards`]). Sharding is a **layout**
+//! choice, never a numeric one: shard boundaries are just chunk
+//! boundaries of the flat vector, and every element accumulates its
+//! fold entries in registration order regardless of which shard owns
+//! it, so a sharded fold is bit-identical to the unsharded scalar
+//! reference for any shard count (pinned by `tests/proptests.rs`).
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+use super::{default_workers, fold_weighted_into, workers_override};
+
+/// How one flat parameter vector of `len` floats is cut into `shards`
+/// contiguous ranges. Balanced layout: the first `len % shards` shards
+/// hold one extra element, so shard sizes differ by at most one and the
+/// concatenation of [`ShardLayout::range`]s is exactly `0..len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardLayout {
+    len: usize,
+    shards: usize,
+}
+
+impl ShardLayout {
+    /// `shards` is clamped to `[1, len.max(1)]` — more shards than
+    /// elements would only manufacture empty locks.
+    pub fn new(len: usize, shards: usize) -> Self {
+        Self {
+            len,
+            shards: shards.clamp(1, len.max(1)),
+        }
+    }
+
+    /// Total element count of the flat vector.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of shards (post-clamp).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Element range owned by shard `i`.
+    pub fn range(&self, i: usize) -> Range<usize> {
+        assert!(i < self.shards, "shard {i} out of {}", self.shards);
+        let base = self.len / self.shards;
+        let rem = self.len % self.shards;
+        let start = i * base + i.min(rem);
+        let end = start + base + usize::from(i < rem);
+        start..end
+    }
+
+    /// Shard owning flat element index `elem`.
+    pub fn shard_of(&self, elem: usize) -> usize {
+        assert!(elem < self.len, "element {elem} out of {}", self.len);
+        let base = self.len / self.shards;
+        let rem = self.len % self.shards;
+        let fat = rem * (base + 1); // elements owned by the base+1 shards
+        if elem < fat {
+            elem / (base + 1)
+        } else {
+            rem + (elem - fat) / base
+        }
+    }
+
+    /// Iterate every shard's range in order (their concatenation is
+    /// `0..len`).
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.shards).map(|i| self.range(i))
+    }
+}
+
+/// Parse a `FEDLESS_SHARDS`-style override: `None`/empty/garbage fall
+/// through; a parsed value is clamped to ≥ 1. Pure, mirroring
+/// [`workers_override`], so the clamp rules stay unit-testable without
+/// mutating process environment.
+pub fn shards_override(raw: Option<&str>) -> Option<usize> {
+    workers_override(raw)
+}
+
+/// Default shard count: the `FEDLESS_SHARDS` env override (clamped
+/// ≥ 1) wins, else one shard per available core.
+pub fn default_shards() -> usize {
+    if let Some(s) = shards_override(std::env::var("FEDLESS_SHARDS").ok().as_deref()) {
+        return s;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
+/// Resolve the parameter-plane shard count with the documented
+/// precedence: `FEDLESS_SHARDS` env ▸ config `shards` ▸ core-count
+/// default. Any choice is bit-identical; this only tunes lock
+/// granularity and fold parallelism.
+pub fn resolve_shards(config: Option<usize>) -> usize {
+    if let Some(s) = shards_override(std::env::var("FEDLESS_SHARDS").ok().as_deref()) {
+        return s;
+    }
+    match config {
+        Some(s) => s.max(1),
+        None => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1),
+    }
+}
+
+/// A weighted-sum accumulator cut into independently-locked shards.
+///
+/// Each shard is its own `Mutex<Vec<f32>>`, so concurrent
+/// [`ShardedAccumulator::accumulate`] calls from different threads only
+/// contend per shard, and the intra-call fan-out gives each worker a
+/// disjoint shard subset (no lock contention at all on the hot path).
+///
+/// Determinism: within one accumulate call every shard folds the same
+/// `(update, weight)` entry, so per-element accumulation order equals
+/// the call order. Callers that need bit-reproducibility (the
+/// coordinator's single-threaded event replay) establish one entry
+/// order; the locks make *concurrent* callers safe, not bit-pinned.
+pub struct ShardedAccumulator {
+    layout: ShardLayout,
+    shards: Vec<Mutex<Vec<f32>>>,
+}
+
+impl ShardedAccumulator {
+    pub fn new(layout: ShardLayout) -> Self {
+        let shards = layout
+            .ranges()
+            .map(|r| Mutex::new(vec![0.0f32; r.len()]))
+            .collect();
+        Self { layout, shards }
+    }
+
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    /// Bytes of parameter data held: O(P) total across shards.
+    pub fn held_bytes(&self) -> usize {
+        self.layout.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Fold `acc[i] += weight * update[i]` across every shard,
+    /// `workers` scoped threads each owning a strided, disjoint shard
+    /// subset (`workers == 1` loops shards serially on the caller's
+    /// thread, spawn-free). Zero-weight entries are skipped, matching
+    /// [`fold_weighted_into`]. Takes `&self`: concurrent folds are
+    /// safe, serialized per shard by each shard's own lock.
+    ///
+    /// Panics if `update.len()` differs from the layout length.
+    pub fn accumulate(&self, update: &[f32], weight: f32, workers: usize) {
+        assert_eq!(update.len(), self.layout.len(), "fold entry length mismatch");
+        if weight == 0.0 {
+            return;
+        }
+        let workers = workers.clamp(1, self.shards.len());
+        if workers == 1 {
+            for (i, shard) in self.shards.iter().enumerate() {
+                self.fold_shard(i, shard, update, weight);
+            }
+            return;
+        }
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                scope.spawn(move || {
+                    for (i, shard) in self.shards.iter().enumerate().skip(w).step_by(workers) {
+                        self.fold_shard(i, shard, update, weight);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Fold one entry into one shard behind its own lock.
+    fn fold_shard(&self, i: usize, shard: &Mutex<Vec<f32>>, update: &[f32], weight: f32) {
+        let range = self.layout.range(i);
+        let mut acc = shard.lock().expect("shard lock poisoned");
+        fold_weighted_into(&mut acc, &[(&update[range], weight)], 1);
+    }
+
+    /// A copy of shard `i`'s current accumulator contents.
+    pub fn shard_snapshot(&self, i: usize) -> Vec<f32> {
+        self.shards[i].lock().expect("shard lock poisoned").clone()
+    }
+
+    /// Concatenate the shards back into the flat vector (bit-identical
+    /// to an unsharded fold of the same entry sequence).
+    pub fn finish(self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.layout.len());
+        for shard in self.shards {
+            out.extend_from_slice(&shard.into_inner().expect("shard lock poisoned"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::weighted_sum_scalar;
+
+    #[test]
+    fn layout_ranges_partition_the_vector() {
+        for (len, shards) in [(0usize, 1usize), (1, 4), (10, 3), (10, 7), (1031, 8), (64, 64)] {
+            let l = ShardLayout::new(len, shards);
+            let mut next = 0usize;
+            for (i, r) in l.ranges().enumerate() {
+                assert_eq!(r.start, next, "len={len} shards={shards} shard {i}");
+                assert!(!r.is_empty(), "clamped layout never has empty shards");
+                for e in r.clone() {
+                    assert_eq!(l.shard_of(e), i);
+                }
+                next = r.end;
+            }
+            assert_eq!(next, len);
+            // balanced: sizes differ by at most one
+            let sizes: Vec<usize> = l.ranges().map(|r| r.len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced layout {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn layout_clamps_shard_count() {
+        assert_eq!(ShardLayout::new(4, 0).shards(), 1);
+        assert_eq!(ShardLayout::new(4, 9).shards(), 4);
+        assert_eq!(ShardLayout::new(0, 5).shards(), 1);
+        assert!(ShardLayout::new(0, 5).is_empty());
+    }
+
+    #[test]
+    fn sharded_fold_is_bit_identical_to_scalar_oracle() {
+        let p = 1031; // prime: uneven shard sizes
+        let u1: Vec<f32> = (0..p).map(|i| (i % 17) as f32 * 0.3 - 1.0).collect();
+        let u2: Vec<f32> = (0..p).map(|i| (i % 5) as f32 * -0.7).collect();
+        let u3: Vec<f32> = (0..p).map(|i| (i % 29) as f32 * 0.01).collect();
+        let scalar = weighted_sum_scalar(&[&u1, &u2, &u3], &[0.4, 0.0, 0.6]);
+        for shards in [1usize, 2, 8, 17] {
+            for workers in [1usize, 3] {
+                let acc = ShardedAccumulator::new(ShardLayout::new(p, shards));
+                for (u, w) in [(&u1, 0.4f32), (&u2, 0.0), (&u3, 0.6)] {
+                    acc.accumulate(u, w, workers);
+                }
+                assert_eq!(
+                    acc.finish(),
+                    scalar,
+                    "shards={shards} workers={workers} drifted from the oracle"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_folds_land_every_entry() {
+        // The per-shard locks make concurrent accumulate calls safe;
+        // with commutative-exact entries (integers) the result is the
+        // full sum regardless of interleaving.
+        let p = 257;
+        let acc = ShardedAccumulator::new(ShardLayout::new(p, 4));
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let acc = &acc;
+                scope.spawn(move || {
+                    let u: Vec<f32> = vec![(t + 1) as f32; p];
+                    for _ in 0..8 {
+                        acc.accumulate(&u, 1.0, 2);
+                    }
+                });
+            }
+        });
+        let want = 8.0 * (1.0 + 2.0 + 3.0 + 4.0);
+        assert!(ShardedAccumulator::new(ShardLayout::new(p, 4))
+            .finish()
+            .iter()
+            .all(|&x| x == 0.0));
+        assert!(acc.finish().iter().all(|&x| x == want));
+    }
+
+    #[test]
+    fn shards_override_and_resolution() {
+        assert_eq!(shards_override(Some("5")), Some(5));
+        assert_eq!(shards_override(Some("0")), Some(1), "clamped to >= 1");
+        assert_eq!(shards_override(Some("")), None);
+        assert_eq!(shards_override(None), None);
+        assert!(default_shards() >= 1);
+        // config wins over the core default when the env is unset; the
+        // env-over-config precedence is covered with the env tests in
+        // the parent module (env mutation is process-global).
+        assert!(resolve_shards(None) >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn accumulate_rejects_mismatched_lengths() {
+        let acc = ShardedAccumulator::new(ShardLayout::new(8, 2));
+        acc.accumulate(&[0.0; 7], 1.0, 1);
+    }
+}

@@ -13,7 +13,7 @@
 //! handing it to the FedProx anchor or to concurrent train requests is
 //! an `Arc` refcount bump, not a buffer copy.
 
-use crate::params::ParamBlock;
+use crate::params::{resolve_shards, ParamBlock, ShardLayout};
 use crate::ClientId;
 
 /// A late client update waiting in the staleness buffer.
@@ -107,8 +107,18 @@ pub fn weight_component(produced_round: u32, cardinality: usize, t: u32, tau: u3
 }
 
 /// The parameter server state.
+///
+/// The global blob is one flat [`ParamBlock`] cut by a [`ShardLayout`]
+/// into independently-tracked shards: installs bump a per-shard
+/// generation only for shards whose contents actually changed, so
+/// shard-local readers (FedProx anchor slices, snapshot clones, fold
+/// accumulators) can detect "my shard moved" without a whole-model
+/// comparison. The cross-shard snapshot stays trivially consistent
+/// because an install swaps the single `ParamBlock` atomically — there
+/// is never a torn state where shard 0 is new and shard 1 old.
 pub struct ParameterServer {
     global: ParamBlock,
+    layout: ShardLayout,
     /// Completed aggregation count == current round index for Eq. 3.
     round: u32,
     /// Fold generation: bumps on **every** global install, independent
@@ -117,15 +127,32 @@ pub struct ParameterServer {
     /// completion — and keys its Eq. 3 staleness damping to the
     /// generation an update departed from.
     gen: u32,
+    /// Per-shard install generations: `shard_gens[i]` bumps only when
+    /// an install changed shard `i`'s bytes.
+    shard_gens: Vec<u32>,
     stale: Vec<StaleUpdate>,
 }
 
 impl ParameterServer {
+    /// Server with the default shard resolution (`FEDLESS_SHARDS` env ▸
+    /// core count).
     pub fn new(init: Vec<f32>) -> Self {
+        let shards = resolve_shards(None);
+        Self::with_shards(init, shards)
+    }
+
+    /// Server with an explicit shard count (the coordinator threads the
+    /// config's resolved count through here). Any count is
+    /// arithmetic-identical; it only sets tracking/lock granularity.
+    pub fn with_shards(init: Vec<f32>, shards: usize) -> Self {
+        let layout = ShardLayout::new(init.len(), shards);
+        let shard_gens = vec![0; layout.shards()];
         Self {
             global: init.into(),
+            layout,
             round: 0,
             gen: 0,
+            shard_gens,
             stale: Vec::new(),
         }
     }
@@ -133,6 +160,22 @@ impl ParameterServer {
     /// Borrow the current global snapshot.
     pub fn global(&self) -> &ParamBlock {
         &self.global
+    }
+
+    /// The shard layout the server tracks installs under.
+    pub fn layout(&self) -> &ShardLayout {
+        &self.layout
+    }
+
+    /// Zero-copy view of shard `i` of the current global.
+    pub fn global_shard(&self, i: usize) -> &[f32] {
+        self.global.shard(&self.layout, i)
+    }
+
+    /// Install generation of shard `i`: how many installs have changed
+    /// this shard's contents since the initial model.
+    pub fn shard_generation(&self, i: usize) -> u32 {
+        self.shard_gens[i]
     }
 
     /// A shared handle to the current global snapshot: an `Arc`
@@ -154,9 +197,22 @@ impl ParameterServer {
     }
 
     /// Install the freshly aggregated global model; bumps the fold
-    /// generation.
+    /// generation, plus the per-shard generation of every shard whose
+    /// contents changed (bitwise compare per shard — a fold that only
+    /// moved some shards leaves the others' generations alone).
     pub fn set_global(&mut self, params: ParamBlock, round: u32) {
         assert_eq!(params.len(), self.global.len(), "param length change");
+        if !params.ptr_eq(&self.global) {
+            for (i, r) in self.layout.ranges().enumerate() {
+                let same = self.global[r.clone()]
+                    .iter()
+                    .zip(&params[r])
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    self.shard_gens[i] = self.shard_gens[i].saturating_add(1);
+                }
+            }
+        }
         self.global = params;
         self.round = round;
         self.gen = self.gen.saturating_add(1);
@@ -313,6 +369,34 @@ mod tests {
         assert_eq!(ps.generation(), 1);
         ps.set_global(vec![2.0].into(), 7); // same round, new install
         assert_eq!(ps.generation(), 2);
+    }
+
+    #[test]
+    fn shard_generations_bump_only_for_changed_shards() {
+        // 8 params in 4 shards of 2. An install that only moves the
+        // second shard bumps that shard's generation alone, while the
+        // whole-model generation (the continuous staleness key) bumps
+        // on every install.
+        let mut ps = ParameterServer::with_shards(vec![0.0; 8], 4);
+        assert_eq!(ps.layout().shards(), 4);
+        assert_eq!(ps.global_shard(1), &[0.0, 0.0]);
+        let mut next = vec![0.0f32; 8];
+        next[2] = 1.0; // shard 1 only
+        ps.set_global(next.into(), 1);
+        assert_eq!(
+            (0..4).map(|i| ps.shard_generation(i)).collect::<Vec<_>>(),
+            vec![0, 1, 0, 0]
+        );
+        assert_eq!(ps.generation(), 1);
+        assert_eq!(ps.global_shard(1), &[1.0, 0.0]);
+        // re-installing the identical snapshot handle bumps no shard
+        let same = ps.global_block();
+        ps.set_global(same, 1);
+        assert_eq!(ps.shard_generation(1), 1);
+        assert_eq!(ps.generation(), 2, "whole-model gen still bumps");
+        // a full-model change bumps every shard
+        ps.set_global(vec![2.0; 8].into(), 2);
+        assert!((0..4).all(|i| ps.shard_generation(i) >= 1));
     }
 
     #[test]

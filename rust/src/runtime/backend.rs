@@ -124,6 +124,23 @@ pub trait Backend: Sync {
     /// that defers to their `aggregate` override.
     fn begin_fold(&self, expected_k: usize) -> Result<Box<dyn AggregateFold + '_>>;
 
+    /// Begin a streaming aggregation whose accumulator is cut into
+    /// `shards` independently-locked shards (see
+    /// [`crate::params::ShardedAccumulator`]). Shard boundaries are
+    /// chunk boundaries, so any shard count is **bit-identical** to
+    /// [`Backend::begin_fold`] — sharding only changes lock and
+    /// parallelism granularity. The default delegates to the unsharded
+    /// fold, so batch-only backends (PJRT's [`BufferedFold`]) and the
+    /// test mocks need no changes; the native backend overrides it.
+    fn begin_fold_sharded(
+        &self,
+        expected_k: usize,
+        shards: usize,
+    ) -> Result<Box<dyn AggregateFold + '_>> {
+        let _ = shards;
+        self.begin_fold(expected_k)
+    }
+
     /// Weighted aggregation: `out = sum_k weights[k] * updates[k]` in f32
     /// (paper Eq. 3 inner sum; weight semantics belong to the caller).
     /// `updates.len()` must be in `[1, k_max]`.

@@ -26,7 +26,7 @@ use super::backend::{
 };
 use super::manifest::{Entrypoint, Manifest};
 use crate::data::Features;
-use crate::params::{fold_weighted_into, fold_workers};
+use crate::params::{fold_workers, resolve_shards, ShardLayout, ShardedAccumulator};
 use crate::util::Rng;
 use crate::Result;
 
@@ -529,26 +529,45 @@ impl Backend for NativeBackend {
         })
     }
 
-    fn begin_fold(&self, _expected_k: usize) -> Result<Box<dyn AggregateFold + '_>> {
+    fn begin_fold(&self, expected_k: usize) -> Result<Box<dyn AggregateFold + '_>> {
+        self.begin_fold_sharded(expected_k, resolve_shards(None))
+    }
+
+    fn begin_fold_sharded(
+        &self,
+        expected_k: usize,
+        shards: usize,
+    ) -> Result<Box<dyn AggregateFold + '_>> {
+        let mf = &self.manifest;
+        let layout = ShardLayout::new(mf.param_count, shards);
+        // Price the fan-out on the whole expected cohort, once: the old
+        // per-entry `fold_workers(P, 1)` kept preset-sized streamed
+        // entries serial forever (the PR-4 review note), because a
+        // single ~10⁵-param entry never clears the work gate even when
+        // the fold will see dozens of them.
+        let workers = fold_workers(mf.param_count, expected_k.clamp(1, mf.k_max));
         Ok(Box::new(NativeFold {
-            mf: &self.manifest,
-            acc: vec![0.0f32; self.manifest.param_count],
+            mf,
+            acc: ShardedAccumulator::new(layout),
+            workers,
             count: 0,
             wall: Duration::ZERO,
         }))
     }
 }
 
-/// Streaming O(P) accumulator behind [`NativeBackend::begin_fold`]:
-/// each `accumulate` is one `acc += w * u` pass
-/// ([`fold_weighted_into`]), chunk-parallel across scoped worker
-/// threads when the entry is large enough to amortize the fan-out
-/// ([`fold_workers`]) and bit-identical to the serial seed loop either
-/// way. The batch [`Backend::aggregate`] default wrapper drives this
+/// Streaming O(P) accumulator behind [`NativeBackend::begin_fold`] /
+/// `begin_fold_sharded`: each `accumulate` is one `acc += w * u` pass
+/// folded shard-by-shard into a [`ShardedAccumulator`], fanned out over
+/// `workers` scoped threads when the expected cohort's total work
+/// amortizes the spawn ([`fold_workers`], priced once at `begin_fold`)
+/// and bit-identical to the serial seed loop for every shard/worker
+/// choice. The batch [`Backend::aggregate`] default wrapper drives this
 /// same fold, so the Eq. 3 goldens pin both paths at once.
 struct NativeFold<'b> {
     mf: &'b Manifest,
-    acc: Vec<f32>,
+    acc: ShardedAccumulator,
+    workers: usize,
     count: usize,
     wall: Duration,
 }
@@ -560,8 +579,7 @@ impl AggregateFold for NativeFold<'_> {
             bail!("{}: fold exceeds k_max={}", self.mf.name, self.mf.k_max);
         }
         let t0 = Instant::now();
-        let workers = fold_workers(self.acc.len(), 1);
-        fold_weighted_into(&mut self.acc, &[(update, weight)], workers);
+        self.acc.accumulate(update, weight, self.workers);
         self.wall += t0.elapsed();
         self.count += 1;
         Ok(())
@@ -572,14 +590,15 @@ impl AggregateFold for NativeFold<'_> {
     }
 
     fn held_bytes(&self) -> usize {
-        self.acc.len() * std::mem::size_of::<f32>()
+        self.acc.held_bytes()
     }
 
     fn finish(self: Box<Self>) -> Result<(Vec<f32>, Duration)> {
         if self.count == 0 {
             bail!("{}: fold finished with no updates", self.mf.name);
         }
-        Ok((self.acc, self.wall))
+        let wall = self.wall;
+        Ok((self.acc.finish(), wall))
     }
 }
 
@@ -666,6 +685,29 @@ mod tests {
         assert_eq!(fold.held_bytes(), p * std::mem::size_of::<f32>());
         let (streamed, _) = fold.finish().unwrap();
         assert_eq!(streamed, batch);
+    }
+
+    #[test]
+    fn sharded_fold_is_bit_identical_across_shard_counts() {
+        // Shard boundaries are chunk boundaries: any shard count must
+        // reproduce the batch aggregate bit-for-bit at preset size.
+        let b = mnist();
+        let p = b.manifest().param_count;
+        let us: Vec<Vec<f32>> = (0..4)
+            .map(|k| (0..p).map(|i| ((i + 11 * k) % 23) as f32 * 0.017 - 0.2).collect())
+            .collect();
+        let w = [0.25f32, 0.1, 0.0, 0.65];
+        let refs: Vec<&[f32]> = us.iter().map(Vec::as_slice).collect();
+        let (batch, _) = b.aggregate(&refs, &w).unwrap();
+        for shards in [1usize, 2, 8, 17] {
+            let mut fold = b.begin_fold_sharded(refs.len(), shards).unwrap();
+            for (u, &wi) in refs.iter().zip(&w) {
+                fold.accumulate(u, wi).unwrap();
+            }
+            assert_eq!(fold.held_bytes(), p * std::mem::size_of::<f32>());
+            let (out, _) = fold.finish().unwrap();
+            assert_eq!(out, batch, "shards={shards} drifted from batch");
+        }
     }
 
     #[test]

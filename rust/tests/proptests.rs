@@ -11,7 +11,10 @@ use fedless::config::Scenario;
 use fedless::cost::GcfPricing;
 use fedless::data::{Partition, SynthDataset};
 use fedless::metrics::RoundRecord;
-use fedless::params::{fold_weighted_into, weighted_sum_scalar};
+use fedless::params::{
+    dequantize, fold_weighted_into, quantize, weighted_sum_scalar, ErrorFeedback, ShardLayout,
+    ShardedAccumulator,
+};
 use fedless::paramsvr::{staleness_weights, weight_component, WeightedUpdate};
 use fedless::strategy::{
     ema, feature_row, missed_round_ema, FedAvg, FedLesScan, FedProx, SafaLite,
@@ -209,6 +212,123 @@ fn prop_chunk_parallel_fold_is_bit_identical_to_scalar_reference() {
             let mut acc = vec![0.0f32; p];
             fold_weighted_into(&mut acc, &entries, workers);
             assert_eq!(acc, scalar, "case {case} workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_fold_matches_scalar_oracle_bit_exact() {
+    // Shard-count invariance: shard boundaries are chunk boundaries of
+    // the flat vector and each element still accumulates in entry
+    // order, so ANY shard count (and any worker fan-out within it) is
+    // *bit-identical* to the unsharded batch scalar reference.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x5a4d);
+        let p = 1 + rng.below(3000);
+        let k = 1 + rng.below(10);
+        let updates: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..p).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect())
+            .collect();
+        let weights: Vec<f32> = (0..k)
+            .map(|_| {
+                if rng.bernoulli(0.2) {
+                    0.0
+                } else {
+                    rng.range_f64(0.0, 1.5) as f32
+                }
+            })
+            .collect();
+        let refs: Vec<&[f32]> = updates.iter().map(Vec::as_slice).collect();
+        let scalar = weighted_sum_scalar(&refs, &weights);
+        for shards in [1usize, 2, 8, 17] {
+            for workers in [1usize, 3] {
+                let acc = ShardedAccumulator::new(ShardLayout::new(p, shards));
+                for (u, &w) in updates.iter().zip(&weights) {
+                    acc.accumulate(u, w, workers);
+                }
+                let folded = acc.finish();
+                assert_eq!(
+                    folded, scalar,
+                    "case {case} p={p} k={k} shards={shards} workers={workers}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_int8_roundtrip_error_is_bounded() {
+    // Symmetric per-shard int8: every element dequantizes to within
+    // half a quantization step (shard_scale / 2) of its source, at any
+    // shard count — including shards whose max is 0 (exactly encoded).
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x18b1);
+        let p = 1 + rng.below(2000);
+        let amp = rng.range_f64(1e-3, 100.0);
+        let values: Vec<f32> = (0..p)
+            .map(|_| {
+                if rng.bernoulli(0.1) {
+                    0.0
+                } else {
+                    rng.range_f64(-amp, amp) as f32
+                }
+            })
+            .collect();
+        let shards = 1 + rng.below(20);
+        let layout = ShardLayout::new(p, shards);
+        let q = quantize(&values, &layout);
+        let dq = dequantize(&q, &layout);
+        assert_eq!(dq.len(), p, "case {case}");
+        for (i, (&v, &d)) in values.iter().zip(&dq).enumerate() {
+            let scale = q.scales[layout.shard_of(i)];
+            let bound = scale as f64 / 2.0 * (1.0 + 1e-5) + 1e-12;
+            assert!(
+                (f64::from(v) - f64::from(d)).abs() <= bound,
+                "case {case} elem {i}: |{v} - {d}| > {bound} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_error_feedback_residual_drains_on_constant_updates() {
+    // Error feedback on a constant update v: the residual telescopes,
+    // so after T rounds the cumulative transmitted signal equals T·v
+    // minus the final residual — the per-round mean error drains to
+    // zero at rate 1/T, and the residual itself never exceeds half a
+    // quantization step.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xef5d);
+        let p = 1 + rng.below(500);
+        let values: Vec<f32> = (0..p)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let shards = 1 + rng.below(8);
+        let layout = ShardLayout::new(p, shards);
+        let rounds = 2 + rng.below(7);
+        let mut ef = ErrorFeedback::new(p);
+        let mut transmitted = vec![0f64; p];
+        let mut half_step = vec![0f64; p];
+        for _ in 0..rounds {
+            let q = ef.encode(&values, &layout, None);
+            for (i, d) in dequantize(&q, &layout).into_iter().enumerate() {
+                transmitted[i] += f64::from(d);
+                half_step[i] = half_step[i].max(f64::from(q.scales[layout.shard_of(i)]) / 2.0);
+            }
+        }
+        for (i, &v) in values.iter().enumerate() {
+            // |Σ dq - T·v| == |final residual| <= max half-step (+ fp slack)
+            let err = (transmitted[i] - rounds as f64 * f64::from(v)).abs();
+            let bound = half_step[i] * (1.0 + 1e-4) + 1e-4;
+            assert!(
+                err <= bound,
+                "case {case} elem {i}: cumulative error {err} > {bound} after {rounds} rounds"
+            );
+            let r = f64::from(ef.residual()[i]).abs();
+            assert!(
+                r <= bound,
+                "case {case} elem {i}: residual {r} > {bound}"
+            );
         }
     }
 }
