@@ -1,0 +1,274 @@
+"""Mirror of rust/src/clustering/incremental.rs — the persistent,
+incrementally-maintained DBSCAN engine — plus the drift-schedule
+validation harness behind the Rust proptest
+`prop_incremental_dbscan_matches_full_recluster_under_drift`.
+
+The engine keeps the uniform grid (cell size = eps), the point set, and
+the standing cluster labels alive across updates; `update` reclusters
+only the cell-connected components a batch of changes touched and
+splices fresh labels in. This script asserts, over hundreds of seeded
+multi-round insert/move/remove schedules, that the spliced standing
+labels stay **partition-identical** (identical NOISE sets + a bijection
+between label values) to a from-scratch `dbscan_grid` pass at the same
+frozen eps — the exactness claim the Rust module docs make from the
+cell-component independence argument (cells of size eps: points >= 2
+cells apart on any axis are > eps apart, so density-reachability never
+crosses non-adjacent occupied-cell components).
+
+Neighbour visit order inside one expansion is irrelevant to the
+resulting partition (a cluster's expansion labels exactly the
+density-reachable closure of its seed, and seeds are scanned in
+ascending id order on both sides), so the Python dict/set iteration
+order standing in for Rust's HashMap/HashSet is not a fidelity gap.
+
+Zero dependencies beyond the standard library. Run:
+
+    python3 python/mirror/incremental.py
+"""
+
+import itertools
+import math
+
+from core import NOISE, Rng, cell_key, dbscan_grid, dist2, expand
+
+CASES = 300
+SEED = 0x1DB5_CA4D_12F7_5EED
+
+
+class IncrementalDbscan:
+    """Persistent grid + standing labels (incremental.rs)."""
+
+    def __init__(self, eps, min_pts):
+        self.eps = eps
+        self.eps2 = eps * eps
+        self.min_pts = min_pts
+        self.dim = None
+        self.cells = {}   # cell key tuple -> set of ids
+        self.pts = {}     # id -> (point tuple, cell key tuple)
+        self.labels = {}  # id -> standing label (NOISE for outliers)
+        self.next_cluster = 0
+
+    @classmethod
+    def new(cls, eps, min_pts):
+        if not (math.isfinite(eps) and eps > 0.0):
+            return None
+        return cls(eps, min_pts)
+
+    def __len__(self):
+        return len(self.pts)
+
+    def label(self, pid):
+        return self.labels.get(pid)
+
+    def labels_for(self, ids):
+        return [self.labels[i] for i in ids]
+
+    def _block(self, center):
+        for offs in itertools.product((-1, 0, 1), repeat=len(center)):
+            yield tuple(c + o for c, o in zip(center, offs))
+
+    def update(self, changes):
+        """Apply (id, point-or-None) changes; recluster touched
+        cell-components. Returns (reclustered, components, relabeled)
+        or None (state unchanged) on an unplaceable point."""
+        # Validate every change before mutating anything.
+        dim = self.dim
+        keyed = []
+        for pid, p in changes:
+            if p is None:
+                keyed.append((pid, None))
+                continue
+            if dim is not None and dim != len(p):
+                return None
+            if dim is None:
+                dim = len(p)
+            key = cell_key(p, self.eps)
+            if key is None:
+                return None
+            keyed.append((pid, (tuple(p), key)))
+
+        # Apply grid mutations, collecting every cell a changed point
+        # left or entered as a BFS seed.
+        seeds = set()
+        for pid, upsert in keyed:
+            old = self.pts.get(pid)
+            if old is not None:
+                old_key = old[1]
+                members = self.cells.get(old_key)
+                if members is not None:
+                    members.discard(pid)
+                    if not members:
+                        del self.cells[old_key]
+                seeds.add(old_key)
+            if upsert is not None:
+                p, key = upsert
+                seeds.add(key)
+                self.cells.setdefault(key, set()).add(pid)
+                self.pts[pid] = (p, key)
+            else:
+                self.pts.pop(pid, None)
+                self.labels.pop(pid, None)
+        self.dim = dim
+
+        # Close over the touched cell-components.
+        visited = set()
+        frontier = []
+        components = 0
+        for seed in sorted(seeds):
+            started = False
+            for cell in self._block(seed):
+                if cell in self.cells and cell not in visited:
+                    visited.add(cell)
+                    frontier.append(cell)
+                    started = True
+            if not started:
+                continue
+            components += 1
+            while frontier:
+                cell = frontier.pop()
+                for nb in self._block(cell):
+                    if nb in self.cells and nb not in visited:
+                        visited.add(nb)
+                        frontier.append(nb)
+
+        # Gather members ascending by id — from-scratch seed order.
+        ids = sorted(i for c in visited for i in self.cells[c])
+        index = {pid: i for i, pid in enumerate(ids)}
+
+        def neighbours(i):
+            p, key = self.pts[ids[i]]
+            out = []
+            for cell in self._block(key):
+                for j in self.cells.get(cell, ()):
+                    if dist2(p, self.pts[j][0]) <= self.eps2:
+                        out.append(index[j])
+            return out
+
+        local, _ = expand(len(ids), self.min_pts, neighbours)
+
+        # Splice: fresh ids for the non-noise local clusters.
+        base = self.next_cluster
+        max_local = max(local, default=NOISE)
+        self.next_cluster += max_local + 1
+        relabeled = []
+        for i, pid in enumerate(ids):
+            label = NOISE if local[i] == NOISE else base + local[i]
+            self.labels[pid] = label
+            relabeled.append((pid, label))
+        return (len(relabeled), components, relabeled)
+
+
+# --------------------------------------------------------------- validation
+
+def assert_partition_eq(ids, got, want, what):
+    assert len(got) == len(want), f"{what}: length {len(got)} vs {len(want)}"
+    fwd, rev = {}, {}
+    for pid, g, w in zip(ids, got, want):
+        assert (g == NOISE) == (w == NOISE), \
+            f"{what}: id {pid} noise mismatch ({g} vs {w})"
+        if g == NOISE:
+            continue
+        assert fwd.setdefault(g, w) == w, f"{what}: id {pid} fwd"
+        assert rev.setdefault(w, g) == g, f"{what}: id {pid} rev"
+
+
+def engine_matches_oracle(engine, live, what):
+    ids = sorted(live)
+    points = [live[i] for i in ids]
+    want = dbscan_grid(points, engine.eps, engine.min_pts)
+    got = engine.labels_for(ids)
+    assert_partition_eq(ids, got, want, what)
+    assert len(engine) == len(ids), f"{what}: engine size"
+
+
+def drift_case(case):
+    """One seeded multi-round insert/move/remove schedule, mirroring
+    tests/proptests.rs::prop_incremental_dbscan_matches_full_recluster
+    _under_drift (3 feature-shaped blobs, departures / EMA-style moves /
+    arrivals, oracle check after every round)."""
+    rng = Rng(SEED ^ case)
+    n = 4 + rng.below(41)
+    min_pts = 2 + rng.below(3)
+    eps = rng.range_f64(0.2, 8.0)
+
+    live = {}
+    for pid in range(n):
+        c = rng.below(3)
+        center = c * 40.0
+        live[pid] = (
+            center + rng.range_f64(-1.5, 1.5),
+            center + rng.range_f64(-1.5, 1.5),
+        )
+    next_id = n
+
+    engine = IncrementalDbscan.new(eps, min_pts)
+    assert engine is not None
+    res = engine.update(sorted(live.items()))
+    assert res is not None and res[0] == n, f"case {case}: bulk build"
+    engine_matches_oracle(engine, live, f"case {case} bulk")
+
+    rounds = 1 + rng.below(7)
+    for rnd in range(rounds):
+        changes = {}
+        for pid in list(live):
+            if rng.bernoulli(0.15):
+                changes[pid] = None
+            elif rng.bernoulli(0.4):
+                old = live[pid]
+                s = rng.range_f64(0.7, 1.4)
+                changes[pid] = (old[0] * s, old[1] * s)
+        for _ in range(rng.below(5)):
+            c = rng.below(3)
+            center = c * 40.0
+            changes[next_id] = (
+                center + rng.range_f64(-1.5, 1.5),
+                center + rng.range_f64(-1.5, 1.5),
+            )
+            next_id += 1
+        batch = sorted(changes.items())
+        res = engine.update(batch)
+        assert res is not None, f"case {case} round {rnd}: refused"
+        for pid, p in batch:
+            if p is None:
+                live.pop(pid, None)
+            else:
+                live[pid] = p
+        engine_matches_oracle(engine, live, f"case {case} round {rnd}")
+
+
+def refusal_and_locality_checks():
+    # Refusals leave standing state intact (unit-test mirror).
+    e = IncrementalDbscan.new(0.5, 2)
+    e.update([(0, (0.0,)), (1, (0.1,))])
+    before = (e.label(0), e.label(1), len(e))
+    assert e.update([(2, (float("nan"),))]) is None
+    assert e.update([(2, (0.0, 0.0))]) is None, "dim mismatch"
+    assert (e.label(0), e.label(1), len(e)) == before
+    assert e.update([])[0] == 0, "noop update is an empty splice"
+    assert IncrementalDbscan.new(0.0, 2) is None
+    assert IncrementalDbscan.new(-1.0, 2) is None
+    assert IncrementalDbscan.new(float("nan"), 2) is None
+
+    # Removal from one far blob never relabels the other.
+    e = IncrementalDbscan.new(0.5, 2)
+    pts = {i: (i * 0.3,) for i in range(4)}
+    pts.update({i: (100.0 + i * 0.3,) for i in range(4, 8)})
+    e.update(sorted(pts.items()))
+    right_before = e.label(5)
+    reclustered, _, _ = e.update([(0, None)])
+    assert reclustered <= 3, f"locality: {reclustered} reclustered"
+    assert e.label(5) == right_before, "untouched component keeps labels"
+    del pts[0]
+    engine_matches_oracle(e, pts, "after removal")
+
+
+def main():
+    refusal_and_locality_checks()
+    for case in range(CASES):
+        drift_case(case)
+    print(f"incremental mirror OK: {CASES} drift schedules partition-"
+          f"identical to from-scratch dbscan_grid (+ refusal/locality checks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+//! Fleet-scale selection benchmarks: from-scratch clustering (cold
+//! persistent plane, full ε search + grid DBSCAN every call) vs the
+//! incremental path (warm plane, recluster work proportional to the
+//! drift since the last selection) at 10k / 100k / 1M clients and
+//! 1% / 10% / 50% per-round behaviour drift — the numbers behind
+//! BENCH_select.json.
+//!
+//!   cargo bench --bench select
+//!
+//! The fleet geometry is componentized (one giant behaviour blob that
+//! anchors the ε grid search's low quantiles, plus many small blobs
+//! separated far beyond any winning ε), so drift events recluster only
+//! the blobs they land in — the same shape `tests/scale.rs` pins.
+
+use fedless::clientdb::HistoryStore;
+use fedless::strategy::{FedLesScan, SelectionContext, Strategy};
+use fedless::util::bench::bench;
+use fedless::util::Rng;
+use fedless::ClientId;
+
+/// Behaviour-blob center for client `c` in a fleet of `n`: 40% of the
+/// fleet in one tight giant blob, the rest in 1000-client small blobs
+/// 50 virtual seconds apart.
+fn blob_center(c: usize, n: usize) -> f64 {
+    let giant = n * 2 / 5;
+    if c < giant {
+        10.0
+    } else {
+        500.0 + ((c - giant) / 1000) as f64 * 50.0
+    }
+}
+
+/// Deterministic componentized fleet history (see tests/scale.rs).
+fn fleet(n: usize) -> HistoryStore {
+    let mut hist = HistoryStore::new();
+    for c in 0..n {
+        if c % 5000 == 0 {
+            continue; // sparse rookie sliver
+        }
+        let center = blob_center(c, n);
+        let j1 = (c % 197) as f64 / 197.0 - 0.5;
+        let j2 = ((c * 13) % 197) as f64 / 197.0 - 0.5;
+        hist.record_invocation(c);
+        hist.record_success(c, 0, center + j1);
+        hist.record_invocation(c);
+        hist.record_success(c, 1, center + j2);
+    }
+    hist
+}
+
+fn ctx<'a>(
+    clients: &'a [ClientId],
+    h: &'a HistoryStore,
+    round: u32,
+    k: usize,
+) -> SelectionContext<'a> {
+    SelectionContext {
+        round,
+        max_rounds: 10_000,
+        clients_per_round: k,
+        all_clients: clients,
+        history: h,
+    }
+}
+
+fn main() {
+    println!("== fleet-scale selection benches ==");
+    let k = 256usize;
+    for &n in &[10_000usize, 100_000, 1_000_000] {
+        let clients: Vec<ClientId> = (0..n).collect();
+        let iters = if n >= 1_000_000 { 2 } else { 5 };
+
+        // -- from-scratch baseline: cold plane, full build every call --
+        let hist = fleet(n);
+        let cold = bench(&format!("select/from-scratch {n} clients"), 1, iters, || {
+            let mut s = FedLesScan::with_incremental();
+            let mut rng = Rng::seed_from_u64(7);
+            s.select(&ctx(&clients, &hist, 10, k), &mut rng)
+        });
+
+        // -- incremental: warm plane, per-call drift then select --------
+        for &frac in &[0.01f64, 0.10, 0.50] {
+            let mut hist = fleet(n);
+            let mut s = FedLesScan::with_incremental();
+            let mut rng = Rng::seed_from_u64(7);
+            let mut round = 10u32;
+            let _ = s.select(&ctx(&clients, &hist, round, k), &mut rng); // warm build
+            let _ = s.take_select_report();
+            let m = ((n as f64) * frac).round() as usize;
+            let mut cursor = 0usize;
+            let mut reclustered_last = 0usize;
+            let warm = bench(
+                &format!(
+                    "select/incremental {n} clients {:.0}% drift",
+                    frac * 100.0
+                ),
+                1,
+                iters,
+                || {
+                    // fresh successes for m clients, times staying inside
+                    // their blob so drift cost tracks touched components
+                    for i in 0..m {
+                        let c = (cursor + i) % n;
+                        let j = ((c.wrapping_mul(31).wrapping_add(round as usize)) % 197)
+                            as f64
+                            / 197.0
+                            - 0.5;
+                        hist.record_invocation(c);
+                        hist.record_success(c, round, blob_center(c, n) + j);
+                    }
+                    cursor = (cursor + m) % n;
+                    round += 1;
+                    let sel = s.select(&ctx(&clients, &hist, round, k), &mut rng);
+                    if let Some(rep) = s.take_select_report() {
+                        reclustered_last = rep.reclustered_clients;
+                    }
+                    sel
+                },
+            );
+            println!(
+                "   -> {:.2}x vs from-scratch at {:.0}% drift ({} reclustered of {n} last pass)",
+                cold.mean.as_secs_f64() / warm.mean.as_secs_f64().max(1e-12),
+                frac * 100.0,
+                reclustered_last,
+            );
+        }
+    }
+}

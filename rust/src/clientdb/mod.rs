@@ -101,6 +101,20 @@ pub struct ClientHistory {
     pub invocations: u32,
     /// On-time completions.
     pub successes: u32,
+    /// Last behaviour-feature row `(trainingEma, missedRoundEma)` the
+    /// selection layer clustered this client under, persisted so a
+    /// reloaded store can report where the client sat (§IV-A keeps the
+    /// clustering inputs in the client DB). Written by
+    /// [`HistoryStore::note_cluster`]; never read by the selection hot
+    /// path itself.
+    last_feature: Option<(f64, f64)>,
+    /// Grid cell key of `last_feature` on the frozen-ε behaviour grid
+    /// (`None` when the incremental engine was not active, e.g. the
+    /// degenerate all-identical geometry).
+    last_cell: Option<(i64, i64)>,
+    /// Standing cluster assignment from the last selection that touched
+    /// this client (`-1` = outlier pseudo-cluster).
+    last_cluster: Option<i64>,
 }
 
 impl Default for ClientHistory {
@@ -124,7 +138,26 @@ impl ClientHistory {
             cooldown: 0,
             invocations: 0,
             successes: 0,
+            last_feature: None,
+            last_cell: None,
+            last_cluster: None,
         }
+    }
+
+    /// Last clustered feature row, if any selection recorded one.
+    pub fn last_feature(&self) -> Option<(f64, f64)> {
+        self.last_feature
+    }
+
+    /// Grid cell of the last clustered feature row, if the incremental
+    /// engine was active.
+    pub fn last_cell(&self) -> Option<(i64, i64)> {
+        self.last_cell
+    }
+
+    /// Standing cluster assignment from the last selection.
+    pub fn last_cluster(&self) -> Option<i64> {
+        self.last_cluster
     }
 
     /// A rookie has never been invoked (§V-A tier 1).
@@ -211,9 +244,40 @@ impl ClientHistory {
 }
 
 /// In-memory history store with JSON snapshot persistence.
+///
+/// ## Dirty-set contract (incremental selection)
+///
+/// Every behaviour-mutating operation appends the client id to an
+/// internal **dirty log** (deduplicated — an id appears at most once
+/// until the log is truncated past it). A consumer reads the suffix it
+/// has not seen via [`dirty_since`] with a cursor it keeps, making
+/// "who changed since my last selection" an O(changed) read instead of
+/// an O(n) fleet rescan. The coordinator truncates the consumed prefix
+/// after each selection ([`truncate_dirty`]) so the log stays
+/// O(changed-since-last-round). [`note_cluster`] is deliberately *not*
+/// a dirtying write: it records the selection layer's own output, and
+/// marking it dirty would make every selection invalidate itself.
+///
+/// [`dirty_since`]: HistoryStore::dirty_since
+/// [`truncate_dirty`]: HistoryStore::truncate_dirty
+/// [`note_cluster`]: HistoryStore::note_cluster
 #[derive(Debug, Default, Clone)]
 pub struct HistoryStore {
     map: HashMap<ClientId, ClientHistory>,
+    /// Ids currently present in `dirty_log` (the append dedupe).
+    dirty_pending: HashSet<ClientId>,
+    /// Dirty ids in first-touch order; absolute position = index +
+    /// `dirty_base`.
+    dirty_log: Vec<ClientId>,
+    /// Absolute position of `dirty_log[0]` (grows on truncation, so
+    /// consumer cursors survive compaction).
+    dirty_base: u64,
+    /// Clients with ≥ 1 still-uncorrected miss in the recency window.
+    /// The missed-round feature (§V-C) decays with the current round,
+    /// so exactly these clients drift every round *without* any new
+    /// event — the incremental consumer unions them into its dirty set
+    /// on round advance.
+    missed_ids: HashSet<ClientId>,
 }
 
 /// Zero-allocation default for [`HistoryStore::view`] lookups of
@@ -249,9 +313,17 @@ impl HistoryStore {
         self.map.entry(id).or_default()
     }
 
+    /// Append to the dirty log (at most once per id until truncation).
+    fn mark_dirty(&mut self, id: ClientId) {
+        if self.dirty_pending.insert(id) {
+            self.dirty_log.push(id);
+        }
+    }
+
     /// Controller marked this client as invoked this round.
     pub fn record_invocation(&mut self, id: ClientId) {
         self.entry(id).invocations += 1;
+        self.mark_dirty(id);
     }
 
     /// On-time completion (Algorithm 1 lines 5-8 + client lines 22-27).
@@ -261,6 +333,10 @@ impl HistoryStore {
         h.successes += 1;
         h.note_time(training_time);
         h.unmiss(round);
+        if h.missed_recent.is_empty() {
+            self.missed_ids.remove(&id);
+        }
+        self.mark_dirty(id);
     }
 
     /// Missed round (Algorithm 1 lines 9-13): Eq. 1 growth.
@@ -268,6 +344,8 @@ impl HistoryStore {
         let h = self.entry(id);
         h.note_miss(round);
         h.cooldown = if h.cooldown == 0 { 1 } else { h.cooldown * 2 };
+        self.missed_ids.insert(id);
+        self.mark_dirty(id);
     }
 
     /// Late ("slow") update arrived after its round finished — the client
@@ -276,19 +354,83 @@ impl HistoryStore {
         let h = self.entry(id);
         h.unmiss(round);
         h.note_time(training_time);
+        if h.missed_recent.is_empty() {
+            self.missed_ids.remove(&id);
+        }
+        self.mark_dirty(id);
     }
 
     /// End-of-round tick: cooldowns decay by one except for clients that
     /// failed *this* round (their Eq. 1 value is fresh). The failed list
     /// is hashed once up front so the tick is O(clients + failed) rather
     /// than O(clients * failed); duplicate ids in the list are harmless.
+    /// Only clients whose cooldown actually moved are marked dirty (a
+    /// decayed cooldown can change the rookie/participant/straggler
+    /// tier), so an all-healthy fleet ticks without dirtying anyone.
     pub fn tick_cooldowns(&mut self, failed_this_round: &[ClientId]) {
         let failed: HashSet<ClientId> = failed_this_round.iter().copied().collect();
+        let mut decayed: Vec<ClientId> = Vec::new();
         for (id, h) in self.map.iter_mut() {
             if h.cooldown > 0 && !failed.contains(id) {
                 h.cooldown -= 1;
+                decayed.push(*id);
             }
         }
+        for id in decayed {
+            self.mark_dirty(id);
+        }
+    }
+
+    /// The dirty-log suffix at absolute positions ≥ `cursor`, plus the
+    /// cursor to pass next time (= current end of the log). Ids appear
+    /// in first-touch order, each at most once. A cursor older than the
+    /// truncated prefix clamps to the log start (the consumer just sees
+    /// ids it may have already processed — a refresh no-op).
+    pub fn dirty_since(&self, cursor: u64) -> (&[ClientId], u64) {
+        let start = cursor.saturating_sub(self.dirty_base).min(self.dirty_log.len() as u64);
+        (
+            &self.dirty_log[start as usize..],
+            self.dirty_base + self.dirty_log.len() as u64,
+        )
+    }
+
+    /// Drop the dirty-log prefix below absolute position `cursor` —
+    /// called by the coordinator once its (single) selection consumer
+    /// has read up to `cursor`, keeping the log O(changed-per-round).
+    pub fn truncate_dirty(&mut self, cursor: u64) {
+        let n = cursor.saturating_sub(self.dirty_base).min(self.dirty_log.len() as u64) as usize;
+        if n == 0 {
+            return;
+        }
+        for id in self.dirty_log.drain(..n) {
+            self.dirty_pending.remove(&id);
+        }
+        self.dirty_base += n as u64;
+    }
+
+    /// Clients with at least one still-uncorrected miss in the window —
+    /// exactly the records whose missed-round feature drifts on every
+    /// round advance with no new event (see the struct docs).
+    pub fn clients_with_misses(&self) -> &HashSet<ClientId> {
+        &self.missed_ids
+    }
+
+    /// Record the selection layer's clustering outcome for a client:
+    /// feature row, grid cell (when the incremental engine is active),
+    /// and standing cluster id. **Not** a dirtying write — this is the
+    /// cluster plane's own output flowing back into the client DB
+    /// (§IV-A), not new client behaviour.
+    pub fn note_cluster(
+        &mut self,
+        id: ClientId,
+        feature: (f64, f64),
+        cell: Option<(i64, i64)>,
+        cluster: i64,
+    ) {
+        let h = self.entry(id);
+        h.last_feature = Some(feature);
+        h.last_cell = cell;
+        h.last_cluster = Some(cluster);
     }
 
     pub fn len(&self) -> usize {
@@ -311,7 +453,7 @@ impl HistoryStore {
             .map
             .iter()
             .map(|(id, h)| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("client", Json::num(*id as f64)),
                     ("t_ema", Json::num(h.t_ema)),
                     ("t_sum", Json::num(h.t_sum)),
@@ -325,7 +467,22 @@ impl HistoryStore {
                     ("cooldown", Json::num(h.cooldown as f64)),
                     ("invocations", Json::num(h.invocations as f64)),
                     ("successes", Json::num(h.successes as f64)),
-                ])
+                ];
+                // cluster snapshot: written only when present, so
+                // snapshots from non-incremental runs stay byte-stable
+                if let Some((t, m)) = h.last_feature {
+                    fields.push(("last_feature", Json::from_f64_slice(&[t, m])));
+                }
+                if let Some((cx, cy)) = h.last_cell {
+                    fields.push((
+                        "last_cell",
+                        Json::Arr(vec![Json::num(cx as f64), Json::num(cy as f64)]),
+                    ));
+                }
+                if let Some(c) = h.last_cluster {
+                    fields.push(("last_cluster", Json::num(c as f64)));
+                }
+                Json::obj(fields)
             })
             .collect();
         Json::obj(vec![("clients", Json::Arr(entries))]).write_file(path)
@@ -336,7 +493,7 @@ impl HistoryStore {
         let mut map = HashMap::new();
         for e in root.get("clients")?.as_arr()? {
             let id = e.get("client")?.as_usize()?;
-            let h = if e.get("t_ema").is_ok() {
+            let mut h = if e.get("t_ema").is_ok() {
                 ClientHistory {
                     t_ema: e.get("t_ema")?.as_f64()?,
                     t_sum: e.get("t_sum")?.as_f64()?,
@@ -377,9 +534,35 @@ impl HistoryStore {
                 }
                 h
             };
+            // optional cluster snapshot (absent in legacy and
+            // non-incremental artifacts)
+            if let Ok(v) = e.get("last_feature") {
+                let a = v.as_arr()?;
+                if a.len() == 2 {
+                    h.last_feature = Some((a[0].as_f64()?, a[1].as_f64()?));
+                }
+            }
+            if let Ok(v) = e.get("last_cell") {
+                let a = v.as_arr()?;
+                if a.len() == 2 {
+                    h.last_cell = Some((a[0].as_f64()? as i64, a[1].as_f64()? as i64));
+                }
+            }
+            if let Ok(v) = e.get("last_cluster") {
+                h.last_cluster = Some(v.as_f64()? as i64);
+            }
             map.insert(id, h);
         }
-        Ok(Self { map })
+        let missed_ids = map
+            .iter()
+            .filter(|(_, h)| !h.missed_recent.is_empty())
+            .map(|(&id, _)| id)
+            .collect();
+        Ok(Self {
+            map,
+            missed_ids,
+            ..Self::default()
+        })
     }
 }
 
@@ -567,6 +750,104 @@ mod tests {
         assert_eq!(db.get(4), want.get(4));
         assert_eq!(db.view(4).times_count(), 3);
         assert_eq!(db.view(4).missed_recent(), &[2, 6]);
+    }
+
+    #[test]
+    fn dirty_log_tracks_touched_clients_once() {
+        let mut db = HistoryStore::new();
+        let (d, c0) = db.dirty_since(0);
+        assert!(d.is_empty());
+        assert_eq!(c0, 0);
+        db.record_invocation(3);
+        db.record_success(3, 0, 5.0); // same id: still one entry
+        db.record_invocation(7);
+        let (d, c1) = db.dirty_since(0);
+        assert_eq!(d, &[3, 7], "first-touch order, deduped");
+        // a later reader from the cursor sees only newer dirt
+        db.record_failure(9, 1);
+        let (d, c2) = db.dirty_since(c1);
+        assert_eq!(d, &[9]);
+        // truncating the consumed prefix keeps cursors valid
+        db.truncate_dirty(c1);
+        let (d, _) = db.dirty_since(c1);
+        assert_eq!(d, &[9]);
+        // a re-touch after truncation re-enters the log
+        db.record_invocation(3);
+        let (d, _) = db.dirty_since(c2);
+        assert_eq!(d, &[3]);
+        // stale cursor (before the truncated prefix) clamps, no panic
+        let (d, _) = db.dirty_since(0);
+        assert_eq!(d, &[9, 3]);
+    }
+
+    #[test]
+    fn tick_dirties_only_decayed_cooldowns() {
+        let mut db = HistoryStore::new();
+        db.record_invocation(1);
+        db.record_failure(2, 0); // cooldown 1
+        let (_, cur) = db.dirty_since(0);
+        db.tick_cooldowns(&[]); // 2 decays to 0; 1 untouched
+        let (d, cur) = db.dirty_since(cur);
+        assert_eq!(d, &[2]);
+        db.tick_cooldowns(&[]); // nobody has a live cooldown left
+        let (d, _) = db.dirty_since(cur);
+        assert!(d.is_empty(), "healthy fleet ticks dirty no one");
+    }
+
+    #[test]
+    fn missed_ids_follow_the_miss_window() {
+        let mut db = HistoryStore::new();
+        assert!(db.clients_with_misses().is_empty());
+        db.record_failure(4, 2);
+        db.record_failure(4, 3);
+        db.record_failure(5, 2);
+        assert_eq!(db.clients_with_misses().len(), 2);
+        // correcting one of two misses keeps the client listed
+        db.record_late_completion(4, 2, 9.0);
+        assert!(db.clients_with_misses().contains(&4));
+        // correcting the last one drops it
+        db.record_late_completion(4, 3, 9.0);
+        assert!(!db.clients_with_misses().contains(&4));
+        // an on-time success for the missed round clears it too
+        db.record_success(5, 2, 7.0);
+        assert!(db.clients_with_misses().is_empty());
+    }
+
+    #[test]
+    fn note_cluster_persists_without_dirtying() {
+        let mut db = HistoryStore::new();
+        db.record_invocation(6);
+        let (_, cur) = db.dirty_since(0);
+        db.note_cluster(6, (12.5, 0.25), Some((3, -1)), 2);
+        let (d, _) = db.dirty_since(cur);
+        assert!(d.is_empty(), "note_cluster is not a dirtying write");
+        assert_eq!(db.view(6).last_feature(), Some((12.5, 0.25)));
+        assert_eq!(db.view(6).last_cell(), Some((3, -1)));
+        assert_eq!(db.view(6).last_cluster(), Some(2));
+        // and it round-trips through the snapshot
+        let path =
+            std::env::temp_dir().join(format!("fedless-note-{}.json", std::process::id()));
+        db.save(&path).unwrap();
+        let db2 = HistoryStore::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(db2.view(6).last_feature(), Some((12.5, 0.25)));
+        assert_eq!(db2.view(6).last_cell(), Some((3, -1)));
+        assert_eq!(db2.view(6).last_cluster(), Some(2));
+        assert_eq!(db.get(6), db2.get(6));
+    }
+
+    #[test]
+    fn load_rebuilds_missed_ids() {
+        let mut db = HistoryStore::new();
+        db.record_failure(8, 1);
+        db.record_success(9, 1, 4.0);
+        let path =
+            std::env::temp_dir().join(format!("fedless-missed-{}.json", std::process::id()));
+        db.save(&path).unwrap();
+        let db2 = HistoryStore::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(db2.clients_with_misses().contains(&8));
+        assert!(!db2.clients_with_misses().contains(&9));
     }
 
     #[test]

@@ -118,8 +118,10 @@ fn enqueue(frontier: &mut Vec<usize>, queued: &mut [bool], labels: &[isize], nb:
 /// Shared cluster expansion over a neighbourhood oracle. Returns the
 /// labels plus the peak frontier length — the latter is O(n) thanks to
 /// the queued-point dedupe and is pinned by the dense-blob regression
-/// test below.
-fn expand(
+/// test below. `pub(crate)`: [`super::incremental`] re-runs this exact
+/// expansion on affected cell-components, so a component's spliced
+/// labels are definitionally the labels a from-scratch pass assigns.
+pub(crate) fn expand(
     n: usize,
     min_pts: usize,
     neighbours: impl Fn(usize) -> Vec<usize>,

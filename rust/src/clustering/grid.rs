@@ -40,7 +40,7 @@ pub struct GridIndex<'a> {
 /// either. Inputs beyond the bound fall back to the naive scan.
 const MAX_CELL: f64 = 1.0e12;
 
-fn cell_key(p: &[f64], eps: f64) -> Option<Vec<i64>> {
+pub(crate) fn cell_key(p: &[f64], eps: f64) -> Option<Vec<i64>> {
     p.iter()
         .map(|&x| {
             let c = (x / eps).floor();

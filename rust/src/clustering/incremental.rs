@@ -1,0 +1,450 @@
+//! Persistent, incrementally-maintained DBSCAN over the behaviour grid.
+//!
+//! [`IncrementalDbscan`] keeps the uniform grid (cell size = ε), the
+//! point set, and the standing cluster labels alive across selection
+//! rounds. When a batch of points moves, appears, or disappears,
+//! [`IncrementalDbscan::update`] reclusters only the affected
+//! *cell-connected components* and splices the fresh labels into the
+//! standing assignment — every untouched component keeps its labels
+//! verbatim. Per-update work is proportional to the size of the
+//! touched components, not to the total point count, which is what
+//! lets `FedLesScan::select` run the full participant tier at 1M
+//! clients instead of stratify-sampling it down to `COHORT_MAX`.
+//!
+//! ## Why splicing is exact
+//!
+//! With cell size = ε, two points whose cell coordinates differ by ≥ 2
+//! on any axis are strictly more than ε apart. Density-reachability
+//! therefore never crosses between two sets of occupied cells that are
+//! not Chebyshev-1 adjacent: DBSCAN's partition factors over the
+//! connected components of the "occupied cells, ±1 adjacency" graph.
+//! An update seeds a BFS from every cell a changed point left or
+//! entered, closes over the touched components, and re-runs the *same*
+//! expansion ([`super::dbscan::expand`]) on exactly those members (in
+//! ascending point-id order, matching the from-scratch seed order), so
+//! the spliced labels are — component by component — the labels a
+//! from-scratch [`super::dbscan::dbscan`] pass at the same ε assigns.
+//! The property suite (`tests/proptests.rs`) pins this equivalence
+//! under hundreds of random multi-round drift schedules.
+//!
+//! Fresh cluster ids come from a monotone allocator, so a spliced
+//! component can never collide with a standing label of an untouched
+//! one. [`NOISE`] stays `NOISE`. Label *values* are therefore not
+//! byte-identical to a from-scratch run — only the partition is, which
+//! is all the selection layer consumes (it orders clusters by mean
+//! behaviour, not by id).
+
+use std::collections::{HashMap, HashSet};
+
+use super::dbscan::expand;
+use super::grid::cell_key;
+use super::{dist2, Point, NOISE};
+
+/// Stable identifier for a point across updates (the strategy layer
+/// uses client ids).
+pub type PointId = usize;
+
+/// Result of one [`IncrementalDbscan::update`] splice.
+#[derive(Debug, Clone, Default)]
+pub struct Splice {
+    /// Points whose cell-components were re-expanded this update —
+    /// `relabeled.len()`. Everything else kept its standing label.
+    pub reclustered: usize,
+    /// Touched cell-connected components.
+    pub components: usize,
+    /// `(id, label)` for every point in a touched component, ascending
+    /// by id. Includes points whose label value is unchanged
+    /// (`NOISE` → `NOISE`); non-noise components always get fresh ids.
+    pub relabeled: Vec<(PointId, isize)>,
+}
+
+/// Persistent grid + standing labels; see the module docs.
+#[derive(Debug, Clone)]
+pub struct IncrementalDbscan {
+    eps: f64,
+    eps2: f64,
+    min_pts: usize,
+    /// Point dimensionality, fixed by the first insert. Mixed
+    /// dimensions are refused (`update` → `None`): zip-shorter
+    /// distance semantics are unrepresentable on a per-axis grid.
+    dim: Option<usize>,
+    /// Occupied cell → member ids. `HashSet` so membership updates are
+    /// O(1) even in degenerate all-points-in-one-cell geometries; no
+    /// output ever iterates a set without sorting first.
+    cells: HashMap<Vec<i64>, HashSet<PointId>>,
+    /// id → (point, its cell key).
+    pts: HashMap<PointId, (Point, Vec<i64>)>,
+    /// Standing labels; `NOISE` for outliers.
+    labels: HashMap<PointId, isize>,
+    /// Monotone cluster-id allocator — ids are never reused.
+    next_cluster: isize,
+}
+
+impl IncrementalDbscan {
+    /// A new empty engine at a frozen ε. `None` for a ε the grid cannot
+    /// represent (non-finite or ≤ 0) — the caller keeps the
+    /// from-scratch oracle for those.
+    pub fn new(eps: f64, min_pts: usize) -> Option<Self> {
+        if !eps.is_finite() || eps <= 0.0 {
+            return None;
+        }
+        Some(Self {
+            eps,
+            eps2: eps * eps,
+            min_pts,
+            dim: None,
+            cells: HashMap::new(),
+            pts: HashMap::new(),
+            labels: HashMap::new(),
+            next_cluster: 0,
+        })
+    }
+
+    /// The frozen neighbourhood radius.
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// Points currently in the engine.
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Standing label of a point, if present.
+    pub fn label(&self, id: PointId) -> Option<isize> {
+        self.labels.get(&id).copied()
+    }
+
+    /// Grid cell of a point, if present.
+    pub fn cell(&self, id: PointId) -> Option<&[i64]> {
+        self.pts.get(&id).map(|(_, k)| k.as_slice())
+    }
+
+    /// The cell a point *would* occupy, without inserting it. `None`
+    /// when the coordinates are outside the grid's preconditions.
+    pub fn key_for(&self, p: &[f64]) -> Option<Vec<i64>> {
+        cell_key(p, self.eps)
+    }
+
+    /// Standing labels for `ids`, in order. Panics if an id is absent —
+    /// callers query the ids they maintain.
+    pub fn labels_for(&self, ids: &[PointId]) -> Vec<isize> {
+        ids.iter().map(|id| self.labels[id]).collect()
+    }
+
+    /// Apply a batch of changes — `(id, Some(point))` upserts, `(id,
+    /// None)` removes — and recluster the touched cell-components.
+    ///
+    /// Returns `None` (state **unchanged**) when a point cannot be
+    /// placed on the grid: non-finite coordinate, cell index beyond the
+    /// grid bound, or dimensionality differing from the standing
+    /// points. The caller falls back to a full from-scratch recluster.
+    pub fn update(&mut self, changes: &[(PointId, Option<Point>)]) -> Option<Splice> {
+        // Validate every change before mutating anything, so a refusal
+        // leaves the standing state intact for the caller's fallback.
+        let mut dim = self.dim;
+        let mut keyed: Vec<(PointId, Option<(&Point, Vec<i64>)>)> =
+            Vec::with_capacity(changes.len());
+        for (id, p) in changes {
+            match p {
+                Some(pt) => {
+                    match dim {
+                        Some(d) if d != pt.len() => return None,
+                        None => dim = Some(pt.len()),
+                        _ => {}
+                    }
+                    keyed.push((*id, Some((pt, cell_key(pt, self.eps)?))));
+                }
+                None => keyed.push((*id, None)),
+            }
+        }
+
+        // Apply the grid mutations, collecting every cell a changed
+        // point left or entered as a BFS seed.
+        let mut seeds: HashSet<Vec<i64>> = HashSet::new();
+        for (id, upsert) in keyed {
+            let old_key = self.pts.get(&id).map(|(_, k)| k.clone());
+            if let Some(old_key) = old_key {
+                let emptied = match self.cells.get_mut(&old_key) {
+                    Some(members) => {
+                        members.remove(&id);
+                        members.is_empty()
+                    }
+                    None => false,
+                };
+                if emptied {
+                    self.cells.remove(&old_key);
+                }
+                seeds.insert(old_key);
+            }
+            match upsert {
+                Some((pt, key)) => {
+                    seeds.insert(key.clone());
+                    self.cells.entry(key.clone()).or_default().insert(id);
+                    self.pts.insert(id, (pt.clone(), key));
+                }
+                None => {
+                    self.pts.remove(&id);
+                    self.labels.remove(&id);
+                }
+            }
+        }
+        self.dim = dim;
+
+        // Close over the touched cell-components: flood from every
+        // occupied cell in or Chebyshev-1-adjacent to a seed cell.
+        let mut visited: HashSet<Vec<i64>> = HashSet::new();
+        let mut frontier: Vec<Vec<i64>> = Vec::new();
+        let mut components = 0usize;
+        let mut seed_cells: Vec<&Vec<i64>> = seeds.iter().collect();
+        seed_cells.sort(); // deterministic component count, not required for labels
+        for seed in seed_cells {
+            let mut started = false;
+            for_block(seed, |cell| {
+                if self.cells.contains_key(cell) && !visited.contains(cell) {
+                    visited.insert(cell.to_vec());
+                    frontier.push(cell.to_vec());
+                    started = true;
+                }
+            });
+            if !started {
+                continue;
+            }
+            components += 1; // adjacent seeds may merge components; this over-counts at most by seeds
+            while let Some(cell) = frontier.pop() {
+                for_block(&cell, |nb| {
+                    if self.cells.contains_key(nb) && !visited.contains(nb) {
+                        visited.insert(nb.to_vec());
+                        frontier.push(nb.to_vec());
+                    }
+                });
+            }
+        }
+
+        // Gather the members of the touched components in ascending id
+        // order — the same seed order a from-scratch pass uses.
+        let mut ids: Vec<PointId> = visited
+            .iter()
+            .flat_map(|c| self.cells[c].iter().copied())
+            .collect();
+        ids.sort_unstable();
+        let index: HashMap<PointId, usize> =
+            ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+
+        // Re-run the shared expansion on exactly these points. Every
+        // ε-neighbour of a gathered point is itself gathered (the
+        // closure walked all adjacent occupied cells), so the local
+        // neighbourhood oracle sees the same sets the global one would.
+        let neighbours = |i: usize| -> Vec<usize> {
+            let (p, key) = &self.pts[&ids[i]];
+            let mut out = Vec::new();
+            for_block(key, |cell| {
+                if let Some(members) = self.cells.get(cell) {
+                    for &j in members {
+                        if dist2(p, &self.pts[&j].0) <= self.eps2 {
+                            out.push(index[&j]);
+                        }
+                    }
+                }
+            });
+            out
+        };
+        let (local, _) = expand(ids.len(), self.min_pts, neighbours);
+
+        // Splice: fresh ids for the non-noise local clusters.
+        let base = self.next_cluster;
+        let max_local = local.iter().copied().max().unwrap_or(NOISE);
+        self.next_cluster += max_local + 1;
+        let mut relabeled = Vec::with_capacity(ids.len());
+        for (i, &id) in ids.iter().enumerate() {
+            let label = if local[i] == NOISE { NOISE } else { base + local[i] };
+            self.labels.insert(id, label);
+            relabeled.push((id, label));
+        }
+        Some(Splice {
+            reclustered: relabeled.len(),
+            components,
+            relabeled,
+        })
+    }
+}
+
+/// Visit the 3^d offset block [-1, 1]^d around `center` (odometer over
+/// one scratch key, same discipline as `GridIndex::neighbours`).
+fn for_block(center: &[i64], mut visit: impl FnMut(&[i64])) {
+    let d = center.len();
+    let mut offs = vec![-1i64; d];
+    let mut key = vec![0i64; d];
+    'cells: loop {
+        for (k, (c, o)) in key.iter_mut().zip(center.iter().zip(&offs)) {
+            *k = c + o;
+        }
+        visit(&key);
+        let mut axis = 0;
+        while axis < d {
+            offs[axis] += 1;
+            if offs[axis] <= 1 {
+                continue 'cells;
+            }
+            offs[axis] = -1;
+            axis += 1;
+        }
+        break;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{dbscan, relabel_outliers, DbscanParams};
+    use super::*;
+
+    /// Partition-identity (with NOISE preserved on both sides): every
+    /// pair clustered together on one side is together on the other.
+    fn assert_partition_eq(ids: &[PointId], got: &[isize], want: &[isize], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        let mut fwd: HashMap<isize, isize> = HashMap::new();
+        let mut rev: HashMap<isize, isize> = HashMap::new();
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(
+                g == NOISE,
+                w == NOISE,
+                "{what}: id {} noise mismatch ({g} vs {w})",
+                ids[i]
+            );
+            if g == NOISE {
+                continue;
+            }
+            assert_eq!(*fwd.entry(g).or_insert(w), w, "{what}: id {} fwd", ids[i]);
+            assert_eq!(*rev.entry(w).or_insert(g), g, "{what}: id {} rev", ids[i]);
+        }
+    }
+
+    fn engine_matches_oracle(engine: &IncrementalDbscan, pts: &[(PointId, Point)], what: &str) {
+        let mut sorted: Vec<&(PointId, Point)> = pts.iter().collect();
+        sorted.sort_by_key(|(id, _)| *id);
+        let ids: Vec<PointId> = sorted.iter().map(|(id, _)| *id).collect();
+        let points: Vec<Point> = sorted.iter().map(|(_, p)| p.clone()).collect();
+        let want = dbscan(
+            &points,
+            &DbscanParams {
+                eps: engine.eps(),
+                min_pts: engine.min_pts,
+            },
+        );
+        let got = engine.labels_for(&ids);
+        assert_partition_eq(&ids, &got, &want, what);
+    }
+
+    #[test]
+    fn bulk_insert_matches_from_scratch() {
+        let pts: Vec<(PointId, Point)> = vec![
+            (0, vec![0.0, 0.0]),
+            (1, vec![0.1, 0.0]),
+            (2, vec![0.0, 0.1]),
+            (3, vec![5.0, 5.0]),
+            (4, vec![5.1, 5.0]),
+            (5, vec![9.9, 9.9]),
+        ];
+        let mut e = IncrementalDbscan::new(0.5, 2).unwrap();
+        let changes: Vec<_> = pts.iter().map(|(id, p)| (*id, Some(p.clone()))).collect();
+        let s = e.update(&changes).unwrap();
+        assert_eq!(s.reclustered, 6);
+        engine_matches_oracle(&e, &pts, "bulk insert");
+        assert_eq!(e.label(5), Some(NOISE));
+    }
+
+    #[test]
+    fn moving_a_point_merges_and_splits() {
+        let mut pts: Vec<(PointId, Point)> = vec![
+            (0, vec![0.0]),
+            (1, vec![0.3]),
+            (2, vec![2.0]),
+            (3, vec![2.3]),
+        ];
+        let mut e = IncrementalDbscan::new(0.5, 2).unwrap();
+        let changes: Vec<_> = pts.iter().map(|(id, p)| (*id, Some(p.clone()))).collect();
+        e.update(&changes).unwrap();
+        assert_ne!(e.label(0), e.label(2));
+
+        // move id 1 next to the right pair: (0.0) alone, (1.7, 2.0, 2.3) chained
+        pts[1].1 = vec![1.7];
+        let s = e.update(&[(1, Some(vec![1.7]))]).unwrap();
+        assert!(s.reclustered >= 3, "moved point's components recluster");
+        engine_matches_oracle(&e, &pts, "after merge-ish move");
+
+        // move it far away: 0 becomes noise, right blob survives
+        pts[1].1 = vec![50.0];
+        e.update(&[(1, Some(vec![50.0]))]).unwrap();
+        engine_matches_oracle(&e, &pts, "after split move");
+        assert_eq!(e.label(0), Some(NOISE));
+        assert_eq!(e.label(1), Some(NOISE));
+    }
+
+    #[test]
+    fn removal_recluster_only_touches_neighbourhood() {
+        // two far-apart blobs; removing from one must not relabel the other
+        let mut e = IncrementalDbscan::new(0.5, 2).unwrap();
+        let pts: Vec<(PointId, Point)> = (0..4)
+            .map(|i| (i, vec![i as f64 * 0.3]))
+            .chain((4..8).map(|i| (i, vec![100.0 + i as f64 * 0.3])))
+            .collect();
+        let changes: Vec<_> = pts.iter().map(|(id, p)| (*id, Some(p.clone()))).collect();
+        e.update(&changes).unwrap();
+        let right_before = e.label(5).unwrap();
+        let s = e.update(&[(0, None)]).unwrap();
+        assert!(s.reclustered <= 3, "only the left blob reclusters, got {}", s.reclustered);
+        assert_eq!(e.label(5), Some(right_before), "untouched component keeps labels");
+        assert_eq!(e.len(), 7);
+        let remaining: Vec<(PointId, Point)> =
+            pts.into_iter().filter(|(id, _)| *id != 0).collect();
+        engine_matches_oracle(&e, &remaining, "after removal");
+    }
+
+    #[test]
+    fn noop_update_is_empty_splice() {
+        let mut e = IncrementalDbscan::new(0.5, 2).unwrap();
+        e.update(&[(0, Some(vec![0.0])), (1, Some(vec![0.1]))]).unwrap();
+        let s = e.update(&[]).unwrap();
+        assert_eq!(s.reclustered, 0);
+        assert!(s.relabeled.is_empty());
+    }
+
+    #[test]
+    fn unplaceable_point_refuses_and_preserves_state() {
+        let mut e = IncrementalDbscan::new(0.5, 2).unwrap();
+        e.update(&[(0, Some(vec![0.0])), (1, Some(vec![0.1]))]).unwrap();
+        let before = (e.label(0), e.label(1), e.len());
+        assert!(e.update(&[(2, Some(vec![f64::NAN]))]).is_none());
+        assert!(e.update(&[(2, Some(vec![0.0, 0.0]))]).is_none(), "dim mismatch");
+        assert_eq!((e.label(0), e.label(1), e.len()), before);
+    }
+
+    #[test]
+    fn degenerate_eps_refuses_to_build() {
+        assert!(IncrementalDbscan::new(0.0, 2).is_none());
+        assert!(IncrementalDbscan::new(-1.0, 2).is_none());
+        assert!(IncrementalDbscan::new(f64::NAN, 2).is_none());
+    }
+
+    #[test]
+    fn relabel_outliers_view_matches_oracle_count() {
+        // the strategy layer treats NOISE as one pseudo-cluster; check
+        // the engine's label set supports the same view as the oracle's
+        let pts: Vec<(PointId, Point)> = vec![
+            (7, vec![0.0]),
+            (3, vec![0.2]),
+            (9, vec![10.0]),
+        ];
+        let mut e = IncrementalDbscan::new(0.5, 2).unwrap();
+        let changes: Vec<_> = pts.iter().map(|(id, p)| (*id, Some(p.clone()))).collect();
+        e.update(&changes).unwrap();
+        let ids = vec![3, 7, 9];
+        let mut got = e.labels_for(&ids);
+        let k = relabel_outliers(&mut got);
+        assert_eq!(k, 2, "one real cluster + outlier pseudo-cluster");
+    }
+}

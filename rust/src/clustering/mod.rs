@@ -9,10 +9,12 @@
 mod ch;
 mod dbscan;
 mod grid;
+mod incremental;
 
 pub use ch::calinski_harabasz;
 pub use dbscan::{dbscan, dbscan_naive, DbscanParams};
 pub use grid::GridIndex;
+pub use incremental::{IncrementalDbscan, PointId, Splice};
 
 /// Outlier label produced by DBSCAN before [`relabel_outliers`].
 pub const NOISE: isize = -1;
@@ -56,17 +58,46 @@ pub const EPS_SAMPLE_MAX: usize = 512;
 /// interleaved behaviour cohorts).
 const EPS_SAMPLE_SEED: u64 = 0x5eed_ca11_ab5a_7e57;
 
+/// Relative tolerance for ε-candidate dedup: adjacent distance
+/// quantiles within one part in 10⁶ of each other produce the same
+/// grid geometry for clustering purposes, so running DBSCAN for both
+/// is pure waste. (`Vec::dedup` alone only drops *exactly* equal
+/// values — near-degenerate distance distributions, e.g. a tight blob
+/// plus float jitter, used to run the full search up to 8 times for
+/// one structure.)
+pub const EPS_DEDUP_REL_TOL: f64 = 1e-6;
+
+/// Collapse adjacent near-equal ε candidates (input ascending,
+/// positive). Keeps the first of each near-equal run, matching what
+/// `dedup()` kept for exact ties — so historical search results (and
+/// the selection goldens downstream of them) are unchanged whenever
+/// the old dedup already collapsed the run.
+pub fn dedup_eps_candidates(candidates: &mut Vec<f64>) {
+    candidates.dedup_by(|a, b| (*a - *b).abs() <= EPS_DEDUP_REL_TOL * a.abs().max(b.abs()));
+}
+
 /// ε grid search (§V-C): pick the ε whose DBSCAN clustering maximizes the
 /// Calinski–Harabasz index. Candidates are quantiles of the pairwise
 /// distance distribution, so the search adapts to the feature scale.
 /// Falls back to a single cluster when every ε yields one.
 pub fn cluster_clients(points: &[Point], min_pts: usize) -> (Vec<isize>, usize) {
+    let (labels, k, _) = cluster_clients_eps(points, min_pts);
+    (labels, k)
+}
+
+/// [`cluster_clients`], additionally reporting the winning ε so a
+/// caller can freeze the grid geometry (the incremental engine re-runs
+/// this search only when drift crosses its documented threshold).
+/// `None` when no ε produced usable structure — empty/singleton input,
+/// all points identical, or every candidate collapsing to one cluster
+/// (the degenerate single-cluster fallbacks).
+pub fn cluster_clients_eps(points: &[Point], min_pts: usize) -> (Vec<isize>, usize, Option<f64>) {
     let n = points.len();
     if n == 0 {
-        return (Vec::new(), 0);
+        return (Vec::new(), 0, None);
     }
     if n == 1 {
-        return (vec![0], 1);
+        return (vec![0], 1, None);
     }
 
     // Pairwise distances -> ε candidates at fixed quantiles. Large
@@ -97,13 +128,13 @@ pub fn cluster_clients(points: &[Point], min_pts: usize) -> (Vec<isize>, usize) 
         .map(|&q| quantile(q))
         .filter(|&e| e > 0.0)
         .collect();
-    candidates.dedup();
+    dedup_eps_candidates(&mut candidates);
     if candidates.is_empty() {
         // all points identical: one cluster
-        return (vec![0; n], 1);
+        return (vec![0; n], 1, None);
     }
 
-    let mut best: Option<(f64, Vec<isize>, usize)> = None;
+    let mut best: Option<(f64, Vec<isize>, usize, f64)> = None;
     for eps in candidates {
         let mut labels = dbscan(points, &DbscanParams { eps, min_pts });
         let k = relabel_outliers(&mut labels);
@@ -111,13 +142,13 @@ pub fn cluster_clients(points: &[Point], min_pts: usize) -> (Vec<isize>, usize) 
             continue; // CH undefined; also useless for selection
         }
         let score = calinski_harabasz(points, &labels, k);
-        if best.as_ref().map_or(true, |(s, _, _)| score > *s) {
-            best = Some((score, labels, k));
+        if best.as_ref().map_or(true, |(s, _, _, _)| score > *s) {
+            best = Some((score, labels, k, eps));
         }
     }
     match best {
-        Some((_, labels, k)) => (labels, k),
-        None => (vec![0; n], 1),
+        Some((_, labels, k, eps)) => (labels, k, Some(eps)),
+        None => (vec![0; n], 1, None),
     }
 }
 
@@ -180,6 +211,71 @@ mod tests {
     fn relabel_without_noise_keeps_count() {
         let mut labels = vec![0, 1, 1, 0];
         assert_eq!(relabel_outliers(&mut labels), 2);
+    }
+
+    #[test]
+    fn dedup_collapses_near_equal_candidates() {
+        // exact ties (the old behaviour) still collapse
+        let mut c = vec![0.5, 0.5, 0.7];
+        dedup_eps_candidates(&mut c);
+        assert_eq!(c, vec![0.5, 0.7]);
+        // near-equal within the relative tolerance collapse too,
+        // keeping the first of the run
+        let mut c = vec![1.0, 1.0 + 1e-9, 1.0 + 2e-9, 2.0];
+        dedup_eps_candidates(&mut c);
+        assert_eq!(c, vec![1.0, 2.0]);
+        // distinct values survive
+        let mut c = vec![1.0, 1.1, 2.0];
+        dedup_eps_candidates(&mut c);
+        assert_eq!(c, vec![1.0, 1.1, 2.0]);
+    }
+
+    #[test]
+    fn near_degenerate_distances_dedup_to_few_candidates() {
+        // Regression for the `candidates.dedup()` bug: a tight blob
+        // (plus one far point so some quantiles differ) yields distance
+        // quantiles that differ only by float jitter. The relative
+        // tolerance must collapse each jitter run, and the search must
+        // still produce a sane clustering.
+        let mut pts: Vec<Point> = (0..40)
+            .map(|i| {
+                let a = i as f64 * 0.618;
+                vec![1.0 + 1e-12 * a.sin(), 1.0 + 1e-12 * a.cos()]
+            })
+            .collect();
+        pts.push(vec![100.0, 100.0]);
+        let (labels, k, eps) = cluster_clients_eps(&pts, 2);
+        assert_eq!(labels.len(), pts.len());
+        assert!(k >= 1, "search must still produce a clustering, got {k}");
+        if let Some(e) = eps {
+            assert!(e.is_finite() && e > 0.0);
+        }
+        // pure function of its inputs, jitter or not
+        assert_eq!(cluster_clients_eps(&pts, 2), (labels, k, eps));
+        // and the exactly-degenerate case (every quantile identical)
+        // still collapses to the single-cluster fallback
+        let mut flat: Vec<Point> = vec![vec![2.0, 2.0]; 30];
+        flat.push(vec![2.0, 2.0]);
+        assert_eq!(cluster_clients_eps(&flat, 2), (vec![0; 31], 1, None));
+    }
+
+    #[test]
+    fn winning_eps_is_reported_and_reusable() {
+        let mut pts = blob(0.0, 0.0, 10, 0.05);
+        pts.extend(blob(10.0, 10.0, 10, 0.05));
+        let (labels, k, eps) = cluster_clients_eps(&pts, 2);
+        assert_eq!(k, 2);
+        let eps = eps.expect("two-blob structure must pin an ε");
+        // re-running plain DBSCAN at the frozen ε reproduces the
+        // partition (this is the contract the incremental engine leans on)
+        let mut again = dbscan(&pts, &DbscanParams { eps, min_pts: 2 });
+        let k_again = relabel_outliers(&mut again);
+        assert_eq!(k_again, k);
+        assert_eq!(again, labels);
+        // degenerate inputs report no ε
+        assert_eq!(cluster_clients_eps(&[], 2).2, None);
+        assert_eq!(cluster_clients_eps(&[vec![1.0]], 2).2, None);
+        assert_eq!(cluster_clients_eps(&vec![vec![1.0, 1.0]; 6], 2).2, None);
     }
 
     #[test]

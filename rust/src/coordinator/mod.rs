@@ -157,7 +157,11 @@ impl<'rt> Controller<'rt> {
         let init = backend.init_params()?;
         let mut gauge = PlaneGauge::default();
         gauge.add(init.len() * std::mem::size_of::<f32>());
-        let strategy = cfg.strategy.build();
+        // The controller is a long-lived home for strategy state, so
+        // FedLesScan gets the persistent incremental cluster plane here.
+        // Paper-scale fleets (≤ COHORT_MAX) still run the stateless
+        // path inside select(), keeping seeded goldens byte-identical.
+        let strategy = cfg.strategy.build_persistent();
         let cfg_k = cfg.clients_per_round;
         let n_clients = cfg.n_clients;
         let shards = resolve_shards(cfg.shards);
@@ -262,6 +266,27 @@ impl<'rt> Controller<'rt> {
         &self.history
     }
 
+    /// Drain the strategy's report of its most recent selection pass:
+    /// persist fresh cluster assignments into the client DB, truncate
+    /// the consumed prefix of the dirty log, and return the pass's
+    /// `(reclustered_clients, cluster_cache_hits)` counters. `(0, 0)`
+    /// for stateless strategies / the paper-scale path.
+    fn absorb_select_report(&mut self) -> (usize, usize) {
+        match self.strategy.take_select_report() {
+            None => (0, 0),
+            Some(rep) => {
+                for n in &rep.notes {
+                    self.history
+                        .note_cluster(n.client, n.feature, n.cell, n.cluster);
+                }
+                if let Some(cursor) = rep.dirty_cursor {
+                    self.history.truncate_dirty(cursor);
+                }
+                (rep.reclustered_clients, rep.cluster_cache_hits)
+            }
+        }
+    }
+
     /// Run the full round-synchronous experiment: spawn the persistent
     /// executor pool once, drive every round through it, retire it.
     pub fn run(&mut self) -> Result<ExperimentResult> {
@@ -350,6 +375,7 @@ impl<'rt> Controller<'rt> {
             self.strategy.select(&ctx, &mut self.rng)
         };
         let select_wall_s = select_t0.elapsed().as_secs_f64();
+        let (reclustered_clients, cluster_cache_hits) = self.absorb_select_report();
 
         // 2. in-flight filter: a client whose previous invocation is
         //    still running on the virtual clock is never re-invoked
@@ -666,6 +692,8 @@ impl<'rt> Controller<'rt> {
             param_plane_peak_bytes: self.gauge.peak(),
             bytes_down,
             bytes_up,
+            reclustered_clients,
+            cluster_cache_hits,
         })
     }
 
@@ -746,11 +774,16 @@ impl<'rt> Controller<'rt> {
         let (mut completions, mut folds, mut crashes) = (0usize, 0usize, 0usize);
         let (mut expired, mut late, mut in_flight_skipped) = (0usize, 0usize, 0usize);
         let mut agg_wall_s = 0.0;
+        let mut select_wall_s = 0.0;
+        let (mut reclustered_clients, mut cluster_cache_hits) = (0usize, 0usize);
         let mut now_s = 0.0;
 
         let d = self.dispatch_continuous(pool, &mut st, target, now_s, budget, window_s)?;
-        win.dispatched += d.invoked;
+        win.absorb(&d);
         in_flight_skipped += d.skipped;
+        select_wall_s += d.select_wall_s;
+        reclustered_clients += d.reclustered;
+        cluster_cache_hits += d.cache_hits;
         win.in_flight_peak = win.in_flight_peak.max(st.pending.len());
 
         while let Some(ev) = st.queue.pop() {
@@ -839,8 +872,11 @@ impl<'rt> Controller<'rt> {
             if free > 0 {
                 let d =
                     self.dispatch_continuous(pool, &mut st, free, now_s, budget, window_s)?;
-                win.dispatched += d.invoked;
+                win.absorb(&d);
                 in_flight_skipped += d.skipped;
+                select_wall_s += d.select_wall_s;
+                reclustered_clients += d.reclustered;
+                cluster_cache_hits += d.cache_hits;
             }
             win.in_flight_peak = win.in_flight_peak.max(st.pending.len());
         }
@@ -873,6 +909,9 @@ impl<'rt> Controller<'rt> {
             final_accuracy: ev.accuracy,
             total_cost: self.ledger.total,
             agg_wall_s,
+            select_wall_s,
+            reclustered_clients,
+            cluster_cache_hits,
             bytes_down: st.bytes_down,
             bytes_up,
             invocations: self.invocations.clone(),
@@ -894,14 +933,12 @@ impl<'rt> Controller<'rt> {
     ) -> Result<Dispatched> {
         let want = want.min(budget.saturating_sub(st.dispatched));
         if want == 0 {
-            return Ok(Dispatched {
-                invoked: 0,
-                skipped: 0,
-            });
+            return Ok(Dispatched::default());
         }
         let k = self.cfg.clients_per_round.max(1);
         let payload_mb = self.invoke_payload_mb();
         let pseudo_round = (st.dispatched / k) as u32;
+        let select_t0 = Instant::now();
         let selected = {
             let ctx = SelectionContext {
                 round: pseudo_round,
@@ -912,6 +949,8 @@ impl<'rt> Controller<'rt> {
             };
             self.strategy.select_replacements(&ctx, &mut self.rng)
         };
+        let select_wall_s = select_t0.elapsed().as_secs_f64();
+        let (reclustered, cache_hits) = self.absorb_select_report();
         self.in_flight.expire(now_s);
         let (invoked, skipped) = sched::split_in_flight(&selected, &self.in_flight);
         let mf = self.backend.manifest();
@@ -980,6 +1019,9 @@ impl<'rt> Controller<'rt> {
         Ok(Dispatched {
             invoked: n_invoked,
             skipped: skipped.len(),
+            select_wall_s,
+            reclustered,
+            cache_hits,
         })
     }
 }
@@ -1007,9 +1049,15 @@ struct PendingInv {
 }
 
 /// Per-dispatch summary.
+#[derive(Default)]
 struct Dispatched {
     invoked: usize,
     skipped: usize,
+    /// Wall-clock seconds the replacement selection took.
+    select_wall_s: f64,
+    /// Cluster counters drained from the strategy's select report.
+    reclustered: usize,
+    cache_hits: usize,
 }
 
 /// One metric window being accumulated (continuous mode records
@@ -1024,6 +1072,9 @@ struct WindowAcc {
     crashes: usize,
     expired: usize,
     in_flight_peak: usize,
+    select_wall_s: f64,
+    reclustered_clients: usize,
+    cluster_cache_hits: usize,
 }
 
 impl WindowAcc {
@@ -1038,7 +1089,18 @@ impl WindowAcc {
             crashes: 0,
             expired: 0,
             in_flight_peak: 0,
+            select_wall_s: 0.0,
+            reclustered_clients: 0,
+            cluster_cache_hits: 0,
         }
+    }
+
+    /// Fold one dispatch pass's selection accounting into the window.
+    fn absorb(&mut self, d: &Dispatched) {
+        self.dispatched += d.invoked;
+        self.select_wall_s += d.select_wall_s;
+        self.reclustered_clients += d.reclustered;
+        self.cluster_cache_hits += d.cache_hits;
     }
 
     fn finish(&self) -> WindowRecord {
@@ -1063,6 +1125,9 @@ impl WindowAcc {
                 0.0
             },
             in_flight_peak: self.in_flight_peak,
+            select_wall_s: self.select_wall_s,
+            reclustered_clients: self.reclustered_clients,
+            cluster_cache_hits: self.cluster_cache_hits,
         }
     }
 }

@@ -135,7 +135,8 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         println!(
             "\n{} / {} / {} (continuous): final acc {:.3}, folds {}/{} completions \
              (EUR {:.3}), {:.3} updates/s, time {:.1} min, crashes {}, expired {}, \
-             late {}, generation {}, cost ${:.4}",
+             late {}, generation {}, cost ${:.4}, select wall {:.1} ms, \
+             reclustered {} / cache hits {}",
             result.dataset,
             result.strategy,
             result.scenario,
@@ -150,6 +151,9 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
             result.late,
             result.final_generation,
             result.total_cost,
+            result.select_wall_s * 1e3,
+            result.reclustered_clients,
+            result.cluster_cache_hits,
         );
         if let Some(out) = args.get("out") {
             let out = PathBuf::from(out);
@@ -176,10 +180,13 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         .unwrap_or(0);
     let bytes_down_total: usize = result.rounds.iter().map(|r| r.bytes_down).sum();
     let bytes_up_total: usize = result.rounds.iter().map(|r| r.bytes_up).sum();
+    let reclustered_total: usize = result.rounds.iter().map(|r| r.reclustered_clients).sum();
+    let cache_hits_total: usize = result.rounds.iter().map(|r| r.cluster_cache_hits).sum();
     println!(
         "\n{} / {} / {}: final acc {:.3}, mean EUR {:.3}, time {:.1} min, cost ${:.4}, \
          bias {}, stale applied {}, in-flight skips {}, select wall {:.1} ms, \
-         agg wall {:.1} ms, param-plane peak {:.2} MB, net down/up {:.2}/{:.2} MB",
+         agg wall {:.1} ms, param-plane peak {:.2} MB, net down/up {:.2}/{:.2} MB, \
+         reclustered {} / cache hits {}",
         result.dataset,
         result.strategy,
         result.scenario,
@@ -195,6 +202,8 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         peak_bytes as f64 / 1e6,
         bytes_down_total as f64 / 1e6,
         bytes_up_total as f64 / 1e6,
+        reclustered_total,
+        cache_hits_total,
     );
     if let Some(out) = args.get("out") {
         let out = PathBuf::from(out);

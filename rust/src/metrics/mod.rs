@@ -59,6 +59,14 @@ pub struct RoundRecord {
     /// per-shard scales, plus indices for top-k) when
     /// `quantize_updates` is on.
     pub bytes_up: usize,
+    /// Clients whose behaviour-cluster assignment was recomputed during
+    /// this round's selection (affected cell-components only on the
+    /// incremental path; the whole participant tier on a full rebuild).
+    /// 0 for strategies without persistent cluster state.
+    pub reclustered_clients: usize,
+    /// Clustered participants whose standing assignment was reused
+    /// as-is by this round's selection (the incremental-path cache).
+    pub cluster_cache_hits: usize,
 }
 
 impl RoundRecord {
@@ -133,11 +141,11 @@ impl ExperimentResult {
     /// Write the per-round timeline as CSV (Fig. 3a/3b series).
     pub fn write_timeline_csv(&self, path: &Path) -> Result<()> {
         let mut out = String::from(
-            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur,select_wall_s,agg_wall_s,param_plane_peak_bytes,bytes_down,bytes_up\n",
+            "round,selected,successes,failures,stale_applied,in_flight_skipped,duration_s,accuracy,eval_loss,train_loss,cost,eur,select_wall_s,agg_wall_s,param_plane_peak_bytes,bytes_down,bytes_up,reclustered_clients,cluster_cache_hits\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4},{:.6},{:.6},{},{},{}\n",
+                "{},{},{},{},{},{},{:.3},{},{},{},{:.6},{:.4},{:.6},{:.6},{},{},{},{},{}\n",
                 r.round,
                 r.selected.len(),
                 r.successes,
@@ -155,6 +163,8 @@ impl ExperimentResult {
                 r.param_plane_peak_bytes,
                 r.bytes_down,
                 r.bytes_up,
+                r.reclustered_clients,
+                r.cluster_cache_hits,
             ));
         }
         std::fs::write(path, out)?;
@@ -200,6 +210,14 @@ impl ExperimentResult {
                     ),
                     ("bytes_down", Json::num(r.bytes_down as f64)),
                     ("bytes_up", Json::num(r.bytes_up as f64)),
+                    (
+                        "reclustered_clients",
+                        Json::num(r.reclustered_clients as f64),
+                    ),
+                    (
+                        "cluster_cache_hits",
+                        Json::num(r.cluster_cache_hits as f64),
+                    ),
                 ])
             })
             .collect();
@@ -263,6 +281,17 @@ pub struct WindowRecord {
     pub effective_update_ratio: f64,
     /// Max concurrent in-flight invocations observed in this window.
     pub in_flight_peak: usize,
+    /// Wall-clock seconds spent selecting replacement clients during
+    /// this window (real machine time, excluded from determinism
+    /// goldens) — the continuous analogue of the per-round
+    /// `select_wall_s`.
+    pub select_wall_s: f64,
+    /// Clients whose cluster assignment was recomputed by selections in
+    /// this window (incremental path; 0 for stateless strategies).
+    pub reclustered_clients: usize,
+    /// Clustered participants whose standing assignment was reused by
+    /// selections in this window.
+    pub cluster_cache_hits: usize,
 }
 
 /// Full continuous-mode experiment result (`--mode continuous`).
@@ -297,6 +326,13 @@ pub struct ContinuousResult {
     /// Wall-clock seconds spent in aggregation folds (real machine time,
     /// excluded from determinism goldens).
     pub agg_wall_s: f64,
+    /// Wall-clock seconds spent in replacement selection over the whole
+    /// run (real machine time, excluded from determinism goldens).
+    pub select_wall_s: f64,
+    /// Total clients reclustered across the run's selection passes.
+    pub reclustered_clients: usize,
+    /// Total standing-assignment reuses across the run's selections.
+    pub cluster_cache_hits: usize,
     /// Simulated network bytes server -> clients over the whole run
     /// (full f32 model per dispatched invocation).
     pub bytes_down: usize,
@@ -346,6 +382,15 @@ impl ContinuousResult {
                         Json::num(w.effective_update_ratio),
                     ),
                     ("in_flight_peak", Json::num(w.in_flight_peak as f64)),
+                    ("select_wall_s", Json::num(w.select_wall_s)),
+                    (
+                        "reclustered_clients",
+                        Json::num(w.reclustered_clients as f64),
+                    ),
+                    (
+                        "cluster_cache_hits",
+                        Json::num(w.cluster_cache_hits as f64),
+                    ),
                 ])
             })
             .collect();
@@ -375,6 +420,15 @@ impl ContinuousResult {
                 Json::num(self.effective_update_ratio()),
             ),
             ("agg_wall_s", Json::num(self.agg_wall_s)),
+            ("select_wall_s", Json::num(self.select_wall_s)),
+            (
+                "reclustered_clients",
+                Json::num(self.reclustered_clients as f64),
+            ),
+            (
+                "cluster_cache_hits",
+                Json::num(self.cluster_cache_hits as f64),
+            ),
             ("bytes_down", Json::num(self.bytes_down as f64)),
             ("bytes_up", Json::num(self.bytes_up as f64)),
             ("windows", Json::Arr(windows)),
@@ -420,6 +474,8 @@ mod tests {
             param_plane_peak_bytes: 0,
             bytes_down: 0,
             bytes_up: 0,
+            reclustered_clients: 0,
+            cluster_cache_hits: 0,
         }
     }
 
@@ -489,6 +545,9 @@ mod tests {
             final_accuracy: 0.0,
             total_cost: 0.0,
             agg_wall_s: 0.0,
+            select_wall_s: 0.0,
+            reclustered_clients: 0,
+            cluster_cache_hits: 0,
             bytes_down: 0,
             bytes_up: 0,
             invocations: HashMap::new(),
@@ -521,6 +580,9 @@ mod tests {
                 updates_per_s: 0.05,
                 effective_update_ratio: 0.75,
                 in_flight_peak: 6,
+                select_wall_s: 0.0,
+                reclustered_clients: 5,
+                cluster_cache_hits: 11,
             }],
             duration_s: 55.0,
             dispatched: 6,
@@ -534,6 +596,9 @@ mod tests {
             final_accuracy: 0.5,
             total_cost: 0.01,
             agg_wall_s: 0.0,
+            select_wall_s: 0.0,
+            reclustered_clients: 5,
+            cluster_cache_hits: 11,
             bytes_down: 24_000,
             bytes_up: 6_000,
             invocations: [(0, 2), (1, 4)].into_iter().collect(),
@@ -546,10 +611,19 @@ mod tests {
         assert_eq!(j.get("bytes_down").unwrap().as_usize().unwrap(), 24_000);
         assert_eq!(j.get("bytes_up").unwrap().as_usize().unwrap(), 6_000);
         assert_eq!(j.get("final_generation").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            j.get("reclustered_clients").unwrap().as_usize().unwrap(),
+            5
+        );
+        assert_eq!(j.get("cluster_cache_hits").unwrap().as_usize().unwrap(), 11);
         match j.get("windows").unwrap() {
             Json::Arr(ws) => {
                 assert_eq!(ws.len(), 1);
                 assert_eq!(ws[0].get("folds").unwrap().as_usize().unwrap(), 3);
+                assert_eq!(
+                    ws[0].get("reclustered_clients").unwrap().as_usize().unwrap(),
+                    5
+                );
             }
             other => panic!("windows not an array: {other:?}"),
         }
@@ -567,7 +641,9 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("select_wall_s,agg_wall_s,param_plane_peak_bytes,bytes_down,bytes_up"));
+            .ends_with(
+                "select_wall_s,agg_wall_s,param_plane_peak_bytes,bytes_down,bytes_up,reclustered_clients,cluster_cache_hits"
+            ));
         assert_eq!(s.lines().count(), 2);
         std::fs::remove_file(&p).ok();
     }

@@ -31,7 +31,8 @@
 //! byte-identical to clustering everyone — pinned by the selection
 //! goldens in `tests/goldens.rs`.
 
-use super::{feature_row, random_sample, Aggregation, SelectionContext, Strategy};
+use super::persistent::ClusterPlane;
+use super::{feature_row, random_sample, Aggregation, SelectReport, SelectionContext, Strategy};
 use crate::clustering::cluster_clients;
 use crate::util::Rng;
 use crate::ClientId;
@@ -73,11 +74,75 @@ const COHORT_STRATA: usize = 16;
 #[derive(Default)]
 pub struct FedLesScan {
     pub params: FedLesScanParams,
+    /// Persistent incremental cluster plane (opt-in via
+    /// [`with_incremental`](Self::with_incremental)). `None` keeps the
+    /// historical stateless selection on every fleet size.
+    plane: Option<ClusterPlane>,
+    /// Report of the last incremental pass, drained by
+    /// [`Strategy::take_select_report`].
+    report: Option<SelectReport>,
 }
 
 impl FedLesScan {
     pub fn new(params: FedLesScanParams) -> Self {
-        Self { params }
+        Self {
+            params,
+            plane: None,
+            report: None,
+        }
+    }
+
+    /// FedLesScan with the persistent incremental cluster plane. Above
+    /// [`COHORT_MAX`] registered clients, `select` consumes the client
+    /// DB's dirty-set and the standing frozen-ε clustering instead of
+    /// re-stratifying and re-clustering the world — per-round work
+    /// scales with behaviour drift, not fleet size, and the *whole*
+    /// participant tier is clustered (no stratified cohort cap). At or
+    /// below [`COHORT_MAX`] clients the stateless paper-scale path runs
+    /// unchanged, byte-identical to [`FedLesScan::default`] (pinned by
+    /// the selection goldens and the property suite).
+    pub fn with_incremental() -> Self {
+        Self::new_incremental(FedLesScanParams::default())
+    }
+
+    /// [`with_incremental`](Self::with_incremental) at explicit params.
+    pub fn new_incremental(params: FedLesScanParams) -> Self {
+        Self {
+            params,
+            plane: Some(ClusterPlane::new(params.ema_alpha, params.min_pts)),
+            report: None,
+        }
+    }
+
+    /// Algorithm 2 against the persistent cluster plane: same tier
+    /// policy and RNG draw order as the stateless path (rookie sample,
+    /// then straggler sample — the clustered walk draws nothing), but
+    /// tiers, features and clusters come from the standing state
+    /// refreshed by the dirty-set.
+    fn select_incremental(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        let k = ctx.clients_per_round;
+        let plane = self.plane.as_mut().expect("gated on plane presence");
+        plane.refresh(ctx);
+
+        let selected = {
+            if plane.rookies().len() >= k {
+                random_sample(plane.rookies(), k, rng)
+            } else {
+                let mut selected = plane.rookies().to_vec();
+                let need = k - selected.len();
+                let n_cluster = need.min(plane.participant_count());
+                let n_straggler = (need - n_cluster).min(plane.stragglers().len());
+                let straggler_picks = random_sample(plane.stragglers(), n_straggler, rng);
+                if n_cluster > 0 {
+                    selected.extend(plane.pick_clustered(n_cluster, ctx));
+                }
+                selected.extend(straggler_picks);
+                selected.truncate(k);
+                selected
+            }
+        };
+        self.report = Some(plane.take_report());
+        selected
     }
 }
 
@@ -108,6 +173,15 @@ impl Strategy for FedLesScan {
     }
 
     fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        // Fleet-scale incremental path: only when the persistent plane
+        // is enabled AND the fleet exceeds the paper-scale cohort cap.
+        // At or below COHORT_MAX the stateless path below runs even
+        // with a plane configured, keeping the ≤COHORT_MAX selection
+        // stream byte-identical to `FedLesScan::default()` (goldens).
+        if self.plane.is_some() && ctx.all_clients.len() > COHORT_MAX {
+            return self.select_incremental(ctx, rng);
+        }
+
         let k = ctx.clients_per_round;
         let a = self.params.ema_alpha;
 
@@ -177,6 +251,10 @@ impl Strategy for FedLesScan {
             tau: self.params.tau,
             normalize: self.params.normalize,
         }
+    }
+
+    fn take_select_report(&mut self) -> Option<SelectReport> {
+        self.report.take()
     }
 }
 
@@ -565,6 +643,75 @@ mod tests {
         d.dedup();
         assert_eq!(d.len(), 48);
         assert_ne!(a, run(8), "different seeds should move the sample");
+    }
+
+    #[test]
+    fn incremental_is_byte_identical_at_paper_scale() {
+        // at ≤ COHORT_MAX registered clients the plane must never
+        // engage: same RNG stream, same selections, and no report
+        let n = 60;
+        let clients: Vec<ClientId> = (0..n).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..40 {
+            hist.record_invocation(c);
+            if c % 5 == 0 {
+                hist.record_failure(c, 0);
+            } else {
+                hist.record_success(c, 0, 5.0 + (c % 11) as f64);
+            }
+        }
+        let mut legacy = FedLesScan::default();
+        let mut incr = FedLesScan::with_incremental();
+        let mut rng_a = Rng::seed_from_u64(17);
+        let mut rng_b = Rng::seed_from_u64(17);
+        for round in 0..8 {
+            let a = legacy.select(&ctx(&clients, &hist, round, 16), &mut rng_a);
+            let b = incr.select(&ctx(&clients, &hist, round, 16), &mut rng_b);
+            assert_eq!(a, b, "round {round}");
+            assert!(incr.take_select_report().is_none(), "paper-scale path has no report");
+        }
+    }
+
+    #[test]
+    fn incremental_large_fleet_is_deterministic_and_reports() {
+        let n = COHORT_MAX * 2;
+        let clients: Vec<ClientId> = (0..n).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..n {
+            hist.record_invocation(c);
+            hist.record_success(c, 1, 5.0 + (c % 97) as f64);
+        }
+        let run = |seed: u64| {
+            let mut s = FedLesScan::with_incremental();
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut out = Vec::new();
+            let mut reports = Vec::new();
+            for round in 2..6 {
+                let sel = s.select(&ctx(&clients, &hist, round, 48), &mut rng);
+                let rep = s.take_select_report().expect("incremental path reports");
+                out.push(sel);
+                reports.push((rep.reclustered_clients, rep.cluster_cache_hits));
+            }
+            (out, reports)
+        };
+        let (sels_a, reps_a) = run(7);
+        let (sels_b, reps_b) = run(7);
+        assert_eq!(sels_a, sels_b, "pure function of the seed");
+        assert_eq!(reps_a, reps_b);
+        // first pass is the full build; later passes (history untouched
+        // between selects) are pure cache
+        assert_eq!(reps_a[0].0, n, "first select clusters the whole tier");
+        for (i, &(reclustered, hits)) in reps_a.iter().enumerate().skip(1) {
+            assert_eq!(reclustered, 0, "round {i}: nothing drifted");
+            assert_eq!(hits, n, "round {i}: standing assignment reused");
+        }
+        for sel in &sels_a {
+            assert_eq!(sel.len(), 48);
+            let mut d = sel.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 48, "duplicates in {sel:?}");
+        }
     }
 
     #[test]

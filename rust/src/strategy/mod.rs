@@ -11,12 +11,14 @@ mod features;
 mod fedavg;
 mod fedlesscan;
 mod fedprox;
+mod persistent;
 mod safa;
 
 pub use features::{ema, feature_row, missed_round_ema, training_time_feature};
 pub use fedavg::FedAvg;
 pub use fedlesscan::{tier_partition, FedLesScan, FedLesScanParams, COHORT_MAX};
 pub use fedprox::FedProx;
+pub use persistent::DRIFT_RESEARCH_FRAC;
 pub use safa::SafaLite;
 
 use crate::clientdb::HistoryStore;
@@ -41,6 +43,37 @@ pub enum Aggregation {
     Synchronous,
     /// Eq. 3: fold in late updates dampened by t_k/t, discard age >= tau.
     StalenessAware { tau: u32, normalize: bool },
+}
+
+/// One client's clustering outcome from a selection pass, flowing back
+/// into the client DB ([`HistoryStore::note_cluster`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterNote {
+    pub client: ClientId,
+    /// Behaviour feature row `(trainingEma, missedRoundEma)`.
+    pub feature: (f64, f64),
+    /// Grid cell on the frozen-ε behaviour grid (`None` when the
+    /// incremental engine was inactive, e.g. degenerate geometry).
+    pub cell: Option<(i64, i64)>,
+    /// Standing cluster id (`-1` = outlier pseudo-cluster).
+    pub cluster: i64,
+}
+
+/// What a selection pass did to the persistent cluster state — drained
+/// by the coordinator after each `select`/`select_replacements` call
+/// via [`Strategy::take_select_report`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SelectReport {
+    /// Clients whose cluster assignment was recomputed this pass
+    /// (touched cell-components, or the whole tier on a rebuild).
+    pub reclustered_clients: usize,
+    /// Clustered participants whose standing assignment was reused.
+    pub cluster_cache_hits: usize,
+    /// Dirty-log position consumed ([`HistoryStore::dirty_since`]); the
+    /// coordinator truncates the store's log up to it.
+    pub dirty_cursor: Option<u64>,
+    /// Fresh cluster assignments to persist into the client DB.
+    pub notes: Vec<ClusterNote>,
 }
 
 /// A federated training strategy.
@@ -75,6 +108,13 @@ pub trait Strategy {
     fn aggregation(&self) -> Aggregation {
         Aggregation::Synchronous
     }
+
+    /// Drain the report of the most recent selection pass. `None` for
+    /// strategies without persistent cluster state (the default) and
+    /// for passes that ran the stateless paper-scale path.
+    fn take_select_report(&mut self) -> Option<SelectReport> {
+        None
+    }
 }
 
 /// CLI-facing strategy selector.
@@ -93,6 +133,19 @@ impl StrategyKind {
             StrategyKind::Fedprox => Box::new(FedProx::default()),
             StrategyKind::Fedlesscan => Box::new(FedLesScan::default()),
             StrategyKind::Safalite => Box::new(SafaLite),
+        }
+    }
+
+    /// [`build`](Self::build), but FedLesScan gets the persistent
+    /// incremental cluster plane. This is what the coordinator uses: a
+    /// long-lived strategy instance whose per-round selection work
+    /// scales with behaviour drift, not fleet size. Paper-scale fleets
+    /// (≤ [`COHORT_MAX`]) still take the stateless path inside
+    /// `FedLesScan::select`, so seeded reproductions are unchanged.
+    pub fn build_persistent(self) -> Box<dyn Strategy> {
+        match self {
+            StrategyKind::Fedlesscan => Box::new(FedLesScan::with_incremental()),
+            other => other.build(),
         }
     }
 

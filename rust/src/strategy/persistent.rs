@@ -1,0 +1,775 @@
+//! Persistent cluster plane for FedLesScan's fleet-scale selection.
+//!
+//! [`ClusterPlane`] keeps the §V-A tier partition, the behaviour
+//! feature rows, the frozen-ε [`IncrementalDbscan`] engine and the
+//! per-cluster selection aggregates alive across rounds. Each
+//! selection pass consumes the client DB's O(changed) dirty-set
+//! ([`HistoryStore::dirty_since`]) instead of rescanning the fleet:
+//!
+//! * tier moves (rookie → participant → straggler → back) are applied
+//!   per dirty client against O(1) tier sets;
+//! * changed participant feature rows become engine updates, which
+//!   recluster only the touched grid cell-components and splice the
+//!   result into the standing labels;
+//! * per-cluster aggregates (Σ totalEma + a members set ordered by
+//!   `(invocations, id)` — the fairness walk order) are maintained by
+//!   detach/attach on exactly the touched records.
+//!
+//! ## Frozen geometry and the drift threshold
+//!
+//! DBSCAN's grid geometry is a function of ε *and* of the y-axis scale
+//! `max_t` (points are `[t, m·max_t]`). Both are frozen at (re)search
+//! time so standing cells stay comparable across rounds. The
+//! Calinski–Harabasz ε grid search re-runs only when the fraction of
+//! participants whose point moved grid cells since the last freeze
+//! exceeds [`DRIFT_RESEARCH_FRAC`] (or when the engine cannot place a
+//! point) — at which point the plane rebuilds from scratch through the
+//! [`cluster_clients_eps`] oracle, exactly the paper's per-round
+//! search. Between rebuilds the standing partition is — component by
+//! component — what a from-scratch DBSCAN pass at the frozen ε
+//! produces (see `clustering::incremental`); the property suite pins
+//! this under random drift schedules.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::mem;
+
+use super::{feature_row, ClusterNote, SelectReport, SelectionContext};
+use crate::clientdb::ClientHistory;
+use crate::clustering::{cluster_clients_eps, IncrementalDbscan};
+use crate::ClientId;
+
+/// Re-run the ε grid search when more than this fraction of the
+/// participant tier moved grid cells since the last freeze. Below it,
+/// the frozen geometry still reflects the behaviour distribution the
+/// search saw; above it, enough of the fleet re-arranged that the
+/// standing ε may no longer be the CH-optimal one.
+pub const DRIFT_RESEARCH_FRAC: f64 = 0.10;
+
+/// Label sentinel for a member record not yet attached to any cluster
+/// aggregate (freshly upserted; the engine splice assigns it).
+const UNASSIGNED: isize = isize::MIN;
+
+/// §V-A tier of one client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Rookie,
+    Participant,
+    Straggler,
+}
+
+fn classify(h: &ClientHistory) -> Tier {
+    if h.is_rookie() {
+        Tier::Rookie
+    } else if h.is_straggler() {
+        Tier::Straggler
+    } else {
+        Tier::Participant
+    }
+}
+
+/// O(1) add/remove id set exposing a stable slice for seeded sampling.
+/// Swap-remove keeps operations constant-time; the resulting order is a
+/// deterministic function of the operation sequence (never of a hash
+/// map's iteration order), which is all replay determinism needs.
+#[derive(Debug, Default)]
+struct TierSet {
+    order: Vec<ClientId>,
+    pos: HashMap<ClientId, usize>,
+}
+
+impl TierSet {
+    fn insert(&mut self, c: ClientId) {
+        if self.pos.contains_key(&c) {
+            return;
+        }
+        self.pos.insert(c, self.order.len());
+        self.order.push(c);
+    }
+
+    fn remove(&mut self, c: ClientId) {
+        if let Some(i) = self.pos.remove(&c) {
+            let last = self.order.pop().expect("pos non-empty implies order non-empty");
+            if i < self.order.len() {
+                self.order[i] = last;
+                self.pos.insert(last, i);
+            }
+        }
+    }
+
+    fn as_slice(&self) -> &[ClientId] {
+        &self.order
+    }
+
+    fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    fn clear(&mut self) {
+        self.order.clear();
+        self.pos.clear();
+    }
+}
+
+/// Per-participant behaviour record mirrored from the client DB.
+#[derive(Debug, Clone, Copy)]
+struct MemberRec {
+    /// trainingEma (x axis).
+    t: f64,
+    /// missedRoundEma (unscaled).
+    m: f64,
+    /// Eq. 2 totalEma at the frozen `max_t`: `t + m·max_t`.
+    total: f64,
+    /// Fairness key (least-invoked first).
+    invocations: u32,
+    /// Standing cluster label ([`UNASSIGNED`] between upsert and splice).
+    label: isize,
+}
+
+/// Selection aggregate of one standing cluster.
+#[derive(Debug, Default)]
+struct ClusterAgg {
+    /// Σ totalEma over members (mean = sum / members.len()).
+    sum: f64,
+    /// Members in fairness order `(invocations, id)` ascending —
+    /// exactly the within-cluster order of the paper-scale walk.
+    members: BTreeSet<(u32, ClientId)>,
+}
+
+/// The persistent selection state; see the module docs.
+#[derive(Debug, Default)]
+pub(crate) struct ClusterPlane {
+    alpha: f64,
+    min_pts: usize,
+    built: bool,
+    /// Standing tier of every registered client.
+    tier: HashMap<ClientId, Tier>,
+    rookies: TierSet,
+    stragglers: TierSet,
+    /// Participant records; keys are exactly the engine's point ids.
+    members: HashMap<ClientId, MemberRec>,
+    /// Frozen-ε engine; `None` in the degenerate frozen state (no ε
+    /// produced structure — e.g. all points identical), where every
+    /// participant sits in one standing cluster until the next rebuild.
+    engine: Option<IncrementalDbscan>,
+    /// Frozen y-axis scale (see module docs).
+    max_t: f64,
+    clusters: HashMap<isize, ClusterAgg>,
+    /// Participants whose point changed grid cells since the last ε
+    /// freeze (plus joins/leaves) — the drift measure.
+    moved_since_freeze: HashSet<ClientId>,
+    /// Dirty-log cursor into [`HistoryStore::dirty_since`].
+    dirty_cursor: u64,
+    last_round: Option<u32>,
+    // -- report accumulators, drained by `take_report` --
+    reclustered: usize,
+    cache_hits: usize,
+    notes: Vec<ClusterNote>,
+}
+
+impl ClusterPlane {
+    pub(crate) fn new(alpha: f64, min_pts: usize) -> Self {
+        Self {
+            alpha,
+            min_pts,
+            ..Self::default()
+        }
+    }
+
+    pub(crate) fn rookies(&self) -> &[ClientId] {
+        self.rookies.as_slice()
+    }
+
+    pub(crate) fn stragglers(&self) -> &[ClientId] {
+        self.stragglers.as_slice()
+    }
+
+    pub(crate) fn participant_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Bring the plane up to date with the client DB. First call (or a
+    /// drift/degeneracy trigger) runs the full ε grid search; steady
+    /// state is O(dirty + touched cell-components).
+    pub(crate) fn refresh(&mut self, ctx: &SelectionContext) {
+        let (dirty_slice, cursor) = ctx.history.dirty_since(self.dirty_cursor);
+        let mut dirty: Vec<ClientId> = dirty_slice.to_vec();
+        self.dirty_cursor = cursor;
+        if !self.built {
+            self.rebuild(ctx);
+            return;
+        }
+
+        // The missed-round feature decays with the current round, so on
+        // a round advance every client with a live miss drifts even
+        // without a new event.
+        if self.last_round != Some(ctx.round) {
+            dirty.extend(ctx.history.clients_with_misses().iter().copied());
+            self.last_round = Some(ctx.round);
+        }
+        dirty.sort_unstable();
+        dirty.dedup();
+        if dirty.is_empty() {
+            self.cache_hits += self.members.len();
+            return;
+        }
+
+        // Classify the dirty clients; collect engine changes.
+        let round = ctx.round.max(1);
+        let mut changes: Vec<(ClientId, Option<Vec<f64>>)> = Vec::new();
+        let mut pending: HashMap<ClientId, (f64, f64, u32)> = HashMap::new();
+        for &c in &dirty {
+            let h = ctx.history.view(c);
+            let new_tier = classify(h);
+            let old_tier = self.tier.get(&c).copied();
+            if old_tier != Some(new_tier) {
+                match old_tier {
+                    Some(Tier::Rookie) => self.rookies.remove(c),
+                    Some(Tier::Straggler) => self.stragglers.remove(c),
+                    Some(Tier::Participant) => {
+                        if let Some(rec) = self.members.remove(&c) {
+                            detach(&mut self.clusters, c, &rec);
+                            changes.push((c, None));
+                            self.moved_since_freeze.insert(c);
+                        }
+                    }
+                    None => {} // client unseen by the last rebuild (late registration)
+                }
+                match new_tier {
+                    Tier::Rookie => self.rookies.insert(c),
+                    Tier::Straggler => self.stragglers.insert(c),
+                    Tier::Participant => {}
+                }
+                self.tier.insert(c, new_tier);
+            }
+            if new_tier == Tier::Participant {
+                let (t, m) = feature_row(h, round, self.alpha);
+                let inv = h.invocations;
+                match self.members.get_mut(&c) {
+                    Some(rec) if rec.t == t && rec.m == m => {
+                        // geometry unchanged: at most a fairness-order
+                        // move within the standing cluster
+                        if rec.invocations != inv {
+                            if let Some(agg) = self.clusters.get_mut(&rec.label) {
+                                agg.members.remove(&(rec.invocations, c));
+                                agg.members.insert((inv, c));
+                            }
+                            rec.invocations = inv;
+                        }
+                    }
+                    _ => {
+                        changes.push((c, Some(vec![t, m * self.max_t])));
+                        pending.insert(c, (t, m, inv));
+                    }
+                }
+            }
+        }
+
+        if changes.is_empty() {
+            self.cache_hits += self.members.len();
+            return;
+        }
+
+        // Drift accounting before the engine mutates its cells.
+        if let Some(engine) = &self.engine {
+            for (c, p) in &changes {
+                let old = engine.cell(*c).map(<[i64]>::to_vec);
+                let new = p.as_deref().and_then(|pt| engine.key_for(pt));
+                if old != new {
+                    self.moved_since_freeze.insert(*c);
+                }
+            }
+        }
+
+        let splice = match self.engine.as_mut() {
+            // Degenerate frozen state: any structural change re-searches.
+            None => None,
+            Some(engine) => engine.update(&changes),
+        };
+        let Some(splice) = splice else {
+            self.rebuild(ctx);
+            return;
+        };
+
+        // Apply the row updates: detach stale aggregate entries and
+        // refresh the records; the splice pass below re-attaches every
+        // touched point under its fresh label (a changed row's point is
+        // always inside a reclustered component).
+        for (c, p) in &changes {
+            if p.is_none() {
+                continue; // departures already detached above
+            }
+            let (t, m, inv) = pending[c];
+            let total = t + m * self.max_t;
+            match self.members.get_mut(c) {
+                Some(rec) => {
+                    let old = *rec;
+                    detach(&mut self.clusters, *c, &old);
+                    rec.t = t;
+                    rec.m = m;
+                    rec.total = total;
+                    rec.invocations = inv;
+                    rec.label = UNASSIGNED;
+                }
+                None => {
+                    self.members.insert(
+                        *c,
+                        MemberRec {
+                            t,
+                            m,
+                            total,
+                            invocations: inv,
+                            label: UNASSIGNED,
+                        },
+                    );
+                    self.moved_since_freeze.insert(*c);
+                }
+            }
+        }
+
+        // Splice: move every relabeled point to its fresh cluster.
+        for &(id, new_label) in &splice.relabeled {
+            let old = *self
+                .members
+                .get(&id)
+                .expect("engine points and member records share keys");
+            if old.label == new_label {
+                continue; // NOISE -> NOISE: still attached correctly
+            }
+            detach(&mut self.clusters, id, &old); // no-op for UNASSIGNED
+            let rec = self.members.get_mut(&id).expect("still present");
+            rec.label = new_label;
+            let agg = self.clusters.entry(new_label).or_default();
+            agg.sum += old.total;
+            agg.members.insert((old.invocations, id));
+            self.notes.push(ClusterNote {
+                client: id,
+                feature: (old.t, old.m),
+                cell: self.engine.as_ref().and_then(|e| cell_pair(e.cell(id))),
+                cluster: new_label as i64,
+            });
+        }
+
+        self.reclustered += splice.reclustered;
+        self.cache_hits += self.members.len().saturating_sub(splice.reclustered);
+
+        // ε-freeze drift check, after the splice so the measure sees
+        // this round's moves.
+        let drifted = self.moved_since_freeze.len() as f64;
+        if drifted > DRIFT_RESEARCH_FRAC * self.members.len().max(1) as f64 {
+            self.rebuild(ctx);
+        }
+    }
+
+    /// Full rebuild: classify the fleet, re-run the Calinski–Harabasz
+    /// ε grid search (the from-scratch oracle), freeze the winning
+    /// geometry and reload the engine. O(fleet); runs on first use and
+    /// on drift/degeneracy triggers only.
+    fn rebuild(&mut self, ctx: &SelectionContext) {
+        self.tier.clear();
+        self.rookies.clear();
+        self.stragglers.clear();
+        self.members.clear();
+        self.clusters.clear();
+        self.moved_since_freeze.clear();
+        self.engine = None;
+
+        let round = ctx.round.max(1);
+        let mut parts: Vec<(ClientId, f64, f64, u32)> = Vec::new();
+        for &c in ctx.all_clients {
+            let h = ctx.history.view(c);
+            let tier = classify(h);
+            self.tier.insert(c, tier);
+            match tier {
+                Tier::Rookie => self.rookies.insert(c),
+                Tier::Straggler => self.stragglers.insert(c),
+                Tier::Participant => {
+                    let (t, m) = feature_row(h, round, self.alpha);
+                    parts.push((c, t, m, h.invocations));
+                }
+            }
+        }
+
+        let max_t = parts
+            .iter()
+            .map(|p| p.1)
+            .fold(0.0f64, f64::max)
+            .max(1e-9);
+        self.max_t = max_t;
+        let points: Vec<Vec<f64>> = parts.iter().map(|&(_, t, m, _)| vec![t, m * max_t]).collect();
+        let (oracle_labels, _, eps) = cluster_clients_eps(&points, self.min_pts);
+
+        // Try to freeze the winning ε into the engine; fall back to the
+        // oracle's labels (single standing cluster, typically) when no
+        // ε produced structure or the engine refuses the geometry.
+        let mut engine_labels: Option<Vec<(ClientId, isize)>> = None;
+        if let Some(eps) = eps {
+            if let Some(mut engine) = IncrementalDbscan::new(eps, self.min_pts) {
+                let inserts: Vec<(ClientId, Option<Vec<f64>>)> = parts
+                    .iter()
+                    .zip(&points)
+                    .map(|(&(c, ..), p)| (c, Some(p.clone())))
+                    .collect();
+                if let Some(splice) = engine.update(&inserts) {
+                    engine_labels = Some(splice.relabeled);
+                    self.engine = Some(engine);
+                }
+            }
+        }
+
+        match engine_labels {
+            Some(relabeled) => {
+                let label_of: HashMap<ClientId, isize> = relabeled.into_iter().collect();
+                for &(c, t, m, inv) in &parts {
+                    let label = label_of[&c];
+                    self.install(c, t, m, inv, label);
+                }
+            }
+            None => {
+                // oracle labels are already outlier-relabelled (no NOISE)
+                for (i, &(c, t, m, inv)) in parts.iter().enumerate() {
+                    let label = oracle_labels.get(i).copied().unwrap_or(0);
+                    self.install(c, t, m, inv, label);
+                }
+            }
+        }
+
+        self.reclustered += parts.len();
+        self.built = true;
+        self.last_round = Some(ctx.round);
+    }
+
+    /// Insert a participant record and attach it to its cluster.
+    fn install(&mut self, c: ClientId, t: f64, m: f64, inv: u32, label: isize) {
+        let total = t + m * self.max_t;
+        self.members.insert(
+            c,
+            MemberRec {
+                t,
+                m,
+                total,
+                invocations: inv,
+                label,
+            },
+        );
+        let agg = self.clusters.entry(label).or_default();
+        agg.sum += total;
+        agg.members.insert((inv, c));
+        self.notes.push(ClusterNote {
+            client: c,
+            feature: (t, m),
+            cell: self.engine.as_ref().and_then(|e| cell_pair(e.cell(c))),
+            cluster: label as i64,
+        });
+    }
+
+    /// Algorithm 2 lines 9-17 against the standing aggregates: clusters
+    /// ascending by mean totalEma (ties on label id — deterministic),
+    /// rotation start from training progress, least-invoked first
+    /// within a cluster. NOISE participates as the outlier
+    /// pseudo-cluster, ordered by its mean like any other (§V-C "treat
+    /// outliers as a single cluster").
+    pub(crate) fn pick_clustered(&self, take: usize, ctx: &SelectionContext) -> Vec<ClientId> {
+        if take == 0 || self.clusters.is_empty() {
+            return Vec::new();
+        }
+        let mut order: Vec<(f64, isize)> = self
+            .clusters
+            .iter()
+            .map(|(&label, agg)| (agg.sum / agg.members.len().max(1) as f64, label))
+            .collect();
+        order.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        let n_clusters = order.len();
+        let progress = if ctx.max_rounds == 0 {
+            0.0
+        } else {
+            ctx.round as f64 / ctx.max_rounds as f64
+        };
+        let start = ((progress * n_clusters as f64) as usize).min(n_clusters - 1);
+        let mut picked = Vec::with_capacity(take);
+        'outer: for step in 0..n_clusters {
+            let (_, label) = order[(start + step) % n_clusters];
+            for &(_, c) in &self.clusters[&label].members {
+                picked.push(c);
+                if picked.len() == take {
+                    break 'outer;
+                }
+            }
+        }
+        picked
+    }
+
+    /// Drain the accumulated report (counters reset to zero).
+    pub(crate) fn take_report(&mut self) -> SelectReport {
+        SelectReport {
+            reclustered_clients: mem::take(&mut self.reclustered),
+            cluster_cache_hits: mem::take(&mut self.cache_hits),
+            dirty_cursor: Some(self.dirty_cursor),
+            notes: mem::take(&mut self.notes),
+        }
+    }
+}
+
+/// Remove a record's entry from its cluster aggregate (no-op for
+/// [`UNASSIGNED`]); drops the aggregate when it empties so cluster
+/// iteration never sees ghosts.
+fn detach(clusters: &mut HashMap<isize, ClusterAgg>, c: ClientId, rec: &MemberRec) {
+    if rec.label == UNASSIGNED {
+        return;
+    }
+    if let Some(agg) = clusters.get_mut(&rec.label) {
+        agg.sum -= rec.total;
+        agg.members.remove(&(rec.invocations, c));
+        if agg.members.is_empty() {
+            clusters.remove(&rec.label);
+        }
+    }
+}
+
+fn cell_pair(cell: Option<&[i64]>) -> Option<(i64, i64)> {
+    match cell {
+        Some([x, y]) => Some((*x, *y)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clientdb::HistoryStore;
+    use crate::clustering::{dbscan, relabel_outliers, DbscanParams};
+
+    fn ctx<'a>(
+        clients: &'a [ClientId],
+        history: &'a HistoryStore,
+        round: u32,
+        k: usize,
+    ) -> SelectionContext<'a> {
+        SelectionContext {
+            round,
+            max_rounds: 20,
+            clients_per_round: k,
+            all_clients: clients,
+            history,
+        }
+    }
+
+    /// Partition-identity of the plane's standing labels against the
+    /// from-scratch oracle at the plane's own frozen geometry.
+    fn assert_matches_frozen_oracle(plane: &ClusterPlane, c: &SelectionContext) {
+        let Some(engine) = &plane.engine else { return };
+        let mut ids: Vec<ClientId> = plane.members.keys().copied().collect();
+        ids.sort_unstable();
+        let round = c.round.max(1);
+        let points: Vec<Vec<f64>> = ids
+            .iter()
+            .map(|&id| {
+                let (t, m) = feature_row(c.history.view(id), round, plane.alpha);
+                vec![t, m * plane.max_t]
+            })
+            .collect();
+        let want = {
+            let mut l = dbscan(
+                &points,
+                &DbscanParams {
+                    eps: engine.eps(),
+                    min_pts: plane.min_pts,
+                },
+            );
+            relabel_outliers(&mut l);
+            l
+        };
+        let got: Vec<isize> = ids.iter().map(|id| plane.members[id].label).collect();
+        // bijective label mapping, NOISE folded into the same rules on
+        // both sides (plane keeps NOISE; oracle relabels it — the
+        // partition must still agree)
+        let mut fwd: HashMap<isize, isize> = HashMap::new();
+        let mut rev: HashMap<isize, isize> = HashMap::new();
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(*fwd.entry(g).or_insert(w), w, "client {} fwd", ids[i]);
+            assert_eq!(*rev.entry(w).or_insert(g), g, "client {} rev", ids[i]);
+        }
+    }
+
+    fn seed_fleet(hist: &mut HistoryStore, n: usize) {
+        for c in 0..n {
+            hist.record_invocation(c);
+            let t = if c % 2 == 0 { 5.0 } else { 60.0 };
+            hist.record_success(c, 1, t + (c % 7) as f64 * 0.05);
+        }
+    }
+
+    #[test]
+    fn first_refresh_builds_then_caches() {
+        let n = 40;
+        let clients: Vec<ClientId> = (0..n).collect();
+        let mut hist = HistoryStore::new();
+        seed_fleet(&mut hist, n);
+        let mut plane = ClusterPlane::new(0.5, 2);
+        let c = ctx(&clients, &hist, 2, 8);
+        plane.refresh(&c);
+        assert_eq!(plane.participant_count(), n);
+        let rep = plane.take_report();
+        assert_eq!(rep.reclustered_clients, n, "first build reclusters everyone");
+        assert_eq!(rep.notes.len(), n);
+        hist.truncate_dirty(rep.dirty_cursor.unwrap());
+        assert_matches_frozen_oracle(&plane, &c);
+
+        // same round, no new events: pure cache
+        plane.refresh(&c);
+        let rep = plane.take_report();
+        assert_eq!(rep.reclustered_clients, 0);
+        assert_eq!(rep.cluster_cache_hits, n);
+        assert!(rep.notes.is_empty());
+    }
+
+    #[test]
+    fn incremental_refresh_tracks_events_and_matches_oracle() {
+        let n = 60;
+        let clients: Vec<ClientId> = (0..n).collect();
+        let mut hist = HistoryStore::new();
+        seed_fleet(&mut hist, n);
+        let mut plane = ClusterPlane::new(0.5, 2);
+        {
+            let c = ctx(&clients, &hist, 2, 8);
+            plane.refresh(&c);
+            hist.truncate_dirty(plane.take_report().dirty_cursor.unwrap());
+        }
+        // one client reports a meaningfully different time (same round:
+        // no missed-round drift) — only its cell-component reclusters
+        hist.record_invocation(4);
+        hist.record_success(4, 2, 8.0);
+        let c = ctx(&clients, &hist, 2, 8);
+        plane.refresh(&c);
+        let rep = plane.take_report();
+        assert!(rep.reclustered_clients > 0);
+        assert!(
+            rep.reclustered_clients < n,
+            "only touched components recluster, got {}",
+            rep.reclustered_clients
+        );
+        assert!(rep.cluster_cache_hits > 0);
+        hist.truncate_dirty(rep.dirty_cursor.unwrap());
+        assert_matches_frozen_oracle(&plane, &c);
+    }
+
+    #[test]
+    fn tier_moves_update_the_sets() {
+        let clients: Vec<ClientId> = (0..10).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..8 {
+            hist.record_invocation(c);
+            hist.record_success(c, 1, 10.0 + c as f64);
+        }
+        // 8, 9 stay rookies
+        let mut plane = ClusterPlane::new(0.5, 2);
+        plane.refresh(&ctx(&clients, &hist, 1, 4));
+        assert_eq!(plane.rookies().len(), 2);
+        assert_eq!(plane.stragglers().len(), 0);
+        assert_eq!(plane.participant_count(), 8);
+        plane.take_report();
+
+        // 3 fails -> straggler; 8 invoked+fails -> rookie to straggler
+        hist.record_failure(3, 2);
+        hist.record_invocation(8);
+        hist.record_failure(8, 2);
+        plane.refresh(&ctx(&clients, &hist, 2, 4));
+        assert_eq!(plane.rookies().len(), 1);
+        assert_eq!(plane.stragglers().len(), 2);
+        assert_eq!(plane.participant_count(), 7);
+        plane.take_report();
+
+        // cooldowns decay: both return (8 as participant now)
+        hist.tick_cooldowns(&[]);
+        plane.refresh(&ctx(&clients, &hist, 3, 4));
+        assert_eq!(plane.stragglers().len(), 0);
+        assert_eq!(plane.participant_count(), 9);
+    }
+
+    #[test]
+    fn pick_clustered_is_fair_and_progress_rotated() {
+        // one tight cluster: least-invoked first
+        let clients: Vec<ClientId> = (0..4).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..4 {
+            for _ in 0..(c + 1) {
+                hist.record_invocation(c);
+            }
+            hist.record_success(c, 1, 10.0);
+        }
+        let mut plane = ClusterPlane::new(0.5, 2);
+        let c = ctx(&clients, &hist, 0, 2);
+        plane.refresh(&c);
+        assert_eq!(plane.pick_clustered(2, &c), vec![0, 1]);
+        // take = everyone: full coverage, no duplicates
+        let all = plane.pick_clustered(4, &c);
+        let mut d = all.clone();
+        d.sort_unstable();
+        assert_eq!(d, clients);
+    }
+
+    #[test]
+    fn heavy_drift_triggers_the_oracle_research() {
+        let n = 30;
+        let clients: Vec<ClientId> = (0..n).collect();
+        let mut hist = HistoryStore::new();
+        seed_fleet(&mut hist, n);
+        let mut plane = ClusterPlane::new(0.5, 2);
+        plane.refresh(&ctx(&clients, &hist, 2, 8));
+        plane.take_report();
+        let eps_before = plane.engine.as_ref().map(|e| e.eps());
+
+        // move well over DRIFT_RESEARCH_FRAC of the fleet to a new regime
+        for c in 0..n / 2 {
+            hist.record_invocation(c);
+            hist.record_success(c, 3, 200.0 + c as f64);
+        }
+        let c = ctx(&clients, &hist, 3, 8);
+        plane.refresh(&c);
+        let rep = plane.take_report();
+        // the pass did incremental splice work AND the full rebuild, so
+        // the counter is at least the tier size
+        assert!(
+            rep.reclustered_clients >= n,
+            "drift past the threshold rebuilds the whole tier, got {}",
+            rep.reclustered_clients
+        );
+        assert!(
+            plane.moved_since_freeze.is_empty(),
+            "rebuild freezes a fresh geometry"
+        );
+        let _ = eps_before; // ε may or may not move; the rebuild itself is the contract
+        assert_matches_frozen_oracle(&plane, &c);
+    }
+
+    #[test]
+    fn degenerate_geometry_falls_back_to_single_cluster() {
+        // identical behaviour: no ε candidate survives -> engine-less
+        // frozen state with one standing cluster
+        let clients: Vec<ClientId> = (0..6).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..6 {
+            hist.record_invocation(c);
+            hist.record_success(c, 1, 10.0);
+        }
+        let mut plane = ClusterPlane::new(0.5, 2);
+        let c = ctx(&clients, &hist, 1, 3);
+        plane.refresh(&c);
+        assert!(plane.engine.is_none());
+        assert_eq!(plane.clusters.len(), 1);
+        let picked = plane.pick_clustered(3, &c);
+        assert_eq!(picked.len(), 3);
+        plane.take_report();
+
+        // any structural change re-searches (and may find structure now)
+        hist.record_invocation(0);
+        hist.record_success(0, 2, 99.0);
+        let c = ctx(&clients, &hist, 2, 3);
+        plane.refresh(&c);
+        let rep = plane.take_report();
+        assert_eq!(rep.reclustered_clients, 6, "engine-less dirt => full rebuild");
+    }
+}

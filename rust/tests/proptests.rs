@@ -5,7 +5,8 @@
 
 use fedless::clientdb::{HistoryStore, HISTORY_WINDOW};
 use fedless::clustering::{
-    cluster_clients, dbscan, dbscan_naive, relabel_outliers, DbscanParams, NOISE,
+    cluster_clients, cluster_clients_eps, dbscan, dbscan_naive, dedup_eps_candidates,
+    relabel_outliers, DbscanParams, IncrementalDbscan, EPS_DEDUP_REL_TOL, NOISE,
 };
 use fedless::config::Scenario;
 use fedless::cost::GcfPricing;
@@ -471,6 +472,174 @@ fn prop_grid_dbscan_matches_naive_oracle() {
             &naive,
             &format!("case {case} n={n} dim={dim} style={style} eps={eps} min_pts={min_pts}"),
         );
+    }
+}
+
+#[test]
+fn prop_incremental_dbscan_matches_full_recluster_under_drift() {
+    // The tentpole contract: after ANY multi-round schedule of point
+    // insertions, behaviour drift (moves), and departures, the
+    // persistent engine's standing labels are partition-identical to a
+    // from-scratch DBSCAN of the same points at the same frozen ε —
+    // the engine only re-expands affected cell-components, but the
+    // result must be indistinguishable from reclustering the world.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x1ec5);
+        let n = 4 + rng.below(40);
+        // feature-shaped points: (trainingEma, scaled missedRoundEma)
+        let mut live: Vec<Option<Vec<f64>>> = (0..n)
+            .map(|_| {
+                let c = rng.below(3) as f64 * 40.0;
+                Some(vec![
+                    c + rng.range_f64(1.0, 20.0),
+                    rng.range_f64(0.0, 15.0),
+                ])
+            })
+            .collect();
+        let pts: Vec<Vec<f64>> = live.iter().flatten().cloned().collect();
+        let min_pts = 1 + rng.below(3);
+        // production-style ε freeze: the grid-search winner, when the
+        // geometry has one (degenerate cases fall back to a fixed ε —
+        // the engine contract is per-ε, not per-search)
+        let (_, _, eps_opt) = cluster_clients_eps(&pts, min_pts);
+        let eps = eps_opt.unwrap_or(1.0);
+        let mut engine = IncrementalDbscan::new(eps, min_pts).expect("positive finite eps");
+        let bulk: Vec<(usize, Option<Vec<f64>>)> =
+            live.iter().cloned().enumerate().collect();
+        engine.update(&bulk).expect("finite points always place");
+        let rounds = 1 + rng.below(7);
+        for round in 0..=rounds {
+            if round > 0 {
+                // drift schedule: EMA-style moves, departures, arrivals
+                let batch = 1 + rng.below(n);
+                let mut changes: Vec<(usize, Option<Vec<f64>>)> = Vec::new();
+                let mut touched = std::collections::HashSet::new();
+                for _ in 0..batch {
+                    let id = rng.below(n);
+                    if !touched.insert(id) {
+                        continue; // one change per id per update
+                    }
+                    let p = match &live[id] {
+                        // client leaves the participant tier
+                        Some(_) if rng.bernoulli(0.15) => None,
+                        Some(old) => Some(vec![
+                            (old[0] * rng.range_f64(0.7, 1.4)).max(0.0),
+                            (old[1] * rng.range_f64(0.5, 1.5) + rng.range_f64(-1.0, 1.0))
+                                .max(0.0),
+                        ]),
+                        None => Some(vec![
+                            rng.range_f64(1.0, 120.0),
+                            rng.range_f64(0.0, 15.0),
+                        ]),
+                    };
+                    changes.push((id, p));
+                }
+                engine
+                    .update(&changes)
+                    .expect("finite points always place");
+                for (id, p) in changes {
+                    live[id] = p;
+                }
+            }
+            let ids: Vec<usize> = (0..n).filter(|&i| live[i].is_some()).collect();
+            let now: Vec<Vec<f64>> =
+                ids.iter().map(|&i| live[i].clone().unwrap()).collect();
+            let oracle = dbscan(&now, &DbscanParams { eps, min_pts });
+            let standing = engine.labels_for(&ids);
+            assert_eq!(engine.len(), ids.len(), "case {case} round {round}");
+            assert_label_equivalent(
+                &standing,
+                &oracle,
+                &format!("case {case} round {round} eps={eps} min_pts={min_pts}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_fedlesscan_selection_identical_on_paper_scale_fleets() {
+    // Golden-path guarantee: at ≤ COHORT_MAX registered clients the
+    // incremental-capable FedLesScan must be byte-identical to the
+    // stateless default — same RNG stream, same selections, no report —
+    // under arbitrary multi-round histories evolving between selects.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x5e1f);
+        let n_clients = 2 + rng.below(60);
+        let k = 1 + rng.below(n_clients);
+        let rounds = 2 + rng.below(14) as u32;
+        let clients: Vec<usize> = (0..n_clients).collect();
+        let mut history = HistoryStore::new();
+        let mut legacy = FedLesScan::default();
+        let mut incr = FedLesScan::with_incremental();
+        let mut rng_a = Rng::seed_from_u64(case ^ 0xabc);
+        let mut rng_b = Rng::seed_from_u64(case ^ 0xabc);
+        for round in 0..rounds {
+            let ctx = SelectionContext {
+                round,
+                max_rounds: rounds,
+                clients_per_round: k,
+                all_clients: &clients,
+                history: &history,
+            };
+            let a = legacy.select(&ctx, &mut rng_a);
+            let b = incr.select(&ctx, &mut rng_b);
+            assert_eq!(a, b, "case {case} round {round}");
+            assert!(
+                incr.take_select_report().is_none(),
+                "case {case} round {round}: paper-scale path must not report"
+            );
+            // evolve the shared history off the selection
+            let mut failed = Vec::new();
+            for &c in &a {
+                history.record_invocation(c);
+                if rng.bernoulli(0.7) {
+                    history.record_success(c, round, rng.range_f64(1.0, 90.0));
+                } else {
+                    history.record_failure(c, round);
+                    failed.push(c);
+                }
+            }
+            history.tick_cooldowns(&failed);
+        }
+    }
+}
+
+#[test]
+fn prop_eps_candidate_dedup_collapses_relative_runs() {
+    // Regression property for the ε-candidate dedup fix: runs of
+    // near-equal candidates (within the relative tolerance of the run
+    // head) collapse to their head, and the survivors are pairwise
+    // separated beyond the tolerance — exact equality missed the
+    // near-degenerate runs that floating-point quantiles produce.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xded0);
+        let mut cands: Vec<f64> = Vec::new();
+        let mut base = rng.range_f64(1e-6, 1.0);
+        let n_groups = 1 + rng.below(8);
+        for _ in 0..n_groups {
+            cands.push(base);
+            for _ in 0..rng.below(4) {
+                let jitter = base * EPS_DEDUP_REL_TOL * rng.range_f64(0.0, 0.99);
+                cands.push(base + jitter);
+            }
+            base *= 1.0 + rng.range_f64(0.01, 2.0); // clearly separated
+        }
+        let n_before = cands.len();
+        dedup_eps_candidates(&mut cands);
+        assert_eq!(
+            cands.len(),
+            n_groups,
+            "case {case}: {n_before} candidates -> {} (want {n_groups})",
+            cands.len()
+        );
+        for w in cands.windows(2) {
+            assert!(
+                (w[1] - w[0]).abs() > EPS_DEDUP_REL_TOL * w[0].abs().max(w[1].abs()),
+                "case {case}: survivors {} and {} within tolerance",
+                w[0],
+                w[1]
+            );
+        }
     }
 }
 

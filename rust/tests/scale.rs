@@ -91,6 +91,134 @@ fn selection_over_50k_clients_is_subsecond_scale_and_deterministic() {
     );
 }
 
+/// 1M-client behaviour history with deliberately componentized
+/// geometry: one tight giant behaviour blob (40% of the fleet, so the
+/// ε grid search's sampled low quantiles land *inside* it) plus 600
+/// small blobs separated by ~50 virtual seconds — far beyond any
+/// plausible winning ε, so each blob is its own cell-component and a
+/// drift event reclusters only the blob it lands in. Rookies are a
+/// sparse sliver (< k) so selection must walk the clustered path.
+fn componentized_fleet(n: usize) -> HistoryStore {
+    let giant = n * 2 / 5;
+    let mut hist = HistoryStore::new();
+    for c in 0..n {
+        if c % 5000 == 0 {
+            continue; // sparse rookies (~0.02%)
+        }
+        let center = if c < giant {
+            10.0
+        } else {
+            500.0 + ((c - giant) / 1000) as f64 * 50.0
+        };
+        let j1 = (c % 197) as f64 / 197.0 - 0.5; // deterministic jitter
+        let j2 = ((c * 13) % 197) as f64 / 197.0 - 0.5;
+        hist.record_invocation(c);
+        hist.record_success(c, 0, center + j1);
+        hist.record_invocation(c);
+        hist.record_success(c, 1, center + j2);
+    }
+    hist
+}
+
+#[test]
+#[ignore = "release-mode scale smoke; run via cargo test --release -- --ignored"]
+fn incremental_selection_over_1m_clients_reclusters_only_the_drift() {
+    // The tentpole acceptance check: after the first (full-build)
+    // selection over a 1M-client fleet, a low-drift schedule — events
+    // touching ~0.1% of clients, all inside one behaviour blob — must
+    // keep the next selection's recluster work proportional to the
+    // drift, not the fleet, and the whole sequence must replay
+    // deterministically.
+    let n = 1_000_000usize;
+    let k = 512usize;
+    let giant = n * 2 / 5;
+    let clients: Vec<ClientId> = (0..n).collect();
+    let run = || {
+        let mut hist = componentized_fleet(n);
+        let mut strat = FedLesScan::with_incremental();
+        let mut rng = Rng::seed_from_u64(99);
+        fn ctx<'a>(
+            clients: &'a [ClientId],
+            h: &'a HistoryStore,
+            round: u32,
+            k: usize,
+        ) -> SelectionContext<'a> {
+            SelectionContext {
+                round,
+                max_rounds: 40,
+                clients_per_round: k,
+                all_clients: clients,
+                history: h,
+            }
+        }
+        let t0 = Instant::now();
+        let first = strat.select(&ctx(&clients, &hist, 10, k), &mut rng);
+        let build_wall = t0.elapsed();
+        let rep1 = strat.take_select_report().expect("incremental path reports");
+        // low-drift schedule: fresh successes for ~1000 clients of
+        // small blob 7, times staying inside the blob
+        let blob7 = giant + 7 * 1000;
+        for c in blob7..blob7 + 1000 {
+            if c % 5000 == 0 {
+                continue; // leave the rookie sliver alone
+            }
+            hist.record_invocation(c);
+            hist.record_success(c, 2, 500.0 + 7.0 * 50.0 + ((c * 31) % 197) as f64 / 197.0 - 0.5);
+        }
+        let t1 = Instant::now();
+        let second = strat.select(&ctx(&clients, &hist, 11, k), &mut rng);
+        let drift_wall = t1.elapsed();
+        let rep2 = strat.take_select_report().expect("incremental path reports");
+        (first, rep1, build_wall, second, rep2, drift_wall)
+    };
+    let (first_a, rep1_a, build_wall, second_a, rep2_a, drift_wall) = run();
+    let (first_b, rep1_b, _, second_b, rep2_b, _) = run();
+    assert_eq!(first_a, first_b, "first selection must replay");
+    assert_eq!(second_a, second_b, "post-drift selection must replay");
+    assert_eq!(rep1_a.reclustered_clients, rep1_b.reclustered_clients);
+    assert_eq!(rep2_a.reclustered_clients, rep2_b.reclustered_clients);
+    assert_eq!(rep2_a.cluster_cache_hits, rep2_b.cluster_cache_hits);
+    for sel in [&first_a, &second_a] {
+        assert_eq!(sel.len(), k);
+        let mut d = (*sel).clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), k, "duplicate clients selected");
+    }
+    // first pass clusters the whole participant tier...
+    assert!(
+        rep1_a.reclustered_clients > n / 2,
+        "full build reclustered only {} of {n}",
+        rep1_a.reclustered_clients
+    );
+    // ...the drift pass reclusters only the touched blob's component
+    assert!(
+        rep2_a.reclustered_clients > 0,
+        "drift events produced no recluster work"
+    );
+    assert!(
+        rep2_a.reclustered_clients <= n / 100,
+        "low-drift pass reclustered {} of {n} — locality lost",
+        rep2_a.reclustered_clients
+    );
+    assert!(
+        rep2_a.cluster_cache_hits >= n / 2,
+        "standing assignments not reused: {} cache hits",
+        rep2_a.cluster_cache_hits
+    );
+    // wall budgets: generous CI alarms, not perf targets. The build
+    // pays the one-off ε search + full clustering; the drift pass must
+    // be far under the 50k-era full-recluster budget.
+    assert!(
+        build_wall < Duration::from_secs(300),
+        "1M-client cold selection took {build_wall:?}"
+    );
+    assert!(
+        drift_wall < Duration::from_secs(10),
+        "1M-client low-drift selection took {drift_wall:?}"
+    );
+}
+
 #[test]
 #[ignore = "release-mode scale smoke; run via cargo test --release -- --ignored"]
 fn a_50k_client_mock_round_completes_within_budget_and_replays() {
