@@ -1,0 +1,188 @@
+"""Bit-exact Python mirror of the kernel-plane restructuring claims.
+
+``rust/src/runtime/kernel.rs`` promises that the AVX2 kernels are
+f32-bit-identical to the scalar seed loops. The vector instructions
+themselves cannot run here, but every claim rests on *restructurings*
+that are kernel-independent and checkable in pure Python with f32
+emulation (every op computed in double, rounded back to f32 via a
+struct round-trip — exact for single +, -, *, / of f32 operands):
+
+1. `matmul_a_bt` replaces the seed's per-element dot-product fold
+   (`Iterator::sum`) with a pre-transpose + j-inner matmul. Claim: the
+   per-element accumulation order is unchanged, so results are
+   bit-identical.
+2. The fused bias+ReLU epilogue (`matmul_bias_relu`) performs the same
+   op sequence as the unfused matmul → +bias → max(0) chain.
+3. Ragged eval splits: per-row forward math is batch-independent and
+   loss/correct accumulate in global row order, so any `eval_batch`
+   split of the eval set is bit-identical (the pre-fix code dropped
+   the ragged tail entirely).
+4. The AVX2 int8 encode emulates `f32::round` (half AWAY from zero)
+   via truncate + fractional-part compare. Claim: `t = trunc(x);
+   frac = x - t; r = t + (|frac| >= 0.5 ? copysign(1, x) : 0)` equals
+   `f32::round` for all |x| < 2^23, where the naive `trunc(x + 0.5)`
+   trick does not (it fails at 0.49999997f32, whose +0.5 rounds up to
+   1.0) and `_mm256_round_ps`-to-nearest does not (halves to even).
+
+Run directly: ``python3 kernelplane.py`` — prints a pass line.
+"""
+
+import math
+
+from quantplane import f32, f32_bits, rust_round_f32
+
+
+# --- scalar kernel mirrors (rust/src/runtime/kernel.rs mod scalar) -----
+
+
+def matmul(a, b, m, k, n):
+    """out[m,n] = a[m,k] @ b[k,n], j-inner accumulation (seed loop order)."""
+    out = [0.0] * (m * n)
+    for i in range(m):
+        for l in range(k):
+            aik = a[i * k + l]
+            for j in range(n):
+                out[i * n + j] = f32(out[i * n + j] + f32(aik * b[l * n + j]))
+    return out
+
+
+def matmul_a_bt_dot(a, b, m, n, k):
+    """Seed form of `a[m,n] @ b[k,n]ᵀ`: per-element dot-product fold
+    (`Iterator::sum` = sequential += from 0.0)."""
+    out = [0.0] * (m * k)
+    for i in range(m):
+        for j in range(k):
+            acc = 0.0
+            for l in range(n):
+                acc = f32(acc + f32(a[i * n + l] * b[j * n + l]))
+            out[i * k + j] = acc
+    return out
+
+
+def matmul_a_bt_restructured(a, b, m, n, k):
+    """Kernel form: pre-transpose b into bt[n,k], then j-inner matmul."""
+    bt = [0.0] * (n * k)
+    for i in range(k):
+        for j in range(n):
+            bt[j * k + i] = b[i * n + j]  # moves are rounding-free
+    return matmul(a, bt, m, n, k)
+
+
+def matmul_bias_relu_fused(a, b, bias, m, k, n):
+    z = matmul(a, b, m, k, n)
+    act = [0.0] * (m * n)
+    for i in range(m):
+        for j in range(n):
+            z[i * n + j] = f32(z[i * n + j] + bias[j])
+            act[i * n + j] = max(z[i * n + j], 0.0)
+    return z, act
+
+
+def matmul_bias_relu_unfused(a, b, bias, m, k, n):
+    z = matmul(a, b, m, k, n)
+    z = [f32(z[i * n + j] + bias[j]) for i in range(m) for j in range(n)]
+    act = [max(v, 0.0) for v in z]
+    return z, act
+
+
+def avx2_round_emulation(x):
+    """The vector encode's round: trunc + |frac| >= 0.5 + copysign(1, x).
+    trunc and x - trunc(x) are exact f32 ops for |x| < 2^23."""
+    t = float(math.trunc(x))
+    frac = f32(x - t)
+    if abs(frac) >= 0.5:
+        return t + math.copysign(1.0, x)
+    return t
+
+
+def naive_round(x):
+    """The tempting-but-wrong trunc(x + 0.5) trick (for the negative
+    demo below — NOT what the kernel does)."""
+    return float(math.trunc(f32(x + math.copysign(0.5, x))))
+
+
+# --- eval-loop mirror (native.rs evaluate, post-ragged-fix) ------------
+
+
+def eval_split(z_rows, y, eval_batch):
+    """Loss/correct over per-row logits, accumulated in `eval_batch`
+    groups exactly as native.rs does (batch boundaries only gate when
+    the forward pass runs; the sums walk rows in global order)."""
+    loss_sum, correct = 0.0, 0.0
+    off = 0
+    while off < len(y):
+        rows = min(eval_batch, len(y) - off)
+        for r in range(off, off + rows):
+            zr, yi = z_rows[r], y[r]
+            zmax = max(zr)
+            denom = f32(sum_f32(f32(math.exp(f32(z - zmax))) for z in zr))
+            loss_sum = f32(
+                loss_sum + f32(-(f32(f32(zr[yi] - zmax) - f32(math.log(denom)))))
+            )
+            best = 0
+            for i, z in enumerate(zr):
+                if z > zr[best]:
+                    best = i
+            if best == yi:
+                correct = f32(correct + 1.0)
+        off += rows
+    return loss_sum, correct
+
+
+def sum_f32(it):
+    acc = 0.0
+    for v in it:
+        acc = f32(acc + v)
+    return acc
+
+
+def ramp(n, phase):
+    return [f32(((i * 7 + phase * 13) % 23 - 11.0) * 0.037) for i in range(n)]
+
+
+if __name__ == "__main__":
+    # 1. a @ bᵀ restructure: dot fold == transpose + j-inner, bit for bit,
+    #    across ragged shapes (incl. lane tails at every n % 8 residue).
+    for m, n, k in [(1, 1, 1), (3, 10, 7), (5, 32, 10), (4, 17, 9), (2, 8, 8)]:
+        a = ramp(m * n, 1)
+        b = ramp(k * n, 2)
+        ref = matmul_a_bt_dot(a, b, m, n, k)
+        got = matmul_a_bt_restructured(a, b, m, n, k)
+        assert [f32_bits(v) for v in ref] == [f32_bits(v) for v in got], (m, n, k)
+
+    # 2. fused bias+ReLU epilogue == unfused chain, bit for bit.
+    for m, k, n in [(1, 1, 1), (4, 9, 11), (6, 13, 8), (3, 784 % 50, 10)]:
+        a, b, bias = ramp(m * k, 3), ramp(k * n, 4), ramp(n, 5)
+        zf, af = matmul_bias_relu_fused(a, b, bias, m, k, n)
+        zu, au = matmul_bias_relu_unfused(a, b, bias, m, k, n)
+        assert [f32_bits(v) for v in zf] == [f32_bits(v) for v in zu], (m, k, n)
+        assert [f32_bits(v) for v in af] == [f32_bits(v) for v in au], (m, k, n)
+
+    # 3. ragged eval split invariance: 10 rows under every batch split
+    #    (ragged tails at 3, 4, 8) match the single-batch sums exactly.
+    c = 6
+    z_rows = [ramp(c, 20 + r) for r in range(10)]
+    y = [(r * 5) % c for r in range(10)]
+    base = eval_split(z_rows, y, 10)
+    for eb in (1, 2, 3, 4, 7, 8, 128):
+        got = eval_split(z_rows, y, eb)
+        assert f32_bits(base[0]) == f32_bits(got[0]), eb
+        assert base[1] == got[1], eb
+
+    # 4. the encode's round emulation == f32::round on every adversarial
+    #    case, and the naive trunc(x + 0.5) trick provably differs.
+    tricky = [
+        0.5, -0.5, 1.5, -1.5, 2.5, -2.5, 126.5, -126.5,
+        f32(0.49999997), f32(-0.49999997), 130.0, -130.0,
+        0.0, f32(1.0e-8), f32(3.49), -f32(3.51),
+    ]
+    sweep = [f32((i - 600) * 0.211) for i in range(1200)]
+    for v in tricky + sweep:
+        assert avx2_round_emulation(v) == rust_round_f32(v), v
+    # half-to-even (_mm256_round_ps nearest) and the naive trick both
+    # diverge from f32::round — the emulation is load-bearing:
+    assert rust_round_f32(2.5) == 3 and round(2.5) == 2
+    bad = f32(0.49999997)
+    assert naive_round(bad) == 1.0 and rust_round_f32(bad) == 0
+
+    print("kernelplane mirror self-checks pass")

@@ -1,0 +1,135 @@
+//! Kernel-plane benchmarks: scalar vs runtime-dispatched AVX2
+//! microkernels at every preset model's GEMM shapes plus the ~1M-param
+//! fold/optimizer hot loops. These are the numbers behind
+//! `BENCH_kernels.json` (regenerate with `cargo bench --bench kernels`).
+//!
+//! The vector kernels are *bit-identical* to the scalar path (the
+//! proptests and goldens pin that), so this sweep is pure throughput:
+//! any row where avx2 loses to scalar is a regression, not a tradeoff.
+
+use fedless::runtime::kernel::{avx2_available, AdamParams, Kernel};
+use fedless::util::bench::bench;
+
+/// (name, batch, d, h, c) — the per-preset MLP shapes the native
+/// backend trains (see `native.rs` presets).
+const SHAPES: [(&str, usize, usize, usize, usize); 5] = [
+    ("mnist", 10, 784, 32, 10),
+    ("femnist", 10, 784, 32, 62),
+    ("shakespeare", 32, 10, 32, 82),
+    ("speech", 5, 1024, 32, 35),
+    ("transformer", 16, 16, 64, 96),
+];
+
+const FOLD_P: usize = 1 << 20; // ~1M params, the north-star plane size
+
+fn ramp(len: usize, phase: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| ((i + phase) % 23) as f32 * 0.017 - 0.19)
+        .collect()
+}
+
+fn kernels() -> Vec<Kernel> {
+    if avx2_available() {
+        vec![Kernel::Scalar, Kernel::Avx2]
+    } else {
+        println!("   (host lacks AVX2: scalar rows only)");
+        vec![Kernel::Scalar]
+    }
+}
+
+fn main() {
+    println!("== kernel-plane benches ==");
+    let kernels = kernels();
+
+    for (name, bs, d, h, c) in SHAPES {
+        let x = ramp(bs * d, 1);
+        let w1 = ramp(d * h, 2);
+        let b1 = ramp(h, 3);
+        let w2 = ramp(h * c, 4);
+        let b2 = ramp(c, 5);
+        let dz2 = ramp(bs * c, 6);
+        let mut z1 = vec![0.0f32; bs * h];
+        let mut a1 = vec![0.0f32; bs * h];
+        let mut z2 = vec![0.0f32; bs * c];
+        let mut gw1 = vec![0.0f32; d * h];
+        let mut w2t = vec![0.0f32; c * h];
+        let mut da1 = vec![0.0f32; bs * h];
+
+        let mut base = f64::NAN;
+        for &kr in &kernels {
+            // the per-step GEMM chain of one training batch: fused
+            // hidden forward, logits forward, weight grad, act grad
+            let stats = bench(
+                &format!("kernels/gemm-chain {name} bs={bs} d={d} h={h} c={c} kernel={}", kr.name()),
+                3,
+                40,
+                || {
+                    kr.matmul_bias_relu(&x, &w1, &b1, d, h, &mut z1, &mut a1);
+                    kr.matmul_bias(&a1, &w2, &b2, h, c, &mut z2);
+                    kr.matmul_at_b(&x, &da1, d, h, &mut gw1);
+                    kr.matmul_a_bt(&dz2, &w2, c, h, &mut w2t, &mut da1);
+                    z2[0]
+                },
+            );
+            let s = stats.mean.as_secs_f64();
+            if kr == Kernel::Scalar {
+                base = s;
+            } else {
+                println!("   -> {name}: {:.2}x vs scalar", base / s.max(1e-12));
+            }
+        }
+    }
+
+    // --- ~1M-param element-wise hot loops --------------------------------
+    let u = ramp(FOLD_P, 7);
+    let g = ramp(FOLD_P, 11);
+    let mut base_fold = f64::NAN;
+    let mut base_adam = f64::NAN;
+    for &kr in &kernels {
+        let mut acc = vec![0.0f32; FOLD_P];
+        let stats = bench(
+            &format!("kernels/fold-axpy P={FOLD_P} kernel={}", kr.name()),
+            2,
+            24,
+            || {
+                kr.axpy(&mut acc, &u, 0.125);
+                acc[0]
+            },
+        );
+        let s = stats.mean.as_secs_f64();
+        let madds_per_s = FOLD_P as f64 / s.max(1e-12);
+        println!("   -> {:.1} M madd/s ({})", madds_per_s / 1e6, kr.name());
+        if kr == Kernel::Scalar {
+            base_fold = s;
+        } else {
+            println!("   -> fold-axpy: {:.2}x vs scalar", base_fold / s.max(1e-12));
+        }
+
+        let mut w = ramp(FOLD_P, 13);
+        let mut m = vec![0.0f32; FOLD_P];
+        let mut v = vec![0.0f32; FOLD_P];
+        let p = AdamParams {
+            lr: 1e-3,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-7,
+            bc1: 1.0 - 0.9f32.powf(3.0),
+            bc2: 1.0 - 0.999f32.powf(3.0),
+        };
+        let stats = bench(
+            &format!("kernels/adam-step P={FOLD_P} kernel={}", kr.name()),
+            2,
+            24,
+            || {
+                kr.adam_step(&mut w, &g, &mut m, &mut v, p);
+                w[0]
+            },
+        );
+        let s = stats.mean.as_secs_f64();
+        if kr == Kernel::Scalar {
+            base_adam = s;
+        } else {
+            println!("   -> adam-step: {:.2}x vs scalar", base_adam / s.max(1e-12));
+        }
+    }
+}

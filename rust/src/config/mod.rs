@@ -150,6 +150,12 @@ pub struct ExperimentConfig {
     /// count). Any value is arithmetic-identical — it only sets lock
     /// and fold-parallelism granularity.
     pub shards: Option<usize>,
+    /// Compute-kernel override for the math plane: `"scalar"` or
+    /// `"avx2"` (`None` auto-detects; the `FEDLESS_KERNEL` env var
+    /// outranks both). Every choice is bit-identical — the vector
+    /// kernels reproduce the scalar arithmetic exactly — so this only
+    /// moves wall-clock, never results.
+    pub kernel: Option<String>,
     /// Quantize client uploads: int8 symmetric per-shard with
     /// client-side error-feedback residuals
     /// ([`crate::params::ErrorFeedback`]). Changes the training
@@ -206,6 +212,7 @@ impl ExperimentConfig {
             async_alpha: 0.5,
             workers: None,
             shards: None,
+            kernel: None,
             quantize_updates: false,
             quantize_topk: None,
         }
@@ -250,6 +257,10 @@ impl ExperimentConfig {
         if let Some(s) = self.shards {
             anyhow::ensure!(s >= 1, "shards must be at least 1 when set");
         }
+        // Rejects unknown kernel names; availability is checked at
+        // install time (a config written on an AVX2 host stays loadable
+        // elsewhere — it just refuses to run there).
+        crate::runtime::kernel::kernel_override(self.kernel.as_deref())?;
         if let Some(f) = self.quantize_topk {
             anyhow::ensure!(
                 f > 0.0 && f <= 1.0,
@@ -327,6 +338,12 @@ impl ExperimentConfig {
             (
                 "shards",
                 self.shards.map_or(Json::Null, |s| Json::num(s as f64)),
+            ),
+            (
+                "kernel",
+                self.kernel
+                    .as_ref()
+                    .map_or(Json::Null, |k| Json::str(k.clone())),
             ),
             ("quantize_updates", Json::Bool(self.quantize_updates)),
             (
@@ -445,6 +462,11 @@ impl ExperimentConfig {
         if let Some(v) = j.get_opt("shards") {
             if !v.is_null() {
                 cfg.shards = Some(v.as_usize()?);
+            }
+        }
+        if let Some(v) = j.get_opt("kernel") {
+            if !v.is_null() {
+                cfg.kernel = Some(v.as_str()?.to_string());
             }
         }
         if let Some(v) = j.get_opt("quantize_updates") {
@@ -590,6 +612,29 @@ mod tests {
         cfg.quantize_topk = Some(0.1);
         cfg.quantize_updates = false;
         assert!(cfg.validate().is_err(), "topk requires quantize_updates");
+    }
+
+    #[test]
+    fn kernel_field_roundtrips_and_rejects_unknown_names() {
+        let mut cfg = ExperimentConfig::preset("mnist");
+        assert_eq!(cfg.kernel, None, "presets default to auto-detect");
+        cfg.kernel = Some("scalar".into());
+        cfg.validate().unwrap();
+        let p = std::env::temp_dir().join(format!(
+            "fedless-cfg-kernel-{}.json",
+            std::process::id()
+        ));
+        cfg.save(&p).unwrap();
+        let cfg2 = ExperimentConfig::load(&p).unwrap();
+        assert_eq!(cfg2.kernel, Some("scalar".into()));
+        std::fs::remove_file(&p).ok();
+
+        // avx2 is a valid *name* even off-host: validate accepts it,
+        // only kernel::install refuses when the CPU can't run it.
+        cfg.kernel = Some("AVX2".into());
+        cfg.validate().unwrap();
+        cfg.kernel = Some("sse9".into());
+        assert!(cfg.validate().is_err(), "unknown kernel name rejected");
     }
 
     #[test]

@@ -243,6 +243,17 @@ impl<'scope> ExecutorPool<'scope> {
     }
 }
 
+/// Per-worker wire scratch: the delta and dequantized-delta buffers
+/// [`encode_wire`] fills on every quantized job, hoisted into worker
+/// state so the persistent pool stops re-allocating them per job
+/// (buffers are fully overwritten before each use, so reuse across
+/// jobs never changes a result).
+#[derive(Default)]
+struct WireArena {
+    delta: Vec<f32>,
+    dq: Vec<f32>,
+}
+
 /// One worker: init the backend's thread-local state, then pull jobs
 /// until the queue closes. Panics inside `train_round` are caught and
 /// reported as that job's error; the worker itself survives.
@@ -259,6 +270,7 @@ fn worker_loop(
     // Workers own their (all-zero) optimizer-state scratch: clients are
     // stateless between rounds, per the paper's serverless model.
     let zeros = vec![0f32; backend.manifest().param_count];
+    let mut wire_arena = WireArena::default();
     loop {
         // lock scoped to the recv: release before training so other
         // workers can steal the next job mid-compute
@@ -300,7 +312,7 @@ fn worker_loop(
             };
             trained.map(|mut r| {
                 let wire = job.wire.take().map(|spec| {
-                    encode_wire(&mut r.params, &job.params, spec)
+                    encode_wire(&mut r.params, &job.params, spec, &mut wire_arena)
                 });
                 TrainOutput { train: r, wire }
             })
@@ -318,19 +330,20 @@ fn worker_loop(
 /// Deterministic per client regardless of worker scheduling: the
 /// residual rides the job and the encoded result depends only on it and
 /// the training output.
-fn encode_wire(trained: &mut Vec<f32>, departed: &ParamBlock, spec: WireSpec) -> WireMeta {
-    let delta: Vec<f32> = trained
-        .iter()
-        .zip(departed.as_slice())
-        .map(|(t, g)| t - g)
-        .collect();
+fn encode_wire(
+    trained: &mut [f32],
+    departed: &ParamBlock,
+    spec: WireSpec,
+    arena: &mut WireArena,
+) -> WireMeta {
+    let kr = crate::runtime::kernel::active();
+    arena.delta.resize(trained.len(), 0.0);
+    kr.sub(&mut arena.delta, trained, departed.as_slice());
     let mut ef = ErrorFeedback::from_residual(spec.residual);
-    let q = ef.encode(&delta, &spec.layout, spec.topk);
+    let q = ef.encode(&arena.delta, &spec.layout, spec.topk);
     let bytes_up = q.wire_bytes();
-    let dq = crate::params::dequantize(&q, &spec.layout);
-    for ((t, g), d) in trained.iter_mut().zip(departed.as_slice()).zip(&dq) {
-        *t = g + d;
-    }
+    crate::params::dequantize_into(&q, &spec.layout, &mut arena.dq);
+    kr.add(trained, departed.as_slice(), &arena.dq);
     WireMeta {
         bytes_up,
         residual: ef.into_residual(),

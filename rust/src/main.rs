@@ -16,6 +16,7 @@ use std::str::FromStr;
 use fedless::config::{ExperimentConfig, Mode, Scenario};
 use fedless::coordinator::Controller;
 use fedless::repro::{self, Options, Profile};
+use fedless::runtime::kernel;
 use fedless::runtime::{load_backend, ArtifactIndex, BackendKind, Manifest};
 use fedless::strategy::StrategyKind;
 use fedless::util::cli;
@@ -28,7 +29,7 @@ USAGE:
   fedless train [--dataset D] [--strategy fedavg|fedprox|fedlesscan|safalite]
                 [--stragglers PCT] [--rounds N] [--clients N] [--per-round K]
                 [--mode rounds|continuous] [--cohorts C] [--workers W]
-                [--shards N] [--quantize] [--topk F]
+                [--shards N] [--kernel scalar|avx2] [--quantize] [--topk F]
                 [--seed S] [--config FILE.json] [--out DIR] [--verbose]
   fedless repro <fig1|tables|fig3|ablations|all>
                 [--datasets a,b,c] [--profile quick|full] [--out DIR]
@@ -47,6 +48,10 @@ GLOBAL:
   --shards N        parameter-plane shard count (default: one per core, or
                     the FEDLESS_SHARDS env var; folds, anchor reads and
                     snapshot installs proceed per-shard)
+  --kernel K        compute kernel for the math plane: scalar | avx2
+                    (default: auto-detect; the FEDLESS_KERNEL env var
+                    outranks both). Bit-identical either way — vector
+                    kernels reproduce the scalar arithmetic exactly
   --quantize        int8-quantize client updates (symmetric per-shard
                     scales, client-side error-feedback residuals); cuts
                     accounted upload bytes ~4x
@@ -112,6 +117,9 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
     if let Some(s) = args.get_parse_opt::<usize>("shards")? {
         cfg.shards = Some(s);
     }
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = Some(k.to_string());
+    }
     if args.get_bool("quantize") {
         cfg.quantize_updates = true;
     }
@@ -120,12 +128,16 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
     }
     cfg.validate()?;
 
+    // Pin the compute kernel for the whole run (env ▸ --kernel/config ▸
+    // CPU detection) so every worker dispatches the same microkernels.
+    let kernel = kernel::install(kernel::kernel_override(cfg.kernel.as_deref())?)?;
     let backend = load_backend(backend_kind, &artifacts, &cfg.dataset)?;
     eprintln!(
-        "[fedless] backend {}: {} P={}",
+        "[fedless] backend {}: {} P={} kernel={}",
         backend.backend_name(),
         backend.manifest().name,
-        backend.manifest().param_count
+        backend.manifest().param_count,
+        kernel.name()
     );
     let n_clients = cfg.n_clients;
     let mode = cfg.mode;
@@ -136,7 +148,7 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
             "\n{} / {} / {} (continuous): final acc {:.3}, folds {}/{} completions \
              (EUR {:.3}), {:.3} updates/s, time {:.1} min, crashes {}, expired {}, \
              late {}, generation {}, cost ${:.4}, select wall {:.1} ms, \
-             reclustered {} / cache hits {}",
+             reclustered {} / cache hits {}, kernel {}",
             result.dataset,
             result.strategy,
             result.scenario,
@@ -154,6 +166,7 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
             result.select_wall_s * 1e3,
             result.reclustered_clients,
             result.cluster_cache_hits,
+            kernel.name(),
         );
         if let Some(out) = args.get("out") {
             let out = PathBuf::from(out);
@@ -186,7 +199,7 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         "\n{} / {} / {}: final acc {:.3}, mean EUR {:.3}, time {:.1} min, cost ${:.4}, \
          bias {}, stale applied {}, in-flight skips {}, select wall {:.1} ms, \
          agg wall {:.1} ms, param-plane peak {:.2} MB, net down/up {:.2}/{:.2} MB, \
-         reclustered {} / cache hits {}",
+         reclustered {} / cache hits {}, kernel {}",
         result.dataset,
         result.strategy,
         result.scenario,
@@ -204,6 +217,7 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
         bytes_up_total as f64 / 1e6,
         reclustered_total,
         cache_hits_total,
+        kernel.name(),
     );
     if let Some(out) = args.get("out") {
         let out = PathBuf::from(out);

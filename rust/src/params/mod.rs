@@ -26,7 +26,8 @@ pub mod quant;
 pub mod shard;
 
 pub use quant::{
-    dequantize, quantize, quantize_topk, wire_bytes_estimate, ErrorFeedback, QuantizedUpdate,
+    dequantize, dequantize_into, quantize, quantize_topk, wire_bytes_estimate, ErrorFeedback,
+    QuantizedUpdate,
 };
 pub use shard::{default_shards, resolve_shards, shards_override, ShardLayout, ShardedAccumulator};
 
@@ -167,15 +168,18 @@ pub fn fold_weighted_into(acc: &mut [f32], entries: &[(&[f32], f32)], workers: u
     });
 }
 
-/// Serial weighted fold of one contiguous parameter range.
+/// Serial weighted fold of one contiguous parameter range. The
+/// `acc[i] += w * u[i]` pass runs through the kernel plane's axpy
+/// ([`crate::runtime::kernel`]) — its AVX2 path is lane-wise
+/// bit-identical to the scalar seed loop, so the fold's
+/// worker/shard-count invariance contract is untouched.
 fn fold_chunk(acc: &mut [f32], entries: &[(&[f32], f32)], offset: usize) {
+    let kr = crate::runtime::kernel::active();
     for &(u, w) in entries {
         if w == 0.0 {
             continue;
         }
-        for (a, x) in acc.iter_mut().zip(&u[offset..offset + acc.len()]) {
-            *a += w * x;
-        }
+        kr.axpy(acc, &u[offset..offset + acc.len()], w);
     }
 }
 

@@ -1,0 +1,1141 @@
+//! Kernel plane: runtime-dispatched SIMD microkernels behind the dense
+//! training math and the parameter-plane hot loops.
+//!
+//! Every kernel exists in two implementations selected by [`Kernel`]:
+//!
+//! * **scalar** — the seed loops of `native.rs` / `params/`, verbatim.
+//!   This is the reference semantics; every golden in the repo pins it.
+//! * **avx2** — `std::arch` x86_64 AVX2 vectorization of the same loops,
+//!   compiled behind `#[target_feature(enable = "avx2")]` and only ever
+//!   dispatched after a runtime `is_x86_feature_detected!("avx2")` check.
+//!
+//! Selection order (first match wins):
+//!
+//! 1. `FEDLESS_KERNEL=scalar|avx2` environment override;
+//! 2. an explicit request (the `--kernel` CLI flag / config field),
+//!    passed to [`install`];
+//! 3. CPU detection: AVX2 when available, scalar otherwise.
+//!
+//! Requesting `avx2` on a host without AVX2 is an error, never UB.
+//!
+//! ## Bit-exactness contract
+//!
+//! The vector kernels are **bit-identical** to the scalar ones, not just
+//! close: `f32::to_bits` equality on every output element (pinned by the
+//! proptests in `tests/proptests.rs` and by every existing golden). The
+//! vectorization discipline that makes this possible:
+//!
+//! * GEMMs vectorize only over the output-contiguous `j` dimension, so
+//!   each output element's `k`-accumulation order is exactly the scalar
+//!   order (lanes are independent output elements, never partial sums).
+//! * Multiplies and adds stay separate (`_mm256_mul_ps` then
+//!   `_mm256_add_ps`) — FMA contraction would change the rounding.
+//! * `a @ bᵀ` ([`Kernel::matmul_a_bt`]) is restructured by pre-transposing
+//!   `b` into a caller scratch so the product runs in the `j`-inner form;
+//!   the seed's per-element `Σ_l a[i,l]·b[j,l]` fold order is unchanged.
+//! * Element-wise kernels use only IEEE correctly-rounded lane ops
+//!   (add/sub/mul/div/sqrt/round-to-zero), identical to scalar.
+//! * Int8 encode emulates Rust's round-half-away-from-zero exactly via
+//!   truncate + fractional-part compare (`_mm256_round_ps` itself rounds
+//!   half-to-even, which differs from `f32::round` on exact halves).
+//!
+//! Known caveat: ReLU uses `_mm256_max_ps(z, 0.0)`, whose zero-sign on a
+//! `-0.0` input is platform-pinned rather than specified by `f32::max`.
+//! A `-0.0` pre-activation would require the bias add `acc + b` to
+//! produce `-0.0`, i.e. both operands `-0.0` — unreachable from the
+//! Glorot init and the goldens' finite data, and pinned harmless by the
+//! proptests.
+
+// Kernels are argument-heavy by nature (matrix dims + fused epilogue
+// buffers); grouping them into structs would only obscure the shapes.
+#![allow(clippy::too_many_arguments)]
+
+use std::sync::OnceLock;
+
+use anyhow::bail;
+
+use crate::Result;
+
+/// Environment variable overriding kernel selection (highest precedence).
+pub const KERNEL_ENV: &str = "FEDLESS_KERNEL";
+
+/// Which microkernel implementation executes the hot loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// The seed scalar loops — reference semantics, always available.
+    Scalar,
+    /// AVX2 vector kernels; only dispatched when the CPU supports AVX2.
+    Avx2,
+}
+
+/// Per-step Adam scalars, precomputed once per optimizer step.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamParams {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    /// Bias corrections `1 - b1^t` / `1 - b2^t` for the current step.
+    pub bc1: f32,
+    pub bc2: f32,
+}
+
+/// Whether this host can run the AVX2 kernels.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+impl std::str::FromStr for Kernel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Kernel::Scalar),
+            "avx2" => Ok(Kernel::Avx2),
+            other => bail!("unknown kernel {other:?}; expected scalar|avx2"),
+        }
+    }
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Parse an explicit kernel request (CLI flag / config field / env
+/// value). `None` or an empty string means "no preference".
+pub fn kernel_override(raw: Option<&str>) -> Result<Option<Kernel>> {
+    match raw {
+        None => Ok(None),
+        Some(s) if s.trim().is_empty() => Ok(None),
+        Some(s) => Ok(Some(s.parse()?)),
+    }
+}
+
+fn env_kernel() -> Result<Option<Kernel>> {
+    kernel_override(std::env::var(KERNEL_ENV).ok().as_deref())
+}
+
+/// Resolve the kernel to run: `FEDLESS_KERNEL` env ▸ explicit `request`
+/// ▸ CPU detection. Fails (rather than risking UB) when `avx2` is
+/// requested on a host without AVX2.
+pub fn resolve_kernel(request: Option<Kernel>) -> Result<Kernel> {
+    let k = match env_kernel()? {
+        Some(k) => k,
+        None => match request {
+            Some(k) => k,
+            None => {
+                if avx2_available() {
+                    Kernel::Avx2
+                } else {
+                    Kernel::Scalar
+                }
+            }
+        },
+    };
+    if k == Kernel::Avx2 && !avx2_available() {
+        bail!("kernel avx2 requested but this host does not support AVX2");
+    }
+    Ok(k)
+}
+
+static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+
+/// Pin the process-wide kernel from an explicit request (the `--kernel`
+/// flag), honoring the env override. Call before any training work; a
+/// later call that would change an already-pinned kernel fails.
+pub fn install(request: Option<Kernel>) -> Result<Kernel> {
+    let want = resolve_kernel(request)?;
+    let got = *ACTIVE.get_or_init(|| want);
+    if got != want {
+        bail!(
+            "kernel already pinned to {} (requested {})",
+            got.name(),
+            want.name()
+        );
+    }
+    Ok(got)
+}
+
+/// The process-wide kernel, resolving env ▸ detection on first use. An
+/// invalid `FEDLESS_KERNEL` value falls back to scalar with a warning
+/// (hot loops cannot surface a `Result` per call).
+pub fn active() -> Kernel {
+    *ACTIVE.get_or_init(|| match resolve_kernel(None) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("[fedless] kernel selection: {e}; falling back to scalar");
+            Kernel::Scalar
+        }
+    })
+}
+
+/// Dispatch one kernel op. The AVX2 arm is reached only for
+/// `Kernel::Avx2`, which is only ever constructed behind an
+/// `avx2_available()` check (`resolve_kernel`), making the
+/// `target_feature` call sound.
+macro_rules! dispatch {
+    ($self:expr, $f:ident($($arg:expr),* $(,)?)) => {
+        match $self {
+            Kernel::Scalar => scalar::$f($($arg),*),
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => {
+                debug_assert!(avx2_available());
+                unsafe { avx2::$f($($arg),*) }
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            Kernel::Avx2 => scalar::$f($($arg),*),
+        }
+    };
+}
+
+impl Kernel {
+    /// `out[m,n] = a[m,k] @ b[k,n]` (m inferred from `out.len() / n`).
+    pub fn matmul(self, a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+        check_gemm(a, b, k, n, out.len());
+        dispatch!(self, matmul(a, b, k, n, out))
+    }
+
+    /// `out[m,n] = a[m,k] @ b[k,n] + bias[n]` (row-broadcast bias).
+    pub fn matmul_bias(
+        self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        check_gemm(a, b, k, n, out.len());
+        assert_eq!(bias.len(), n, "bias length mismatch");
+        dispatch!(self, matmul_bias(a, b, bias, k, n, out))
+    }
+
+    /// Fused hidden-layer epilogue: `z = a @ b + bias`, `act = max(z, 0)`
+    /// — both pre-activation and activation are materialized because the
+    /// backward pass masks on `z > 0`.
+    pub fn matmul_bias_relu(
+        self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        k: usize,
+        n: usize,
+        z: &mut [f32],
+        act: &mut [f32],
+    ) {
+        check_gemm(a, b, k, n, z.len());
+        assert_eq!(bias.len(), n, "bias length mismatch");
+        assert_eq!(z.len(), act.len(), "z/act length mismatch");
+        dispatch!(self, matmul_bias_relu(a, b, bias, k, n, z, act))
+    }
+
+    /// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (weight gradient shape).
+    pub fn matmul_at_b(self, a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+        assert!(k > 0 && n > 0, "matmul_at_b with zero dimension");
+        assert_eq!(out.len(), k * n, "matmul_at_b out length mismatch");
+        assert_eq!(a.len() / k, b.len() / n, "matmul_at_b row count mismatch");
+        dispatch!(self, matmul_at_b(a, b, k, n, out))
+    }
+
+    /// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (back-propagated activation
+    /// gradient), restructured into the `j`-inner form by pre-transposing
+    /// `b` into `bt` (caller scratch, length `n * k`). Per output
+    /// element the `Σ_l a[i,l]·b[j,l]` accumulation order is exactly the
+    /// seed's dot-product fold, so the restructure is bit-exact.
+    pub fn matmul_a_bt(
+        self,
+        a: &[f32],
+        b: &[f32],
+        n: usize,
+        k: usize,
+        bt: &mut [f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(b.len(), k * n, "matmul_a_bt b length mismatch");
+        assert_eq!(bt.len(), n * k, "matmul_a_bt bt scratch mismatch");
+        transpose(b, k, n, bt);
+        self.matmul(a, bt, n, k, out);
+    }
+
+    /// `acc[i] += x[i]` (bias-gradient row reduction).
+    pub fn add_assign(self, acc: &mut [f32], x: &[f32]) {
+        assert_eq!(acc.len(), x.len(), "add_assign length mismatch");
+        dispatch!(self, add_assign(acc, x))
+    }
+
+    /// `acc[i] += w * x[i]` (weighted fold accumulation, Eq. 3 inner sum).
+    pub fn axpy(self, acc: &mut [f32], x: &[f32], w: f32) {
+        assert_eq!(acc.len(), x.len(), "axpy length mismatch");
+        dispatch!(self, axpy(acc, x, w))
+    }
+
+    /// `out[i] = a[i] + b[i]` (error-feedback compensation).
+    pub fn add(self, out: &mut [f32], a: &[f32], b: &[f32]) {
+        assert!(out.len() == a.len() && out.len() == b.len(), "add length mismatch");
+        dispatch!(self, add(out, a, b))
+    }
+
+    /// `out[i] = a[i] - b[i]` (error-feedback residual).
+    pub fn sub(self, out: &mut [f32], a: &[f32], b: &[f32]) {
+        assert!(out.len() == a.len() && out.len() == b.len(), "sub length mismatch");
+        dispatch!(self, sub(out, a, b))
+    }
+
+    /// FedProx anchor pull: `g[i] += mu * (w[i] - anchor[i])`.
+    pub fn prox_add(self, g: &mut [f32], w: &[f32], anchor: &[f32], mu: f32) {
+        assert!(g.len() == w.len() && g.len() == anchor.len(), "prox length mismatch");
+        dispatch!(self, prox_add(g, w, anchor, mu))
+    }
+
+    /// SGD step: `w[i] -= lr * g[i]`.
+    pub fn sgd_step(self, w: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(w.len(), g.len(), "sgd length mismatch");
+        dispatch!(self, sgd_step(w, g, lr))
+    }
+
+    /// One fused Adam step over the flat parameter vector (moment
+    /// update, bias correction, parameter update — `optim.py` order).
+    pub fn adam_step(self, w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], p: AdamParams) {
+        assert!(
+            w.len() == g.len() && w.len() == m.len() && w.len() == v.len(),
+            "adam length mismatch"
+        );
+        dispatch!(self, adam_step(w, g, m, v, p))
+    }
+
+    /// ReLU backward mask: `dz[i] = if z[i] > 0 { da[i] } else { 0 }`.
+    pub fn relu_mask(self, dz: &mut [f32], da: &[f32], z: &[f32]) {
+        assert!(dz.len() == da.len() && dz.len() == z.len(), "relu mask length mismatch");
+        dispatch!(self, relu_mask(dz, da, z))
+    }
+
+    /// `max_i |x[i]|` with NaN entries ignored (shard-scale reduction;
+    /// order-independent for the non-NaN max, so lane-parallel reduction
+    /// is value-exact).
+    pub fn max_abs(self, x: &[f32]) -> f32 {
+        dispatch!(self, max_abs(x))
+    }
+
+    /// Int8 symmetric encode: `out[i] = round(v[i] / scale)` clamped to
+    /// `[-qmax, qmax]`, with Rust's round-half-away-from-zero semantics.
+    /// `scale == 0` (all-zero shard) encodes to all-zero codes.
+    pub fn quant_encode(self, out: &mut [i8], values: &[f32], scale: f32, qmax: f32) {
+        assert_eq!(out.len(), values.len(), "quant encode length mismatch");
+        dispatch!(self, quant_encode(out, values, scale, qmax))
+    }
+
+    /// Int8 decode: `out[i] = codes[i] as f32 * scale`.
+    pub fn dequant(self, out: &mut [f32], codes: &[i8], scale: f32) {
+        assert_eq!(out.len(), codes.len(), "dequant length mismatch");
+        dispatch!(self, dequant(out, codes, scale))
+    }
+}
+
+fn check_gemm(a: &[f32], b: &[f32], k: usize, n: usize, out_len: usize) {
+    assert!(k > 0 && n > 0, "gemm with zero inner/output dimension");
+    assert_eq!(out_len % n, 0, "gemm out length not a multiple of n");
+    let m = out_len / n;
+    assert_eq!(a.len(), m * k, "gemm a length mismatch");
+    assert_eq!(b.len(), k * n, "gemm b length mismatch");
+}
+
+/// `out[n,k] = b[k,n]ᵀ` — scalar row-major transpose (memory-bound;
+/// element moves are rounding-free so no vector variant is needed).
+fn transpose(b: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    for (i, br) in b.chunks_exact(cols).enumerate() {
+        for (j, &v) in br.iter().enumerate() {
+            out[j * rows + i] = v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar kernels — the seed loops, verbatim (reference semantics)
+// ---------------------------------------------------------------------------
+
+mod scalar {
+    use super::AdamParams;
+
+    pub(super) fn matmul(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        for (ar, or) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+            for (aik, br) in ar.iter().zip(b.chunks_exact(n)) {
+                for (o, bkj) in or.iter_mut().zip(br) {
+                    *o += aik * bkj;
+                }
+            }
+        }
+    }
+
+    pub(super) fn matmul_bias(
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        matmul(a, b, k, n, out);
+        for or in out.chunks_exact_mut(n) {
+            for (o, bi) in or.iter_mut().zip(bias) {
+                *o += bi;
+            }
+        }
+    }
+
+    pub(super) fn matmul_bias_relu(
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        k: usize,
+        n: usize,
+        z: &mut [f32],
+        act: &mut [f32],
+    ) {
+        matmul(a, b, k, n, z);
+        for (zr, ar) in z.chunks_exact_mut(n).zip(act.chunks_exact_mut(n)) {
+            for ((zv, bi), av) in zr.iter_mut().zip(bias).zip(ar) {
+                *zv += bi;
+                *av = zv.max(0.0);
+            }
+        }
+    }
+
+    pub(super) fn matmul_at_b(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        for (ar, br) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
+            for (aik, or) in ar.iter().zip(out.chunks_exact_mut(n)) {
+                for (o, bij) in or.iter_mut().zip(br) {
+                    *o += aik * bij;
+                }
+            }
+        }
+    }
+
+    pub(super) fn add_assign(acc: &mut [f32], x: &[f32]) {
+        for (a, v) in acc.iter_mut().zip(x) {
+            *a += v;
+        }
+    }
+
+    pub(super) fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
+        for (a, v) in acc.iter_mut().zip(x) {
+            *a += w * v;
+        }
+    }
+
+    pub(super) fn add(out: &mut [f32], a: &[f32], b: &[f32]) {
+        for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+            *o = x + y;
+        }
+    }
+
+    pub(super) fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+        for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+            *o = x - y;
+        }
+    }
+
+    pub(super) fn prox_add(g: &mut [f32], w: &[f32], anchor: &[f32], mu: f32) {
+        for ((gi, wi), ai) in g.iter_mut().zip(w).zip(anchor) {
+            *gi += mu * (wi - ai);
+        }
+    }
+
+    pub(super) fn sgd_step(w: &mut [f32], g: &[f32], lr: f32) {
+        for (wi, gi) in w.iter_mut().zip(g) {
+            *wi -= lr * gi;
+        }
+    }
+
+    pub(super) fn adam_step(
+        w: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        p: AdamParams,
+    ) {
+        let c1 = 1.0 - p.b1;
+        let c2 = 1.0 - p.b2;
+        for (((wi, gi), mi), vi) in w.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
+            *mi = p.b1 * *mi + c1 * gi;
+            *vi = p.b2 * *vi + c2 * gi * gi;
+            let mhat = *mi / p.bc1;
+            let vhat = *vi / p.bc2;
+            *wi -= p.lr * mhat / (vhat.sqrt() + p.eps);
+        }
+    }
+
+    pub(super) fn relu_mask(dz: &mut [f32], da: &[f32], z: &[f32]) {
+        for ((d, a), zv) in dz.iter_mut().zip(da).zip(z) {
+            *d = if *zv > 0.0 { *a } else { 0.0 };
+        }
+    }
+
+    pub(super) fn max_abs(x: &[f32]) -> f32 {
+        x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub(super) fn quant_encode(out: &mut [i8], values: &[f32], scale: f32, qmax: f32) {
+        if scale == 0.0 {
+            out.fill(0);
+            return;
+        }
+        for (o, &v) in out.iter_mut().zip(values) {
+            *o = (v / scale).round().clamp(-qmax, qmax) as i8;
+        }
+    }
+
+    pub(super) fn dequant(out: &mut [f32], codes: &[i8], scale: f32) {
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = c as f32 * scale;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernels — bit-identical vector forms of the scalar loops
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::needless_range_loop)] // index math mirrors the register tiling
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::AdamParams;
+
+    /// f32 lanes per ymm register.
+    const LANES: usize = 8;
+    /// Row-block height: accumulator tiles live in registers across the
+    /// whole `k` loop (register blocking over rows).
+    const MR: usize = 4;
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum Epi {
+        None,
+        Bias,
+        BiasRelu,
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+        gemm(a, b, std::ptr::null(), k, n, out, std::ptr::null_mut(), Epi::None)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_bias(
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        gemm(a, b, bias.as_ptr(), k, n, out, std::ptr::null_mut(), Epi::Bias)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_bias_relu(
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        k: usize,
+        n: usize,
+        z: &mut [f32],
+        act: &mut [f32],
+    ) {
+        let actp = act.as_mut_ptr();
+        gemm(a, b, bias.as_ptr(), k, n, z, actp, Epi::BiasRelu)
+    }
+
+    /// Shared GEMM core: `z = a @ b [+ bias] [, act = relu(z)]`.
+    ///
+    /// Lanes are independent output columns of one row, so each output
+    /// element accumulates its `k` products in exactly the scalar order;
+    /// mul and add stay separate (no FMA). Row blocks of `MR` keep
+    /// `MR × 2` ymm accumulators live across the whole `k` loop.
+    #[target_feature(enable = "avx2")]
+    unsafe fn gemm(
+        a: &[f32],
+        b: &[f32],
+        bias: *const f32,
+        k: usize,
+        n: usize,
+        z: &mut [f32],
+        act: *mut f32,
+        epi: Epi,
+    ) {
+        let m = z.len() / n;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let zp = z.as_mut_ptr();
+        let zero = _mm256_setzero_ps();
+
+        let mut i = 0;
+        while i < m {
+            let rb = MR.min(m - i);
+            let mut j = 0;
+            // 16-wide j tiles: MR×2 ymm accumulators in registers.
+            while j + 2 * LANES <= n {
+                let mut acc = [[zero; 2]; MR];
+                for l in 0..k {
+                    let b0 = _mm256_loadu_ps(bp.add(l * n + j));
+                    let b1 = _mm256_loadu_ps(bp.add(l * n + j + LANES));
+                    for r in 0..rb {
+                        let av = _mm256_set1_ps(*ap.add((i + r) * k + l));
+                        acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(av, b0));
+                        acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(av, b1));
+                    }
+                }
+                for r in 0..rb {
+                    let base = (i + r) * n + j;
+                    let mut c0 = acc[r][0];
+                    let mut c1 = acc[r][1];
+                    if epi != Epi::None {
+                        c0 = _mm256_add_ps(c0, _mm256_loadu_ps(bias.add(j)));
+                        c1 = _mm256_add_ps(c1, _mm256_loadu_ps(bias.add(j + LANES)));
+                    }
+                    _mm256_storeu_ps(zp.add(base), c0);
+                    _mm256_storeu_ps(zp.add(base + LANES), c1);
+                    if epi == Epi::BiasRelu {
+                        _mm256_storeu_ps(act.add(base), _mm256_max_ps(c0, zero));
+                        _mm256_storeu_ps(act.add(base + LANES), _mm256_max_ps(c1, zero));
+                    }
+                }
+                j += 2 * LANES;
+            }
+            // 8-wide j tile.
+            while j + LANES <= n {
+                let mut acc = [zero; MR];
+                for l in 0..k {
+                    let b0 = _mm256_loadu_ps(bp.add(l * n + j));
+                    for r in 0..rb {
+                        let av = _mm256_set1_ps(*ap.add((i + r) * k + l));
+                        acc[r] = _mm256_add_ps(acc[r], _mm256_mul_ps(av, b0));
+                    }
+                }
+                for r in 0..rb {
+                    let base = (i + r) * n + j;
+                    let mut c0 = acc[r];
+                    if epi != Epi::None {
+                        c0 = _mm256_add_ps(c0, _mm256_loadu_ps(bias.add(j)));
+                    }
+                    _mm256_storeu_ps(zp.add(base), c0);
+                    if epi == Epi::BiasRelu {
+                        _mm256_storeu_ps(act.add(base), _mm256_max_ps(c0, zero));
+                    }
+                }
+                j += LANES;
+            }
+            // scalar remainder columns (n % 8), same per-element order.
+            while j < n {
+                for r in 0..rb {
+                    let row = ap.add((i + r) * k);
+                    let mut s = 0.0f32;
+                    for l in 0..k {
+                        s += *row.add(l) * *bp.add(l * n + j);
+                    }
+                    if epi != Epi::None {
+                        s += *bias.add(j);
+                    }
+                    let base = (i + r) * n + j;
+                    *zp.add(base) = s;
+                    if epi == Epi::BiasRelu {
+                        *act.add(base) = s.max(0.0);
+                    }
+                }
+                j += 1;
+            }
+            i += rb;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn matmul_at_b(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        out.fill(0.0);
+        let m = a.len() / k;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        let zero = _mm256_setzero_ps();
+
+        // Row blocks of MR: per (i, j-tile), the block's MR contributions
+        // accumulate in a register in ascending row order — the same
+        // per-element order as the scalar row-at-a-time loop.
+        let mut r = 0;
+        while r < m {
+            let rb = MR.min(m - r);
+            for i in 0..k {
+                let mut av = [zero; MR];
+                for (t, slot) in av.iter_mut().enumerate().take(rb) {
+                    *slot = _mm256_set1_ps(*ap.add((r + t) * k + i));
+                }
+                let mut j = 0;
+                while j + LANES <= n {
+                    let mut acc = _mm256_loadu_ps(op.add(i * n + j));
+                    for t in 0..rb {
+                        let bv = _mm256_loadu_ps(bp.add((r + t) * n + j));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(av[t], bv));
+                    }
+                    _mm256_storeu_ps(op.add(i * n + j), acc);
+                    j += LANES;
+                }
+                while j < n {
+                    let mut s = *op.add(i * n + j);
+                    for t in 0..rb {
+                        s += *ap.add((r + t) * k + i) * *bp.add((r + t) * n + j);
+                    }
+                    *op.add(i * n + j) = s;
+                    j += 1;
+                }
+            }
+            r += rb;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_assign(acc: &mut [f32], x: &[f32]) {
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let xp = x.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let v = _mm256_add_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(xp.add(i)));
+            _mm256_storeu_ps(ap.add(i), v);
+            i += LANES;
+        }
+        while i < n {
+            *ap.add(i) += *xp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
+        let wv = _mm256_set1_ps(w);
+        let n = acc.len();
+        let ap = acc.as_mut_ptr();
+        let xp = x.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let t = _mm256_mul_ps(wv, _mm256_loadu_ps(xp.add(i)));
+            _mm256_storeu_ps(ap.add(i), _mm256_add_ps(_mm256_loadu_ps(ap.add(i)), t));
+            i += LANES;
+        }
+        while i < n {
+            *ap.add(i) += w * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add(out: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut i = 0;
+        while i + LANES <= n {
+            let v = _mm256_add_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)));
+            _mm256_storeu_ps(op.add(i), v);
+            i += LANES;
+        }
+        while i < n {
+            *op.add(i) = *ap.add(i) + *bp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut i = 0;
+        while i + LANES <= n {
+            let v = _mm256_sub_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)));
+            _mm256_storeu_ps(op.add(i), v);
+            i += LANES;
+        }
+        while i < n {
+            *op.add(i) = *ap.add(i) - *bp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn prox_add(g: &mut [f32], w: &[f32], anchor: &[f32], mu: f32) {
+        let muv = _mm256_set1_ps(mu);
+        let n = g.len();
+        let gp = g.as_mut_ptr();
+        let (wp, ap) = (w.as_ptr(), anchor.as_ptr());
+        let mut i = 0;
+        while i + LANES <= n {
+            let diff = _mm256_sub_ps(_mm256_loadu_ps(wp.add(i)), _mm256_loadu_ps(ap.add(i)));
+            let t = _mm256_mul_ps(muv, diff);
+            _mm256_storeu_ps(gp.add(i), _mm256_add_ps(_mm256_loadu_ps(gp.add(i)), t));
+            i += LANES;
+        }
+        while i < n {
+            *gp.add(i) += mu * (*wp.add(i) - *ap.add(i));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sgd_step(w: &mut [f32], g: &[f32], lr: f32) {
+        let lrv = _mm256_set1_ps(lr);
+        let n = w.len();
+        let wp = w.as_mut_ptr();
+        let gp = g.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let t = _mm256_mul_ps(lrv, _mm256_loadu_ps(gp.add(i)));
+            _mm256_storeu_ps(wp.add(i), _mm256_sub_ps(_mm256_loadu_ps(wp.add(i)), t));
+            i += LANES;
+        }
+        while i < n {
+            *wp.add(i) -= lr * *gp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn adam_step(
+        w: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        p: AdamParams,
+    ) {
+        let b1v = _mm256_set1_ps(p.b1);
+        let b2v = _mm256_set1_ps(p.b2);
+        let c1v = _mm256_set1_ps(1.0 - p.b1);
+        let c2v = _mm256_set1_ps(1.0 - p.b2);
+        let bc1v = _mm256_set1_ps(p.bc1);
+        let bc2v = _mm256_set1_ps(p.bc2);
+        let lrv = _mm256_set1_ps(p.lr);
+        let epsv = _mm256_set1_ps(p.eps);
+        let n = w.len();
+        let wp = w.as_mut_ptr();
+        let gp = g.as_ptr();
+        let mp = m.as_mut_ptr();
+        let vp = v.as_mut_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let gv = _mm256_loadu_ps(gp.add(i));
+            // m = b1*m + (1-b1)*g ; v = b2*v + ((1-b2)*g)*g — scalar order
+            let mv = _mm256_add_ps(
+                _mm256_mul_ps(b1v, _mm256_loadu_ps(mp.add(i))),
+                _mm256_mul_ps(c1v, gv),
+            );
+            _mm256_storeu_ps(mp.add(i), mv);
+            let vv = _mm256_add_ps(
+                _mm256_mul_ps(b2v, _mm256_loadu_ps(vp.add(i))),
+                _mm256_mul_ps(_mm256_mul_ps(c2v, gv), gv),
+            );
+            _mm256_storeu_ps(vp.add(i), vv);
+            let mhat = _mm256_div_ps(mv, bc1v);
+            let vhat = _mm256_div_ps(vv, bc2v);
+            let denom = _mm256_add_ps(_mm256_sqrt_ps(vhat), epsv);
+            let step = _mm256_div_ps(_mm256_mul_ps(lrv, mhat), denom);
+            _mm256_storeu_ps(wp.add(i), _mm256_sub_ps(_mm256_loadu_ps(wp.add(i)), step));
+            i += LANES;
+        }
+        let c1 = 1.0 - p.b1;
+        let c2 = 1.0 - p.b2;
+        while i < n {
+            let gi = *gp.add(i);
+            let mi = p.b1 * *mp.add(i) + c1 * gi;
+            *mp.add(i) = mi;
+            let vi = p.b2 * *vp.add(i) + c2 * gi * gi;
+            *vp.add(i) = vi;
+            let mhat = mi / p.bc1;
+            let vhat = vi / p.bc2;
+            *wp.add(i) -= p.lr * mhat / (vhat.sqrt() + p.eps);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn relu_mask(dz: &mut [f32], da: &[f32], z: &[f32]) {
+        let zero = _mm256_setzero_ps();
+        let n = dz.len();
+        let dp = dz.as_mut_ptr();
+        let (ap, zp) = (da.as_ptr(), z.as_ptr());
+        let mut i = 0;
+        while i + LANES <= n {
+            let mask = _mm256_cmp_ps(_mm256_loadu_ps(zp.add(i)), zero, _CMP_GT_OQ);
+            _mm256_storeu_ps(dp.add(i), _mm256_and_ps(mask, _mm256_loadu_ps(ap.add(i))));
+            i += LANES;
+        }
+        while i < n {
+            *dp.add(i) = if *zp.add(i) > 0.0 { *ap.add(i) } else { 0.0 };
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn max_abs(x: &[f32]) -> f32 {
+        let sign = _mm256_set1_ps(-0.0);
+        let mut acc = _mm256_setzero_ps();
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let av = _mm256_andnot_ps(sign, _mm256_loadu_ps(xp.add(i)));
+            // operand order (av, acc): a NaN lane resolves to acc,
+            // matching the scalar fold's NaN-ignoring `m.max(v.abs())`.
+            acc = _mm256_max_ps(av, acc);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut m = lanes.iter().fold(0.0f32, |m, &v| m.max(v));
+        while i < n {
+            m = m.max((*xp.add(i)).abs());
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quant_encode(out: &mut [i8], values: &[f32], scale: f32, qmax: f32) {
+        if scale == 0.0 {
+            out.fill(0);
+            return;
+        }
+        let sv = _mm256_set1_ps(scale);
+        let half = _mm256_set1_ps(0.5);
+        let one = _mm256_set1_ps(1.0);
+        let sign = _mm256_set1_ps(-0.0);
+        let hi = _mm256_set1_ps(qmax);
+        let lo = _mm256_set1_ps(-qmax);
+        let n = out.len();
+        let vp = values.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let x = _mm256_div_ps(_mm256_loadu_ps(vp.add(i)), sv);
+            // Exact round-half-away-from-zero (f32::round semantics):
+            // t = trunc(x) and frac = x - t are both exact, so comparing
+            // |frac| >= 0.5 and adding copysign(1, x) reproduces the
+            // scalar result bit-for-bit (`_mm256_round_ps` to nearest
+            // would round halves to even instead).
+            let t = _mm256_round_ps(x, _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC);
+            let frac = _mm256_sub_ps(x, t);
+            let afrac = _mm256_andnot_ps(sign, frac);
+            let ge = _mm256_cmp_ps(afrac, half, _CMP_GE_OQ);
+            let sone = _mm256_or_ps(_mm256_and_ps(x, sign), one);
+            let r = _mm256_add_ps(t, _mm256_and_ps(ge, sone));
+            let c = _mm256_max_ps(_mm256_min_ps(r, hi), lo);
+            // value is integral in [-qmax, qmax] — the cvt is exact
+            let ci = _mm256_cvtps_epi32(c);
+            let mut tmp = [0i32; LANES];
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, ci);
+            for (o, &code) in out[i..i + LANES].iter_mut().zip(&tmp) {
+                *o = code as i8;
+            }
+            i += LANES;
+        }
+        for (o, &v) in out[i..].iter_mut().zip(&values[i..]) {
+            *o = (v / scale).round().clamp(-qmax, qmax) as i8;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dequant(out: &mut [f32], codes: &[i8], scale: f32) {
+        let sv = _mm256_set1_ps(scale);
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let cp = codes.as_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let c8 = _mm_loadl_epi64(cp.add(i) as *const __m128i);
+            let c32 = _mm256_cvtepi8_epi32(c8);
+            let f = _mm256_cvtepi32_ps(c32);
+            _mm256_storeu_ps(op.add(i), _mm256_mul_ps(f, sv));
+            i += LANES;
+        }
+        while i < n {
+            *op.add(i) = *cp.add(i) as f32 * scale;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn kernels_under_test() -> Vec<Kernel> {
+        let mut ks = vec![Kernel::Scalar];
+        if avx2_available() {
+            ks.push(Kernel::Avx2);
+        } else {
+            eprintln!("skip: AVX2 unavailable, scalar-only kernel tests");
+        }
+        ks
+    }
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn kernel_parses_and_rejects() {
+        assert_eq!("scalar".parse::<Kernel>().unwrap(), Kernel::Scalar);
+        assert_eq!("AVX2".parse::<Kernel>().unwrap(), Kernel::Avx2);
+        assert!("sse".parse::<Kernel>().is_err());
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn override_parsing_handles_empty_and_bad_values() {
+        assert_eq!(kernel_override(None).unwrap(), None);
+        assert_eq!(kernel_override(Some("")).unwrap(), None);
+        assert_eq!(kernel_override(Some("  ")).unwrap(), None);
+        assert_eq!(kernel_override(Some("scalar")).unwrap(), Some(Kernel::Scalar));
+        assert!(kernel_override(Some("neon")).is_err());
+    }
+
+    #[test]
+    fn resolve_honors_request_and_detection() {
+        if std::env::var_os(KERNEL_ENV).is_some() {
+            eprintln!("skip: {KERNEL_ENV} set, precedence exercised via env instead");
+            return;
+        }
+        assert_eq!(resolve_kernel(Some(Kernel::Scalar)).unwrap(), Kernel::Scalar);
+        if avx2_available() {
+            assert_eq!(resolve_kernel(Some(Kernel::Avx2)).unwrap(), Kernel::Avx2);
+            assert_eq!(resolve_kernel(None).unwrap(), Kernel::Avx2);
+        } else {
+            assert!(resolve_kernel(Some(Kernel::Avx2)).is_err(), "must refuse, not UB");
+            assert_eq!(resolve_kernel(None).unwrap(), Kernel::Scalar);
+        }
+    }
+
+    /// CI dispatcher assertion: on an AVX2 host with no env override the
+    /// dispatcher must pick the vector kernel (skip-not-fail otherwise).
+    #[test]
+    fn dispatcher_picks_vector_kernel_when_available() {
+        if std::env::var_os(KERNEL_ENV).is_some() {
+            eprintln!("skip: {KERNEL_ENV} override set");
+            return;
+        }
+        if !avx2_available() {
+            eprintln!("skip: host has no AVX2");
+            return;
+        }
+        assert_eq!(resolve_kernel(None).unwrap(), Kernel::Avx2);
+    }
+
+    #[test]
+    fn gemm_shapes_are_bit_identical_across_kernels() {
+        let mut rng = Rng::seed_from_u64(0xbeef);
+        // ragged n exercises the 16/8/scalar tail split
+        for &(m, k, n) in &[(4usize, 7usize, 19usize), (5, 3, 8), (1, 1, 1), (6, 13, 33)] {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let bias = fill(&mut rng, n);
+            let mut want = vec![0.0f32; m * n];
+            Kernel::Scalar.matmul(&a, &b, k, n, &mut want);
+            for kr in kernels_under_test() {
+                let mut out = vec![f32::NAN; m * n];
+                kr.matmul(&a, &b, k, n, &mut out);
+                assert_eq!(bits(&out), bits(&want), "{} matmul {m}x{k}x{n}", kr.name());
+            }
+            // fused epilogues against the scalar reference
+            let mut zref = vec![0.0f32; m * n];
+            let mut aref = vec![0.0f32; m * n];
+            Kernel::Scalar.matmul_bias_relu(&a, &b, &bias, k, n, &mut zref, &mut aref);
+            for kr in kernels_under_test() {
+                let mut z = vec![f32::NAN; m * n];
+                let mut act = vec![f32::NAN; m * n];
+                kr.matmul_bias_relu(&a, &b, &bias, k, n, &mut z, &mut act);
+                assert_eq!(bits(&z), bits(&zref), "{} fused z", kr.name());
+                assert_eq!(bits(&act), bits(&aref), "{} fused act", kr.name());
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_product_matches_dot_product_reference() {
+        let mut rng = Rng::seed_from_u64(0x7ab1e);
+        let (m, n, k) = (5usize, 11usize, 9usize);
+        let a = fill(&mut rng, m * n);
+        let b = fill(&mut rng, k * n);
+        // seed semantics: out[i,j] = Σ_l a[i,l] * b[j,l] via f32 sum fold
+        let mut want = vec![0.0f32; m * k];
+        for (ar, or) in a.chunks_exact(n).zip(want.chunks_exact_mut(k)) {
+            for (o, br) in or.iter_mut().zip(b.chunks_exact(n)) {
+                *o = ar.iter().zip(br).map(|(x, y)| x * y).sum();
+            }
+        }
+        for kr in kernels_under_test() {
+            let mut bt = vec![0.0f32; n * k];
+            let mut out = vec![f32::NAN; m * k];
+            kr.matmul_a_bt(&a, &b, n, k, &mut bt, &mut out);
+            assert_eq!(bits(&out), bits(&want), "{} a@bt", kr.name());
+        }
+    }
+
+    #[test]
+    fn quant_encode_matches_f32_round_on_half_cases() {
+        // values that separate round-half-away from round-half-even and
+        // from the naive trunc(x + 0.5) trick
+        let tricky = [
+            0.5f32, -0.5, 1.5, -1.5, 2.5, -2.5, 126.5, -126.5, 0.499_999_97, -0.499_999_97,
+            130.0, -130.0, 0.0, 1.0e-8, 3.49, -3.51,
+        ];
+        let scale = 1.0f32;
+        let want: Vec<i8> = tricky
+            .iter()
+            .map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        for kr in kernels_under_test() {
+            let mut out = vec![0i8; tricky.len()];
+            kr.quant_encode(&mut out, &tricky, scale, 127.0);
+            assert_eq!(out, want, "{} half-case rounding", kr.name());
+        }
+    }
+
+    #[test]
+    fn zero_length_inputs_are_noops() {
+        for kr in kernels_under_test() {
+            let mut out: Vec<f32> = Vec::new();
+            kr.matmul(&[], &[0.0; 3], 1, 3, &mut out); // m = 0
+            kr.add_assign(&mut out, &[]);
+            kr.axpy(&mut out, &[], 0.5);
+            kr.sgd_step(&mut out, &[], 0.1);
+            kr.relu_mask(&mut out, &[], &[]);
+            assert_eq!(kr.max_abs(&[]), 0.0);
+            let mut codes: Vec<i8> = Vec::new();
+            kr.quant_encode(&mut codes, &[], 1.0, 127.0);
+            kr.dequant(&mut out, &codes, 1.0);
+            assert!(out.is_empty() && codes.is_empty());
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+}

@@ -121,11 +121,16 @@ impl Manifest {
         if self.param_count == 0 {
             bail!("{}: param_count == 0", self.name);
         }
+        if self.batch_size == 0 {
+            bail!("{}: batch_size must be positive", self.name);
+        }
         if self.shard_size % self.batch_size != 0 {
             bail!("{}: batch_size must divide shard_size", self.name);
         }
-        if self.eval_size % self.eval_batch != 0 {
-            bail!("{}: eval_batch must divide eval_size", self.name);
+        // eval_batch need not divide eval_size: backends process the
+        // ragged tail batch (it used to be silently dropped).
+        if self.eval_batch == 0 {
+            bail!("{}: eval_batch must be positive", self.name);
         }
         if self.steps_per_round != self.shard_size / self.batch_size * self.local_epochs {
             bail!("{}: steps_per_round inconsistent", self.name);
@@ -252,6 +257,19 @@ mod tests {
     #[test]
     fn validate_accepts_consistent_manifest() {
         dummy().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_accepts_ragged_eval_but_rejects_zero_batches() {
+        let mut m = dummy();
+        m.eval_size = 10;
+        m.eval_batch = 4; // ragged tail batch of 2 — processed, not dropped
+        m.validate().unwrap();
+        m.eval_batch = 0;
+        assert!(m.validate().is_err());
+        let mut m = dummy();
+        m.batch_size = 0;
+        assert!(m.validate().is_err(), "zero batch_size must not panic");
     }
 
     #[test]

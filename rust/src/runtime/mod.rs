@@ -7,6 +7,7 @@
 //! on the request path.
 
 pub mod backend;
+pub mod kernel;
 pub mod manifest;
 pub mod native;
 
@@ -19,6 +20,7 @@ pub use backend::{
     load_backend, AggregateFold, Backend, BackendKind, BufferedFold, EvalResult, TrainRequest,
     TrainResult,
 };
+pub use kernel::Kernel;
 pub use manifest::{ArtifactIndex, Manifest};
 pub use native::NativeBackend;
 

@@ -16,6 +16,7 @@
 //! `t / num_classes` — the synthetic token datasets encode the label in
 //! the final token (see `crate::data`), which stays linearly recoverable.
 
+use std::cell::RefCell;
 use std::time::{Duration, Instant};
 
 use anyhow::bail;
@@ -24,6 +25,7 @@ use super::backend::{
     check_eval_args, check_params, check_train_request, AggregateFold, Backend, EvalResult,
     TrainRequest, TrainResult,
 };
+use super::kernel::{self, AdamParams, Kernel};
 use super::manifest::{Entrypoint, Manifest};
 use crate::data::Features;
 use crate::params::{fold_workers, resolve_shards, ShardLayout, ShardedAccumulator};
@@ -227,41 +229,11 @@ impl NativeBackend {
 }
 
 // ---------------------------------------------------------------------------
-// dense math (mirrors kernels/ref.py: plain definitions, f32 accumulate)
+// dense math (mirrors kernels/ref.py: plain definitions, f32 accumulate).
+// The GEMMs and element-wise steps run through the kernel plane
+// (`super::kernel`), whose scalar path is the seed loops verbatim and
+// whose AVX2 path is bit-identical by construction.
 // ---------------------------------------------------------------------------
-
-/// `out[m,n] = a[m,k] @ b[k,n]`.
-fn matmul(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
-    out.fill(0.0);
-    for (ar, or) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
-        for (aik, br) in ar.iter().zip(b.chunks_exact(n)) {
-            for (o, bkj) in or.iter_mut().zip(br) {
-                *o += aik * bkj;
-            }
-        }
-    }
-}
-
-/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (gradient wrt a dense weight).
-fn matmul_at_b(a: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
-    out.fill(0.0);
-    for (ar, br) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
-        for (aik, or) in ar.iter().zip(out.chunks_exact_mut(n)) {
-            for (o, bij) in or.iter_mut().zip(br) {
-                *o += aik * bij;
-            }
-        }
-    }
-}
-
-/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (back-propagated activation gradient).
-fn matmul_a_bt(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
-    for (ar, or) in a.chunks_exact(n).zip(out.chunks_exact_mut(k)) {
-        for (o, br) in or.iter_mut().zip(b.chunks_exact(n)) {
-            *o = ar.iter().zip(br).map(|(x, y)| x * y).sum();
-        }
-    }
-}
 
 /// Flat-layout views of `[w1 | b1 | w2 | b2]`.
 fn split_params(flat: &[f32], d: usize, h: usize, c: usize) -> (&[f32], &[f32], &[f32], &[f32]) {
@@ -283,7 +255,10 @@ fn split_params_mut(
     (w1, b1, w2, b2)
 }
 
-/// Reusable per-batch scratch buffers.
+/// Reusable per-batch scratch buffers. Grown (never shrunk below use)
+/// by [`Scratch::ensure`]; every field is fully overwritten per batch,
+/// so cross-job reuse through the worker arena is semantics-free.
+#[derive(Default)]
 struct Scratch {
     xb: Vec<f32>,
     z1: Vec<f32>,
@@ -292,38 +267,61 @@ struct Scratch {
     dz2: Vec<f32>,
     da1: Vec<f32>,
     dz1: Vec<f32>,
+    /// `W2ᵀ` staging for the backward `dz2 @ W2ᵀ` product (the kernel
+    /// plane's `j`-inner restructure of `matmul_a_bt`).
+    w2t: Vec<f32>,
 }
 
 impl Scratch {
-    fn new(bs: usize, d: usize, h: usize, c: usize) -> Self {
-        Self {
-            xb: vec![0.0; bs * d],
-            z1: vec![0.0; bs * h],
-            a1: vec![0.0; bs * h],
-            z2: vec![0.0; bs * c],
-            dz2: vec![0.0; bs * c],
-            da1: vec![0.0; bs * h],
-            dz1: vec![0.0; bs * h],
-        }
+    fn ensure(&mut self, bs: usize, d: usize, h: usize, c: usize) {
+        self.xb.resize(bs * d, 0.0);
+        self.z1.resize(bs * h, 0.0);
+        self.a1.resize(bs * h, 0.0);
+        self.z2.resize(bs * c, 0.0);
+        self.dz2.resize(bs * c, 0.0);
+        self.da1.resize(bs * h, 0.0);
+        self.dz1.resize(bs * h, 0.0);
+        self.w2t.resize(c * h, 0.0);
     }
 }
 
-/// Forward the MLP over `xb`, writing `z1`, `a1` (ReLU) and `z2` (logits).
-fn forward(flat: &[f32], d: usize, h: usize, c: usize, s: &mut Scratch) {
+/// Per-worker-thread arena: every buffer a training/eval job needs,
+/// allocated once per executor-pool worker (warmed by
+/// [`Backend::init_worker`]) instead of per job. Each job fully
+/// overwrites what it reads, so reuse never changes results.
+#[derive(Default)]
+struct Arena {
+    s: Scratch,
+    /// Flat gradient vector.
+    g: Vec<f32>,
+    /// Per-batch label staging.
+    yb: Vec<i32>,
+    /// Concatenated per-epoch shuffles (index table).
+    idx_table: Vec<usize>,
+    /// Reusable permutation buffer (one allocation for all epochs).
+    perm: Vec<usize>,
+    /// Token-features-to-f32 staging for `i32` model families.
+    tokens: Vec<f32>,
+}
+
+thread_local! {
+    static ARENA: RefCell<Arena> = RefCell::new(Arena::default());
+}
+
+/// Forward the first `rows` rows of `s.xb` through the MLP, writing
+/// `z1`, `a1` (fused bias+ReLU epilogue) and `z2` (bias epilogue).
+fn forward(kr: Kernel, flat: &[f32], (d, h, c): (usize, usize, usize), s: &mut Scratch, rows: usize) {
     let (w1, b1, w2, b2) = split_params(flat, d, h, c);
-    matmul(&s.xb, w1, d, h, &mut s.z1);
-    for (zr, a) in s.z1.chunks_exact_mut(h).zip(s.a1.chunks_exact_mut(h)) {
-        for ((z, bias), av) in zr.iter_mut().zip(b1).zip(a) {
-            *z += bias;
-            *av = z.max(0.0);
-        }
-    }
-    matmul(&s.a1, w2, h, c, &mut s.z2);
-    for zr in s.z2.chunks_exact_mut(c) {
-        for (z, bias) in zr.iter_mut().zip(b2) {
-            *z += bias;
-        }
-    }
+    kr.matmul_bias_relu(
+        &s.xb[..rows * d],
+        w1,
+        b1,
+        d,
+        h,
+        &mut s.z1[..rows * h],
+        &mut s.a1[..rows * h],
+    );
+    kr.matmul_bias(&s.a1[..rows * h], w2, b2, h, c, &mut s.z2[..rows * c]);
 }
 
 /// Mean softmax cross-entropy of the already-forwarded logits, plus the
@@ -354,30 +352,38 @@ fn softmax_xent_backward(yb: &[i32], c: usize, s: &mut Scratch) -> f32 {
     loss * inv_b
 }
 
-/// Back-propagate `dz2` into the flat gradient vector `g`.
-fn backward(flat: &[f32], d: usize, h: usize, c: usize, s: &mut Scratch, g: &mut [f32]) {
+/// Back-propagate `dz2` (first `rows` rows) into the flat gradient `g`.
+fn backward(
+    kr: Kernel,
+    flat: &[f32],
+    (d, h, c): (usize, usize, usize),
+    s: &mut Scratch,
+    g: &mut [f32],
+    rows: usize,
+) {
     let (_w1, _b1, w2, _b2) = split_params(flat, d, h, c);
     let (gw1, gb1, gw2, gb2) = split_params_mut(g, d, h, c);
     // dW2 = a1ᵀ dz2 ; db2 = Σ_rows dz2
-    matmul_at_b(&s.a1, &s.dz2, h, c, gw2);
+    kr.matmul_at_b(&s.a1[..rows * h], &s.dz2[..rows * c], h, c, gw2);
     gb2.fill(0.0);
-    for dr in s.dz2.chunks_exact(c) {
-        for (gb, dz) in gb2.iter_mut().zip(dr) {
-            *gb += dz;
-        }
+    for dr in s.dz2[..rows * c].chunks_exact(c) {
+        kr.add_assign(gb2, dr);
     }
-    // da1 = dz2 @ W2ᵀ ; dz1 = da1 ⊙ (z1 > 0)
-    matmul_a_bt(&s.dz2, w2, c, h, &mut s.da1);
-    for ((da, z), dz) in s.da1.iter().zip(&s.z1).zip(s.dz1.iter_mut()) {
-        *dz = if *z > 0.0 { *da } else { 0.0 };
-    }
+    // da1 = dz2 @ W2ᵀ (via the pre-transposed W2 staging) ; dz1 = da1 ⊙ (z1 > 0)
+    kr.matmul_a_bt(
+        &s.dz2[..rows * c],
+        w2,
+        c,
+        h,
+        &mut s.w2t,
+        &mut s.da1[..rows * h],
+    );
+    kr.relu_mask(&mut s.dz1[..rows * h], &s.da1[..rows * h], &s.z1[..rows * h]);
     // dW1 = xbᵀ dz1 ; db1 = Σ_rows dz1
-    matmul_at_b(&s.xb, &s.dz1, d, h, gw1);
+    kr.matmul_at_b(&s.xb[..rows * d], &s.dz1[..rows * h], d, h, gw1);
     gb1.fill(0.0);
-    for dr in s.dz1.chunks_exact(h) {
-        for (gb, dz) in gb1.iter_mut().zip(dr) {
-            *gb += dz;
-        }
+    for dr in s.dz1[..rows * h].chunks_exact(h) {
+        kr.add_assign(gb1, dr);
     }
 }
 
@@ -420,112 +426,125 @@ impl Backend for NativeBackend {
         let steps_per_epoch = n / bs;
         let num_steps = req.num_steps as usize;
 
-        let mut token_scratch = Vec::new();
-        let x = self.features_f32(req.x, &mut token_scratch);
+        let kr = kernel::active();
 
-        // Per-epoch shuffles, concatenated into one index table — the
-        // native analogue of `model.py`'s permutation scan input.
-        let mut rng = Rng::seed_from_u64(u64::from(req.seed as u32) ^ SHUFFLE_SEED_MIX);
-        let mut idx_table: Vec<usize> = Vec::with_capacity(mf.steps_per_round * bs);
-        for _ in 0..mf.local_epochs {
-            let mut perm: Vec<usize> = (0..n).collect();
-            rng.shuffle(&mut perm);
-            idx_table.extend_from_slice(&perm[..steps_per_epoch * bs]);
-        }
+        ARENA.with(|cell| {
+            let a = &mut *cell.borrow_mut();
+            a.s.ensure(bs, d, h, c);
+            a.g.resize(mf.param_count, 0.0);
+            a.yb.resize(bs, 0);
+            let x = self.features_f32(req.x, &mut a.tokens);
 
-        let mut flat = req.params.to_vec();
-        let mut m = req.m.to_vec();
-        let mut v = req.v.to_vec();
-        let mut t = req.t;
-        let lr = mf.lr as f32;
-        let mu = mf.prox_mu as f32;
-        let is_adam = mf.optimizer == "adam";
-
-        let mut s = Scratch::new(bs, d, h, c);
-        let mut g = vec![0.0f32; flat.len()];
-        let mut yb = vec![0i32; bs];
-        let mut loss_sum = 0.0f32;
-
-        for idx in idx_table.chunks_exact(bs).take(num_steps) {
-            for (row, (&i, y)) in idx.iter().zip(yb.iter_mut()).enumerate() {
-                s.xb[row * d..(row + 1) * d].copy_from_slice(&x[i * d..(i + 1) * d]);
-                *y = req.y[i];
+            // Per-epoch shuffles, concatenated into one index table — the
+            // native analogue of `model.py`'s permutation scan input. The
+            // permutation buffer is reused across epochs (refilled with
+            // 0..n before each shuffle, so the shuffle stream is
+            // unchanged from the per-epoch-allocation seed).
+            let mut rng = Rng::seed_from_u64(u64::from(req.seed as u32) ^ SHUFFLE_SEED_MIX);
+            a.idx_table.clear();
+            a.idx_table.reserve(mf.steps_per_round * bs);
+            for _ in 0..mf.local_epochs {
+                a.perm.clear();
+                a.perm.extend(0..n);
+                rng.shuffle(&mut a.perm);
+                a.idx_table.extend_from_slice(&a.perm[..steps_per_epoch * bs]);
             }
-            forward(&flat, d, h, c, &mut s);
-            loss_sum += softmax_xent_backward(&yb, c, &mut s);
-            backward(&flat, d, h, c, &mut s, &mut g);
-            if let Some(anchor) = req.global {
-                // FedProx: g += mu * (w - w_global)
-                for ((gi, w), a) in g.iter_mut().zip(&flat).zip(anchor) {
-                    *gi += mu * (w - a);
+
+            let mut flat = req.params.to_vec();
+            let mut m = req.m.to_vec();
+            let mut v = req.v.to_vec();
+            let mut t = req.t;
+            let lr = mf.lr as f32;
+            let mu = mf.prox_mu as f32;
+            let is_adam = mf.optimizer == "adam";
+            let mut loss_sum = 0.0f32;
+
+            for idx in a.idx_table.chunks_exact(bs).take(num_steps) {
+                for (row, (&i, y)) in idx.iter().zip(a.yb.iter_mut()).enumerate() {
+                    a.s.xb[row * d..(row + 1) * d].copy_from_slice(&x[i * d..(i + 1) * d]);
+                    *y = req.y[i];
+                }
+                forward(kr, &flat, (d, h, c), &mut a.s, bs);
+                loss_sum += softmax_xent_backward(&a.yb, c, &mut a.s);
+                backward(kr, &flat, (d, h, c), &mut a.s, &mut a.g, bs);
+                if let Some(anchor) = req.global {
+                    // FedProx: g += mu * (w - w_global)
+                    kr.prox_add(&mut a.g, &flat, anchor, mu);
+                }
+                t += 1.0;
+                if is_adam {
+                    let p = AdamParams {
+                        lr,
+                        b1: ADAM_B1,
+                        b2: ADAM_B2,
+                        eps: ADAM_EPS,
+                        bc1: 1.0 - ADAM_B1.powf(t),
+                        bc2: 1.0 - ADAM_B2.powf(t),
+                    };
+                    kr.adam_step(&mut flat, &a.g, &mut m, &mut v, p);
+                } else {
+                    kr.sgd_step(&mut flat, &a.g, lr);
                 }
             }
-            t += 1.0;
-            if is_adam {
-                let bc1 = 1.0 - ADAM_B1.powf(t);
-                let bc2 = 1.0 - ADAM_B2.powf(t);
-                for (((w, gi), mi), vi) in
-                    flat.iter_mut().zip(&g).zip(m.iter_mut()).zip(v.iter_mut())
-                {
-                    *mi = ADAM_B1 * *mi + (1.0 - ADAM_B1) * gi;
-                    *vi = ADAM_B2 * *vi + (1.0 - ADAM_B2) * gi * gi;
-                    let mhat = *mi / bc1;
-                    let vhat = *vi / bc2;
-                    *w -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
-                }
-            } else {
-                for (w, gi) in flat.iter_mut().zip(&g) {
-                    *w -= lr * gi;
-                }
-            }
-        }
 
-        let denom = (num_steps.max(1) as f32).min(mf.steps_per_round as f32);
-        Ok((
-            TrainResult {
-                params: flat,
-                m,
-                v,
-                t,
-                loss: loss_sum / denom,
-            },
-            t0.elapsed(),
-        ))
+            let denom = (num_steps.max(1) as f32).min(mf.steps_per_round as f32);
+            Ok((
+                TrainResult {
+                    params: flat,
+                    m,
+                    v,
+                    t,
+                    loss: loss_sum / denom,
+                },
+                t0.elapsed(),
+            ))
+        })
     }
 
     fn evaluate(&self, params: &[f32], x: &Features, y: &[i32]) -> Result<EvalResult> {
         let mf = &self.manifest;
         check_eval_args(mf, params, x, y)?;
+        let kr = kernel::active();
         let (d, h, c) = self.dims();
-        let mut token_scratch = Vec::new();
-        let xf = self.features_f32(x, &mut token_scratch);
+        let eb = mf.eval_batch.min(mf.eval_size.max(1));
 
-        let eb = mf.eval_batch;
-        let mut s = Scratch::new(eb, d, h, c);
-        let mut loss_sum = 0.0f32;
-        let mut correct = 0.0f32;
-        for (xb, yb) in xf.chunks_exact(eb * d).zip(y.chunks_exact(eb)) {
-            s.xb.copy_from_slice(xb);
-            forward(params, d, h, c, &mut s);
-            for (zr, &yi) in s.z2.chunks_exact(c).zip(yb) {
-                let zmax = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                let denom: f32 = zr.iter().map(|z| (z - zmax).exp()).sum();
-                loss_sum += -(zr[yi as usize] - zmax - denom.ln());
-                // first maximal index (jnp.argmax tie-breaking)
-                let mut best = 0usize;
-                for (i, z) in zr.iter().enumerate() {
-                    if *z > zr[best] {
-                        best = i;
+        ARENA.with(|cell| {
+            let a = &mut *cell.borrow_mut();
+            a.s.ensure(eb, d, h, c);
+            let xf = self.features_f32(x, &mut a.tokens);
+
+            let mut loss_sum = 0.0f32;
+            let mut correct = 0.0f32;
+            // Ragged eval sets are supported: the final batch simply has
+            // fewer rows. Per-row math is batch-independent and the
+            // loss/correct sums accumulate in global row order, so any
+            // batch split is bit-identical.
+            let mut off = 0usize;
+            while off < y.len() {
+                let rows = eb.min(y.len() - off);
+                a.s.xb[..rows * d].copy_from_slice(&xf[off * d..(off + rows) * d]);
+                forward(kr, params, (d, h, c), &mut a.s, rows);
+                for (zr, &yi) in a.s.z2[..rows * c].chunks_exact(c).zip(&y[off..off + rows]) {
+                    let zmax = zr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let denom: f32 = zr.iter().map(|z| (z - zmax).exp()).sum();
+                    loss_sum += -(zr[yi as usize] - zmax - denom.ln());
+                    // first maximal index (jnp.argmax tie-breaking)
+                    let mut best = 0usize;
+                    for (i, z) in zr.iter().enumerate() {
+                        if *z > zr[best] {
+                            best = i;
+                        }
+                    }
+                    if best == yi as usize {
+                        correct += 1.0;
                     }
                 }
-                if best == yi as usize {
-                    correct += 1.0;
-                }
+                off += rows;
             }
-        }
-        Ok(EvalResult {
-            loss: loss_sum / mf.eval_size as f32,
-            accuracy: correct / mf.eval_size as f32,
+            Ok(EvalResult {
+                loss: loss_sum / mf.eval_size as f32,
+                accuracy: correct / mf.eval_size as f32,
+            })
         })
     }
 
@@ -553,6 +572,27 @@ impl Backend for NativeBackend {
             count: 0,
             wall: Duration::ZERO,
         }))
+    }
+
+    /// Warm this worker thread's arena: pre-size every scratch buffer a
+    /// training job needs (batch scratch, gradient, index table,
+    /// permutation, token staging) so the persistent executor pool stops
+    /// re-allocating per job.
+    fn init_worker(&self) -> Result<()> {
+        let mf = &self.manifest;
+        let (d, h, c) = self.dims();
+        ARENA.with(|cell| {
+            let a = &mut *cell.borrow_mut();
+            a.s.ensure(mf.batch_size, d, h, c);
+            a.g.resize(mf.param_count, 0.0);
+            a.yb.resize(mf.batch_size, 0);
+            a.idx_table.reserve(mf.steps_per_round * mf.batch_size);
+            a.perm.reserve(mf.shard_size);
+            if mf.input_dtype == "i32" {
+                a.tokens.reserve(mf.shard_size * d);
+            }
+        });
+        Ok(())
     }
 }
 
@@ -750,6 +790,39 @@ mod tests {
         let x = Features::F32(vec![0.0; mf.eval_size * mf.sample_elems()]);
         assert!(b.evaluate(&p0, &x, &y[..3]).is_err());
         assert!(b.evaluate(&p0, &x, &y).is_ok());
+    }
+
+    #[test]
+    fn ragged_eval_tail_batch_is_processed_and_split_invariant() {
+        // eval_size = 10 with eval_batch ∈ {1, 3, 4, 8, 128}: every
+        // batch split must be bit-identical to the single-batch result
+        // (the ragged tail used to be silently dropped by chunks_exact
+        // while loss/accuracy still divided by eval_size).
+        let base = mnist();
+        let p0 = base.init_params().unwrap();
+        let mk = |eval_batch: usize| {
+            let mut mf = base.manifest.clone();
+            mf.eval_size = 10;
+            mf.eval_batch = eval_batch;
+            NativeBackend::from_manifest(mf, 32).unwrap()
+        };
+        let x = Features::F32(
+            (0..10 * 784)
+                .map(|i| ((i % 23) as f32 - 11.0) * 0.07)
+                .collect(),
+        );
+        let y: Vec<i32> = (0..10i32).map(|i| i % 10).collect();
+        let want = mk(10).evaluate(&p0, &x, &y).unwrap();
+        assert!(want.loss > 0.0, "all ten rows must contribute loss");
+        for eb in [1usize, 3, 4, 8, 128] {
+            let r = mk(eb).evaluate(&p0, &x, &y).unwrap();
+            assert_eq!(r.loss.to_bits(), want.loss.to_bits(), "eval_batch={eb}");
+            assert_eq!(
+                r.accuracy.to_bits(),
+                want.accuracy.to_bits(),
+                "eval_batch={eb}"
+            );
+        }
     }
 
     #[test]

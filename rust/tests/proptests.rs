@@ -17,6 +17,7 @@ use fedless::params::{
     ShardedAccumulator,
 };
 use fedless::paramsvr::{staleness_weights, weight_component, WeightedUpdate};
+use fedless::runtime::kernel::{avx2_available, AdamParams, Kernel};
 use fedless::strategy::{
     ema, feature_row, missed_round_ema, FedAvg, FedLesScan, FedProx, SafaLite,
     SelectionContext, Strategy, StrategyKind,
@@ -863,6 +864,208 @@ fn prop_json_roundtrip_random_values() {
         assert_eq!(v, re, "case {case} (pretty)");
         let re2 = Json::parse(&v.to_string_compact()).unwrap();
         assert_eq!(v, re2, "case {case} (compact)");
+    }
+}
+
+/// Both kernels when the host has AVX2. Hosts without it skip the
+/// cross-kernel comparison (skip, not fail — same contract as the
+/// in-module dispatcher test, so CI stays green on any fleet).
+fn kernel_pair() -> Option<[Kernel; 2]> {
+    if avx2_available() {
+        Some([Kernel::Scalar, Kernel::Avx2])
+    } else {
+        eprintln!("skipping scalar-vs-avx2 bit-identity: host lacks AVX2");
+        None
+    }
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn prop_gemm_kernels_bit_identical_across_ragged_shapes() {
+    // The kernel-plane contract: every GEMM shape (plain, fused
+    // bias/bias+ReLU epilogues, Aᵀ@B, A@Bᵀ) is *bit-identical* across
+    // kernels at every lane residue (`n % 8` sweeps 0..=7 with the
+    // case number), including zero-row outputs — the 16-wide, 8-wide
+    // and scalar-tail code paths all reproduce the scalar fold.
+    let Some([sc, vx]) = kernel_pair() else { return };
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x6e44);
+        let m = rng.below(7); // 0 rows exercises the empty-output edge
+        let k = 1 + rng.below(24);
+        let n = 1 + 8 * rng.below(4) + (case % 8) as usize;
+        let fill = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect()
+        };
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let bias = fill(&mut rng, n);
+        let what = format!("case {case} m={m} k={k} n={n}");
+
+        let (mut o1, mut o2) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        sc.matmul(&a, &b, k, n, &mut o1);
+        vx.matmul(&a, &b, k, n, &mut o2);
+        assert_eq!(bits(&o1), bits(&o2), "{what}: matmul");
+
+        sc.matmul_bias(&a, &b, &bias, k, n, &mut o1);
+        vx.matmul_bias(&a, &b, &bias, k, n, &mut o2);
+        assert_eq!(bits(&o1), bits(&o2), "{what}: matmul_bias");
+
+        let (mut z1, mut z2) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        sc.matmul_bias_relu(&a, &b, &bias, k, n, &mut z1, &mut o1);
+        vx.matmul_bias_relu(&a, &b, &bias, k, n, &mut z2, &mut o2);
+        assert_eq!(bits(&z1), bits(&z2), "{what}: fused pre-activation");
+        assert_eq!(bits(&o1), bits(&o2), "{what}: fused activation");
+
+        // Aᵀ@B: a is m×k, rhs is m×n, out k×n
+        let rhs = fill(&mut rng, m * n);
+        let (mut g1, mut g2) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+        sc.matmul_at_b(&a, &rhs, k, n, &mut g1);
+        vx.matmul_at_b(&a, &rhs, k, n, &mut g2);
+        assert_eq!(bits(&g1), bits(&g2), "{what}: matmul_at_b");
+
+        // A@Bᵀ: lhs is m×n, b is k×n, out m×k (bt scratch n×k)
+        let lhs = fill(&mut rng, m * n);
+        let (mut bt1, mut bt2) = (vec![0.0f32; n * k], vec![0.0f32; n * k]);
+        let (mut d1, mut d2) = (vec![0.0f32; m * k], vec![0.0f32; m * k]);
+        sc.matmul_a_bt(&lhs, &b, n, k, &mut bt1, &mut d1);
+        vx.matmul_a_bt(&lhs, &b, n, k, &mut bt2, &mut d2);
+        assert_eq!(bits(&d1), bits(&d2), "{what}: matmul_a_bt");
+    }
+}
+
+#[test]
+fn prop_elementwise_kernels_bit_identical() {
+    // Every element-wise hot loop (optimizer steps, FedProx anchor,
+    // fold axpy, ReLU mask, error-feedback add/sub, int8 codec and the
+    // max-abs reduction) is bit-identical across kernels at every lane
+    // residue and at zero length.
+    let Some([sc, vx]) = kernel_pair() else { return };
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xa7e9);
+        // length sweeps every residue mod 8; case 0 pins the zero edge
+        let n = if case == 0 {
+            0
+        } else {
+            8 * rng.below(6) + (case % 8) as usize
+        };
+        let amp = rng.range_f64(1e-3, 50.0);
+        let fill = |rng: &mut Rng| -> Vec<f32> {
+            (0..n).map(|_| rng.range_f64(-amp, amp) as f32).collect()
+        };
+        let x = fill(&mut rng);
+        let y = fill(&mut rng);
+        let g = fill(&mut rng);
+        let what = format!("case {case} n={n}");
+
+        let (mut u1, mut u2) = (x.clone(), x.clone());
+        sc.add_assign(&mut u1, &y);
+        vx.add_assign(&mut u2, &y);
+        assert_eq!(bits(&u1), bits(&u2), "{what}: add_assign");
+
+        let w = rng.range_f64(-1.5, 1.5) as f32;
+        let (mut u1, mut u2) = (x.clone(), x.clone());
+        sc.axpy(&mut u1, &y, w);
+        vx.axpy(&mut u2, &y, w);
+        assert_eq!(bits(&u1), bits(&u2), "{what}: axpy");
+
+        let (mut o1, mut o2) = (vec![0.0f32; n], vec![0.0f32; n]);
+        sc.add(&mut o1, &x, &y);
+        vx.add(&mut o2, &x, &y);
+        assert_eq!(bits(&o1), bits(&o2), "{what}: add");
+        sc.sub(&mut o1, &x, &y);
+        vx.sub(&mut o2, &x, &y);
+        assert_eq!(bits(&o1), bits(&o2), "{what}: sub");
+
+        let mu = rng.range_f64(0.0, 0.2) as f32;
+        let (mut g1, mut g2) = (g.clone(), g.clone());
+        sc.prox_add(&mut g1, &x, &y, mu);
+        vx.prox_add(&mut g2, &x, &y, mu);
+        assert_eq!(bits(&g1), bits(&g2), "{what}: prox_add");
+
+        let lr = rng.range_f64(1e-4, 0.5) as f32;
+        let (mut w1, mut w2) = (x.clone(), x.clone());
+        sc.sgd_step(&mut w1, &g, lr);
+        vx.sgd_step(&mut w2, &g, lr);
+        assert_eq!(bits(&w1), bits(&w2), "{what}: sgd_step");
+
+        let t = 1.0 + rng.below(40) as f32;
+        let p = AdamParams {
+            lr,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-7,
+            bc1: 1.0 - 0.9f32.powf(t),
+            bc2: 1.0 - 0.999f32.powf(t),
+        };
+        let (mut w1, mut w2) = (x.clone(), x.clone());
+        let (mut m1, mut m2) = (y.clone(), y.clone());
+        let mut v1: Vec<f32> = y.iter().map(|v| v.abs()).collect();
+        let mut v2 = v1.clone();
+        sc.adam_step(&mut w1, &g, &mut m1, &mut v1, p);
+        vx.adam_step(&mut w2, &g, &mut m2, &mut v2, p);
+        assert_eq!(bits(&w1), bits(&w2), "{what}: adam params");
+        assert_eq!(bits(&m1), bits(&m2), "{what}: adam first moment");
+        assert_eq!(bits(&v1), bits(&v2), "{what}: adam second moment");
+
+        // relu_mask keys on the sign of z: reuse x (mixed signs)
+        let (mut d1, mut d2) = (vec![0.0f32; n], vec![0.0f32; n]);
+        sc.relu_mask(&mut d1, &g, &x);
+        vx.relu_mask(&mut d2, &g, &x);
+        assert_eq!(bits(&d1), bits(&d2), "{what}: relu_mask");
+
+        let ma1 = sc.max_abs(&x);
+        let ma2 = vx.max_abs(&x);
+        assert_eq!(ma1.to_bits(), ma2.to_bits(), "{what}: max_abs");
+
+        // int8 codec: live scale, plus the all-zero-shard scale==0 path
+        for scale in [if ma1 == 0.0 { 0.0 } else { ma1 / 127.0 }, 0.0] {
+            let (mut c1, mut c2) = (vec![0i8; n], vec![0i8; n]);
+            sc.quant_encode(&mut c1, &x, scale, 127.0);
+            vx.quant_encode(&mut c2, &x, scale, 127.0);
+            assert_eq!(c1, c2, "{what}: quant_encode scale={scale}");
+            let (mut q1, mut q2) = (vec![0.0f32; n], vec![0.0f32; n]);
+            sc.dequant(&mut q1, &c1, scale);
+            vx.dequant(&mut q2, &c2, scale);
+            assert_eq!(bits(&q1), bits(&q2), "{what}: dequant scale={scale}");
+        }
+    }
+}
+
+#[test]
+fn prop_quant_encode_rounds_half_away_from_zero_in_both_kernels() {
+    // Adversarial rounding inputs: values sitting exactly on (or one
+    // ulp off) the half-step grid, where round-half-to-even hardware
+    // rounding or a naive `trunc(v + 0.5)` would diverge from Rust's
+    // `f32::round`. Both kernels must match the `f32::round` reference
+    // code-for-code.
+    let Some([sc, vx]) = kernel_pair() else { return };
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x40d5);
+        let n = 1 + 8 * rng.below(3) + (case % 8) as usize;
+        let values: Vec<f32> = (0..n)
+            .map(|_| {
+                let half_grid = (rng.below(255) as f32 - 127.0) + 0.5;
+                match rng.below(4) {
+                    0 => half_grid,
+                    1 => half_grid + rng.range_f64(-1e-7, 1e-7) as f32,
+                    2 => 0.499_999_97f32.copysign(half_grid),
+                    _ => rng.range_f64(-140.0, 140.0) as f32,
+                }
+            })
+            .collect();
+        let scale = 1.0f32; // unit scale puts values directly on the code grid
+        let reference: Vec<i8> = values
+            .iter()
+            .map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        let (mut c1, mut c2) = (vec![0i8; n], vec![0i8; n]);
+        sc.quant_encode(&mut c1, &values, scale, 127.0);
+        vx.quant_encode(&mut c2, &values, scale, 127.0);
+        assert_eq!(c1, reference, "case {case}: scalar kernel vs f32::round");
+        assert_eq!(c2, reference, "case {case}: avx2 kernel vs f32::round");
     }
 }
 
