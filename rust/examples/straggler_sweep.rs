@@ -1,7 +1,9 @@
-//! Straggler sweep: the paper's core claim in one program. Runs all
-//! three strategies across straggler ratios on one dataset and prints a
-//! compact comparison (accuracy / EUR / time / cost), i.e. a single-
-//! dataset slice of Tables II-IV.
+//! Straggler sweep: the paper's core claim in one program. Runs every
+//! evaluated strategy across straggler ratios on one dataset and prints
+//! a compact comparison (accuracy / EUR / time / cost), i.e. a single-
+//! dataset slice of Tables II-IV. (The full strategy x scenario grid —
+//! storms, diurnal waves, outages, the adversarial tail — lives in
+//! `fedless repro sweep`.)
 //!
 //!   cargo run --release --example straggler_sweep -- [dataset] [rounds]
 
@@ -27,7 +29,7 @@ fn main() -> fedless::Result<()> {
         } else {
             Scenario::Straggler(pct)
         };
-        for strategy in StrategyKind::all() {
+        for strategy in StrategyKind::evaluated() {
             let mut cfg = ExperimentConfig::preset(&dataset);
             cfg.strategy = strategy;
             cfg.scenario = scenario;

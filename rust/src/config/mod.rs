@@ -11,13 +11,31 @@ use crate::strategy::StrategyKind;
 use crate::util::Json;
 use crate::Result;
 
-/// Experiment scenario (§VI-A4).
+/// Experiment scenario: the paper's two (§VI-A4) plus the adversarial
+/// grid variants. The grid scenarios stress the platform model rather
+/// than forcing per-client straggler roles, so their effects live in
+/// `faas::SimulatedGcf` (deterministic window/identity functions — no
+/// extra RNG draws, keeping old-scenario streams byte-identical).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Scenario {
     /// Unmodified deployment; round time fits every client.
     Standard,
     /// Forced straggler percentage (10/30/50/70 in the paper).
     Straggler(u8),
+    /// Periodic windows in which the warm pool is useless: every
+    /// invocation inside a storm window cold-starts (deploy waves /
+    /// provider instance recycling).
+    ColdStartStorm,
+    /// Sinusoidal diurnal traffic wave modulating invocation latency:
+    /// startup and training stretch at peak load, relax off-peak.
+    Diurnal,
+    /// Correlated failure of one client region at a time: clients hash
+    /// into regions, and a rotating outage window crashes every
+    /// invocation from the affected region.
+    RegionalOutage,
+    /// Persistent adversarially slow tail: the worst decile of clients
+    /// (stable hash of the id) trains several times slower, forever.
+    Adversarial,
 }
 
 impl Scenario {
@@ -25,14 +43,27 @@ impl Scenario {
         match self {
             Scenario::Standard => "standard".into(),
             Scenario::Straggler(p) => format!("straggler{p}"),
+            Scenario::ColdStartStorm => "coldstartstorm".into(),
+            Scenario::Diurnal => "diurnal".into(),
+            Scenario::RegionalOutage => "regionaloutage".into(),
+            Scenario::Adversarial => "adversarial".into(),
         }
     }
 
     pub fn straggler_fraction(&self) -> f64 {
         match self {
-            Scenario::Standard => 0.0,
             Scenario::Straggler(p) => *p as f64 / 100.0,
+            _ => 0.0,
         }
+    }
+
+    /// Does this scenario use the tight straggler-era round deadline?
+    /// The adversarial tail only bites when slow clients can actually
+    /// miss rounds; the platform-stress scenarios keep the generous
+    /// standard deadline so their effect is isolated from timeout
+    /// pressure.
+    pub fn tight_deadline(&self) -> bool {
+        matches!(self, Scenario::Straggler(_) | Scenario::Adversarial)
     }
 }
 
@@ -40,13 +71,21 @@ impl FromStr for Scenario {
     type Err = anyhow::Error;
 
     fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
-        if s == "standard" {
-            return Ok(Scenario::Standard);
+        match s {
+            "standard" => return Ok(Scenario::Standard),
+            "coldstartstorm" => return Ok(Scenario::ColdStartStorm),
+            "diurnal" => return Ok(Scenario::Diurnal),
+            "regionaloutage" => return Ok(Scenario::RegionalOutage),
+            "adversarial" => return Ok(Scenario::Adversarial),
+            _ => {}
         }
         if let Some(p) = s.strip_prefix("straggler") {
             return Ok(Scenario::Straggler(p.parse()?));
         }
-        anyhow::bail!("unknown scenario {s:?}; expected standard|straggler<pct>")
+        anyhow::bail!(
+            "unknown scenario {s:?}; expected standard|straggler<pct>|\
+             coldstartstorm|diurnal|regionaloutage|adversarial"
+        )
     }
 }
 
@@ -225,9 +264,10 @@ impl ExperimentConfig {
 
     /// The active round deadline for the configured scenario.
     pub fn round_timeout_s(&self) -> f64 {
-        match self.scenario {
-            Scenario::Standard => self.round_timeout_standard_s,
-            Scenario::Straggler(_) => self.round_timeout_straggler_s,
+        if self.scenario.tight_deadline() {
+            self.round_timeout_straggler_s
+        } else {
+            self.round_timeout_standard_s
         }
     }
 
@@ -646,6 +686,41 @@ mod tests {
             Scenario::Straggler(30)
         );
         assert!(Scenario::from_str("nope").is_err());
+    }
+
+    #[test]
+    fn grid_scenarios_roundtrip_label_fromstr() {
+        use std::str::FromStr;
+        for s in [
+            Scenario::Standard,
+            Scenario::Straggler(10),
+            Scenario::Straggler(70),
+            Scenario::ColdStartStorm,
+            Scenario::Diurnal,
+            Scenario::RegionalOutage,
+            Scenario::Adversarial,
+        ] {
+            assert_eq!(Scenario::from_str(&s.label()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn grid_scenarios_force_no_stragglers_and_pick_the_right_deadline() {
+        let mut cfg = ExperimentConfig::preset("mnist");
+        for s in [
+            Scenario::ColdStartStorm,
+            Scenario::Diurnal,
+            Scenario::RegionalOutage,
+        ] {
+            assert_eq!(s.straggler_fraction(), 0.0);
+            cfg.scenario = s;
+            assert_eq!(cfg.round_timeout_s(), cfg.round_timeout_standard_s);
+        }
+        // Adversarial: no forced straggler roles, but the tight deadline
+        // so the slow tail actually misses rounds.
+        assert_eq!(Scenario::Adversarial.straggler_fraction(), 0.0);
+        cfg.scenario = Scenario::Adversarial;
+        assert_eq!(cfg.round_timeout_s(), cfg.round_timeout_straggler_s);
     }
 
     #[test]

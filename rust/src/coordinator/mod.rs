@@ -135,7 +135,10 @@ impl<'rt> Controller<'rt> {
         )?;
         let eval_set = data.eval_data();
         let mut rng = Rng::seed_from_u64(cfg.seed ^ COORD_SEED_MIX);
-        let faas = SimulatedGcf::new(cfg.faas, cfg.seed);
+        // Platform-stress scenarios (storms, diurnal wave, outages, the
+        // adversarial tail) live inside the platform model; Standard /
+        // Straggler(_) leave it exactly as `SimulatedGcf::new` would.
+        let faas = SimulatedGcf::with_scenario(cfg.faas, cfg.seed, cfg.scenario);
 
         // §VI-A4: fix the forced straggler set up front.
         let mut forced = HashMap::new();
@@ -563,7 +566,20 @@ impl<'rt> Controller<'rt> {
         // controller waited for the timeout (Alg. 1 "finish or timeout").
         // A round whose entire selection was still in flight also waits
         // out the deadline (the controller is blocked on stragglers).
-        let round_end = if any_missed || (invoked.is_empty() && in_flight_skipped > 0) {
+        //
+        // Straggler-drop strategies (SNIPPETS snippet 2) never wait:
+        // the round closes at the last on-time arrival and everything
+        // still running is discarded — unless nothing arrived at all,
+        // in which case the controller still sat out its timeout. The
+        // dropped functions were already billed above (§VI-C: they run
+        // to completion/timeout on the provider's dime regardless).
+        let round_end = if self.strategy.drops_stragglers() {
+            if fresh.is_empty() {
+                deadline
+            } else {
+                latest_ontime
+            }
+        } else if any_missed || (invoked.is_empty() && in_flight_skipped > 0) {
             deadline
         } else {
             latest_ontime

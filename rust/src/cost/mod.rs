@@ -48,10 +48,19 @@ pub fn ghz_for_memory_mb(memory_mb: u32) -> f64 {
 }
 
 impl GcfPricing {
+    /// Duration the provider actually meters: `duration_s` rounded up
+    /// to the billing granularity. This is the single definition of the
+    /// rounding — both the cost formula and the ledger's
+    /// `billed_seconds` accumulator go through it, so the two can never
+    /// disagree about what was billed.
+    pub fn billed_duration(&self, duration_s: f64) -> f64 {
+        assert!(duration_s >= 0.0, "negative duration");
+        (duration_s / self.granularity_s).ceil() * self.granularity_s
+    }
+
     /// Cost of one invocation of `duration_s` at `memory_mb`.
     pub fn invocation_cost(&self, duration_s: f64, memory_mb: u32) -> f64 {
-        assert!(duration_s >= 0.0, "negative duration");
-        let billed = (duration_s / self.granularity_s).ceil() * self.granularity_s;
+        let billed = self.billed_duration(duration_s);
         let gb = memory_mb as f64 / 1024.0;
         self.per_invocation
             + billed * gb * self.per_gb_second
@@ -83,7 +92,11 @@ impl CostLedger {
         let c = self.pricing.invocation_cost(duration_s, memory_mb);
         self.total += c;
         self.invocations += 1;
-        self.billed_seconds += duration_s;
+        // Accumulate what the provider meters, not the raw wall time:
+        // GCF rounds every invocation up to the billing granularity, so
+        // `billed_seconds` must agree with the durations `total` was
+        // computed from.
+        self.billed_seconds += self.pricing.billed_duration(duration_s);
         c
     }
 }
@@ -130,6 +143,18 @@ mod tests {
         let p = GcfPricing::default();
         let c = p.invocation_cost(60.0, 2048);
         assert!(c > 0.001 && c < 0.01, "cost {c}");
+    }
+
+    #[test]
+    fn ledger_bills_granularity_rounded_seconds() {
+        // A 10 ms invocation is metered as one full 100 ms slice; the
+        // ledger must accumulate the rounded duration, matching what
+        // `invocation_cost` charged for.
+        let mut l = CostLedger::new(GcfPricing::default());
+        l.bill(0.01, 2048);
+        assert!((l.billed_seconds - 0.1).abs() < 1e-12, "{}", l.billed_seconds);
+        l.bill(0.11, 2048);
+        assert!((l.billed_seconds - 0.3).abs() < 1e-12, "{}", l.billed_seconds);
     }
 
     #[test]

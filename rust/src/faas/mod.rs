@@ -21,11 +21,72 @@
 //! timeline (start, finish, billed duration) and a success/crash/slow
 //! outcome relative to the round deadline. Straggler-scenario forcing
 //! (§VI-A4) is layered on top by the coordinator via [`Forced`].
+//!
+//! The adversarial grid scenarios ([`Scenario`]) are materialized here
+//! too, as **deterministic** window/identity functions of the virtual
+//! clock and the client id — cold-start storms, a diurnal load wave,
+//! rotating regional outages, and a persistent slow tail. None of them
+//! adds or removes RNG draws relative to the same decision path under
+//! `Standard`, so seeded streams for the old scenarios stay
+//! byte-identical (see the draw-order contract on [`Decision`]).
 
 use std::collections::HashMap;
 
+use crate::config::Scenario;
 use crate::util::Rng;
 use crate::ClientId;
+
+/// Cold-start storm ([`Scenario::ColdStartStorm`]): every
+/// [`STORM_DUTY_S`] out of each [`STORM_PERIOD_S`] the provider is
+/// recycling instances (deploy wave) and the warm pool is useless.
+pub const STORM_PERIOD_S: f64 = 600.0;
+pub const STORM_DUTY_S: f64 = 120.0;
+
+/// Diurnal wave ([`Scenario::Diurnal`]): platform latency multiplier
+/// `1 + DIURNAL_AMP * sin(2π t / DIURNAL_PERIOD_S)` — peak traffic
+/// stretches startup and compute 1.6x, the trough relaxes to 0.4x.
+pub const DIURNAL_PERIOD_S: f64 = 2400.0;
+pub const DIURNAL_AMP: f64 = 0.6;
+
+/// Regional outages ([`Scenario::RegionalOutage`]): clients hash into
+/// [`OUTAGE_REGIONS`] regions by id; during the first [`OUTAGE_DUTY_S`]
+/// of each [`OUTAGE_PERIOD_S`] cycle, the cycle's region (rotating
+/// round-robin) drops every invocation.
+pub const OUTAGE_REGIONS: usize = 4;
+pub const OUTAGE_PERIOD_S: f64 = 900.0;
+pub const OUTAGE_DUTY_S: f64 = 180.0;
+
+/// Adversarial tail ([`Scenario::Adversarial`]): one client in
+/// [`ADVERSARIAL_DECILE`] (stable id hash) trains
+/// [`ADVERSARIAL_SLOWDOWN`]x slower, forever.
+pub const ADVERSARIAL_DECILE: u64 = 10;
+pub const ADVERSARIAL_SLOWDOWN: f64 = 4.0;
+
+/// Is virtual time `now_s` inside a cold-start storm window?
+pub fn in_storm(now_s: f64) -> bool {
+    now_s.rem_euclid(STORM_PERIOD_S) < STORM_DUTY_S
+}
+
+/// The region currently down at `now_s`, if any outage window is open.
+pub fn outage_region(now_s: f64) -> Option<usize> {
+    let cycle = (now_s / OUTAGE_PERIOD_S).floor();
+    if now_s - cycle * OUTAGE_PERIOD_S < OUTAGE_DUTY_S {
+        Some(cycle as usize % OUTAGE_REGIONS)
+    } else {
+        None
+    }
+}
+
+/// Stable membership test for the adversarially slow tail: a splitmix64
+/// hash of the client id, so the set is deterministic, seed-independent
+/// and uniformly spread (~1 client in [`ADVERSARIAL_DECILE`]).
+pub fn is_adversarial(client: ClientId) -> bool {
+    let mut z = (client as u64).wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    z % ADVERSARIAL_DECILE == 0
+}
 
 /// Platform model parameters.
 #[derive(Debug, Clone, Copy)]
@@ -120,12 +181,20 @@ pub const FAAS_SEED_MIX: u64 = 0xfaa5_0001;
 /// pure arithmetic. The per-invocation draw order is a compatibility
 /// contract (seeded goldens depend on it):
 ///
-/// 1. one log-normal **startup** draw — only when the instance is cold;
-/// 2. one Bernoulli **transient-crash** draw — skipped entirely when the
-///    scenario already forces a crash (`||` short-circuit);
+/// 1. one log-normal **startup** draw — only when the instance is cold
+///    (a `ColdStartStorm` window forces this branch: the instance is
+///    treated as cold regardless of the warm pool, so the startup draw
+///    *is* consumed — deterministic windows, no extra draws);
+/// 2. one Bernoulli **transient-crash** draw — skipped entirely when
+///    the scenario already forces a crash, either via [`Forced::Crash`]
+///    or a `RegionalOutage` window covering this client (both sit left
+///    of the `||` short-circuit);
 /// 3. one log-normal **VM speed** draw — skipped if step 2 crashed;
 ///    otherwise drawn on the client's first such invocation and cached;
 /// 4. one log-normal **jitter** draw — skipped if step 2 crashed.
+///
+/// `Diurnal` and `Adversarial` touch no draws at all: they are pure
+/// multipliers applied during timeline materialization.
 ///
 /// Note the asymmetry between the two crash kinds: a forced/transient
 /// crash kills the function *before* it does any work, so steps 3-4 are
@@ -145,6 +214,10 @@ struct Decision {
 /// The simulated platform. One instance pool per experiment.
 pub struct SimulatedGcf {
     pub cfg: FaasConfig,
+    /// Platform-stress scenario materialized by this instance
+    /// (`Standard` and `Straggler(_)` leave the platform untouched —
+    /// straggler forcing arrives per-invocation via [`Forced`]).
+    pub scenario: Scenario,
     rng: Rng,
     warm: HashMap<ClientId, WarmInstance>,
     speed: HashMap<ClientId, f64>,
@@ -152,12 +225,34 @@ pub struct SimulatedGcf {
 
 impl SimulatedGcf {
     pub fn new(cfg: FaasConfig, seed: u64) -> Self {
+        Self::with_scenario(cfg, seed, Scenario::Standard)
+    }
+
+    /// A platform materializing the given scenario's stress effects.
+    /// `Standard`/`Straggler(_)` behave exactly like [`Self::new`].
+    pub fn with_scenario(cfg: FaasConfig, seed: u64, scenario: Scenario) -> Self {
         Self {
             cfg,
+            scenario,
             rng: Rng::seed_from_u64(seed ^ FAAS_SEED_MIX),
             warm: HashMap::new(),
             speed: HashMap::new(),
         }
+    }
+
+    /// Diurnal latency multiplier at `now_s` (1.0 outside the scenario).
+    fn load_factor(&self, now_s: f64) -> f64 {
+        if self.scenario == Scenario::Diurnal {
+            1.0 + DIURNAL_AMP * (2.0 * std::f64::consts::PI * now_s / DIURNAL_PERIOD_S).sin()
+        } else {
+            1.0
+        }
+    }
+
+    /// Does an outage window drop this client's invocation at `now_s`?
+    fn outage_drops(&self, client: ClientId, now_s: f64) -> bool {
+        self.scenario == Scenario::RegionalOutage
+            && outage_region(now_s) == Some(client % OUTAGE_REGIONS)
     }
 
     /// Static per-client VM speed factor (median 1.0, log-normal).
@@ -184,17 +279,24 @@ impl SimulatedGcf {
         // re-invoked mid-flight): the platform then fans out a second,
         // cold instance rather than reusing the busy one — without the
         // clamp the instance looked spuriously warm.
-        let cold = match self.warm.get(&client) {
-            Some(w) => !(0.0..=self.cfg.idle_timeout_s).contains(&(now_s - w.last_used_at)),
-            None => true,
-        };
+        // A cold-start storm window overrides the pool entirely: the
+        // provider is recycling instances, so everything cold-starts.
+        let cold = (self.scenario == Scenario::ColdStartStorm && in_storm(now_s))
+            || match self.warm.get(&client) {
+                Some(w) => !(0.0..=self.cfg.idle_timeout_s).contains(&(now_s - w.last_used_at)),
+                None => true,
+            };
         let startup = if cold {
             self.rng
                 .lognormal(self.cfg.cold_start_median_s.ln(), self.cfg.cold_start_sigma.max(1e-9))
         } else {
             self.cfg.warm_overhead_s
         };
+        // Outage drops sit left of the bernoulli like a forced crash:
+        // both kill the request before any work, consuming no further
+        // draws (contract step 2).
         let crashed = forced == Some(Forced::Crash)
+            || self.outage_drops(client, now_s)
             || self.rng.bernoulli(self.cfg.transient_failure_rate);
         let perf = if crashed {
             None
@@ -244,14 +346,25 @@ impl SimulatedGcf {
             Some(p) => p,
         };
 
-        let mut train_s = compute_s * speed * jitter + self.transfer_s(payload_mb);
+        // Platform-stress multipliers (pure arithmetic, no draws): the
+        // diurnal wave stretches startup + compute with load, and the
+        // adversarial tail always trains slower. Both are exactly 1x
+        // outside their scenarios, so old-scenario timelines are
+        // bit-identical.
+        let load = self.load_factor(now_s);
+        let startup = d.startup * load;
+        let mut compute = compute_s * speed * jitter * load;
+        if self.scenario == Scenario::Adversarial && is_adversarial(client) {
+            compute *= ADVERSARIAL_SLOWDOWN;
+        }
+        let mut train_s = compute + self.transfer_s(payload_mb);
         if forced == Some(Forced::Slow) {
             // Scenario forcing (§VI-A4): delays (cold start, bandwidth,
             // ...) push completion past the round deadline.
-            let past_deadline = (deadline_s - now_s - d.startup).max(0.0) * 1.25 + 1.0;
+            let past_deadline = (deadline_s - now_s - startup).max(0.0) * 1.25 + 1.0;
             train_s = train_s.max(past_deadline);
         }
-        let total = d.startup + train_s;
+        let total = startup + train_s;
 
         if total > self.cfg.function_timeout_s {
             // platform kills the function at its hard timeout
@@ -495,6 +608,149 @@ mod tests {
         let jitter1 = mirror.lognormal(0.0, cfg0.invocation_jitter_sigma);
         let train1 = compute_s * speed1 * jitter1 + 2.0 * payload_mb / cfg0.network_mbps;
         assert!((inv1.finished_at - (startup1 + train1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn storm_windows_force_cold_starts() {
+        // Huge idle timeout so the Standard control stays warm across
+        // the whole test — only the storm window may force cold.
+        let cfg = FaasConfig {
+            idle_timeout_s: 1e9,
+            ..cfg_no_noise()
+        };
+        let mut gcf = SimulatedGcf::with_scenario(cfg, 1, Scenario::ColdStartStorm);
+        // t=130 is outside the storm window (duty 0..120): normal pool
+        // behaviour — first call cold, follow-up warm.
+        let a = gcf.invoke(0, 130.0, 1.0, 1.0, 1e9, None);
+        assert!(a.cold);
+        let b = gcf.invoke(0, a.finished_at + 1.0, 1.0, 1.0, 1e9, None);
+        assert!(!b.cold, "outside the storm the warm pool works");
+        // t=610 is inside the next storm window (610 % 600 = 10 < 120)
+        // and well inside the idle timeout: cold anyway.
+        let c = gcf.invoke(0, 610.0, 1.0, 1.0, 1e9, None);
+        assert!(c.cold, "storm window must override the warm pool");
+        // the same timeline under Standard stays warm
+        let mut std_gcf = SimulatedGcf::new(cfg, 1);
+        let a = std_gcf.invoke(0, 130.0, 1.0, 1.0, 1e9, None);
+        let _b = std_gcf.invoke(0, a.finished_at + 1.0, 1.0, 1.0, 1e9, None);
+        assert!(!std_gcf.invoke(0, 610.0, 1.0, 1.0, 1e9, None).cold);
+    }
+
+    #[test]
+    fn diurnal_wave_stretches_peak_and_relaxes_trough() {
+        let mut gcf = SimulatedGcf::with_scenario(cfg_no_noise(), 2, Scenario::Diurnal);
+        // sin peak at t = period/4, trough at 3*period/4. Different
+        // clients so both invocations are cold with identical draws in
+        // expectation (no-noise config: draws are ~exact medians).
+        let peak = gcf.invoke(0, DIURNAL_PERIOD_S / 4.0, 10.0, 1.0, 1e9, None);
+        let trough = gcf.invoke(1, 3.0 * DIURNAL_PERIOD_S / 4.0, 10.0, 1.0, 1e9, None);
+        let transfer = 2.0 * 1.0 / gcf.cfg.network_mbps;
+        let peak_compute = peak.training_time_s - transfer;
+        let trough_compute = trough.training_time_s - transfer;
+        assert!(
+            (peak_compute - 16.0).abs() < 0.1,
+            "peak load 1.6x: {peak_compute}"
+        );
+        assert!(
+            (trough_compute - 4.0).abs() < 0.1,
+            "trough load 0.4x: {trough_compute}"
+        );
+    }
+
+    #[test]
+    fn regional_outage_drops_exactly_the_rotating_region() {
+        let mut gcf = SimulatedGcf::with_scenario(cfg_no_noise(), 3, Scenario::RegionalOutage);
+        // cycle 0 (t in 0..180): region 0 down — clients 0 and 4 crash,
+        // clients 1..3 run normally.
+        assert_eq!(outage_region(0.0), Some(0));
+        for c in [0usize, 4] {
+            let inv = gcf.invoke(c, 10.0, 1.0, 1.0, 1e9, None);
+            assert_eq!(inv.outcome, Outcome::Crash, "client {c} in downed region");
+            assert_eq!(inv.training_time_s, 0.0);
+        }
+        for c in [1usize, 2, 3] {
+            let inv = gcf.invoke(c, 10.0, 1.0, 1.0, 1e9, None);
+            assert_eq!(inv.outcome, Outcome::OnTime, "client {c} unaffected");
+        }
+        // after the window closes the downed region recovers
+        assert_eq!(outage_region(200.0), None);
+        let inv = gcf.invoke(0, 200.0, 1.0, 1.0, 1e9, None);
+        assert_eq!(inv.outcome, Outcome::OnTime);
+        // next cycle rotates to region 1
+        assert_eq!(outage_region(OUTAGE_PERIOD_S + 10.0), Some(1));
+        let inv = gcf.invoke(1, OUTAGE_PERIOD_S + 10.0, 1.0, 1.0, 1e9, None);
+        assert_eq!(inv.outcome, Outcome::Crash);
+    }
+
+    #[test]
+    fn adversarial_tail_is_stable_and_slow() {
+        // membership is a pure function of the id
+        for c in 0..64usize {
+            assert_eq!(is_adversarial(c), is_adversarial(c));
+        }
+        // roughly one client in ADVERSARIAL_DECILE lands in the tail
+        let tail = (0..10_000usize).filter(|&c| is_adversarial(c)).count();
+        assert!((800..1200).contains(&tail), "tail size {tail}");
+        let slow = (0..100).find(|&c| is_adversarial(c)).unwrap();
+        let fast = (0..100).find(|&c| !is_adversarial(c)).unwrap();
+        let mut gcf = SimulatedGcf::with_scenario(cfg_no_noise(), 4, Scenario::Adversarial);
+        let s = gcf.invoke(slow, 0.0, 10.0, 1.0, 1e9, None);
+        let f = gcf.invoke(fast, 0.0, 10.0, 1.0, 1e9, None);
+        let transfer = 2.0 * 1.0 / gcf.cfg.network_mbps;
+        let ratio = (s.training_time_s - transfer) / (f.training_time_s - transfer);
+        assert!(
+            (ratio - ADVERSARIAL_SLOWDOWN).abs() < 0.01,
+            "slowdown ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn outage_crash_skips_speed_and_jitter_draws_like_forced_crash() {
+        // Contract-test extension for the new decide-phase branch: an
+        // outage drop consumes only the startup draw, leaving the
+        // stream exactly where a Forced::Crash would.
+        let cfg = FaasConfig {
+            transient_failure_rate: 0.3,
+            ..FaasConfig::default()
+        };
+        let seed = 77u64;
+        let mut gcf = SimulatedGcf::with_scenario(cfg, seed, Scenario::RegionalOutage);
+        let mut mirror = crate::util::Rng::seed_from_u64(seed ^ FAAS_SEED_MIX);
+        // client 0, t=10: region 0 is down — crash, one startup draw.
+        let dropped = gcf.invoke(0, 10.0, 10.0, 1.0, 60.0, None);
+        assert_eq!(dropped.outcome, Outcome::Crash);
+        let _startup0 = mirror.lognormal(cfg.cold_start_median_s.ln(), cfg.cold_start_sigma);
+        // client 1, t=10: region 1 is up — the full draw sequence.
+        let inv1 = gcf.invoke(1, 10.0, 10.0, 1.0, 1e9, None);
+        let startup1 = mirror.lognormal(cfg.cold_start_median_s.ln(), cfg.cold_start_sigma);
+        if !mirror.bernoulli(cfg.transient_failure_rate) {
+            let speed = mirror.lognormal(0.0, cfg.client_speed_sigma);
+            let jitter = mirror.lognormal(0.0, cfg.invocation_jitter_sigma);
+            let train = 10.0 * speed * jitter + 2.0 * 1.0 / cfg.network_mbps;
+            assert!((inv1.finished_at - (10.0 + startup1 + train)).abs() < 1e-9);
+        } else {
+            assert_eq!(inv1.outcome, Outcome::Crash);
+        }
+    }
+
+    #[test]
+    fn grid_scenarios_leave_standard_streams_untouched() {
+        // The same seeded invocation sequence under Standard must be
+        // bit-identical whether run on a `new` platform or a
+        // `with_scenario(Standard)` one — and a Straggler-forced
+        // sequence must not see any scenario hooks either.
+        let run = |gcf: &mut SimulatedGcf| {
+            (0..16)
+                .map(|c| {
+                    let forced = if c % 5 == 0 { Some(Forced::Slow) } else { None };
+                    gcf.invoke(c, c as f64 * 7.0, 10.0, 1.0, 200.0, forced)
+                        .finished_at
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut a = SimulatedGcf::new(FaasConfig::default(), 42);
+        let mut b = SimulatedGcf::with_scenario(FaasConfig::default(), 42, Scenario::Standard);
+        assert_eq!(run(&mut a), run(&mut b));
     }
 
     #[test]

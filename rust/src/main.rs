@@ -26,15 +26,22 @@ const USAGE: &str = "\
 fedless — serverless federated learning with straggler mitigation (FedLesScan)
 
 USAGE:
-  fedless train [--dataset D] [--strategy fedavg|fedprox|fedlesscan|safalite]
-                [--stragglers PCT] [--rounds N] [--clients N] [--per-round K]
-                [--mode rounds|continuous] [--cohorts C] [--workers W]
-                [--shards N] [--kernel scalar|avx2] [--quantize] [--topk F]
-                [--seed S] [--config FILE.json] [--out DIR] [--verbose]
-  fedless repro <fig1|tables|fig3|ablations|all>
+  fedless train [--dataset D]
+                [--strategy fedavg|fedprox|fedlesscan|safalite|apodotiko|fedavgdrop|salf]
+                [--stragglers PCT] [--scenario NAME] [--rounds N] [--clients N]
+                [--per-round K] [--mode rounds|continuous] [--cohorts C]
+                [--workers W] [--shards N] [--kernel scalar|avx2] [--quantize]
+                [--topk F] [--seed S] [--config FILE.json] [--out DIR] [--verbose]
+  fedless repro <fig1|tables|fig3|ablations|sweep|all>
                 [--datasets a,b,c] [--profile quick|full] [--out DIR]
-                [--seed S] [--repeats N] [--verbose]
+                [--seed S] [--repeats N] [--scenario NAME] [--verbose]
   fedless inspect
+
+SCENARIOS:
+  standard | straggler<pct> | coldstartstorm | diurnal | regionaloutage
+  | adversarial — `--scenario` names one directly (outranks --stragglers);
+  `repro sweep` runs the full strategy x scenario grid and writes
+  matrix.json (restrict with --scenario for a single-column smoke)
 
 GLOBAL:
   --backend KIND    execution backend: native (default) | pjrt
@@ -88,12 +95,18 @@ fn cmd_train(args: &cli::Args, backend_kind: BackendKind, artifacts: PathBuf) ->
     if let Some(s) = args.get("strategy") {
         cfg.strategy = StrategyKind::from_str(s)?;
     }
-    let stragglers: u8 = args.get_parse("stragglers", 0)?;
-    cfg.scenario = if stragglers == 0 {
-        Scenario::Standard
+    // --scenario names any grid scenario directly; --stragglers stays as
+    // the historical shorthand for the paper's straggler axis.
+    if let Some(s) = args.get("scenario") {
+        cfg.scenario = Scenario::from_str(s)?;
     } else {
-        Scenario::Straggler(stragglers)
-    };
+        let stragglers: u8 = args.get_parse("stragglers", 0)?;
+        cfg.scenario = if stragglers == 0 {
+            Scenario::Standard
+        } else {
+            Scenario::Straggler(stragglers)
+        };
+    }
     if let Some(r) = args.get_parse_opt::<u32>("rounds")? {
         cfg.rounds = r;
     }
@@ -241,6 +254,9 @@ fn cmd_repro(args: &cli::Args, backend: BackendKind, artifacts: PathBuf) -> Resu
             .iter()
             .map(|s| s.to_string())
             .collect(),
+        // the grid sweep defaults to one dataset: the matrix is already
+        // |strategies| x |scenarios| cells
+        "sweep" => vec!["mnist".to_string()],
         _ => vec!["speech".to_string()],
     };
     let opts = Options {
@@ -266,6 +282,13 @@ fn cmd_repro(args: &cli::Args, backend: BackendKind, artifacts: PathBuf) -> Resu
         }
         "fig3" => repro::fig3(&opts)?,
         "ablations" => repro::ablations(&opts)?,
+        "sweep" => {
+            let only = args
+                .get("scenario")
+                .map(|s| Scenario::from_str(s))
+                .transpose()?;
+            repro::sweep(&opts, only)?;
+        }
         "all" => {
             repro::fig1(&opts)?;
             let cells = repro::run_matrix(&opts)?;
@@ -275,7 +298,9 @@ fn cmd_repro(args: &cli::Args, backend: BackendKind, artifacts: PathBuf) -> Resu
             repro::fig3(&opts)?;
             repro::ablations(&opts)?;
         }
-        other => anyhow::bail!("unknown repro target {other:?} (fig1|tables|fig3|ablations|all)"),
+        other => anyhow::bail!(
+            "unknown repro target {other:?} (fig1|tables|fig3|ablations|sweep|all)"
+        ),
     }
     Ok(())
 }

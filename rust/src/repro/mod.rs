@@ -84,6 +84,21 @@ impl Options {
         }
     }
 
+    /// Scenario axis for the adversarial grid sweep ([`sweep`]): the
+    /// paper's straggler fractions plus the platform-stress scenarios.
+    /// Both profiles clear the ≥ 6-scenario bar the committed
+    /// `BENCH_matrix.json` tracks.
+    pub fn grid_scenarios(&self) -> Vec<Scenario> {
+        let mut v = self.scenarios();
+        v.extend([
+            Scenario::ColdStartStorm,
+            Scenario::Diurnal,
+            Scenario::RegionalOutage,
+            Scenario::Adversarial,
+        ]);
+        v
+    }
+
     fn shrink(&self, cfg: &mut ExperimentConfig) {
         if self.profile == Profile::Quick {
             // This testbed is a single CPU core; the quick profile keeps
@@ -227,7 +242,7 @@ pub fn run_matrix(opts: &Options) -> Result<Vec<CellStats>> {
     std::fs::create_dir_all(&opts.out_dir)?;
     let mut cells = Vec::new();
     for dataset in &opts.datasets {
-        for strategy in StrategyKind::all() {
+        for strategy in StrategyKind::evaluated() {
             for scenario in opts.scenarios() {
                 eprintln!(
                     "[matrix] {dataset} / {} / {} ...",
@@ -369,6 +384,69 @@ pub fn table4(cells: &[CellStats]) {
 }
 
 // ---------------------------------------------------------------------------
+// SWEEP — strategy zoo x adversarial scenario grid
+// ---------------------------------------------------------------------------
+
+/// Run the full strategy-zoo × scenario-grid matrix (every evaluated
+/// strategy plus the ablation set, across [`Options::grid_scenarios`])
+/// and write the per-cell time/cost/EUR/bias stats to
+/// `<out_dir>/matrix.json`. This is the generator behind the committed
+/// `BENCH_matrix.json` trajectory file; `only_scenario` restricts the
+/// grid to one scenario (the CI smoke runs the zoo against
+/// `adversarial` alone).
+pub fn sweep(opts: &Options, only_scenario: Option<Scenario>) -> Result<Vec<CellStats>> {
+    let mut backends = Backends::new(opts.backend, opts.artifacts_dir.clone())?;
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let scenarios = match only_scenario {
+        Some(s) => vec![s],
+        None => opts.grid_scenarios(),
+    };
+    let mut cells = Vec::new();
+    for dataset in &opts.datasets {
+        let n_clients = effective_n_clients(opts, dataset);
+        for strategy in StrategyKind::evaluated()
+            .into_iter()
+            .chain(StrategyKind::ablation())
+        {
+            for &scenario in &scenarios {
+                eprintln!(
+                    "[sweep] {dataset} / {} / {} ...",
+                    strategy.as_str(),
+                    scenario.label()
+                );
+                let results = run_cell(&mut backends, opts, dataset, strategy, scenario)?;
+                cells.push(cell_stats(&results, n_clients));
+            }
+        }
+    }
+    print_table(
+        &cells,
+        "SWEEP — strategy zoo x scenario grid (time min / $ / EUR / bias)",
+        "min/$/eur/bias",
+        |c| {
+            format!(
+                "{:.0}/{:.3}/{:.2}/{:.0}",
+                c.time_s / 60.0,
+                c.cost,
+                c.eur,
+                c.bias
+            )
+        },
+    );
+    let path = opts.out_dir.join("matrix.json");
+    Json::Arr(cells.iter().map(|c| c.to_json()).collect()).write_file(&path)?;
+    eprintln!("[sweep] wrote {} ({} cells)", path.display(), cells.len());
+    Ok(cells)
+}
+
+/// Median of a sorted invocation distribution; 0 for the degenerate
+/// empty cell (zero-client/zero-round grid corners must print, not
+/// panic — mirrors the `first()/last().unwrap_or(0)` neighbors).
+fn dist_median(dist: &[u32]) -> u32 {
+    dist.get(dist.len() / 2).copied().unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
 // FIG3 — speech deep-dive: accuracy / EUR timelines + bias distribution
 // ---------------------------------------------------------------------------
 
@@ -391,7 +469,13 @@ pub fn fig3(opts: &Options) -> Result<()> {
             "{:<12} {:>9} {:>9} {:>7} {:>22}",
             "strategy", "final acc", "mean EUR", "bias", "invocations (min/med/max)"
         );
-        for strategy in StrategyKind::all() {
+        // Evaluated zoo *plus* the ablation set: the Fig. 3c bias panel
+        // exists precisely to contrast FedLesScan against SAFA-lite's
+        // high bias, so the ablation strategies run here too.
+        for strategy in StrategyKind::evaluated()
+            .into_iter()
+            .chain(StrategyKind::ablation())
+        {
             let results = run_cell(&mut backends, opts, &dataset, strategy, scenario)?;
             let r = &results[0];
             // fig3a/b: write the full timeline of the first repeat
@@ -411,7 +495,7 @@ pub fn fig3(opts: &Options) -> Result<()> {
             let acc = mean(results.iter().map(|x| x.final_accuracy));
             let eur = mean(results.iter().map(|x| x.mean_eur()));
             let bias = mean(results.iter().map(|x| x.bias(n_clients) as f64));
-            let med = dist[dist.len() / 2];
+            let med = dist_median(&dist);
             println!(
                 "{:<12} {:>9.3} {:>9.3} {:>7.1} {:>10}/{}/{}",
                 strategy.as_str(),
@@ -543,4 +627,51 @@ pub fn ablations(opts: &Options) -> Result<()> {
     );
     json.write_file(&opts.out_dir.join("ablations.json"))?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_median_guards_the_degenerate_cell() {
+        // The empty invocation distribution of a zero-client/zero-round
+        // grid corner must yield 0, not panic (regression: fig3 indexed
+        // `dist[dist.len() / 2]` unguarded).
+        assert_eq!(dist_median(&[]), 0);
+        assert_eq!(dist_median(&[7]), 7);
+        assert_eq!(dist_median(&[1, 2, 3]), 2);
+        assert_eq!(dist_median(&[1, 2, 3, 4]), 3);
+    }
+
+    #[test]
+    fn grid_covers_at_least_six_scenarios_both_profiles() {
+        for profile in [Profile::Quick, Profile::Full] {
+            let opts = Options {
+                artifacts_dir: PathBuf::from("artifacts"),
+                out_dir: PathBuf::from("out"),
+                datasets: vec!["mnist".into()],
+                profile,
+                seed: 42,
+                repeats: 1,
+                verbose: false,
+                backend: BackendKind::Native,
+            };
+            let grid = opts.grid_scenarios();
+            assert!(grid.len() >= 6, "{profile:?}: {} scenarios", grid.len());
+            for s in [
+                Scenario::ColdStartStorm,
+                Scenario::Diurnal,
+                Scenario::RegionalOutage,
+                Scenario::Adversarial,
+            ] {
+                assert!(grid.contains(&s), "{profile:?} grid missing {}", s.label());
+            }
+            // labels are unique — each cell keys on (strategy, scenario)
+            let mut labels: Vec<String> = grid.iter().map(|s| s.label()).collect();
+            labels.sort();
+            labels.dedup();
+            assert_eq!(labels.len(), grid.len());
+        }
+    }
 }

@@ -1,0 +1,228 @@
+//! Apodotiko-style scoring-based probabilistic selection (Elzohairy et
+//! al., arXiv 2404.14033): the strongest modern baseline for
+//! heterogeneous serverless FL. Each client gets a score blending
+//! speed (inverse EMA training time), reliability (on-time success
+//! rate) and freshness (exploration bonus decaying with invocation
+//! count); selection is softmax sampling over those scores, so fast
+//! reliable clients are *preferred* rather than guaranteed — the
+//! probabilistic margin is what keeps the invocation distribution
+//! flatter (lower Bias) than SAFA's greedy fastest-first.
+//!
+//! Everything is computed from the bounded O(1) `ClientHistory`
+//! summaries, so a selection pass stays O(n + k·n) worst case with no
+//! per-client allocation beyond the score table. The sampling consumes
+//! exactly `k` draws of `Rng::f64` (one roulette spin per pick),
+//! independent of fleet size — pinned by the determinism test below.
+
+use super::{training_time_feature, Aggregation, SelectionContext, Strategy};
+use crate::util::Rng;
+use crate::ClientId;
+
+/// Softmax temperature: lower sharpens the preference for high scores.
+/// At 0.25 a 0.1 score gap is ~1.5x selection odds — enough signal to
+/// beat uniform sampling, soft enough to keep exploring the tail.
+pub const APODOTIKO_TEMPERATURE: f64 = 0.25;
+
+/// Score blend weights (speed, reliability, freshness). Sum to 1 so
+/// scores live in [0, 1] and the temperature has a stable meaning.
+const W_SPEED: f64 = 0.5;
+const W_RELIABILITY: f64 = 0.3;
+const W_FRESHNESS: f64 = 0.2;
+
+pub struct Apodotiko;
+
+impl Apodotiko {
+    /// Per-client scores in selection-pool order. Public within the
+    /// crate for the sanity test; the blend is documented above.
+    fn scores(ctx: &SelectionContext) -> Vec<f64> {
+        // Normalizer: slowest known EMA in the pool. With no known
+        // clients every speed term is neutral (0.5).
+        let mut max_t = 0.0f64;
+        for &c in ctx.all_clients {
+            let h = ctx.history.view(c);
+            if !h.is_rookie() {
+                max_t = max_t.max(training_time_feature(h, 0.5));
+            }
+        }
+        ctx.all_clients
+            .iter()
+            .map(|&c| {
+                let h = ctx.history.view(c);
+                let (speed, reliability, freshness) = if h.is_rookie() {
+                    // Unknown client: neutral speed/reliability, full
+                    // exploration bonus.
+                    (0.5, 0.5, 1.0)
+                } else {
+                    let speed = if max_t > 0.0 {
+                        1.0 - training_time_feature(h, 0.5) / max_t
+                    } else {
+                        0.5
+                    };
+                    let reliability = h.successes as f64 / h.invocations as f64;
+                    let freshness = 1.0 / (1.0 + h.invocations as f64);
+                    (speed, reliability, freshness)
+                };
+                W_SPEED * speed + W_RELIABILITY * reliability + W_FRESHNESS * freshness
+            })
+            .collect()
+    }
+}
+
+impl Strategy for Apodotiko {
+    fn name(&self) -> &'static str {
+        "apodotiko"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        let k = ctx.clients_per_round.min(ctx.all_clients.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        let scores = Self::scores(ctx);
+        // Softmax weights. Scores are bounded in [0, 1] so exp() needs
+        // no max-shift for stability.
+        let mut weights: Vec<f64> = scores
+            .iter()
+            .map(|s| (s / APODOTIKO_TEMPERATURE).exp())
+            .collect();
+        let mut total: f64 = weights.iter().sum();
+        // k roulette spins without replacement: one f64 draw per pick,
+        // picked clients zeroed out of the wheel. O(n·k) walk — fine at
+        // paper scale, and the draw count stays exactly k regardless.
+        let mut selected = Vec::with_capacity(k);
+        let mut taken = vec![false; ctx.all_clients.len()];
+        for _ in 0..k {
+            let spin = rng.f64() * total;
+            let mut acc = 0.0;
+            let mut pick = usize::MAX;
+            for (i, &w) in weights.iter().enumerate() {
+                if taken[i] {
+                    continue;
+                }
+                acc += w;
+                if spin < acc {
+                    pick = i;
+                    break;
+                }
+            }
+            if pick == usize::MAX {
+                // Float-sum slack pushed the spin past the last sliver;
+                // take the last remaining client.
+                pick = taken.iter().rposition(|&t| !t).expect("pool not exhausted");
+            }
+            taken[pick] = true;
+            selected.push(ctx.all_clients[pick]);
+            total -= weights[pick];
+            weights[pick] = 0.0;
+        }
+        selected
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Synchronous
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clientdb::HistoryStore;
+
+    fn ctx<'a>(clients: &'a [ClientId], hist: &'a HistoryStore, k: usize) -> SelectionContext<'a> {
+        SelectionContext {
+            round: 1,
+            max_rounds: 10,
+            clients_per_round: k,
+            all_clients: clients,
+            history: hist,
+        }
+    }
+
+    #[test]
+    fn seeded_selection_is_deterministic_and_distinct() {
+        let clients: Vec<ClientId> = (0..30).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..30 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 10.0 + c as f64);
+        }
+        let a = Apodotiko.select(&ctx(&clients, &hist, 8), &mut Rng::seed_from_u64(42));
+        let b = Apodotiko.select(&ctx(&clients, &hist, 8), &mut Rng::seed_from_u64(42));
+        assert_eq!(a, b);
+        let mut d = a.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 8, "picks must be distinct: {a:?}");
+    }
+
+    #[test]
+    fn softmax_prefers_fast_reliable_clients() {
+        // Client 0: fast + always on time. Client 1: slow + always
+        // missing. Over many seeded trials the fast one must be picked
+        // substantially more often.
+        let clients: Vec<ClientId> = (0..10).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..10 {
+            for _ in 0..4 {
+                hist.record_invocation(c);
+            }
+            if c == 0 {
+                for r in 0..4 {
+                    hist.record_success(0, r, 5.0);
+                }
+            } else if c == 1 {
+                for r in 0..4 {
+                    hist.record_failure(1, r);
+                }
+            } else {
+                for r in 0..4 {
+                    hist.record_success(c, r, 30.0);
+                }
+            }
+        }
+        let (mut fast, mut slow) = (0u32, 0u32);
+        for seed in 0..200u64 {
+            let sel = Apodotiko.select(&ctx(&clients, &hist, 3), &mut Rng::seed_from_u64(seed));
+            fast += sel.contains(&0) as u32;
+            slow += sel.contains(&1) as u32;
+        }
+        assert!(
+            fast > slow * 2,
+            "fast reliable client should dominate: fast={fast} slow={slow}"
+        );
+    }
+
+    #[test]
+    fn rookies_keep_exploration_pressure() {
+        // A never-seen client must still get picked sometimes even when
+        // the rest of the fleet has perfect records.
+        let clients: Vec<ClientId> = (0..8).collect();
+        let mut hist = HistoryStore::new();
+        for c in 1..8 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 10.0);
+        }
+        let mut rookie_hits = 0u32;
+        for seed in 0..100u64 {
+            let sel = Apodotiko.select(&ctx(&clients, &hist, 2), &mut Rng::seed_from_u64(seed));
+            rookie_hits += sel.contains(&0) as u32;
+        }
+        assert!(rookie_hits > 10, "rookie starved: {rookie_hits}/100");
+    }
+
+    #[test]
+    fn exact_draw_count_per_selection() {
+        // The sampling contract: exactly k f64 draws, independent of
+        // pool size. Verified by running the same selection with two
+        // rngs and checking the streams stay aligned afterwards.
+        let clients: Vec<ClientId> = (0..50).collect();
+        let hist = HistoryStore::new();
+        let mut rng = Rng::seed_from_u64(7);
+        Apodotiko.select(&ctx(&clients, &hist, 5), &mut rng);
+        let mut oracle = Rng::seed_from_u64(7);
+        for _ in 0..5 {
+            oracle.f64();
+        }
+        assert_eq!(rng.next_u64(), oracle.next_u64());
+    }
+}

@@ -1,0 +1,69 @@
+//! FedAvg with straggler dropping (SNIPPETS.md snippet 2, the Flower
+//! `FedAvgWithStragglerDrop` baseline): invoke a uniform random cohort
+//! exactly like FedAvg, but when the deadline passes, *discard* any
+//! update that has not arrived — no staleness folding, no waiting out
+//! the slowest client. The round ends at the last on-time arrival, so
+//! rounds are fast; the cost ledger still bills the dropped functions
+//! (they ran to timeout, §VI-C), which is precisely the time/cost
+//! trade-off the grid is meant to expose.
+//!
+//! Selection and aggregation are byte-identical to FedAvg (same
+//! `random_sample` draw stream, synchronous n_k/n weights); the only
+//! behavioural difference is the [`Strategy::drops_stragglers`] hook
+//! the coordinator consults when closing a round.
+
+use super::{random_sample, Aggregation, SelectionContext, Strategy};
+use crate::util::Rng;
+use crate::ClientId;
+
+pub struct FedAvgDrop;
+
+impl Strategy for FedAvgDrop {
+    fn name(&self) -> &'static str {
+        "fedavgdrop"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        random_sample(ctx.all_clients, ctx.clients_per_round, rng)
+    }
+
+    fn drops_stragglers(&self) -> bool {
+        true
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        Aggregation::Synchronous
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clientdb::HistoryStore;
+    use crate::strategy::FedAvg;
+
+    #[test]
+    fn selection_matches_fedavg_draw_for_draw() {
+        // Dropping happens at round close, not at selection: the cohort
+        // must be exactly FedAvg's under the same seed.
+        let clients: Vec<ClientId> = (0..40).collect();
+        let hist = HistoryStore::new();
+        let ctx = SelectionContext {
+            round: 2,
+            max_rounds: 10,
+            clients_per_round: 10,
+            all_clients: &clients,
+            history: &hist,
+        };
+        let drop = FedAvgDrop.select(&ctx, &mut Rng::seed_from_u64(11));
+        let avg = FedAvg.select(&ctx, &mut Rng::seed_from_u64(11));
+        assert_eq!(drop, avg);
+    }
+
+    #[test]
+    fn drop_semantics_flagged() {
+        assert!(FedAvgDrop.drops_stragglers());
+        assert!(!FedAvg.drops_stragglers());
+        assert_eq!(FedAvgDrop.aggregation(), Aggregation::Synchronous);
+    }
+}

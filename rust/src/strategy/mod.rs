@@ -1,25 +1,34 @@
 //! Training strategies: the paper's contribution (FedLesScan) and the
-//! baselines it is evaluated against (FedAvg, FedProx), plus a SAFA-like
-//! greedy-fast selector used in the bias ablation.
+//! baselines it is evaluated against (FedAvg, FedProx), plus the
+//! strategy zoo the adversarial grid sweeps: Apodotiko's scoring-based
+//! probabilistic selection, the straggler-drop FedAvg baseline, and a
+//! SALF-style deadline optimizer — with a SAFA-like greedy-fast
+//! selector kept for the bias ablation.
 //!
 //! A strategy owns two decisions (§IV Strategy Manager):
 //! * **client selection** for each round, and
 //! * the **aggregation scheme** (synchronous FedAvg weights vs the
 //!   staleness-aware Eq. 3 scheme).
 
+mod apodotiko;
 mod features;
 mod fedavg;
+mod fedavgdrop;
 mod fedlesscan;
 mod fedprox;
 mod persistent;
 mod safa;
+mod salf;
 
+pub use apodotiko::{Apodotiko, APODOTIKO_TEMPERATURE};
 pub use features::{ema, feature_row, missed_round_ema, training_time_feature};
 pub use fedavg::FedAvg;
+pub use fedavgdrop::FedAvgDrop;
 pub use fedlesscan::{tier_partition, FedLesScan, FedLesScanParams, COHORT_MAX};
 pub use fedprox::FedProx;
 pub use persistent::DRIFT_RESEARCH_FRAC;
 pub use safa::SafaLite;
+pub use salf::{Salf, SALF_BUDGET_SLACK, SALF_MIN_WORK};
 
 use crate::clientdb::HistoryStore;
 use crate::util::Rng;
@@ -109,6 +118,15 @@ pub trait Strategy {
         Aggregation::Synchronous
     }
 
+    /// Should the coordinator close the round at the last **on-time**
+    /// arrival and discard everything still running (the straggler-drop
+    /// FedAvg baseline, SNIPPETS.md snippet 2)? Default `false`: the
+    /// round waits out the deadline when anyone missed it. Dropped
+    /// functions are still billed — they ran to timeout (§VI-C).
+    fn drops_stragglers(&self) -> bool {
+        false
+    }
+
     /// Drain the report of the most recent selection pass. `None` for
     /// strategies without persistent cluster state (the default) and
     /// for passes that ran the stateless paper-scale path.
@@ -124,6 +142,9 @@ pub enum StrategyKind {
     Fedprox,
     Fedlesscan,
     Safalite,
+    Apodotiko,
+    Fedavgdrop,
+    Salf,
 }
 
 impl StrategyKind {
@@ -133,6 +154,9 @@ impl StrategyKind {
             StrategyKind::Fedprox => Box::new(FedProx::default()),
             StrategyKind::Fedlesscan => Box::new(FedLesScan::default()),
             StrategyKind::Safalite => Box::new(SafaLite),
+            StrategyKind::Apodotiko => Box::new(Apodotiko),
+            StrategyKind::Fedavgdrop => Box::new(FedAvgDrop),
+            StrategyKind::Salf => Box::new(Salf::default()),
         }
     }
 
@@ -149,13 +173,27 @@ impl StrategyKind {
         }
     }
 
-    pub fn all() -> [StrategyKind; 3] {
-        // the paper's evaluated trio (SAFA-lite is ablation-only)
+    /// Strategies the tables and grid sweeps evaluate head-to-head:
+    /// the paper trio plus the zoo. Replaces the old `all()` (which
+    /// silently meant "paper trio"): table printers now iterate this,
+    /// with [`Self::ablation`] appended where the ablation-only
+    /// contrast belongs (e.g. the Fig. 3 bias panel).
+    pub fn evaluated() -> [StrategyKind; 6] {
         [
             StrategyKind::Fedavg,
             StrategyKind::Fedprox,
             StrategyKind::Fedlesscan,
+            StrategyKind::Apodotiko,
+            StrategyKind::Fedavgdrop,
+            StrategyKind::Salf,
         ]
+    }
+
+    /// Ablation-only strategies: contrast points that are not fair
+    /// head-to-head baselines (SAFA-lite deliberately has no fairness
+    /// mechanism — it exists to show the bias FedLesScan avoids).
+    pub fn ablation() -> [StrategyKind; 1] {
+        [StrategyKind::Safalite]
     }
 
     pub fn as_str(self) -> &'static str {
@@ -164,6 +202,9 @@ impl StrategyKind {
             StrategyKind::Fedprox => "fedprox",
             StrategyKind::Fedlesscan => "fedlesscan",
             StrategyKind::Safalite => "safalite",
+            StrategyKind::Apodotiko => "apodotiko",
+            StrategyKind::Fedavgdrop => "fedavgdrop",
+            StrategyKind::Salf => "salf",
         }
     }
 }
@@ -177,8 +218,12 @@ impl std::str::FromStr for StrategyKind {
             "fedprox" => Ok(StrategyKind::Fedprox),
             "fedlesscan" => Ok(StrategyKind::Fedlesscan),
             "safalite" | "safa" => Ok(StrategyKind::Safalite),
+            "apodotiko" => Ok(StrategyKind::Apodotiko),
+            "fedavgdrop" | "fedavg-drop" => Ok(StrategyKind::Fedavgdrop),
+            "salf" => Ok(StrategyKind::Salf),
             other => anyhow::bail!(
-                "unknown strategy {other:?}; expected fedavg|fedprox|fedlesscan|safalite"
+                "unknown strategy {other:?}; expected \
+                 fedavg|fedprox|fedlesscan|safalite|apodotiko|fedavgdrop|salf"
             ),
         }
     }
@@ -241,12 +286,10 @@ mod tests {
             all_clients: &clients,
             history: &history,
         };
-        for kind in [
-            StrategyKind::Fedavg,
-            StrategyKind::Fedprox,
-            StrategyKind::Fedlesscan,
-            StrategyKind::Safalite,
-        ] {
+        for kind in StrategyKind::evaluated()
+            .into_iter()
+            .chain(StrategyKind::ablation())
+        {
             // Identical RNG state => the default delegation must produce
             // exactly the cohort select() would have produced.
             let picked = kind.build().select(&ctx, &mut Rng::seed_from_u64(7));
@@ -259,14 +302,34 @@ mod tests {
 
     #[test]
     fn strategy_kind_builds() {
-        for k in [
-            StrategyKind::Fedavg,
-            StrategyKind::Fedprox,
-            StrategyKind::Fedlesscan,
-            StrategyKind::Safalite,
-        ] {
+        for k in StrategyKind::evaluated()
+            .into_iter()
+            .chain(StrategyKind::ablation())
+        {
             let s = k.build();
             assert_eq!(s.name(), k.as_str());
         }
+    }
+
+    #[test]
+    fn kind_string_roundtrip() {
+        for k in StrategyKind::evaluated()
+            .into_iter()
+            .chain(StrategyKind::ablation())
+        {
+            assert_eq!(k.as_str().parse::<StrategyKind>().unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn evaluated_and_ablation_are_disjoint_and_cover_the_zoo() {
+        let eval = StrategyKind::evaluated();
+        let abl = StrategyKind::ablation();
+        for a in abl {
+            assert!(!eval.contains(&a), "{} is in both sets", a.as_str());
+        }
+        assert!(eval.contains(&StrategyKind::Fedlesscan));
+        assert!(eval.contains(&StrategyKind::Apodotiko));
+        assert!(abl.contains(&StrategyKind::Safalite));
     }
 }

@@ -1,0 +1,179 @@
+//! SALF-style deadline optimization (SNIPPETS.md snippet 3, arXiv
+//! SALF: straggler-aware layer-wise FL). The original lets stragglers
+//! upload whatever layers they finished by the deadline; our training
+//! plane exchanges whole parameter blocks, so the equivalent lever is
+//! the partial-work channel the coordinator already applies per
+//! invocation: predicted-slow clients are asked for a *smaller
+//! fraction* of the local workload so they land inside the deadline,
+//! and whatever still arrives late folds through the staleness-aware
+//! Eq. 3 scheme instead of being discarded.
+//!
+//! Mechanics: selection is uniform (FedAvg's exact `random_sample`
+//! stream). After picking the cohort, `select` computes a per-round
+//! time budget — the median predicted training time of the known
+//! cohort members with [`SALF_BUDGET_SLACK`] headroom — and plans each
+//! client's work fraction as `clamp(budget / predicted, MIN_WORK, 1)`.
+//! Rookies and everyone at-or-under budget run full workloads.
+//! `work_fraction` then just reads the plan: it consumes **no** RNG
+//! draws, keeping the per-invocation draw stream identical to FedAvg's
+//! (the contract the seeded goldens pin).
+
+use std::collections::HashMap;
+
+use super::{random_sample, training_time_feature, Aggregation, SelectionContext, Strategy};
+use crate::util::Rng;
+use crate::ClientId;
+
+/// Headroom multiplier on the cohort-median predicted time: clients up
+/// to 25% slower than the median still run full workloads.
+pub const SALF_BUDGET_SLACK: f64 = 1.25;
+
+/// Floor on the planned work fraction — below this a partial update is
+/// too noisy to be worth folding.
+pub const SALF_MIN_WORK: f64 = 0.25;
+
+#[derive(Default)]
+pub struct Salf {
+    /// Work plan for the most recent cohort, rebuilt on every
+    /// selection pass. Missing clients (e.g. replacement dispatches
+    /// before their first plan) default to full work.
+    planned: HashMap<ClientId, f64>,
+}
+
+impl Salf {
+    fn plan(&mut self, cohort: &[ClientId], ctx: &SelectionContext) {
+        self.planned.clear();
+        let mut known: Vec<f64> = cohort
+            .iter()
+            .map(|&c| ctx.history.view(c))
+            .filter(|h| !h.is_rookie())
+            .map(|h| training_time_feature(h, 0.5))
+            .filter(|&t| t > 0.0)
+            .collect();
+        if known.is_empty() {
+            return; // everyone rookie/unknown: full work across the board
+        }
+        known.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let budget = known[known.len() / 2] * SALF_BUDGET_SLACK;
+        for &c in cohort {
+            let h = ctx.history.view(c);
+            if h.is_rookie() {
+                continue;
+            }
+            let predicted = training_time_feature(h, 0.5);
+            if predicted > budget {
+                self.planned
+                    .insert(c, (budget / predicted).max(SALF_MIN_WORK));
+            }
+        }
+    }
+}
+
+impl Strategy for Salf {
+    fn name(&self) -> &'static str {
+        "salf"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, rng: &mut Rng) -> Vec<ClientId> {
+        let cohort = random_sample(ctx.all_clients, ctx.clients_per_round, rng);
+        self.plan(&cohort, ctx);
+        cohort
+    }
+
+    fn work_fraction(&self, client: ClientId, _rng: &mut Rng) -> f64 {
+        self.planned.get(&client).copied().unwrap_or(1.0)
+    }
+
+    fn aggregation(&self) -> Aggregation {
+        // Updates that miss the deadline anyway still fold, dampened by
+        // Eq. 3 — the SALF philosophy of never wasting straggler work.
+        Aggregation::StalenessAware {
+            tau: 2,
+            normalize: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clientdb::HistoryStore;
+    use crate::strategy::FedAvg;
+
+    fn ctx<'a>(clients: &'a [ClientId], hist: &'a HistoryStore, k: usize) -> SelectionContext<'a> {
+        SelectionContext {
+            round: 1,
+            max_rounds: 10,
+            clients_per_round: k,
+            all_clients: clients,
+            history: hist,
+        }
+    }
+
+    #[test]
+    fn selection_matches_fedavg_and_work_fraction_draws_no_rng() {
+        let clients: Vec<ClientId> = (0..30).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..30 {
+            hist.record_invocation(c);
+            hist.record_success(c, 0, 10.0 + c as f64);
+        }
+        let mut s = Salf::default();
+        let mut rng = Rng::seed_from_u64(9);
+        let cohort = s.select(&ctx(&clients, &hist, 8), &mut rng);
+        assert_eq!(
+            cohort,
+            FedAvg.select(&ctx(&clients, &hist, 8), &mut Rng::seed_from_u64(9)),
+            "selection stream must be FedAvg's"
+        );
+        // work_fraction must not touch the rng stream
+        let before = rng.next_u64();
+        let mut rng2 = Rng::seed_from_u64(9);
+        let mut s2 = Salf::default();
+        s2.select(&ctx(&clients, &hist, 8), &mut rng2);
+        for &c in &cohort {
+            s2.work_fraction(c, &mut rng2);
+        }
+        assert_eq!(rng2.next_u64(), before);
+    }
+
+    #[test]
+    fn slow_clients_get_reduced_work_fast_get_full() {
+        let clients: Vec<ClientId> = (0..10).collect();
+        let mut hist = HistoryStore::new();
+        for c in 0..10 {
+            hist.record_invocation(c);
+            // client 9 is 10x slower than the pack
+            let t = if c == 9 { 100.0 } else { 10.0 };
+            hist.record_success(c, 0, t);
+        }
+        let mut s = Salf::default();
+        // select everyone so the plan covers the whole fleet
+        let cohort = s.select(&ctx(&clients, &hist, 10), &mut Rng::seed_from_u64(1));
+        assert_eq!(cohort.len(), 10);
+        let mut rng = Rng::seed_from_u64(0);
+        let slow = s.work_fraction(9, &mut rng);
+        let fast = s.work_fraction(0, &mut rng);
+        assert_eq!(fast, 1.0);
+        assert!(
+            (SALF_MIN_WORK..1.0).contains(&slow),
+            "slow client should be throttled: {slow}"
+        );
+        // budget = median(10.0) * 1.25 = 12.5 → 12.5/100 = 0.125 < floor
+        assert_eq!(slow, SALF_MIN_WORK);
+    }
+
+    #[test]
+    fn rookies_and_unplanned_clients_run_full_work() {
+        let clients: Vec<ClientId> = (0..5).collect();
+        let hist = HistoryStore::new();
+        let mut s = Salf::default();
+        s.select(&ctx(&clients, &hist, 5), &mut Rng::seed_from_u64(2));
+        let mut rng = Rng::seed_from_u64(0);
+        for c in 0..5 {
+            assert_eq!(s.work_fraction(c, &mut rng), 1.0);
+        }
+        // a client never selected (no plan entry) also defaults to 1.0
+        assert_eq!(s.work_fraction(999, &mut rng), 1.0);
+    }
+}

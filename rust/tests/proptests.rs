@@ -1080,12 +1080,18 @@ fn prop_scenario_label_roundtrip() {
         };
         assert_eq!(Scenario::from_str(&s.label()).unwrap(), s);
     }
-    for k in [
-        StrategyKind::Fedavg,
-        StrategyKind::Fedprox,
-        StrategyKind::Fedlesscan,
-        StrategyKind::Safalite,
+    for s in [
+        Scenario::ColdStartStorm,
+        Scenario::Diurnal,
+        Scenario::RegionalOutage,
+        Scenario::Adversarial,
     ] {
+        assert_eq!(Scenario::from_str(&s.label()).unwrap(), s);
+    }
+    for k in StrategyKind::evaluated()
+        .into_iter()
+        .chain(StrategyKind::ablation())
+    {
         assert_eq!(StrategyKind::from_str(k.as_str()).unwrap(), k);
     }
 }
